@@ -1,0 +1,104 @@
+//! Ablation benches for the design decisions DESIGN.md calls out:
+//!
+//! 1. **Sync mode (D1)** — incremental O(1) fold vs the paper-literal
+//!    full recompression: cost of the periodic cache-miss step as history
+//!    grows. Incremental must stay flat; full must grow with N (the
+//!    paper's Eq. 1 line).
+//! 2. **Batch buckets** — per-token decode cost at B=1 vs B=4 (static-lane
+//!    continuous batching amortizes the graph dispatch).
+//! 3. **History buckets** — baseline decode latency per bucket: the
+//!    mechanism behind its linear per-token cost.
+
+use std::time::Instant;
+
+use tconstformer::bench_support::measure_sync_cost;
+use tconstformer::model::state::SeqState;
+use tconstformer::model::{Arch, ModelDriver, SyncMode};
+use tconstformer::runtime::Runtime;
+use tconstformer::util::bench::{series_to_csv, write_results_file, Series};
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::var("BENCH_PRESET").unwrap_or_else(|_| "tiny".into());
+    let mut rt = Runtime::load("artifacts")?;
+    let buckets = rt.manifest.buckets(&preset);
+    let max_bucket = *buckets.last().unwrap();
+
+    // --- 1. sync-mode ablation -------------------------------------------
+    println!("== ablation 1: sync cost vs history length (incremental vs full) ==");
+    let mut s_inc = Series::new("sync_inc_ms");
+    let mut s_full = Series::new("sync_full_ms");
+    let grid: Vec<usize> = vec![32, 96, max_bucket / 2, max_bucket - 40]
+        .into_iter()
+        .filter(|&n| n + 40 <= max_bucket)
+        .collect();
+    for &n in &grid {
+        let inc = measure_sync_cost(&mut rt, &preset, SyncMode::Incremental, n)?;
+        let full = measure_sync_cost(&mut rt, &preset, SyncMode::Full, n)?;
+        println!("  N={n:<6} inc {inc:>8.2} ms   full {full:>8.2} ms   ratio {:.2}", full / inc);
+        s_inc.push(n as f64, inc);
+        s_full.push(n as f64, full);
+    }
+    write_results_file("ablation_sync_mode.csv", &series_to_csv(&[s_inc.clone(), s_full.clone()]))?;
+    if let (Some(first), Some(last)) = (s_full.points.first(), s_full.points.last()) {
+        println!(
+            "  full-sync growth over grid: {:.2}x (incremental: {:.2}x)",
+            last.1 / first.1,
+            s_inc.points.last().unwrap().1 / s_inc.points.first().unwrap().1
+        );
+    }
+
+    // --- 2. batch-bucket ablation ------------------------------------------
+    println!("\n== ablation 2: decode cost per token at B=1 vs B=4 ==");
+    for arch in [Arch::Base, Arch::TConst] {
+        let driver = ModelDriver::new(&rt, &preset, arch)?;
+        for lanes in [1usize, 4] {
+            let mut states: Vec<SeqState> = Vec::new();
+            for i in 0..lanes {
+                let mut st = driver.new_state();
+                let prompt: Vec<i32> = (0..20 + i).map(|j| 1 + (j % 255) as i32).collect();
+                driver.prefill(&mut rt, &mut st, &prompt)?;
+                states.push(st);
+            }
+            // warmup
+            let toks = vec![65i32; lanes];
+            let mut refs: Vec<&mut SeqState> = states.iter_mut().collect();
+            driver.decode_batch(&mut rt, refs.as_mut_slice(), &toks)?;
+            let reps = 12;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let mut refs: Vec<&mut SeqState> = states.iter_mut().collect();
+                driver.decode_batch(&mut rt, refs.as_mut_slice(), &toks)?;
+            }
+            let per_token_ms =
+                t0.elapsed().as_secs_f64() * 1000.0 / (reps * lanes) as f64;
+            println!("  {:<7} B={lanes}: {per_token_ms:>8.3} ms/token", arch.as_str());
+        }
+    }
+
+    // --- 3. baseline history-bucket ablation --------------------------------
+    println!("\n== ablation 3: baseline decode latency per history bucket ==");
+    let driver = ModelDriver::new(&rt, &preset, Arch::Base)?;
+    let mut s_bucket = Series::new("base_decode_ms_per_bucket");
+    for &b in &buckets {
+        let n = b - 16;
+        let mut st = driver.new_state();
+        let prompt: Vec<i32> = (0..n).map(|j| 1 + (j % 255) as i32).collect();
+        driver.prefill(&mut rt, &mut st, &prompt)?;
+        let mut tok = 65;
+        // warm
+        let l = driver.decode_batch(&mut rt, &mut [&mut st], &[tok])?;
+        tok = tconstformer::model::sampler::argmax(&l[0]);
+        let reps = 8;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let l = driver.decode_batch(&mut rt, &mut [&mut st], &[tok])?;
+            tok = tconstformer::model::sampler::argmax(&l[0]);
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1000.0 / reps as f64;
+        println!("  bucket {b:<6} {ms:>8.3} ms/token");
+        s_bucket.push(b as f64, ms);
+    }
+    write_results_file("ablation_base_buckets.csv", &series_to_csv(&[s_bucket]))?;
+    println!("\nwritten to results/ablation_sync_mode.csv, results/ablation_base_buckets.csv");
+    Ok(())
+}

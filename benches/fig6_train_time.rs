@@ -1,0 +1,90 @@
+//! Fig. 6 (a–c): training wall-clock per epoch-equivalent at matched
+//! sequence length, for the three architectures.
+//!
+//! Paper expectation: the windowed architectures pay a scheduling overhead
+//! over the baseline at the same sequence length (~+42% at 1K in the
+//! paper's setup) — the one-time cost of the chunked window processing
+//! that buys O(1) inference. We time `train_step` executions (tiny preset,
+//! seq 256, chunked into W_og=32 windows for tconst/tlin) and report
+//! seconds per epoch-equivalent (fixed token budget) plus the relative
+//! overhead.
+//!
+//! Env: BENCH_STEPS (default 8 timed steps).
+
+use tconstformer::data::corpus::{self, CorpusSpec};
+use tconstformer::runtime::Runtime;
+use tconstformer::trainer::{TrainConfig, Trainer};
+use tconstformer::util::bench::{write_results_file, Series, series_to_markdown};
+use tconstformer::util::rng::Rng;
+use tconstformer::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::var("BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let corp = corpus::generate(&CorpusSpec { total_tokens: 1 << 17, ..Default::default() });
+
+    println!("== fig6: training time per epoch-equivalent (tiny, seq=256) ==");
+    let mut rows = Vec::new();
+    for arch in ["base", "tlin", "tconst"] {
+        let mut rt = Runtime::load("artifacts")?;
+        let cfg = TrainConfig {
+            preset: "tiny".into(),
+            arch: arch.into(),
+            steps,
+            eval_every: 0,
+            log_every: usize::MAX,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(&mut rt, cfg)?;
+        let (b, t1) = tr.batch_shape();
+        let mut rng = Rng::new(3);
+
+        // warmup (compile + first exec)
+        let batch = corpus::sample_batch(&corp.train, b, t1, &mut rng);
+        tr.train_step(&mut rt, &batch)?;
+
+        let mut s = Summary::new();
+        for _ in 0..steps {
+            let batch = corpus::sample_batch(&corp.train, b, t1, &mut rng);
+            let t0 = std::time::Instant::now();
+            tr.train_step(&mut rt, &batch)?;
+            s.add(t0.elapsed().as_secs_f64());
+        }
+        let tokens_per_step = (b * (t1 - 1)) as f64;
+        // "epoch" = one pass over the train split
+        let steps_per_epoch = corp.train.len() as f64 / tokens_per_step;
+        let epoch_s = s.mean() * steps_per_epoch;
+        println!(
+            "{:<7} {:>8.3} s/step (±{:.3})  -> {:>8.1} s/epoch-equivalent",
+            arch,
+            s.mean(),
+            s.std(),
+            epoch_s
+        );
+        rows.push((arch.to_string(), s.mean(), epoch_s));
+    }
+
+    let base_epoch = rows.iter().find(|r| r.0 == "base").map(|r| r.2).unwrap();
+    println!("\nrelative training overhead vs baseline (paper: ~1.4x at 1K):");
+    let mut series = Series::new("epoch_seconds");
+    let mut overhead = Series::new("overhead_vs_base");
+    for (i, (arch, _, epoch_s)) in rows.iter().enumerate() {
+        println!("  {:<7} {:>6.2}x", arch, epoch_s / base_epoch);
+        series.push(i as f64, *epoch_s);
+        overhead.push(i as f64, epoch_s / base_epoch);
+    }
+    write_results_file(
+        "fig6_train_time.md",
+        &format!(
+            "| arch | s/epoch-equivalent | overhead vs base |\n|---|---|---|\n{}",
+            rows.iter()
+                .map(|(a, _, e)| format!("| {a} | {e:.1} | {:.2}x |\n", e / base_epoch))
+                .collect::<String>()
+        ),
+    )?;
+    let _ = series_to_markdown(&[series, overhead], "arch_idx");
+    println!("written to results/fig6_train_time.md");
+    Ok(())
+}

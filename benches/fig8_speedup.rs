@@ -1,0 +1,62 @@
+//! Fig. 8 (d, e, f, h, i): cache-speedup ratios (miss/hit per architecture)
+//! and end-to-end speedups (TConstFormer vs baseline / vs TLinFormer).
+//!
+//! Paper expectation: the baseline's cache speedup decays toward 1× as N
+//! grows (its hit path still scales with N), while TLinFormer's and
+//! especially TConstFormer's ratios *grow* with N; the end-to-end speedup
+//! of TConstFormer over the baseline grows without bound (tens of × at the
+//! paper's scales).
+
+use tconstformer::bench_support::fig8_sweep;
+use tconstformer::model::Arch;
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::var("BENCH_PRESET").unwrap_or_else(|_| "tiny".into());
+    let max_n: usize = std::env::var("BENCH_MAX_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+    let quick = std::env::var("BENCH_FULL").is_err();
+
+    println!("== fig8 (d,e,f,h,i): speedup ratios [{preset}, max N {max_n}] ==");
+    let out = fig8_sweep("artifacts", &preset, max_n, quick)?;
+
+    let get = |arch: Arch| -> Vec<(usize, f64, f64)> {
+        out.points
+            .iter()
+            .filter(|(a, _)| *a == arch)
+            .map(|(_, p)| (p.n, p.miss_ms, p.hit_ms))
+            .collect()
+    };
+    let base = get(Arch::Base);
+    let tlin = get(Arch::TLin);
+    let tconst = get(Arch::TConst);
+
+    println!("\n{:>8} {:>14} {:>14} {:>14} {:>16} {:>16}",
+        "N", "base miss/hit", "tlin miss/hit", "tconst miss/hit", "tconst vs base", "tconst vs tlin");
+    for i in 0..base.len().min(tlin.len()).min(tconst.len()) {
+        let n = base[i].0;
+        println!(
+            "{:>8} {:>14.2} {:>14.2} {:>14.2} {:>16.2} {:>16.2}",
+            n,
+            base[i].1 / base[i].2,
+            tlin[i].1 / tlin[i].2,
+            tconst[i].1 / tconst[i].2,
+            base[i].2 / tconst[i].2,
+            tlin[i].2 / tconst[i].2,
+        );
+    }
+
+    // Shape check: tconst cache-speedup at the largest N must exceed the
+    // baseline's (the paper's qualitative claim in d vs f).
+    if let (Some(b), Some(t)) = (base.last(), tconst.last()) {
+        let base_ratio = b.1 / b.2;
+        let tconst_ratio = t.1 / t.2;
+        println!(
+            "\nlargest-N cache speedup: base {base_ratio:.2}x vs tconst {tconst_ratio:.2}x ({})",
+            if tconst_ratio > base_ratio { "paper shape HOLDS" } else { "paper shape VIOLATED" }
+        );
+    }
+    println!("series written to results/fig8_def_cache_speedup.csv and fig8_hi_speedup.csv");
+    Ok(())
+}

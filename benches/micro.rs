@@ -1,0 +1,93 @@
+//! Micro-benchmarks of the coordinator hot path (§Perf targets):
+//! * decode_hot_path: full `decode_batch` vs the raw PJRT execute time —
+//!   the difference is coordinator overhead (gather/scatter, upload,
+//!   sampling), which DESIGN.md §10 bounds at <10% of step time at B=4;
+//! * tensor batching algebra (concat/split/insert) at decode shapes;
+//! * JSON parse of the real manifest;
+//! * sampler + rng throughput.
+
+use tconstformer::model::batch::{concat_axis, split_axis};
+use tconstformer::model::state::SeqState;
+use tconstformer::model::{Arch, ModelDriver};
+use tconstformer::runtime::{HostTensor, Runtime};
+use tconstformer::util::bench::Bench;
+use tconstformer::util::json::Json;
+use tconstformer::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::var("BENCH_PRESET").unwrap_or_else(|_| "tiny".into());
+    let bench = Bench::quick();
+
+    // --- decode hot path ----------------------------------------------------
+    println!("== micro: decode hot path [{preset}] ==");
+    let mut rt = Runtime::load("artifacts")?;
+    let driver = ModelDriver::new(&rt, &preset, Arch::TConst)?;
+    let lanes = 4usize;
+    let mut states: Vec<SeqState> = Vec::new();
+    for i in 0..lanes {
+        let mut st = driver.new_state();
+        let prompt: Vec<i32> = (0..10 + i).map(|j| 1 + (j % 255) as i32).collect();
+        driver.prefill(&mut rt, &mut st, &prompt)?;
+        states.push(st);
+    }
+    let toks = vec![65i32; lanes];
+    {
+        let mut refs: Vec<&mut SeqState> = states.iter_mut().collect();
+        driver.decode_batch(&mut rt, refs.as_mut_slice(), &toks)?; // warm + compile
+    }
+    rt.reset_stats();
+    let t0 = std::time::Instant::now();
+    let reps = 30;
+    for _ in 0..reps {
+        let mut refs: Vec<&mut SeqState> = states.iter_mut().collect();
+        driver.decode_batch(&mut rt, refs.as_mut_slice(), &toks)?;
+    }
+    let total_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let exec_ns: u64 = rt.stats().values().map(|s| s.total_ns).sum();
+    let exec_ms = exec_ns as f64 / 1e6;
+    let overhead = (total_ms - exec_ms) / total_ms * 100.0;
+    println!(
+        "decode_batch B={lanes}: {:.3} ms/round | pjrt execute {:.3} ms/round | coordinator overhead {:.1}%",
+        total_ms / reps as f64,
+        exec_ms / reps as f64,
+        overhead
+    );
+
+    // --- batching algebra at decode shapes -----------------------------------
+    let cfg = driver.cfg.clone();
+    let (nb, h2, w, d) = (cfg.n_block, cfg.h_inner + 2, cfg.w_og, cfg.d_model);
+    let lane_t = HostTensor::zeros_f32(&[nb, h2, 1, w, d]);
+    let lanes_t: Vec<&HostTensor> = (0..4).map(|_| &lane_t).collect();
+    bench.run("concat_axis2_gen_cache_x4", || {
+        let _ = concat_axis(&lanes_t, 2).unwrap();
+    });
+    let cat = concat_axis(&lanes_t, 2)?;
+    bench.run("split_axis2_gen_cache_x4", || {
+        let _ = split_axis(&cat, 2, 4).unwrap();
+    });
+
+    // --- JSON parse of the real manifest --------------------------------------
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json")?;
+    bench.run("json_parse_manifest", || {
+        let _ = Json::parse(&manifest_text).unwrap();
+    });
+
+    // --- sampling -------------------------------------------------------------
+    let mut rng = Rng::new(1);
+    let logits: Vec<f32> = (0..256).map(|_| rng.f32()).collect();
+    bench.run("sampler_argmax_256", || {
+        let _ = tconstformer::model::sampler::argmax(&logits);
+    });
+    let params = tconstformer::model::sampler::SamplingParams {
+        temperature: 0.8,
+        top_k: 40,
+        seed: 0,
+    };
+    bench.run("sampler_topk40_temp_256", || {
+        let _ = tconstformer::model::sampler::sample(&logits, &params, &mut rng);
+    });
+    bench.run("rng_normal", || {
+        let _ = rng.normal();
+    });
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Streaming-serving demo: boot the engine + HTTP server, replay a Poisson
+//! workload over real HTTP connections, and report the serving metrics the
+//! paper's motivation section cares about (TTFT, per-token latency,
+//! sustained throughput, constant KV footprint).
+//!
+//! Run: `cargo run --release --example serve_stream -- [arch] [n_requests] [rate_per_s]`
+//! (defaults: tconst 24 8.0 — tiny preset for CPU speed).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use tconstformer::coordinator::{Engine, EngineConfig};
+use tconstformer::data::corpus::{self, CorpusSpec};
+use tconstformer::data::tokenizer::ByteTokenizer;
+use tconstformer::data::workload::{self, WorkloadSpec};
+use tconstformer::model::Arch;
+use tconstformer::server::http;
+use tconstformer::server::ServerConfig;
+use tconstformer::util::json::Json;
+use tconstformer::util::stats::Percentiles;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let arch = Arch::parse(args.first().map(String::as_str).unwrap_or("tconst"))?;
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+    let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8.0);
+
+    println!("== serve_stream: arch={} requests={} rate={}/s ==", arch.as_str(), n_requests, rate);
+
+    let engine = Engine::spawn(EngineConfig {
+        preset: "tiny".into(),
+        arch,
+        ..Default::default()
+    })?;
+    let addr = "127.0.0.1:8099";
+    let stop = Arc::new(AtomicBool::new(false));
+    let (h2, s2) = (engine.clone(), stop.clone());
+    let server = std::thread::spawn(move || {
+        http::serve(&ServerConfig { addr: addr.to_string() }, h2, Some(s2))
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    // Build the workload from corpus text so prompts are realistic bytes.
+    let corp = corpus::generate(&CorpusSpec { total_tokens: 1 << 16, ..Default::default() });
+    let items = workload::generate(
+        &WorkloadSpec {
+            n_requests,
+            rate_per_s: rate,
+            prompt_len_min: 8,
+            prompt_len_max: 96,
+            new_tokens_min: 8,
+            new_tokens_max: 48,
+            ..Default::default()
+        },
+        &corp.train,
+    );
+
+    // Replay with real timing: one OS thread per in-flight request.
+    let tk = ByteTokenizer;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for item in items {
+        let wait = item.at_ms - t0.elapsed().as_secs_f64() * 1000.0;
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_millis(wait as u64));
+        }
+        let body = Json::obj(vec![
+            ("prompt", Json::str(tk.decode(&item.prompt_tokens))),
+            ("max_new_tokens", Json::num(item.max_new_tokens as f64)),
+        ])
+        .to_string();
+        handles.push(std::thread::spawn(move || {
+            let t = std::time::Instant::now();
+            let res = http::http_post(addr, "/generate", &body);
+            (res, t.elapsed().as_secs_f64() * 1000.0)
+        }));
+    }
+
+    let mut lat = Percentiles::default();
+    let mut ttft = Percentiles::default();
+    let mut tokens = 0usize;
+    let mut errors = 0usize;
+    for h in handles {
+        match h.join().unwrap() {
+            (Ok((200, body)), client_ms) => {
+                let j = Json::parse(&body).unwrap();
+                tokens += j.get("tokens").as_arr().map(|a| a.len()).unwrap_or(0);
+                ttft.add(j.get("metrics").get("ttft_ms").as_f64().unwrap_or(0.0));
+                lat.add(client_ms);
+            }
+            _ => errors += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n-- workload results ({arch:?}) --", arch = arch.as_str());
+    println!("  completed        {:>8}  (errors {errors})", n_requests - errors);
+    println!("  wall time        {wall:>8.2} s");
+    println!("  goodput          {:>8.1} tok/s", tokens as f64 / wall);
+    println!("  client latency   p50 {:>8.1} ms   p95 {:>8.1} ms", lat.p50(), lat.p95());
+    println!("  ttft             p50 {:>8.1} ms   p95 {:>8.1} ms", ttft.p50(), ttft.p95());
+
+    let m = engine.metrics()?;
+    println!("\n-- engine metrics --");
+    println!(
+        "  decode rounds {}  syncs {}  kv peak {} B  round mean {:.2} ms",
+        m.get("decode_steps"),
+        m.get("sync_events"),
+        m.get("kv_bytes_peak"),
+        m.get("round_ms_mean").as_f64().unwrap_or(0.0),
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap()?;
+    engine.shutdown();
+    Ok(())
+}

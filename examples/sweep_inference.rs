@@ -1,0 +1,16 @@
+//! Regenerate every Fig. 8 panel (a–i): latency vs N (miss + hit), cache
+//! speedup ratios, KV memory, and end-to-end speedups, for all three
+//! architectures — measured on the compiled artifacts up to the largest
+//! bucket and extended by the Eq. 1–7 analytic model beyond (separate
+//! `*_model` series).
+//!
+//! Run: `cargo run --release --example sweep_inference -- [preset] [max_n] [--quick]`
+//! Outputs: results/fig8_*.csv + .md (quoted by EXPERIMENTS.md).
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(String::as_str).unwrap_or("small").to_string();
+    let max_n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2048);
+    let quick = args.iter().any(|a| a == "--quick");
+    tconstformer::bench_support::run_fig8_sweep("artifacts", &preset, max_n, quick, "results")
+}

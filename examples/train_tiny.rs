@@ -1,0 +1,116 @@
+//! **End-to-end driver** (DESIGN.md §6): train the tiny baseline AND the
+//! tiny TConstFormer from scratch on the synthetic corpus via the AOT
+//! `train_step` graphs, log the loss curves, save a checkpoint, then load
+//! the trained TConstFormer into the serving engine and serve real batched
+//! requests — proving all three layers compose: Pallas kernel (L1) inside
+//! the JAX train/infer graphs (L2) driven by the Rust trainer/coordinator
+//! (L3).
+//!
+//! Run: `cargo run --release --example train_tiny -- [steps] [archs]`
+//! (defaults: 150 steps, archs "base,tconst"; results land in
+//! results/train_tiny_log.md and EXPERIMENTS.md quotes them).
+
+use tconstformer::coordinator::{Engine, EngineConfig, Request};
+use tconstformer::data::corpus::{self, CorpusSpec};
+use tconstformer::data::tokenizer::ByteTokenizer;
+use tconstformer::model::Arch;
+use tconstformer::runtime::Runtime;
+use tconstformer::trainer::{TrainConfig, Trainer};
+use tconstformer::util::bench::{series_to_markdown, write_results_file, Series};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(150);
+    let archs: Vec<String> = args
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("base,tconst")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+
+    println!("== train_tiny: {steps} steps per arch over {archs:?} ==");
+    let corp = corpus::generate(&CorpusSpec { total_tokens: 1 << 19, ..Default::default() });
+    println!("corpus: {} train / {} valid tokens", corp.train.len(), corp.valid.len());
+
+    let mut series: Vec<Series> = Vec::new();
+    let mut ckpt_stem: Option<String> = None;
+
+    for arch in &archs {
+        let mut rt = Runtime::load("artifacts")?;
+        let cfg = TrainConfig {
+            preset: "tiny".into(),
+            arch: arch.clone(),
+            steps,
+            lr: 3e-3,
+            eval_every: (steps / 4).max(1),
+            eval_batches: 4,
+            log_every: (steps / 20).max(1),
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&mut rt, cfg)?;
+        let t0 = std::time::Instant::now();
+        let log = trainer.run(&mut rt, &corp)?;
+        let dt = t0.elapsed().as_secs_f64();
+
+        let mut s_train = Series::new(format!("{arch}_train_loss"));
+        let mut s_valid = Series::new(format!("{arch}_valid_loss"));
+        for p in &log {
+            s_train.push(p.step as f64, p.train_loss);
+            if let Some(v) = p.valid_loss {
+                s_valid.push(p.step as f64, v);
+            }
+        }
+        series.push(s_train);
+        series.push(s_valid);
+        println!(
+            "[{arch}] {steps} steps in {dt:.1}s ({:.2} s/step)",
+            dt / steps as f64
+        );
+
+        if arch == "tconst" {
+            let stem = "results/ckpt_tconst_tiny";
+            trainer.save_checkpoint(&rt, stem)?;
+            ckpt_stem = Some(stem.to_string());
+            println!("[{arch}] checkpoint -> {stem}.bin");
+        }
+    }
+
+    let md = series_to_markdown(&series, "step");
+    let path = write_results_file("train_tiny_log.md", &md)?;
+    println!("loss curves -> {}", path.display());
+
+    // --- serve with the trained weights -----------------------------------
+    if let Some(stem) = ckpt_stem {
+        println!("\n== serving the trained TConstFormer ==");
+        let cfg = EngineConfig {
+            preset: "tiny".into(),
+            arch: Arch::TConst,
+            checkpoint: Some(stem),
+            ..Default::default()
+        };
+        let mut engine = Engine::new(&cfg)?;
+        let tk = ByteTokenizer;
+        let prompts = ["the transformer ", "however its auto", "this work study "];
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request::greedy(i as u64, tk.encode(p), 48))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = engine.run_workload(reqs)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let total_tokens: usize = out.iter().map(|r| r.tokens.len()).sum();
+        for (p, r) in prompts.iter().zip(&out) {
+            println!("  {:?} -> {:?}", p, tk.decode(&r.tokens));
+        }
+        println!(
+            "served {} requests / {} tokens in {:.2}s ({:.1} tok/s batched)",
+            out.len(),
+            total_tokens,
+            dt,
+            total_tokens as f64 / dt
+        );
+    }
+    Ok(())
+}

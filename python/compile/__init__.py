@@ -1,0 +1,6 @@
+"""Build-time Python for the TConstFormer reproduction (Layers 1+2).
+
+Nothing in this package runs at serving time: ``aot.py`` lowers every graph
+to HLO text once (``make artifacts``) and the Rust coordinator executes the
+artifacts through PJRT.
+"""

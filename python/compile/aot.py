@@ -1,0 +1,444 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO *text* + build the manifest.
+
+Run once at build time (``make artifacts``); the Rust coordinator then loads
+``artifacts/manifest.json`` and compiles each ``*.hlo.txt`` through PJRT.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). Graphs are lowered with
+``return_tuple=True`` so the Rust side always unpacks one result tuple.
+
+Every graph takes the architecture's parameters as *leading* positional
+arguments in the canonical manifest order (compile.params.param_spec),
+followed by graph-specific inputs. Golden input/output pairs are emitted for
+the ``tiny`` preset so Rust integration tests can pin numerics end-to-end.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--presets tiny,small]
+                          [--no-golden] [--no-train] [--graphs REGEX]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import baseline, params as P, tconstformer as tc, tlinformer as tl, train as T
+from .configs import BATCH_BUCKETS, PRESETS, ModelConfig, history_buckets
+from .tensorio import save_tensors
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclass
+class GraphDef:
+    """One exportable graph: metadata + a builder returning (fn, arg specs,
+    result names). ``fn`` takes positional args matching the specs."""
+
+    name: str
+    preset: str
+    arch: str
+    kind: str                      # prefill|decode|window|sync_full|train_step|eval_loss
+    batch: int
+    bucket: Optional[int]
+    fn: Callable
+    args: List[Tuple[str, jax.ShapeDtypeStruct]]
+    results: List[str]
+    n_param_args: int
+
+
+# ---------------------------------------------------------------------------
+# Graph builders
+# ---------------------------------------------------------------------------
+
+def _pspecs(cfg: ModelConfig, arch: str):
+    return [(f"param:{n}", spec(s)) for n, s in P.param_spec(cfg, arch)]
+
+
+def _ctx_specs(cfg: ModelConfig, b: int):
+    nb, h1, w, d = cfg.n_block, cfg.h_inner + 1, cfg.w_oh, cfg.d_model
+    return [
+        ("ctx_k", spec((nb, h1, b, w, d))),
+        ("ctx_v", spec((nb, h1, b, w, d))),
+        ("ctx_sum", spec((nb, b, w, d))),
+        ("ctx_gate", spec((b,))),
+    ]
+
+
+def _gen_specs(cfg: ModelConfig, b: int):
+    nb, h2, w, d = cfg.n_block, cfg.h_inner + 2, cfg.w_og, cfg.d_model
+    return [
+        ("gen_k", spec((nb, h2, b, w, d))),
+        ("gen_v", spec((nb, h2, b, w, d))),
+    ]
+
+
+def _hist_specs(cfg: ModelConfig, b: int, bucket: int):
+    nb, d = cfg.n_block, cfg.d_model
+    return [
+        ("hist_k", spec((nb, b, bucket, d))),
+        ("hist_v", spec((nb, b, bucket, d))),
+        ("hist_len", spec((b,), I32)),
+    ]
+
+
+def build_graphs(preset: str, include_train: bool) -> List[GraphDef]:
+    cfg = PRESETS[preset]
+    graphs: List[GraphDef] = []
+    buckets = history_buckets(cfg)
+
+    def add(name, arch, kind, batch, bucket, fn, extra_args, results):
+        pargs = _pspecs(cfg, arch)
+        np_args = len(pargs)
+
+        def flat_fn(*flat):
+            params = P.unflatten(cfg, arch, list(flat[:np_args]))
+            return fn(params, *flat[np_args:])
+
+        graphs.append(GraphDef(
+            name=name, preset=preset, arch=arch, kind=kind, batch=batch,
+            bucket=bucket, fn=flat_fn, args=pargs + extra_args,
+            results=results, n_param_args=np_args,
+        ))
+
+    # ---- baseline -------------------------------------------------------
+    for L in buckets:
+        add(
+            f"{preset}_base_prefill_L{L}", "base", "prefill", 1, L,
+            lambda p, tok, ln: baseline.prefill(p, cfg, tok, ln),
+            [("tokens", spec((1, L), I32)), ("length", spec((), I32))],
+            ["logits", "cache_k", "cache_v"],
+        )
+        for B in BATCH_BUCKETS:
+            add(
+                f"{preset}_base_decode_L{L}_B{B}", "base", "decode", B, L,
+                lambda p, tok, pos, ck, cv: baseline.decode(p, cfg, tok, pos, ck, cv),
+                [
+                    ("token", spec((B,), I32)), ("pos", spec((B,), I32)),
+                    ("cache_k", spec((cfg.n_layer, B, L, cfg.d_model))),
+                    ("cache_v", spec((cfg.n_layer, B, L, cfg.d_model))),
+                ],
+                ["logits", "cache_k", "cache_v"],
+            )
+
+    # ---- TConstFormer ----------------------------------------------------
+    def tconst_window(p, tok, nv, ck, cv, cs, cg):
+        out = tc.window_forward(p, cfg, tok, nv, tc.CtxState(ck, cv, cs, cg))
+        nctx = out["new_ctx"]
+        return (out["logits"], out["gen_k"], out["gen_v"],
+                nctx.ctx_k, nctx.ctx_v, nctx.ctx_sum)
+
+    add(
+        f"{preset}_tconst_window_B1", "tconst", "window", 1, None,
+        tconst_window,
+        [("tokens", spec((1, cfg.w_og), I32)), ("n_valid", spec((1,), I32))]
+        + _ctx_specs(cfg, 1),
+        ["logits", "gen_k", "gen_v", "new_ctx_k", "new_ctx_v", "new_ctx_sum"],
+    )
+    for B in BATCH_BUCKETS:
+        def tconst_decode(p, tok, slot, ck, cv, cs, cg, gk, gv):
+            lo, gk2, gv2 = tc.decode(p, cfg, tok, slot,
+                                     tc.CtxState(ck, cv, cs, cg), gk, gv)
+            return lo, gk2, gv2
+
+        add(
+            f"{preset}_tconst_decode_B{B}", "tconst", "decode", B, None,
+            tconst_decode,
+            [("token", spec((B,), I32)), ("slot", spec((B,), I32))]
+            + _ctx_specs(cfg, B) + _gen_specs(cfg, B),
+            ["logits", "gen_k", "gen_v"],
+        )
+    for L in buckets:
+        add(
+            f"{preset}_tconst_sync_full_L{L}", "tconst", "sync_full", 1, L,
+            lambda p, hist, hlen: tuple(tc.sync_full(p, cfg, hist, hlen)[:3]),
+            [("hist_tokens", spec((1, L), I32)), ("hist_len", spec((1,), I32))],
+            ["ctx_k", "ctx_v", "ctx_sum"],
+        )
+
+    # ---- TLinFormer -------------------------------------------------------
+    for L in buckets:
+        def tlin_window(p, tok, nv, ck, cv, cs, cg, hk, hv, hl):
+            out = tl.window_forward(p, cfg, tok, nv,
+                                    tc.CtxState(ck, cv, cs, cg), hk, hv, hl)
+            nctx = out["new_ctx"]
+            return (out["logits"], out["gen_k"], out["gen_v"],
+                    nctx.ctx_k, nctx.ctx_v, nctx.ctx_sum,
+                    out["append_k"], out["append_v"])
+
+        add(
+            f"{preset}_tlin_window_L{L}_B1", "tlin", "window", 1, L,
+            tlin_window,
+            [("tokens", spec((1, cfg.w_og), I32)), ("n_valid", spec((1,), I32))]
+            + _ctx_specs(cfg, 1) + _hist_specs(cfg, 1, L),
+            ["logits", "gen_k", "gen_v", "new_ctx_k", "new_ctx_v",
+             "new_ctx_sum", "append_k", "append_v"],
+        )
+        for B in BATCH_BUCKETS:
+            def tlin_decode(p, tok, slot, ck, cv, cs, cg, gk, gv, hk, hv, hl):
+                lo, gk2, gv2 = tl.decode(p, cfg, tok, slot,
+                                         tc.CtxState(ck, cv, cs, cg),
+                                         gk, gv, hk, hv, hl)
+                return lo, gk2, gv2
+
+            add(
+                f"{preset}_tlin_decode_L{L}_B{B}", "tlin", "decode", B, L,
+                tlin_decode,
+                [("token", spec((B,), I32)), ("slot", spec((B,), I32))]
+                + _ctx_specs(cfg, B) + _gen_specs(cfg, B)
+                + _hist_specs(cfg, B, L),
+                ["logits", "gen_k", "gen_v"],
+            )
+
+    # ---- training / eval --------------------------------------------------
+    if include_train:
+        bt, t1 = cfg.train_batch, cfg.train_seq + 1
+        for arch in ("base", "tconst", "tlin"):
+            nsp = len(P.param_spec(cfg, arch))
+
+            def train_fn(arch):
+                def fn(*flat):
+                    n = len(P.param_spec(cfg, arch))
+                    fp = list(flat[:n])
+                    fm = list(flat[n:2 * n])
+                    fv = list(flat[2 * n:3 * n])
+                    step, tokens, lr = flat[3 * n], flat[3 * n + 1], flat[3 * n + 2]
+                    return T.train_step(cfg, arch, fp, fm, fv, step, tokens, lr)
+                return fn
+
+            pargs = _pspecs(cfg, arch)
+            margs = [(f"m:{n[6:]}", s) for n, s in pargs]
+            vargs = [(f"v:{n[6:]}", s) for n, s in pargs]
+            graphs.append(GraphDef(
+                name=f"{preset}_{arch}_train_step", preset=preset, arch=arch,
+                kind="train_step", batch=bt, bucket=None, fn=train_fn(arch),
+                args=pargs + margs + vargs + [
+                    ("step", spec((), I32)),
+                    ("tokens", spec((bt, t1), I32)),
+                    ("lr", spec((), F32)),
+                ],
+                results=(["loss"]
+                         + [f"param:{n}" for n, _ in P.param_spec(cfg, arch)]
+                         + [f"m:{n}" for n, _ in P.param_spec(cfg, arch)]
+                         + [f"v:{n}" for n, _ in P.param_spec(cfg, arch)]),
+                n_param_args=nsp,
+            ))
+
+            def eval_fn(arch):
+                def fn(*flat):
+                    n = len(P.param_spec(cfg, arch))
+                    return (T.eval_loss(cfg, arch, list(flat[:n]), flat[n]),)
+                return fn
+
+            graphs.append(GraphDef(
+                name=f"{preset}_{arch}_eval_loss", preset=preset, arch=arch,
+                kind="eval_loss", batch=bt, bucket=None, fn=eval_fn(arch),
+                args=pargs + [("tokens", spec((bt, t1), I32))],
+                results=["loss"], n_param_args=nsp,
+            ))
+
+    return graphs
+
+
+# ---------------------------------------------------------------------------
+# Lowering + manifest
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_graph(g: GraphDef, out_dir: str) -> Dict:
+    t0 = time.time()
+    specs = [s for _, s in g.args]
+    # keep_unused=True: the Rust side passes every manifest arg positionally,
+    # so parameters that a particular graph does not touch (e.g. the restore
+    # layer in incremental-sync graphs) must stay in the HLO signature.
+    lowered = jax.jit(g.fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{g.name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    dt = time.time() - t0
+    print(f"  {g.name}: {len(text) / 1e6:.2f} MB HLO in {dt:.1f}s", flush=True)
+    return {
+        "name": g.name,
+        "file": fname,
+        "preset": g.preset,
+        "arch": g.arch,
+        "kind": g.kind,
+        "batch": g.batch,
+        "bucket": g.bucket,
+        "n_param_args": g.n_param_args,
+        "args": [
+            {"name": n, "dtype": ("i32" if s.dtype == jnp.int32 else "f32"),
+             "shape": list(s.shape)}
+            for n, s in g.args
+        ],
+        "results": g.results,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Weights + golden vectors
+# ---------------------------------------------------------------------------
+
+def export_weights(preset: str, out_dir: str) -> Dict:
+    cfg = PRESETS[preset]
+    entries = {}
+    for arch in ("base", "tlin", "tconst"):
+        tree = P.init_params(cfg, arch, seed=hash((preset, arch)) % (2**31))
+        flat = P.flatten(tree)
+        names = [n for n, _ in P.param_spec(cfg, arch)]
+        stem = os.path.join(out_dir, f"weights_{arch}_{preset}")
+        save_tensors(stem, list(zip(names, [np.asarray(a) for a in flat])))
+        entries[arch] = {
+            "file": f"weights_{arch}_{preset}",
+            "n_params": P.num_params(cfg, arch),
+            "tensors": [
+                {"name": n, "shape": list(s)} for n, s in P.param_spec(cfg, arch)
+            ],
+        }
+        print(f"  weights {arch}/{preset}: {P.num_params(cfg, arch):,} params")
+    return entries
+
+
+def _golden_inputs(g: GraphDef, rng: np.random.Generator):
+    """Deterministic non-param inputs for a graph (params come from the
+    weights file — mirrored by the Rust test)."""
+    vals = []
+    for name, s in g.args[g.n_param_args:]:
+        if s.dtype == jnp.int32:
+            if name in ("length", "hist_len", "n_valid"):
+                v = np.full(s.shape, 7, np.int32)  # small but valid length
+            elif name in ("pos", "slot"):
+                v = np.full(s.shape, 3, np.int32)
+            elif name == "step":
+                v = np.zeros(s.shape, np.int32)
+            else:  # tokens / hist_tokens
+                v = rng.integers(1, 255, size=s.shape).astype(np.int32)
+        else:
+            if name == "ctx_gate":
+                v = np.ones(s.shape, np.float32)
+            elif name == "lr":
+                v = np.asarray(1e-3, np.float32)
+            else:
+                v = rng.standard_normal(s.shape).astype(np.float32) * 0.1
+        vals.append((name, v))
+    return vals
+
+
+def export_golden(graphs: List[GraphDef], weights_dir: str, out_dir: str,
+                  max_graphs: Optional[int] = None) -> List[Dict]:
+    from .tensorio import load_tensors
+
+    os.makedirs(out_dir, exist_ok=True)
+    index = []
+    cache: Dict[Tuple[str, str], List] = {}
+    done = 0
+    for g in graphs:
+        if g.kind == "train_step":
+            continue  # covered by eval_loss + rust trainer smoke
+        if max_graphs is not None and done >= max_graphs:
+            break
+        key = (g.arch, g.preset)
+        if key not in cache:
+            stem = os.path.join(weights_dir, f"weights_{g.arch}_{g.preset}")
+            cache[key] = [jnp.asarray(a) for _, a in load_tensors(stem)]
+        flat_params = cache[key]
+        rng = np.random.default_rng(abs(hash(g.name)) % (2**32))
+        extra = _golden_inputs(g, rng)
+        args = flat_params + [jnp.asarray(v) for _, v in extra]
+        t0 = time.time()
+        out = g.fn(*args)
+        if not isinstance(out, (tuple, list)):
+            out = (out,)
+        save_tensors(os.path.join(out_dir, f"{g.name}.args"), extra)
+        save_tensors(
+            os.path.join(out_dir, f"{g.name}.results"),
+            [(rn, np.asarray(o)) for rn, o in zip(g.results, out)],
+        )
+        index.append({"graph": g.name, "args": f"{g.name}.args",
+                      "results": f"{g.name}.results"})
+        print(f"  golden {g.name} ({time.time() - t0:.1f}s)", flush=True)
+        done += 1
+    return index
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small")
+    ap.add_argument("--graphs", default=None, help="regex filter on graph names")
+    ap.add_argument("--no-golden", action="store_true")
+    ap.add_argument("--no-train", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    presets = [p.strip() for p in args.presets.split(",") if p.strip()]
+
+    manifest = {
+        "version": 1,
+        "configs": {p: PRESETS[p].to_json_dict() for p in presets},
+        "history_buckets": {p: history_buckets(PRESETS[p]) for p in presets},
+        "batch_buckets": BATCH_BUCKETS,
+        "weights": {},
+        "graphs": [],
+        "golden": [],
+    }
+
+    t0 = time.time()
+    for preset in presets:
+        print(f"[aot] weights for preset {preset}")
+        manifest["weights"][preset] = export_weights(preset, out_dir)
+
+    all_graphs: List[GraphDef] = []
+    for preset in presets:
+        include_train = (not args.no_train) and preset == "tiny"
+        gs = build_graphs(preset, include_train)
+        if args.graphs:
+            gs = [g for g in gs if re.search(args.graphs, g.name)]
+        all_graphs.extend(gs)
+
+    print(f"[aot] lowering {len(all_graphs)} graphs")
+    for g in all_graphs:
+        manifest["graphs"].append(lower_graph(g, out_dir))
+
+    if not args.no_golden:
+        golden_graphs = [g for g in all_graphs if g.preset == "tiny"]
+        print(f"[aot] golden vectors for {len(golden_graphs)} tiny graphs")
+        manifest["golden"] = export_golden(
+            golden_graphs, out_dir, os.path.join(out_dir, "golden"))
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t0:.0f}s -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Standard decoder-only Transformer baseline (the paper's ``Base XXX``).
+
+Two graphs per history bucket L:
+
+* ``prefill_L``  — process a (1, L) padded prompt, emit the last-position
+  logits plus per-layer K/V caches (cache-miss path; cost O(L²) attention).
+* ``decode_L_B`` — one autoregressive step for B lanes against (B, nl, L, D)
+  caches with per-lane positions (cache-hit path; cost O(L) per layer —
+  the linearly growing per-token cost the paper's Fig. 8(a) demonstrates).
+
+The bucketed static-shape cache is the "pre-allocation" variant the paper
+mentions in §6.4.2 (DESIGN.md D4).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ModelConfig
+from .kernels import ref as masks
+from .layers import decoder_layer, layer_norm, project_kv, project_q
+
+
+def _embed(params, tokens, positions):
+    return params["tok_emb"][tokens] + params["pos_emb"][positions]
+
+
+def logits_head(params, x):
+    """Final LN + tied LM head."""
+    return jnp.dot(layer_norm(x, params["lnf"]), params["tok_emb"].T)
+
+
+def prefill(params, cfg: ModelConfig, tokens, length):
+    """Cache-miss forward over a padded prompt.
+
+    Args:
+      tokens: (1, L) int32, padded beyond ``length``.
+      length: () int32, number of valid tokens (>=1).
+
+    Returns:
+      logits (1, vocab) at position length-1,
+      cache_k, cache_v: (n_layer, 1, L, D).
+    """
+    b, l = tokens.shape
+    x = _embed(params, tokens, jnp.arange(l)[None, :])
+    bias = masks.causal_bias(b, l) + masks.length_bias(
+        jnp.full((b,), length, jnp.int32), l, l
+    )
+    ks, vs = [], []
+    for i in range(cfg.n_layer):
+        p = params["layers"][str(i)]
+        h = layers.layer_norm(x, p["ln1"])
+        k, v = project_kv(h, p["attn"])
+        ks.append(k)
+        vs.append(v)
+        q = project_q(h, p["attn"])
+        x = x + layers.attend(q, k, v, bias, p["attn"], cfg)
+        x = x + layers.ffn(layers.layer_norm(x, p["ln2"]), p["ffn"])
+    logits = logits_head(params, x)[:, length - 1, :]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode(params, cfg: ModelConfig, token, pos, cache_k, cache_v):
+    """One decode step for B lanes.
+
+    Args:
+      token: (B,) int32 — the token at position ``pos`` of each lane.
+      pos:   (B,) int32 — its position (the new KV slot).
+      cache_k/cache_v: (n_layer, B, L, D).
+
+    Returns: logits (B, vocab), cache_k', cache_v'.
+    """
+    x = _embed(params, token, pos)          # (B, D)
+    new_k, new_v = [], []
+    for i in range(cfg.n_layer):
+        p = params["layers"][str(i)]
+        h = layer_norm(x, p["ln1"])
+        out, ck, cv = layers.decode_self_attn(
+            h, cache_k[i], cache_v[i], pos, p["attn"], cfg
+        )
+        new_k.append(ck)
+        new_v.append(cv)
+        x = x + out
+        x = x + layers.ffn(layer_norm(x, p["ln2"]), p["ffn"])
+    logits = jnp.dot(layer_norm(x, params["lnf"]), params["tok_emb"].T)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def forward_train(params, cfg: ModelConfig, tokens):
+    """Training forward: (B, T) tokens -> (B, T, vocab) logits, full causal."""
+    b, t = tokens.shape
+    x = _embed(params, tokens, jnp.arange(t)[None, :])
+    bias = masks.causal_bias(b, t)
+    for i in range(cfg.n_layer):
+        x = decoder_layer(x, params["layers"][str(i)], bias, cfg)
+    return logits_head_seq(params, x)
+
+
+def logits_head_seq(params, x):
+    return jnp.dot(layer_norm(x, params["lnf"]), params["tok_emb"].T)

@@ -1,0 +1,118 @@
+"""Model configurations shared by Python (graph authoring) and Rust (manifest).
+
+The paper's naming scheme (§6.2.3) is `ARCH XXX-YYY-ZZZ`:
+  XXX = training sequence length, YYY = total observation window
+  (W_total = W_oh + W_og), ZZZ = W_oh / W_total.
+
+Parity rule (§6.2.1): equivalent total depth = n_block * (H + 2), which must
+match the baseline's n_layer for a fair comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters for one model family instance.
+
+    A single config describes all three architectures at parity: the
+    baseline uses ``n_layer`` plain decoder layers; TLinFormer/TConstFormer
+    use ``n_block`` blocks of internal depth ``h_inner`` (H in the paper),
+    with window sizes ``w_oh`` (historical context) and ``w_og`` (generation).
+    """
+
+    name: str
+    vocab: int = 256           # byte-level tokenizer + 0 reserved as EOS/pad
+    d_model: int = 128
+    n_head: int = 4
+    n_layer: int = 8           # baseline depth == n_block * (h_inner + 2)
+    max_seq: int = 2048        # largest baseline/TLinFormer history bucket
+    w_oh: int = 128            # historical context window
+    w_og: int = 128            # generation window (the paper's k)
+    n_block: int = 2
+    h_inner: int = 2           # H: intermediate self-attention layers / block
+    ffn_mult: int = 4
+    train_seq: int = 512       # T used by the exported train_step graph
+    train_batch: int = 4
+
+    def __post_init__(self):
+        assert self.d_model % self.n_head == 0
+        assert self.n_layer == self.n_block * (self.h_inner + 2), (
+            "parameter-parity rule: baseline depth must equal "
+            "n_block*(H+2); got "
+            f"{self.n_layer} vs {self.n_block}*({self.h_inner}+2)"
+        )
+        assert self.train_seq % self.w_og == 0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_head
+
+    @property
+    def d_ffn(self) -> int:
+        return self.ffn_mult * self.d_model
+
+    @property
+    def w_total(self) -> int:
+        return self.w_oh + self.w_og
+
+    @property
+    def ratio(self) -> float:
+        return self.w_oh / self.w_total
+
+    def paper_name(self, arch: str) -> str:
+        """Paper-style variant name, e.g. ``TConstFormer 512-256-0.5``."""
+        if arch == "base":
+            return f"Base {self.train_seq}"
+        label = {"tlin": "TLinFormer", "tconst": "TConstFormer"}[arch]
+        return f"{label} {self.train_seq}-{self.w_total}-{self.ratio:.3g}"
+
+    def to_json_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _mk(name: str, **kw) -> ModelConfig:
+    return ModelConfig(name=name, **kw)
+
+
+# Presets.
+#  tiny  — unit tests + the end-to-end training example (fast on CPU).
+#  small — the default serving artifact set for the Fig. 8 sweeps.
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": _mk(
+        "tiny", d_model=64, n_head=4, n_layer=4, n_block=1, h_inner=2,
+        w_oh=32, w_og=32, max_seq=512, train_seq=256, train_batch=4,
+    ),
+    "small": _mk(
+        "small", d_model=128, n_head=4, n_layer=8, n_block=2, h_inner=2,
+        w_oh=128, w_og=128, max_seq=2048, train_seq=512, train_batch=2,
+    ),
+    # Window-ratio ablation variants (paper Table 1, 512-512-X group).
+    "small_r382": _mk(
+        "small_r382", d_model=128, n_head=4, n_layer=8, n_block=2, h_inner=2,
+        w_oh=98, w_og=158, max_seq=2048, train_seq=474, train_batch=2,
+    ),
+    "small_r618": _mk(
+        "small_r618", d_model=128, n_head=4, n_layer=8, n_block=2, h_inner=2,
+        w_oh=158, w_og=98, max_seq=2048, train_seq=490, train_batch=2,
+    ),
+}
+
+
+# History-length buckets for the O(N)-state architectures (baseline and
+# TLinFormer). TConstFormer needs none — its state is fixed-size.
+def history_buckets(cfg: ModelConfig) -> List[int]:
+    out, b = [], 128
+    while b <= cfg.max_seq:
+        out.append(b)
+        b *= 4
+    if out[-1] != cfg.max_seq:
+        out.append(cfg.max_seq)
+    return out
+
+
+# Decode batch-lane buckets served by the continuous batcher.
+BATCH_BUCKETS: List[int] = [1, 4]

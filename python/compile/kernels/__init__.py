@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for the TConstFormer reproduction.
+
+The single fused-attention kernel below implements all four attention
+patterns of the paper's Fig. 2 (full self, causal self, compressing cross,
+restoring cross) through an additive bias mask, so every attention site in
+the L2 graphs lowers through the same hand-written kernel.
+
+Kernels are always lowered with ``interpret=True``: the CPU PJRT plugin used
+by the Rust runtime cannot execute Mosaic custom-calls, and interpret mode
+lowers the kernel to plain HLO ops that any backend runs.  The kernel is
+still *structured* for TPU: see DESIGN.md §4 for the VMEM/MXU analysis.
+"""
+
+from .attention import fused_attention, attention_vmem_bytes, mxu_utilization_estimate
+from . import ref
+
+__all__ = [
+    "fused_attention",
+    "attention_vmem_bytes",
+    "mxu_utilization_estimate",
+    "ref",
+]

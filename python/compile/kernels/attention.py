@@ -1,0 +1,271 @@
+"""Fused multi-head attention as a Pallas kernel (Layer 1).
+
+One kernel serves every attention pattern in the paper (Fig. 2):
+
+* full self-attention          -> bias = 0
+* causal self-attention        -> bias = causal mask
+* compressing cross-attention  -> bias = key-length mask (queries = learned bank)
+* restoring cross-attention    -> bias = 0 / length mask
+
+The mask is an *additive bias* computed in Layer 2 with ``NEG_INF = -1e9``
+(finite, so the in-kernel softmax never produces NaNs even for fully masked
+rows; a fully masked row degrades to the mean of V, which only ever happens
+on padded lanes whose outputs are discarded downstream).
+
+TPU structure (see DESIGN.md §4):
+
+* grid = (batch, heads, q-blocks): each program instance stages one
+  ``(block_q, d_head)`` query tile plus the full ``(L_k, d_head)`` K/V tiles
+  for its head in VMEM; the ``(block_q, L_k)`` score tile lives only in
+  registers/VMEM and never round-trips to HBM.
+* both matmuls (`Q·Kᵀ` and `P·V`) use ``preferred_element_type=float32`` so
+  they map onto the MXU with fp32 accumulation when inputs are bf16.
+* block_q defaults to min(L_q, 128) — with the paper-scale windows
+  (W_oh = W_og = 128..512, d_head = 32) the per-instance working set is
+  ~0.3–1.3 MiB, leaving VMEM headroom for double buffering.
+
+On this testbed the kernel is executed with ``interpret=True`` (CPU PJRT
+cannot run Mosaic custom-calls); correctness is pinned against the pure-jnp
+oracle in ``ref.py`` by the hypothesis suite in ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Finite stand-in for -inf used in all masks (NaN-free softmax).
+NEG_INF = -1e9
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale: float):
+    """One (batch, head, q-block) program instance.
+
+    Shapes inside the kernel:
+      q_ref    (block_q, d_head)
+      k_ref    (L_k, d_head)
+      v_ref    (L_k, d_head)
+      bias_ref (block_q, L_k)
+      o_ref    (block_q, d_head)
+    """
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    bias = bias_ref[...].astype(jnp.float32)
+
+    # Q·Kᵀ on the MXU, fp32 accumulation.
+    scores = jax.lax.dot_general(
+        q, k,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    scores = scores * scale + bias
+
+    # Numerically stable softmax; NEG_INF (finite) keeps this NaN-free.
+    row_max = jnp.max(scores, axis=-1, keepdims=True)
+    unnorm = jnp.exp(scores - row_max)
+    denom = jnp.sum(unnorm, axis=-1, keepdims=True)
+    probs = unnorm / denom
+
+    # P·V on the MXU.
+    out = jax.lax.dot_general(
+        probs, v,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _fused_attention_fwd_impl(q, k, v, bias, *, block_q: int | None = None,
+                              interpret: bool = True):
+    """softmax(Q·Kᵀ/√d + bias)·V as a single Pallas kernel (forward only).
+
+    Args:
+      q:    (B, H, L_q, d_head)
+      k:    (B, H, L_k, d_head)
+      v:    (B, H, L_k, d_head)
+      bias: (B, L_q, L_k) additive mask, broadcast over heads.
+      block_q: query-tile length (must divide L_q); default min(L_q, 128).
+      interpret: run the kernel in interpret mode (required on CPU PJRT).
+
+    Returns:
+      (B, H, L_q, d_head), dtype of q.
+    """
+    b, h, lq, dh = q.shape
+    lk = k.shape[2]
+    if k.shape != (b, h, lk, dh) or v.shape != (b, h, lk, dh):
+        raise ValueError(f"bad k/v shapes {k.shape} {v.shape} for q {q.shape}")
+    if bias.shape != (b, lq, lk):
+        raise ValueError(f"bias shape {bias.shape} != {(b, lq, lk)}")
+
+    if block_q is None:
+        block_q = min(lq, 128)
+    if lq % block_q != 0:
+        # Fall back to a single tile rather than failing on odd test shapes.
+        block_q = lq
+
+    grid = (b, h, lq // block_q)
+    kernel = functools.partial(_attn_kernel, scale=1.0 / math.sqrt(dh))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, dh), lambda ib, ih, iq: (ib, ih, iq, 0)),
+            pl.BlockSpec((None, None, lk, dh), lambda ib, ih, iq: (ib, ih, 0, 0)),
+            pl.BlockSpec((None, None, lk, dh), lambda ib, ih, iq: (ib, ih, 0, 0)),
+            pl.BlockSpec((None, block_q, lk), lambda ib, ih, iq: (ib, iq, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, dh), lambda ib, ih, iq: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, lq, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, bias)
+
+
+def _attn_bwd_kernel(q_ref, k_ref, v_ref, bias_ref, do_ref,
+                     dq_ref, dk_ref, dv_ref, dbias_ref, *, scale: float):
+    """Backward pass for one (batch, head) program instance — flash-style:
+    the probability matrix is *recomputed* from Q/K/bias in VMEM rather than
+    saved from the forward pass, so the residuals are just the kernel inputs.
+
+    Shapes: q (L_q, d), k/v (L_k, d), bias/do per the forward kernel.
+    Gradients:
+      P  = softmax(S),  S = QKᵀ·scale + bias
+      dV = Pᵀ·dO
+      dP = dO·Vᵀ
+      dS = P ∘ (dP − rowsum(dP ∘ P))
+      dQ = dS·K·scale,  dK = dSᵀ·Q·scale,  dBias = dS (summed over heads
+      by the grid accumulation in the wrapper).
+    """
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    bias = bias_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+
+    scores = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale + bias
+    row_max = jnp.max(scores, axis=-1, keepdims=True)
+    unnorm = jnp.exp(scores - row_max)
+    probs = unnorm / jnp.sum(unnorm, axis=-1, keepdims=True)
+
+    dv = jax.lax.dot_general(
+        probs, do, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    dp = jax.lax.dot_general(
+        do, v, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    ds = probs * (dp - jnp.sum(dp * probs, axis=-1, keepdims=True))
+    dq = jax.lax.dot_general(
+        ds, k, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    dk = jax.lax.dot_general(
+        ds, q, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale
+
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+    dbias_ref[...] = ds.astype(dbias_ref.dtype)
+
+
+def _fused_attention_bwd_impl(q, k, v, bias, do, *, interpret: bool = True):
+    """Pallas backward kernel over a (batch, head) grid.
+
+    Returns (dq, dk, dv, dbias) where dbias has a per-head axis that the
+    custom_vjp wrapper sums (bias is broadcast over heads in the forward).
+    """
+    b, h, lq, dh = q.shape
+    lk = k.shape[2]
+    kernel = functools.partial(_attn_bwd_kernel, scale=1.0 / math.sqrt(dh))
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, h, lq, dh), q.dtype),
+        jax.ShapeDtypeStruct((b, h, lk, dh), k.dtype),
+        jax.ShapeDtypeStruct((b, h, lk, dh), v.dtype),
+        jax.ShapeDtypeStruct((b, h, lq, lk), jnp.float32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((None, None, lq, dh), lambda ib, ih: (ib, ih, 0, 0)),
+            pl.BlockSpec((None, None, lk, dh), lambda ib, ih: (ib, ih, 0, 0)),
+            pl.BlockSpec((None, None, lk, dh), lambda ib, ih: (ib, ih, 0, 0)),
+            pl.BlockSpec((None, lq, lk), lambda ib, ih: (ib, 0, 0)),
+            pl.BlockSpec((None, None, lq, dh), lambda ib, ih: (ib, ih, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((None, None, lq, dh), lambda ib, ih: (ib, ih, 0, 0)),
+            pl.BlockSpec((None, None, lk, dh), lambda ib, ih: (ib, ih, 0, 0)),
+            pl.BlockSpec((None, None, lk, dh), lambda ib, ih: (ib, ih, 0, 0)),
+            pl.BlockSpec((None, None, lq, lk), lambda ib, ih: (ib, ih, 0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(q, k, v, bias, do)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def fused_attention(q, k, v, bias):
+    """Differentiable fused attention (forward + backward both Pallas).
+
+    See :func:`_fused_attention_fwd_impl` for shapes. The backward pass is
+    the flash-style recompute kernel :func:`_attn_bwd_kernel`, validated
+    against ``jax.grad`` of the pure-jnp oracle by the hypothesis suite.
+    """
+    return _fused_attention_fwd_impl(q, k, v, bias)
+
+
+def _fa_fwd(q, k, v, bias):
+    return _fused_attention_fwd_impl(q, k, v, bias), (q, k, v, bias)
+
+
+def _fa_bwd(res, do):
+    q, k, v, bias = res
+    dq, dk, dv, dbias_h = _fused_attention_bwd_impl(q, k, v, bias, do)
+    # bias was broadcast over heads in the forward -> sum the head axis.
+    return dq, dk, dv, jnp.sum(dbias_h, axis=1).astype(bias.dtype)
+
+
+fused_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def attention_vmem_bytes(lq: int, lk: int, dh: int, *, block_q: int | None = None,
+                         bytes_per_el: int = 4) -> int:
+    """Estimated VMEM working set of one program instance (DESIGN.md §10).
+
+    Counts the staged Q tile, full K/V tiles, bias tile, score tile and
+    output tile. Used by DESIGN.md's TPU feasibility table and asserted
+    against the 16 MiB VMEM budget in the python test-suite.
+    """
+    bq = min(lq, 128) if block_q is None else block_q
+    tiles = bq * dh + 2 * lk * dh + bq * lk + bq * lk + bq * dh
+    return tiles * bytes_per_el
+
+
+def mxu_utilization_estimate(lq: int, lk: int, dh: int) -> float:
+    """Fraction of MXU-issued FLOPs that are useful for this tile shape.
+
+    The 128×128 MXU pads each contraction dim to a multiple of 128; the
+    useful fraction is the product of dim utilizations of the two matmuls.
+    A coarse, static estimate — interpret-mode wall clock is *not* a TPU
+    proxy, so structural estimates are what we record (DESIGN.md §10).
+    """
+
+    def pad(n: int) -> int:
+        return 128 * math.ceil(n / 128)
+
+    # Q(lq,dh)·K(dh,lk)ᵀ  and  P(lq,lk)·V(lk,dh)
+    u1 = (lq * dh * lk) / (pad(lq) * pad(dh) * pad(lk))
+    u2 = (lq * lk * dh) / (pad(lq) * pad(lk) * pad(dh))
+    return (u1 + u2) / 2.0

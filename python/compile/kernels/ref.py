@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the Layer-1 kernel and mask builders.
+
+Everything in here is straight-line jax.numpy with no Pallas: it is the
+correctness ground truth that the kernel (and, transitively, every L2 graph
+and the Rust-executed artifacts) is pinned against.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def attention_ref(q, k, v, bias):
+    """softmax(Q·Kᵀ/√d + bias)·V, computed naively in fp32.
+
+    Shapes match ``fused_attention``: q (B,H,Lq,dh), k/v (B,H,Lk,dh),
+    bias (B,Lq,Lk) broadcast over heads.
+    """
+    b, h, lq, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) * scale
+    scores = scores + bias[:, None, :, :].astype(jnp.float32)
+    row_max = jnp.max(scores, axis=-1, keepdims=True)
+    unnorm = jnp.exp(scores - row_max)
+    probs = unnorm / jnp.sum(unnorm, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mask builders (additive biases) for the paper's four attention patterns.
+# All return (B, Lq, Lk) fp32 biases using the finite NEG_INF convention.
+# ---------------------------------------------------------------------------
+
+def causal_bias(batch: int, l: int):
+    """Fig. 2b — causal self-attention within a window."""
+    i = jnp.arange(l)[:, None]
+    j = jnp.arange(l)[None, :]
+    m = jnp.where(j <= i, 0.0, NEG_INF).astype(jnp.float32)
+    return jnp.broadcast_to(m, (batch, l, l))
+
+
+def length_bias(batch_lens, lq: int, lk: int):
+    """Length mask: key j is visible iff j < len. ``batch_lens`` is (B,) i32.
+
+    Serves the compressing cross-attention (Fig. 2c) over a padded history
+    and padded prefill windows.
+    """
+    j = jnp.arange(lk)[None, None, :]
+    lens = batch_lens.astype(jnp.int32)[:, None, None]
+    m = jnp.where(j < lens, 0.0, NEG_INF).astype(jnp.float32)
+    return jnp.broadcast_to(m, (batch_lens.shape[0], lq, lk))
+
+
+def causal_length_bias(batch_lens, l: int):
+    """Causal AND length-masked self-attention (padded windows)."""
+    b = batch_lens.shape[0]
+    return causal_bias(b, l) + length_bias(batch_lens, l, l)
+
+
+def decode_bias(batch_pos, lk: int):
+    """Single-query decode step: key j visible iff j <= pos (B,1,Lk)."""
+    j = jnp.arange(lk)[None, None, :]
+    pos = batch_pos.astype(jnp.int32)[:, None, None]
+    return jnp.where(j <= pos, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def zero_bias(batch: int, lq: int, lk: int):
+    """Fig. 2a/2d — unmasked (full / restoring) attention."""
+    return jnp.zeros((batch, lq, lk), jnp.float32)
+
+
+def gated_bias(bias, gate):
+    """Multiply visibility by a 0/1 gate (B,) — used to blank out the
+    cross-attention path while the context state is still empty."""
+    g = gate.astype(jnp.float32)[:, None, None]
+    return bias * g + (1.0 - g) * NEG_INF

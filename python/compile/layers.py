@@ -1,0 +1,131 @@
+"""Shared transformer building blocks (Layer 2).
+
+All attention sites funnel through the Layer-1 Pallas kernel
+(:func:`compile.kernels.fused_attention`). Functions are pure: they take
+parameter sub-trees produced by :mod:`compile.params` and arrays, and return
+arrays. Conventions:
+
+* activations are ``(B, L, D)`` fp32; caches are projected K/V in ``(B, L, D)``
+  layout (heads folded into D) so the Rust side treats them as opaque slabs;
+* additive bias masks are ``(B, L_q, L_k)`` fp32 built by ``kernels.ref``;
+* everything is pre-LN residual.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import fused_attention
+from .kernels import ref as masks
+
+NEG_INF = masks.NEG_INF
+
+
+def layer_norm(x, p):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["g"] + p["b"]
+
+
+def ffn(x, p):
+    h = jnp.dot(x, p["w1"]) + p["b1"]
+    h = jax.nn.gelu(h, approximate=True)
+    return jnp.dot(h, p["w2"]) + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Attention plumbing
+# ---------------------------------------------------------------------------
+
+def split_heads(x, n_head: int):
+    """(B, L, D) -> (B, H, L, d_head)"""
+    b, l, d = x.shape
+    return x.reshape(b, l, n_head, d // n_head).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    """(B, H, L, d_head) -> (B, L, D)"""
+    b, h, l, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, h * dh)
+
+
+def project_q(x, p):
+    return jnp.dot(x, p["wq"]) + p["bq"]
+
+
+def project_kv(x, p):
+    """Project K and V caches from a source sequence: 2 × (B, L, D)."""
+    k = jnp.dot(x, p["wk"]) + p["bk"]
+    v = jnp.dot(x, p["wv"]) + p["bv"]
+    return k, v
+
+
+def attend(q, k, v, bias, p, cfg: ModelConfig):
+    """Fused attention over already-projected q/k/v (B, L, D) + output proj."""
+    out = fused_attention(
+        split_heads(q, cfg.n_head),
+        split_heads(k, cfg.n_head),
+        split_heads(v, cfg.n_head),
+        bias,
+    )
+    return jnp.dot(merge_heads(out), p["wo"]) + p["bo"]
+
+
+def mha(q_in, kv_in, p, bias, cfg: ModelConfig):
+    """Full attention sublayer: project q from ``q_in``, k/v from ``kv_in``."""
+    q = project_q(q_in, p)
+    k, v = project_kv(kv_in, p)
+    return attend(q, k, v, bias, p, cfg)
+
+
+def decoder_layer(x, p, bias, cfg: ModelConfig):
+    """Plain pre-LN decoder layer (self-attention + FFN)."""
+    h = layer_norm(x, p["ln1"])
+    x = x + mha(h, h, p["attn"], bias, cfg)
+    x = x + ffn(layer_norm(x, p["ln2"]), p["ffn"])
+    return x
+
+
+def cross_sublayer(x, ctx_k, ctx_v, p_ln, p_attn, bias, gate, cfg: ModelConfig):
+    """Cross-attention residual sublayer with a 0/1 gate.
+
+    ``gate`` (B,) blanks the contribution while the context state is still
+    empty (first window of a fresh sequence): both the bias is fully masked
+    *and* the residual is multiplied by the gate, so an empty context is a
+    strict no-op rather than an attention over zeros.
+    """
+    q = project_q(layer_norm(x, p_ln), p_attn)
+    out = attend(q, ctx_k, ctx_v, masks.gated_bias(bias, gate), p_attn, cfg)
+    return x + out * gate.astype(jnp.float32)[:, None, None]
+
+
+# ---------------------------------------------------------------------------
+# Single-position (decode-step) attention helpers
+# ---------------------------------------------------------------------------
+
+def insert_kv(cache_k, cache_v, k_new, v_new, slot):
+    """Insert one position into (B, L, D) caches at per-batch ``slot`` (B,)."""
+
+    def upd(c, new, s):
+        return jax.lax.dynamic_update_slice(c, new[None, :], (s, 0))
+
+    cache_k = jax.vmap(upd)(cache_k, k_new, slot)
+    cache_v = jax.vmap(upd)(cache_v, v_new, slot)
+    return cache_k, cache_v
+
+
+def decode_self_attn(x, cache_k, cache_v, slot, p, cfg: ModelConfig):
+    """One-token causal self-attention against a (B, L, D) KV cache.
+
+    Projects k/v for the new token, inserts at ``slot``, attends over
+    positions 0..slot. Returns (attn_out (B, D), cache_k', cache_v').
+    """
+    h = x[:, None, :]                       # (B, 1, D)
+    k_new, v_new = project_kv(h, p)
+    cache_k, cache_v = insert_kv(cache_k, cache_v, k_new[:, 0], v_new[:, 0], slot)
+    q = project_q(h, p)
+    bias = masks.decode_bias(slot, cache_k.shape[1])
+    out = attend(q, cache_k, cache_v, bias, p, cfg)
+    return out[:, 0], cache_k, cache_v

@@ -1,0 +1,208 @@
+"""Parameter trees: construction, canonical flattening, initialization.
+
+The flat ordering produced by :func:`param_spec` is the single source of
+truth for how weights cross the Python↔Rust boundary: ``aot.py`` records it
+in the manifest, writes the initial weights in exactly that order, and every
+exported graph takes its parameters as leading positional arguments in the
+same order.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+
+Params = Dict  # nested dict of str -> (Params | jnp.ndarray)
+
+
+# ---------------------------------------------------------------------------
+# Shape specs
+# ---------------------------------------------------------------------------
+
+def _mha_spec(d: int) -> Dict:
+    """One multi-head attention sublayer: separate Q/K/V/O projections."""
+    return {
+        "wq": (d, d), "bq": (d,),
+        "wk": (d, d), "bk": (d,),
+        "wv": (d, d), "bv": (d,),
+        "wo": (d, d), "bo": (d,),
+    }
+
+
+def _ln_spec(d: int) -> Dict:
+    return {"g": (d,), "b": (d,)}
+
+
+def _ffn_spec(d: int, dff: int) -> Dict:
+    return {"w1": (d, dff), "b1": (dff,), "w2": (dff, d), "b2": (d,)}
+
+
+def _decoder_layer_spec(cfg: ModelConfig) -> Dict:
+    """A plain pre-LN decoder layer (self-attention + FFN)."""
+    d = cfg.d_model
+    return {
+        "ln1": _ln_spec(d),
+        "attn": _mha_spec(d),
+        "ln2": _ln_spec(d),
+        "ffn": _ffn_spec(d, cfg.d_ffn),
+    }
+
+
+def _gen_layer_spec(cfg: ModelConfig, with_cross: bool, with_raw: bool) -> Dict:
+    """A generation-path layer: causal self-attn, optional cross-attn into
+    the compressed context, optional raw-history cross-attn (TLinFormer),
+    then FFN."""
+    d = cfg.d_model
+    spec = {
+        "ln1": _ln_spec(d),
+        "self_attn": _mha_spec(d),
+        "ln2": _ln_spec(d),
+        "ffn": _ffn_spec(d, cfg.d_ffn),
+    }
+    if with_cross:
+        spec["lnx"] = _ln_spec(d)
+        spec["cross_attn"] = _mha_spec(d)
+    if with_raw:
+        spec["lnr"] = _ln_spec(d)
+        spec["raw_attn"] = _mha_spec(d)
+    return spec
+
+
+def _block_spec(cfg: ModelConfig, arch: str) -> Dict:
+    """One TLinFormer/TConstFormer block (context path + generation path)."""
+    d = cfg.d_model
+    spec = {
+        # Context path: learned compress-query bank + compress cross-attn
+        # layer (Fig. 2c), then H self-attention layers.
+        "cq": (cfg.w_oh, d),
+        "compress": {
+            "lnq": _ln_spec(d),
+            "attn": _mha_spec(d),
+            "ln2": _ln_spec(d),
+            "ffn": _ffn_spec(d, cfg.d_ffn),
+        },
+        "ctx_layers": {
+            str(i): _decoder_layer_spec(cfg) for i in range(cfg.h_inner)
+        },
+        # Restore layer (Fig. 2d) — used by stacked blocks in the
+        # paper-literal full-sync / training-full path.
+        "restore": {
+            "lnq": _ln_spec(d),
+            "attn": _mha_spec(d),
+        },
+        # Generation path: H+2 layers; layers 0..H carry cross-attention
+        # into C_0..C_H (that is H+1 cross sites, matching Eq. 5/7).
+        "gen_layers": {
+            str(j): _gen_layer_spec(
+                cfg,
+                with_cross=(j <= cfg.h_inner),
+                with_raw=(arch == "tlin" and j == 0),
+            )
+            for j in range(cfg.h_inner + 2)
+        },
+    }
+    return spec
+
+
+def param_shapes(cfg: ModelConfig, arch: str) -> Dict:
+    """Nested dict of parameter shapes for one architecture."""
+    d = cfg.d_model
+    common = {
+        "tok_emb": (cfg.vocab, d),
+        "lnf": _ln_spec(d),
+    }
+    if arch == "base":
+        common["pos_emb"] = (cfg.max_seq, d)
+        common["layers"] = {
+            str(i): _decoder_layer_spec(cfg) for i in range(cfg.n_layer)
+        }
+    elif arch in ("tlin", "tconst"):
+        common["pos_emb"] = (cfg.w_og, d)   # window-local positions
+        common["blocks"] = {
+            str(b): _block_spec(cfg, arch) for b in range(cfg.n_block)
+        }
+    else:
+        raise ValueError(f"unknown arch {arch!r}")
+    return common
+
+
+# ---------------------------------------------------------------------------
+# Canonical flattening
+# ---------------------------------------------------------------------------
+
+def _walk(tree: Dict, prefix: str, out: List[Tuple[str, object]]):
+    for key in sorted(tree.keys(), key=_key_order):
+        val = tree[key]
+        path = f"{prefix}.{key}" if prefix else key
+        if isinstance(val, dict):
+            _walk(val, path, out)
+        else:
+            out.append((path, val))
+
+
+def _key_order(k: str):
+    # Numeric keys sort numerically so layer 10 follows layer 9.
+    return (0, int(k), "") if k.isdigit() else (1, 0, k)
+
+
+def param_spec(cfg: ModelConfig, arch: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical flat list of (dotted-name, shape)."""
+    out: List[Tuple[str, object]] = []
+    _walk(param_shapes(cfg, arch), "", out)
+    return out  # type: ignore[return-value]
+
+
+def flatten(params: Params) -> List[jnp.ndarray]:
+    out: List[Tuple[str, object]] = []
+    _walk(params, "", out)
+    return [v for _, v in out]
+
+
+def unflatten(cfg: ModelConfig, arch: str, flat) -> Params:
+    spec = param_spec(cfg, arch)
+    assert len(flat) == len(spec), f"{len(flat)} arrays != spec {len(spec)}"
+    tree: Dict = {}
+    for (name, shape), arr in zip(spec, flat):
+        node = tree
+        parts = name.split(".")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+        node[parts[-1]] = arr
+    return tree
+
+
+def num_params(cfg: ModelConfig, arch: str) -> int:
+    total = 0
+    for _, shape in param_spec(cfg, arch):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, arch: str, seed: int = 0) -> Params:
+    """GPT-2-style init: N(0, 0.02) weights, zeros biases, ones LN gains."""
+    spec = param_spec(cfg, arch)
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(spec))
+    flat = []
+    for (name, shape), k in zip(spec, keys):
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf == "g":                      # LN gain
+            arr = jnp.ones(shape, jnp.float32)
+        elif leaf in ("b", "b1", "b2", "bq", "bk", "bv", "bo"):
+            arr = jnp.zeros(shape, jnp.float32)
+        else:
+            arr = 0.02 * jax.random.normal(k, shape, jnp.float32)
+        flat.append(arr)
+    return unflatten(cfg, arch, flat)

@@ -1,0 +1,309 @@
+"""TConstFormer (and the shared windowed machinery TLinFormer builds on).
+
+State layout (fp32 slabs; Rust treats them as opaque):
+
+* ``ctx_k``, ``ctx_v``   (n_block, H+1, B, W_oh, D)
+    Projected K/V of the context representations C_0..C_H for each block —
+    the constant-size cross-attention cache of Eq. (7)'s (H+1)·W_oh term.
+* ``ctx_sum``            (n_block, B, W_oh, D)
+    The deepest context representation C_H per block; the recurrent summary
+    folded with the next generated window at sync time (DESIGN.md D1).
+* ``ctx_gate``           (B,) f32 in {0,1}
+    0 while a lane's context is still empty (first window) — makes the
+    cross-attention path a strict no-op.
+* ``gen_k``, ``gen_v``   (n_block, H+2, B, W_og, D)
+    Causal self-attention K/V of the generation window — Eq. (7)'s
+    (H+2)·W_og term.
+
+TLinFormer adds a *growing* raw-history cache ``hist_k/hist_v``
+(n_block, B, L, D) attended by generation layer 0 of each block — that is
+the O(N) term that TConstFormer severs (paper Fig. 1a→1b).
+
+The cache-hit step (:func:`decode`) touches only constant-size state:
+cost (H+1)·D·W_oh cross + (H+2)·D·W_og self per block — Eq. (5) with the
+window self-attention served from cache.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ModelConfig
+from .kernels import ref as masks
+from .layers import (
+    attend,
+    cross_sublayer,
+    decoder_layer,
+    ffn,
+    layer_norm,
+    project_kv,
+    project_q,
+)
+
+NEG_INF = masks.NEG_INF
+
+
+class CtxState(NamedTuple):
+    ctx_k: jnp.ndarray    # (nb, H+1, B, W_oh, D)
+    ctx_v: jnp.ndarray
+    ctx_sum: jnp.ndarray  # (nb, B, W_oh, D)
+    ctx_gate: jnp.ndarray  # (B,) f32
+
+
+def empty_ctx(cfg: ModelConfig, batch: int) -> CtxState:
+    nb, h1 = cfg.n_block, cfg.h_inner + 1
+    z = jnp.zeros((nb, h1, batch, cfg.w_oh, cfg.d_model), jnp.float32)
+    s = jnp.zeros((nb, batch, cfg.w_oh, cfg.d_model), jnp.float32)
+    return CtxState(z, z, s, jnp.zeros((batch,), jnp.float32))
+
+
+def _embed_window(params, tokens, slots=None):
+    """Window-local embedding: token + window-position embeddings."""
+    if slots is None:
+        w = tokens.shape[-1]
+        pos = jnp.arange(w)[None, :]
+        return params["tok_emb"][tokens] + params["pos_emb"][pos]
+    return params["tok_emb"][tokens] + params["pos_emb"][slots]
+
+
+# ---------------------------------------------------------------------------
+# Context path (compress + H self layers) — shared by sync paths
+# ---------------------------------------------------------------------------
+
+def _context_path(bp, cfg: ModelConfig, src, src_bias):
+    """Run one block's context path over key/value source ``src``.
+
+    Args:
+      bp: the block's parameter sub-tree.
+      src: (B, L_src, D) — what the compress layer attends over.
+      src_bias: (B, W_oh, L_src) additive visibility mask.
+
+    Returns list [C_0 .. C_H] of (B, W_oh, D).
+    """
+    batch = src.shape[0]
+    q_in = jnp.broadcast_to(bp["cq"][None, :, :], (batch, cfg.w_oh, cfg.d_model))
+    cp = bp["compress"]
+    h = layer_norm(q_in, cp["lnq"])
+    k, v = project_kv(src, cp["attn"])
+    c = q_in + attend(project_q(h, cp["attn"]), k, v, src_bias, cp["attn"], cfg)
+    c = c + ffn(layer_norm(c, cp["ln2"]), cp["ffn"])
+    cs = [c]
+    full = masks.zero_bias(batch, cfg.w_oh, cfg.w_oh)
+    for i in range(cfg.h_inner):
+        c = decoder_layer(c, bp["ctx_layers"][str(i)], full, cfg)
+        cs.append(c)
+    return cs
+
+
+def _project_ctx_caches(bp, cfg: ModelConfig, cs):
+    """Project K/V caches for cross sites j=0..H from C_0..C_H."""
+    ks, vs = [], []
+    for j in range(cfg.h_inner + 1):
+        gp = bp["gen_layers"][str(j)]
+        k, v = project_kv(cs[j], gp["cross_attn"])
+        ks.append(k)
+        vs.append(v)
+    return jnp.stack(ks), jnp.stack(vs)   # (H+1, B, W_oh, D)
+
+
+def fold_context(params, cfg: ModelConfig, block_inputs, n_valid, ctx: CtxState) -> CtxState:
+    """The periodic synchronization (incremental mode, DESIGN.md D1).
+
+    Folds the just-processed window (its per-block generation-path inputs)
+    into the constant-size context state:
+        C_0' = Compress(cq ; [C_H_old ‖ window]),  then H self layers.
+
+    Cost is O((W_oh + W_og)·W_oh·D) per block — independent of N.
+    """
+    batch = n_valid.shape[0]
+    w = block_inputs[0].shape[1]
+    new_k, new_v, new_sum = [], [], []
+    # Visibility: old-summary slots need ctx_gate=1; window slots need
+    # position < n_valid.
+    sum_bias = masks.gated_bias(
+        masks.zero_bias(batch, cfg.w_oh, cfg.w_oh), ctx.ctx_gate
+    )
+    win_bias = masks.length_bias(n_valid, cfg.w_oh, w)
+    src_bias = jnp.concatenate([sum_bias, win_bias], axis=-1)
+    for b in range(cfg.n_block):
+        bp = params["blocks"][str(b)]
+        src = jnp.concatenate([ctx.ctx_sum[b], block_inputs[b]], axis=1)
+        cs = _context_path(bp, cfg, src, src_bias)
+        ks, vs = _project_ctx_caches(bp, cfg, cs)
+        new_k.append(ks)
+        new_v.append(vs)
+        new_sum.append(cs[-1])
+    return CtxState(
+        jnp.stack(new_k), jnp.stack(new_v), jnp.stack(new_sum),
+        jnp.ones((batch,), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Generation path — full window (prefill / training)
+# ---------------------------------------------------------------------------
+
+def window_forward(params, cfg: ModelConfig, tokens, n_valid, ctx: CtxState,
+                   arch: str = "tconst",
+                   hist_k=None, hist_v=None, hist_len=None):
+    """Process one generation window of W_og tokens (cache-miss path).
+
+    Args:
+      tokens: (B, W_og) int32, padded beyond ``n_valid``.
+      n_valid: (B,) int32 — valid token count per lane.
+      ctx: the (frozen) context state the window cross-attends.
+      arch: "tconst" or "tlin"; tlin also attends the raw history caches
+        ``hist_k/hist_v`` (n_block, B, L, D) masked by ``hist_len`` (B,).
+
+    Returns dict with:
+      logits     (B, W_og, vocab)
+      gen_k/gen_v (nb, H+2, B, W_og, D)  — for continuing decode in-window
+      new_ctx    CtxState — state after folding this window (used when the
+                 window completed; the paper's periodic sync)
+      append_k/append_v (nb, B, W_og, D) — tlin only: raw-history K/V of
+                 this window, for the Rust side to append to its buffers.
+    """
+    batch, w = tokens.shape
+    x = _embed_window(params, tokens)
+    self_bias = masks.causal_length_bias(n_valid, w)
+    cross_bias = masks.zero_bias(batch, w, cfg.w_oh)
+
+    block_inputs = []
+    gen_ks, gen_vs = [], []
+    append_k, append_v = [], []
+    emb = x
+    for b in range(cfg.n_block):
+        bp = params["blocks"][str(b)]
+        block_inputs.append(x)
+        if arch == "tlin":
+            gp0 = bp["gen_layers"]["0"]
+            ak, av = project_kv(emb, gp0["raw_attn"])
+            append_k.append(ak)
+            append_v.append(av)
+        lks, lvs = [], []
+        for j in range(cfg.h_inner + 2):
+            gp = bp["gen_layers"][str(j)]
+            h = layer_norm(x, gp["ln1"])
+            k, v = project_kv(h, gp["self_attn"])
+            lks.append(k)
+            lvs.append(v)
+            x = x + attend(project_q(h, gp["self_attn"]), k, v, self_bias,
+                           gp["self_attn"], cfg)
+            if arch == "tlin" and j == 0:
+                hgate = (hist_len > 0).astype(jnp.float32)
+                hbias = masks.length_bias(hist_len, w, hist_k.shape[2])
+                x = cross_sublayer(x, hist_k[b], hist_v[b], gp["lnr"],
+                                   gp["raw_attn"], hbias, hgate, cfg)
+            if j <= cfg.h_inner:
+                x = cross_sublayer(x, ctx.ctx_k[b, j], ctx.ctx_v[b, j],
+                                   gp["lnx"], gp["cross_attn"], cross_bias,
+                                   ctx.ctx_gate, cfg)
+            x = x + ffn(layer_norm(x, gp["ln2"]), gp["ffn"])
+        gen_ks.append(jnp.stack(lks))
+        gen_vs.append(jnp.stack(lvs))
+
+    logits = jnp.dot(layer_norm(x, params["lnf"]), params["tok_emb"].T)
+    new_ctx = fold_context(params, cfg, block_inputs, n_valid, ctx)
+    out = {
+        "logits": logits,
+        "gen_k": jnp.stack(gen_ks),
+        "gen_v": jnp.stack(gen_vs),
+        "new_ctx": new_ctx,
+    }
+    if arch == "tlin":
+        out["append_k"] = jnp.stack(append_k)
+        out["append_v"] = jnp.stack(append_v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Generation path — single token (cache hit, the O(1) step)
+# ---------------------------------------------------------------------------
+
+def decode(params, cfg: ModelConfig, token, slot, ctx: CtxState,
+           gen_k, gen_v, arch: str = "tconst",
+           hist_k=None, hist_v=None, hist_len=None):
+    """One cache-hit decode step for B lanes.
+
+    Every tensor touched here is constant-size for tconst (Eq. 5): the
+    context K/V are frozen, the window caches hold at most W_og entries.
+    For tlin the extra raw-history attention makes the step O(L).
+
+    Args:
+      token: (B,) int32; slot: (B,) int32 position inside the window.
+      gen_k/gen_v: (nb, H+2, B, W_og, D).
+
+    Returns (logits (B, vocab), gen_k', gen_v').
+    """
+    x = _embed_window(params, token[:, None], slot[:, None])[:, 0]  # (B, D)
+    batch = token.shape[0]
+    cross_bias1 = masks.zero_bias(batch, 1, cfg.w_oh)
+    new_k = [[None] * (cfg.h_inner + 2) for _ in range(cfg.n_block)]
+    new_v = [[None] * (cfg.h_inner + 2) for _ in range(cfg.n_block)]
+    for b in range(cfg.n_block):
+        bp = params["blocks"][str(b)]
+        for j in range(cfg.h_inner + 2):
+            gp = bp["gen_layers"][str(j)]
+            h = layer_norm(x, gp["ln1"])
+            out, ck, cv = layers.decode_self_attn(
+                h, gen_k[b, j], gen_v[b, j], slot, gp["self_attn"], cfg
+            )
+            new_k[b][j] = ck
+            new_v[b][j] = cv
+            x = x + out
+            if arch == "tlin" and j == 0:
+                hgate = (hist_len > 0).astype(jnp.float32)
+                hbias = masks.length_bias(hist_len, 1, hist_k.shape[2])
+                x = _cross_one(x, hist_k[b], hist_v[b], gp["lnr"],
+                               gp["raw_attn"], hbias, hgate, cfg)
+            if j <= cfg.h_inner:
+                x = _cross_one(x, ctx.ctx_k[b, j], ctx.ctx_v[b, j], gp["lnx"],
+                               gp["cross_attn"], cross_bias1, ctx.ctx_gate, cfg)
+            x = x + ffn(layer_norm(x, gp["ln2"]), gp["ffn"])
+    logits = jnp.dot(layer_norm(x, params["lnf"]), params["tok_emb"].T)
+    gen_k = jnp.stack([jnp.stack(r) for r in new_k])
+    gen_v = jnp.stack([jnp.stack(r) for r in new_v])
+    return logits, gen_k, gen_v
+
+
+def _cross_one(x, ctx_k, ctx_v, p_ln, p_attn, bias, gate, cfg):
+    """Single-position cross-attention residual (x is (B, D))."""
+    out = cross_sublayer(x[:, None, :], ctx_k, ctx_v, p_ln, p_attn, bias, gate, cfg)
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Paper-literal full synchronization (ablation; DESIGN.md D1)
+# ---------------------------------------------------------------------------
+
+def sync_full(params, cfg: ModelConfig, hist_tokens, hist_len) -> CtxState:
+    """Recompress the context from the *raw* token history (cost O(L) — the
+    paper's Eq. (1) cache-miss line). Stacked blocks use the restore layer
+    (Fig. 2d) to rebuild a full-length representation for the next block.
+    """
+    batch, l = hist_tokens.shape
+    r = params["tok_emb"][hist_tokens]      # no positional signal on history
+    src_bias = masks.length_bias(hist_len, cfg.w_oh, l)
+    new_k, new_v, new_sum = [], [], []
+    for b in range(cfg.n_block):
+        bp = params["blocks"][str(b)]
+        cs = _context_path(bp, cfg, r, src_bias)
+        ks, vs = _project_ctx_caches(bp, cfg, cs)
+        new_k.append(ks)
+        new_v.append(vs)
+        new_sum.append(cs[-1])
+        if b + 1 < cfg.n_block:
+            # Restore: full-length queries attend the processed context.
+            rp = bp["restore"]
+            h = layer_norm(r, rp["lnq"])
+            k, v = project_kv(cs[-1], rp["attn"])
+            rb = masks.zero_bias(batch, l, cfg.w_oh)
+            r = r + attend(project_q(h, rp["attn"]), k, v, rb, rp["attn"], cfg)
+    return CtxState(
+        jnp.stack(new_k), jnp.stack(new_v), jnp.stack(new_sum),
+        jnp.ones((batch,), jnp.float32),
+    )

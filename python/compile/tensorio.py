@@ -1,0 +1,61 @@
+"""Tiny tensor-file format shared with the Rust side (`runtime/weights.rs`).
+
+A tensor set is two files:
+  ``<stem>.bin``  — raw little-endian tensor payloads, concatenated
+  ``<stem>.json`` — index: [{name, dtype, shape, offset, nbytes}, ...]
+
+dtype strings: "f32" | "i32". Deliberately trivial so the Rust reader is a
+couple of hundred lines with no dependencies.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+_DTYPES = {"f32": np.float32, "i32": np.int32}
+_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32"}
+
+
+def save_tensors(stem: str, tensors: Sequence[Tuple[str, np.ndarray]]) -> None:
+    """Write tensors to ``stem + '.bin'`` / ``stem + '.json'``."""
+    index: List[Dict] = []
+    offset = 0
+    os.makedirs(os.path.dirname(stem) or ".", exist_ok=True)
+    with open(stem + ".bin", "wb") as f:
+        for name, arr in tensors:
+            # NB: not ascontiguousarray — it promotes 0-d arrays to (1,)
+            arr = np.asarray(arr)
+            if arr.dtype not in _NAMES:
+                arr = arr.astype(np.float32)
+            data = arr.tobytes()  # C-order serialization
+            index.append({
+                "name": name,
+                "dtype": _NAMES[arr.dtype],
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": len(data),
+            })
+            f.write(data)
+            offset += len(data)
+    with open(stem + ".json", "w") as f:
+        json.dump(index, f, indent=1)
+
+
+def load_tensors(stem: str) -> List[Tuple[str, np.ndarray]]:
+    with open(stem + ".json") as f:
+        index = json.load(f)
+    out = []
+    with open(stem + ".bin", "rb") as f:
+        blob = f.read()
+    for ent in index:
+        dt = _DTYPES[ent["dtype"]]
+        arr = np.frombuffer(
+            blob, dtype=dt, count=int(np.prod(ent["shape"], initial=1)),
+            offset=ent["offset"],
+        ).reshape(ent["shape"])
+        out.append((ent["name"], arr))
+    return out

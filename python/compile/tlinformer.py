@@ -1,0 +1,39 @@
+"""TLinFormer — the paper's predecessor architecture (our prior-work baseline).
+
+Identical to TConstFormer except the connections the paper severs (Fig. 1a):
+generation layer 0 of every block also cross-attends the *raw* embedded
+history, whose K/V cache grows O(N) (with slope n_block/n_layer of the
+baseline's — the "gentler slope" of Fig. 8(g)). Both cache-hit and
+cache-miss costs therefore stay O(N).
+
+Everything here delegates to :mod:`compile.tconstformer` with
+``arch="tlin"``; this module only pins the raw-history state layout:
+
+* ``hist_k/hist_v`` (n_block, B, L_bucket, D) — per-block projections of the
+  embedded token history; Rust appends each window's ``append_k/append_v``
+  slab at offset ``hist_len`` and re-buckets when the capacity overflows.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .tconstformer import CtxState, decode as _decode, window_forward as _window_forward
+
+
+def empty_hist(cfg: ModelConfig, batch: int, bucket: int):
+    z = jnp.zeros((cfg.n_block, batch, bucket, cfg.d_model), jnp.float32)
+    return z, z
+
+
+def window_forward(params, cfg: ModelConfig, tokens, n_valid, ctx: CtxState,
+                   hist_k, hist_v, hist_len):
+    return _window_forward(params, cfg, tokens, n_valid, ctx, arch="tlin",
+                           hist_k=hist_k, hist_v=hist_v, hist_len=hist_len)
+
+
+def decode(params, cfg: ModelConfig, token, slot, ctx: CtxState, gen_k, gen_v,
+           hist_k, hist_v, hist_len):
+    return _decode(params, cfg, token, slot, ctx, gen_k, gen_v, arch="tlin",
+                   hist_k=hist_k, hist_v=hist_v, hist_len=hist_len)

@@ -1,0 +1,137 @@
+"""Training-step graphs (Layer 2): loss, grads, and AdamW — all in-graph.
+
+One exported graph per architecture. The Rust trainer holds flat parameter
+and optimizer-state tensors (manifest order) and feeds them back step after
+step; Python never runs during training.
+
+TConstFormer/TLinFormer train exactly like they infer (DESIGN.md D1): the
+sequence is processed in W_og-sized chunks under ``lax.scan``, the context
+state is folded forward after every chunk (paper Fig. 5), and the chunk
+logits are concatenated for the loss — so there is no train/inference
+mismatch in how history reaches the generation window.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import baseline, params as P, tconstformer as tc, tlinformer as tl
+from .configs import ModelConfig
+
+ADAM_B1, ADAM_B2, ADAM_EPS, WEIGHT_DECAY = 0.9, 0.95, 1e-8, 0.01
+
+
+def cross_entropy(logits, targets):
+    """Mean token-level CE. logits (B, T, V); targets (B, T) int32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Per-architecture losses
+# ---------------------------------------------------------------------------
+
+def base_loss(params, cfg: ModelConfig, tokens):
+    """tokens (B, T+1): full causal forward, next-token CE."""
+    logits = baseline.forward_train(params, cfg, tokens[:, :-1])
+    return cross_entropy(logits, tokens[:, 1:])
+
+
+def _chunked_loss(params, cfg: ModelConfig, tokens, arch: str):
+    """Sliding-window training (Fig. 5) via lax.scan over W_og chunks."""
+    b = tokens.shape[0]
+    t = cfg.train_seq
+    w = cfg.w_og
+    n_chunks = t // w
+    inputs = tokens[:, :t].reshape(b, n_chunks, w).transpose(1, 0, 2)
+    # targets laid out identically, shifted by one token.
+    targets = tokens[:, 1:t + 1].reshape(b, n_chunks, w).transpose(1, 0, 2)
+    n_valid = jnp.full((b,), w, jnp.int32)
+
+    if arch == "tlin":
+        hist_k, hist_v = tl.empty_hist(cfg, b, t)
+
+        def step(carry, xs):
+            ctx, hk, hv, hlen = carry
+            chunk = xs
+            out = tc.window_forward(params, cfg, chunk, n_valid, ctx,
+                                    arch="tlin", hist_k=hk, hist_v=hv,
+                                    hist_len=hlen)
+            hk = jax.lax.dynamic_update_slice(
+                hk, out["append_k"], (0, 0, hlen[0], 0))
+            hv = jax.lax.dynamic_update_slice(
+                hv, out["append_v"], (0, 0, hlen[0], 0))
+            return (out["new_ctx"], hk, hv, hlen + w), out["logits"]
+
+        carry0 = (tc.empty_ctx(cfg, b), hist_k, hist_v,
+                  jnp.zeros((b,), jnp.int32))
+    else:
+        def step(carry, xs):
+            ctx = carry
+            out = tc.window_forward(params, cfg, xs, n_valid, ctx)
+            return out["new_ctx"], out["logits"]
+
+        carry0 = tc.empty_ctx(cfg, b)
+
+    _, logits = jax.lax.scan(step, carry0, inputs)   # (n_chunks, B, W, V)
+    logits = logits.transpose(1, 0, 2, 3).reshape(b, t, cfg.vocab)
+    return cross_entropy(logits, targets.transpose(1, 0, 2).reshape(b, t))
+
+
+def tconst_loss(params, cfg: ModelConfig, tokens):
+    return _chunked_loss(params, cfg, tokens, "tconst")
+
+
+def tlin_loss(params, cfg: ModelConfig, tokens):
+    return _chunked_loss(params, cfg, tokens, "tlin")
+
+
+LOSS_FNS = {"base": base_loss, "tconst": tconst_loss, "tlin": tlin_loss}
+
+
+# ---------------------------------------------------------------------------
+# AdamW step over the flat parameter list
+# ---------------------------------------------------------------------------
+
+def train_step(cfg: ModelConfig, arch: str, flat_params: List, flat_m: List,
+               flat_v: List, step, tokens, lr) -> Tuple:
+    """One fused loss+grad+AdamW step.
+
+    Args (all traced):
+      flat_params / flat_m / flat_v: tensors in manifest order.
+      step: () i32 (1-based after this update); tokens (B, T+1) i32; lr ().
+
+    Returns (loss, new_params..., new_m..., new_v...) as a flat tuple.
+    """
+    loss_fn = LOSS_FNS[arch]
+
+    def wrapped(flat):
+        tree = P.unflatten(cfg, arch, flat)
+        return loss_fn(tree, cfg, tokens)
+
+    loss, grads = jax.value_and_grad(wrapped)(list(flat_params))
+
+    t = (step + 1).astype(jnp.float32)
+    b1c = 1.0 - ADAM_B1 ** t
+    b2c = 1.0 - ADAM_B2 ** t
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_params, grads, flat_m, flat_v):
+        m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * (g * g)
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        upd = mhat / (jnp.sqrt(vhat) + ADAM_EPS) + WEIGHT_DECAY * p
+        new_p.append(p - lr * upd)
+        new_m.append(m2)
+        new_v.append(v2)
+    return (loss, *new_p, *new_m, *new_v)
+
+
+def eval_loss(cfg: ModelConfig, arch: str, flat_params: List, tokens):
+    """Validation loss graph (no grads): tokens (B, T+1) -> scalar CE."""
+    tree = P.unflatten(cfg, arch, list(flat_params))
+    return LOSS_FNS[arch](tree, cfg, tokens)

@@ -1,0 +1,116 @@
+"""AOT pipeline invariants: graph registry sanity + tensorio round-trips.
+
+These tests do not lower graphs (that is covered by `make artifacts` and by
+the Rust golden tests); they check the metadata contracts the Rust side
+relies on.
+"""
+
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, params as P
+from compile.configs import BATCH_BUCKETS, PRESETS, history_buckets
+from compile.tensorio import load_tensors, save_tensors
+
+
+@pytest.fixture(scope="module")
+def tiny_graphs():
+    return aot.build_graphs("tiny", include_train=True)
+
+
+def test_graph_names_unique(tiny_graphs):
+    names = [g.name for g in tiny_graphs]
+    assert len(names) == len(set(names))
+
+
+def test_expected_graph_inventory(tiny_graphs):
+    cfg = PRESETS["tiny"]
+    kinds = {}
+    for g in tiny_graphs:
+        kinds.setdefault((g.arch, g.kind), []).append(g)
+    nb = len(history_buckets(cfg))
+    nbb = len(BATCH_BUCKETS)
+    assert len(kinds[("base", "prefill")]) == nb
+    assert len(kinds[("base", "decode")]) == nb * nbb
+    assert len(kinds[("tconst", "window")]) == 1           # no buckets: O(1) state
+    assert len(kinds[("tconst", "decode")]) == nbb
+    assert len(kinds[("tconst", "sync_full")]) == nb       # paper-literal ablation
+    assert len(kinds[("tlin", "window")]) == nb
+    assert len(kinds[("tlin", "decode")]) == nb * nbb
+    for arch in ("base", "tlin", "tconst"):
+        assert len(kinds[(arch, "train_step")]) == 1
+        assert len(kinds[(arch, "eval_loss")]) == 1
+
+
+def test_param_args_lead_every_graph(tiny_graphs):
+    for g in tiny_graphs:
+        spec = P.param_spec(PRESETS[g.preset], g.arch)
+        assert g.n_param_args == len(spec)
+        for (pname, pshape), (aname, aspec) in zip(spec, g.args):
+            assert aname == f"param:{pname}"
+            assert tuple(aspec.shape) == tuple(pshape)
+
+
+def test_tconst_decode_args_are_history_independent(tiny_graphs):
+    """The O(1) claim, statically: no tconst decode arg scales with any
+    history bucket."""
+    cfg = PRESETS["tiny"]
+    buckets = set(history_buckets(cfg)) - {cfg.w_oh, cfg.w_og}
+    for g in tiny_graphs:
+        if g.arch == "tconst" and g.kind == "decode":
+            for name, s in g.args[g.n_param_args:]:
+                for dim in s.shape:
+                    assert dim not in buckets, (g.name, name, s.shape)
+
+
+def test_train_step_results_mirror_args(tiny_graphs):
+    for g in tiny_graphs:
+        if g.kind != "train_step":
+            continue
+        n = g.n_param_args
+        assert g.results[0] == "loss"
+        assert len(g.results) == 1 + 3 * n
+        # result i+1 corresponds to param arg i
+        assert g.results[1] == g.args[0][0]
+
+
+def test_graph_fn_runs_and_matches_result_arity(tiny_graphs):
+    g = next(g for g in tiny_graphs if g.name == "tiny_tconst_decode_B1")
+    rng = np.random.default_rng(0)
+    args = []
+    for name, s in g.args:
+        if s.dtype == jnp.int32:
+            args.append(jnp.ones(s.shape, jnp.int32))
+        else:
+            args.append(jnp.asarray(rng.standard_normal(s.shape), jnp.float32) * 0.05)
+    out = g.fn(*args)
+    assert len(out) == len(g.results)
+
+
+def test_tensorio_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        stem = os.path.join(d, "t")
+        tensors = [
+            ("a", np.arange(12, dtype=np.float32).reshape(3, 4)),
+            ("b", np.array(3, dtype=np.int32)),
+            ("c", np.zeros((0,), np.float32)),
+            ("d.e.f", np.random.default_rng(0).standard_normal((2, 3, 4)).astype(np.float32)),
+        ]
+        save_tensors(stem, tensors)
+        back = load_tensors(stem)
+        assert [n for n, _ in back] == [n for n, _ in tensors]
+        for (_, a), (_, b) in zip(tensors, back):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_golden_inputs_deterministic(tiny_graphs):
+    g = next(g for g in tiny_graphs if g.kind == "decode" and g.arch == "base")
+    a = aot._golden_inputs(g, np.random.default_rng(42))
+    b = aot._golden_inputs(g, np.random.default_rng(42))
+    for (n1, v1), (n2, v2) in zip(a, b):
+        assert n1 == n2
+        np.testing.assert_array_equal(v1, v2)

@@ -1,0 +1,173 @@
+"""L1 correctness: the fused Pallas attention kernel vs the pure-jnp oracle.
+
+This is the core numeric signal for the whole stack: every attention site in
+every exported graph lowers through `fused_attention`, so pinning it against
+`ref.attention_ref` (and its VJP against `jax.grad` of the oracle) transfers
+to the Rust-executed artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import fused_attention, ref
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _mk_qkvb(seed, b, h, lq, lk, dh, dtype=jnp.float32, mask="none"):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = _rand(ks[0], b, h, lq, dh, dtype=dtype)
+    k = _rand(ks[1], b, h, lk, dh, dtype=dtype)
+    v = _rand(ks[2], b, h, lk, dh, dtype=dtype)
+    if mask == "none":
+        bias = ref.zero_bias(b, lq, lk)
+    elif mask == "causal":
+        assert lq == lk
+        bias = ref.causal_bias(b, lq)
+    elif mask == "length":
+        lens = jax.random.randint(ks[3], (b,), 1, lk + 1)
+        bias = ref.length_bias(lens, lq, lk)
+    elif mask == "random":
+        bias = jnp.where(jax.random.bernoulli(ks[3], 0.7, (b, lq, lk)),
+                         0.0, ref.NEG_INF).astype(jnp.float32)
+        # guarantee at least one visible key per row (rows fully masked are
+        # only produced by the gate path, whose output is discarded).
+        bias = bias.at[:, :, 0].set(0.0)
+    return q, k, v, bias
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    lq=st.integers(1, 96),
+    lk=st.integers(1, 96),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    mask=st.sampled_from(["none", "length", "random"]),
+    seed=st.integers(0, 2**16),
+)
+def test_forward_matches_ref_hypothesis(b, h, lq, lk, dh, mask, seed):
+    q, k, v, bias = _mk_qkvb(seed, b, h, lq, lk, dh, mask=mask)
+    out = fused_attention(q, k, v, bias)
+    expect = ref.attention_ref(q, k, v, bias)
+    np.testing.assert_allclose(out, expect, **TOL)
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    l=st.sampled_from([8, 32, 128, 256]),
+    dh=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_forward_causal_hypothesis(l, dh, seed):
+    q, k, v, bias = _mk_qkvb(seed, 2, 2, l, l, dh, mask="causal")
+    out = fused_attention(q, k, v, bias)
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v, bias), **TOL)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_forward_dtypes(dtype):
+    q, k, v, bias = _mk_qkvb(7, 2, 2, 16, 24, 8, dtype=dtype)
+    out = fused_attention(q, k, v, bias)
+    assert out.dtype == dtype
+    expect = ref.attention_ref(q, k, v, bias)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else TOL
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               expect.astype(jnp.float32), **tol)
+
+
+def test_forward_blocked_q_equals_single_tile():
+    q, k, v, bias = _mk_qkvb(3, 1, 2, 256, 64, 32)
+    a = A._fused_attention_fwd_impl(q, k, v, bias, block_q=64)
+    bq = A._fused_attention_fwd_impl(q, k, v, bias, block_q=256)
+    np.testing.assert_allclose(a, bq, **TOL)
+
+
+def test_fully_masked_rows_are_finite():
+    # The gate path produces fully masked rows whose outputs are later
+    # multiplied by 0 — they must not be NaN/Inf.
+    q, k, v, _ = _mk_qkvb(5, 1, 1, 4, 8, 8)
+    bias = jnp.full((1, 4, 8), ref.NEG_INF, jnp.float32)
+    out = fused_attention(q, k, v, bias)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_single_query_decode_shape():
+    # The cache-hit decode path uses L_q = 1.
+    q, k, v, bias = _mk_qkvb(9, 4, 4, 1, 128, 32)
+    out = fused_attention(q, k, v, bias)
+    assert out.shape == (4, 4, 1, 32)
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v, bias), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Backward (Pallas VJP kernel vs jax.grad of the oracle)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    lq=st.integers(1, 48),
+    lk=st.integers(1, 48),
+    dh=st.sampled_from([4, 8, 16]),
+    mask=st.sampled_from(["none", "length"]),
+    seed=st.integers(0, 2**16),
+)
+def test_backward_matches_ref_hypothesis(b, h, lq, lk, dh, mask, seed):
+    q, k, v, bias = _mk_qkvb(seed, b, h, lq, lk, dh, mask=mask)
+    co = _rand(jax.random.PRNGKey(seed + 1), b, h, lq, dh)
+
+    def f(q, k, v, bias):
+        return jnp.sum(fused_attention(q, k, v, bias) * co)
+
+    def fr(q, k, v, bias):
+        return jnp.sum(ref.attention_ref(q, k, v, bias) * co)
+
+    g = jax.grad(f, argnums=(0, 1, 2, 3))(q, k, v, bias)
+    gr = jax.grad(fr, argnums=(0, 1, 2, 3))(q, k, v, bias)
+    for a, e, name in zip(g, gr, ["dq", "dk", "dv", "dbias"]):
+        np.testing.assert_allclose(a, e, err_msg=name, **TOL)
+
+
+def test_backward_under_jit_and_causal():
+    q, k, v, bias = _mk_qkvb(11, 2, 2, 32, 32, 8, mask="causal")
+
+    @jax.jit
+    def g(q, k, v, bias):
+        return jax.grad(lambda *a: jnp.sum(fused_attention(*a)))(q, k, v, bias)
+
+    def gr(q, k, v, bias):
+        return jax.grad(lambda *a: jnp.sum(ref.attention_ref(*a)))(q, k, v, bias)
+
+    np.testing.assert_allclose(g(q, k, v, bias), gr(q, k, v, bias), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Structural TPU estimates (DESIGN.md §4/§10)
+# ---------------------------------------------------------------------------
+
+def test_vmem_budget_for_paper_windows():
+    # Every attention site at the `small` preset must fit the 16 MiB VMEM
+    # budget with 2x headroom for double buffering.
+    budget = 16 * 2**20
+    for lq, lk in [(128, 128), (128, 256), (1, 2048), (128, 2048)]:
+        assert A.attention_vmem_bytes(lq, lk, 32) * 2 < budget, (lq, lk)
+
+
+def test_mxu_estimate_monotone_in_tile_size():
+    small = A.mxu_utilization_estimate(8, 8, 8)
+    big = A.mxu_utilization_estimate(128, 128, 128)
+    assert 0.0 < small < big <= 1.0

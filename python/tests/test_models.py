@@ -1,0 +1,298 @@
+"""L2 semantic invariants — the correctness core of the reproduction.
+
+The critical properties:
+  1. cache-hit decode is EXACT: token-by-token decode reproduces the full
+     window-forward logits bit-for-tolerance (TConstFormer's O(1) path is
+     not an approximation of its O(N) path);
+  2. the baseline's bucketed static-shape cache is equivalent to a plain
+     causal forward;
+  3. the context fold (periodic sync) leaves the state independent of
+     window padding;
+  4. TLinFormer's raw-history path actually changes outputs (the severed
+     connections of Fig. 1a→1b exist) and respects history masking.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import baseline, params as P, tconstformer as tc, tlinformer as tl
+from compile.configs import PRESETS
+
+CFG = PRESETS["tiny"]
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+
+@pytest.fixture(scope="module")
+def base_params():
+    return P.init_params(CFG, "base", seed=10)
+
+
+@pytest.fixture(scope="module")
+def tconst_params():
+    return P.init_params(CFG, "tconst", seed=11)
+
+
+@pytest.fixture(scope="module")
+def tlin_params():
+    return P.init_params(CFG, "tlin", seed=12)
+
+
+def toks(seed, *shape, hi=None):
+    hi = hi or CFG.vocab
+    return jax.random.randint(jax.random.PRNGKey(seed), shape, 1, hi)
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+class TestBaseline:
+    def test_prefill_then_decode_matches_fresh_prefill(self, base_params):
+        """decode(prefill(t[:n])) logits == prefill(t[:n+1]) logits."""
+        L = 64
+        t = toks(0, 1, L)
+        n = 20
+        logits_a, ck, cv = baseline.prefill(base_params, CFG, t, jnp.int32(n))
+        # decode token t[n] at position n
+        logits_b, ck, cv = baseline.decode(
+            base_params, CFG, t[:, n], jnp.array([n], jnp.int32), ck, cv)
+        logits_ref, _, _ = baseline.prefill(base_params, CFG, t, jnp.int32(n + 1))
+        np.testing.assert_allclose(logits_b, logits_ref, **TOL)
+
+    def test_prefill_is_padding_invariant(self, base_params):
+        """Bucket padding beyond `length` must not change logits."""
+        t = toks(1, 1, 64)
+        t_padded = t.at[:, 30:].set(99)
+        a, _, _ = baseline.prefill(base_params, CFG, t, jnp.int32(30))
+        b, _, _ = baseline.prefill(base_params, CFG, t_padded, jnp.int32(30))
+        np.testing.assert_allclose(a, b, **TOL)
+
+    def test_prefill_matches_train_forward(self, base_params):
+        """The serving prefill and the training forward agree."""
+        t = toks(2, 1, 32)
+        logits, _, _ = baseline.prefill(base_params, CFG, t, jnp.int32(32))
+        full = baseline.forward_train(base_params, CFG, t)
+        np.testing.assert_allclose(logits, full[:, -1], **TOL)
+
+    def test_batched_decode_lanes_are_independent(self, base_params):
+        """A lane's logits must not depend on other lanes in the batch."""
+        L, B = 64, 4
+        t = toks(3, B, L)
+        # build caches by prefilling each lane separately then stacking
+        cks, cvs, ns = [], [], [5, 9, 13, 7]
+        for i in range(B):
+            _, ck, cv = baseline.prefill(base_params, CFG, t[i:i + 1], jnp.int32(ns[i]))
+            cks.append(ck)
+            cvs.append(cv)
+        ck = jnp.concatenate(cks, axis=1)
+        cv = jnp.concatenate(cvs, axis=1)
+        tok = jnp.array([t[i, ns[i]] for i in range(B)], jnp.int32)
+        pos = jnp.array(ns, jnp.int32)
+        lo_batch, _, _ = baseline.decode(base_params, CFG, tok, pos, ck, cv)
+        for i in range(B):
+            lo_i, _, _ = baseline.decode(
+                base_params, CFG, tok[i:i + 1], pos[i:i + 1],
+                cks[i], cvs[i])
+            np.testing.assert_allclose(lo_batch[i], lo_i[0], **TOL)
+
+
+# ---------------------------------------------------------------------------
+# TConstFormer
+# ---------------------------------------------------------------------------
+
+class TestTConstFormer:
+    def test_decode_equals_window_forward(self, tconst_params):
+        B, W = 2, CFG.w_og
+        t = toks(4, B, W)
+        ctx = tc.empty_ctx(CFG, B)
+        full = tc.window_forward(tconst_params, CFG, t,
+                                 jnp.full((B,), W, jnp.int32), ctx)
+        v = 3
+        part = tc.window_forward(tconst_params, CFG, t,
+                                 jnp.full((B,), v, jnp.int32), ctx)
+        gk, gv = part["gen_k"], part["gen_v"]
+        for s in range(v, W):
+            logits, gk, gv = tc.decode(
+                tconst_params, CFG, t[:, s], jnp.full((B,), s, jnp.int32),
+                ctx, gk, gv)
+            np.testing.assert_allclose(logits, full["logits"][:, s],
+                                       err_msg=f"slot {s}", **TOL)
+
+    def test_decode_exact_with_nonempty_context(self, tconst_params):
+        """Same equivalence after one sync (gate=1, real context)."""
+        B, W = 1, CFG.w_og
+        t1, t2 = toks(5, B, W), toks(6, B, W)
+        nv = jnp.full((B,), W, jnp.int32)
+        ctx = tc.empty_ctx(CFG, B)
+        ctx = tc.window_forward(tconst_params, CFG, t1, nv, ctx)["new_ctx"]
+        full = tc.window_forward(tconst_params, CFG, t2, nv, ctx)
+        part = tc.window_forward(tconst_params, CFG, t2,
+                                 jnp.full((B,), 1, jnp.int32), ctx)
+        gk, gv = part["gen_k"], part["gen_v"]
+        for s in range(1, W):
+            logits, gk, gv = tc.decode(
+                tconst_params, CFG, t2[:, s], jnp.full((B,), s, jnp.int32),
+                ctx, gk, gv)
+            np.testing.assert_allclose(logits, full["logits"][:, s], **TOL)
+
+    def test_fold_is_padding_invariant(self, tconst_params):
+        """Tokens beyond n_valid must not leak into the folded context."""
+        B, W = 1, CFG.w_og
+        t = toks(7, B, W)
+        nv = jnp.full((B,), 10, jnp.int32)
+        ctx = tc.empty_ctx(CFG, B)
+        a = tc.window_forward(tconst_params, CFG, t, nv, ctx)["new_ctx"]
+        t_mut = t.at[:, 10:].set(123)
+        b = tc.window_forward(tconst_params, CFG, t_mut, nv, ctx)["new_ctx"]
+        np.testing.assert_allclose(a.ctx_k, b.ctx_k, **TOL)
+        np.testing.assert_allclose(a.ctx_sum, b.ctx_sum, **TOL)
+
+    def test_empty_context_gate_is_noop(self, tconst_params):
+        """With gate=0 the context contents must be invisible."""
+        B, W = 1, CFG.w_og
+        t = toks(8, B, W)
+        nv = jnp.full((B,), W, jnp.int32)
+        z = tc.empty_ctx(CFG, B)
+        garbage = tc.CtxState(
+            z.ctx_k + 3.0, z.ctx_v - 2.0, z.ctx_sum + 1.0, z.ctx_gate)
+        a = tc.window_forward(tconst_params, CFG, t, nv, z)["logits"]
+        b = tc.window_forward(tconst_params, CFG, t, nv, garbage)["logits"]
+        np.testing.assert_allclose(a, b, **TOL)
+
+    def test_context_changes_outputs_after_sync(self, tconst_params):
+        """Different histories must produce different second-window logits
+        (the state actually carries information)."""
+        B, W = 1, CFG.w_og
+        nv = jnp.full((B,), W, jnp.int32)
+        t2 = toks(9, B, W)
+        ctx_a = tc.window_forward(
+            tconst_params, CFG, toks(10, B, W), nv, tc.empty_ctx(CFG, B))["new_ctx"]
+        ctx_b = tc.window_forward(
+            tconst_params, CFG, toks(11, B, W), nv, tc.empty_ctx(CFG, B))["new_ctx"]
+        a = tc.window_forward(tconst_params, CFG, t2, nv, ctx_a)["logits"]
+        b = tc.window_forward(tconst_params, CFG, t2, nv, ctx_b)["logits"]
+        assert float(jnp.max(jnp.abs(a - b))) > 1e-4
+
+    def test_state_size_is_constant_in_history(self, tconst_params):
+        """O(1) claim at the tensor level: state shapes after 1 and 5 folds
+        are identical (trivially true by construction — asserted so a
+        refactor cannot silently reintroduce growth)."""
+        B, W = 1, CFG.w_og
+        nv = jnp.full((B,), W, jnp.int32)
+        ctx = tc.empty_ctx(CFG, B)
+        shapes0 = [a.shape for a in ctx[:3]]
+        for i in range(5):
+            ctx = tc.window_forward(
+                tconst_params, CFG, toks(20 + i, B, W), nv, ctx)["new_ctx"]
+            assert [a.shape for a in ctx[:3]] == shapes0
+
+    def test_sync_full_shapes_and_gate(self, tconst_params):
+        L = 96
+        hist = toks(12, 1, L)
+        ctx = tc.sync_full(tconst_params, CFG, hist, jnp.array([80], jnp.int32))
+        assert ctx.ctx_k.shape == (CFG.n_block, CFG.h_inner + 1, 1, CFG.w_oh, CFG.d_model)
+        assert float(ctx.ctx_gate[0]) == 1.0
+        assert bool(jnp.all(jnp.isfinite(ctx.ctx_k)))
+
+    def test_sync_full_respects_hist_len(self, tconst_params):
+        L = 96
+        hist = toks(13, 1, L)
+        a = tc.sync_full(tconst_params, CFG, hist, jnp.array([40], jnp.int32))
+        hist_mut = hist.at[:, 40:].set(7)
+        b = tc.sync_full(tconst_params, CFG, hist_mut, jnp.array([40], jnp.int32))
+        np.testing.assert_allclose(a.ctx_k, b.ctx_k, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# TLinFormer
+# ---------------------------------------------------------------------------
+
+class TestTLinFormer:
+    def _setup(self, tlin_params, seed=0, bucket=128):
+        B, W = 1, CFG.w_og
+        hk, hv = tl.empty_hist(CFG, B, bucket)
+        hlen = jnp.zeros((B,), jnp.int32)
+        ctx = tc.empty_ctx(CFG, B)
+        nv = jnp.full((B,), W, jnp.int32)
+        return B, W, hk, hv, hlen, ctx, nv
+
+    def test_decode_equals_window_forward(self, tlin_params):
+        B, W, hk, hv, hlen, ctx, nv = self._setup(tlin_params)
+        t1, t2 = toks(14, B, W), toks(15, B, W)
+        # window 1 (fills history), then window 2 compared against decode
+        o1 = tl.window_forward(tlin_params, CFG, t1, nv, ctx, hk, hv, hlen)
+        hk = jax.lax.dynamic_update_slice(hk, o1["append_k"], (0, 0, 0, 0))
+        hv = jax.lax.dynamic_update_slice(hv, o1["append_v"], (0, 0, 0, 0))
+        hlen = hlen + W
+        ctx = o1["new_ctx"]
+        full = tl.window_forward(tlin_params, CFG, t2, nv, ctx, hk, hv, hlen)
+        part = tl.window_forward(tlin_params, CFG, t2,
+                                 jnp.full((B,), 2, jnp.int32), ctx, hk, hv, hlen)
+        gk, gv = part["gen_k"], part["gen_v"]
+        for s in range(2, W):
+            logits, gk, gv = tl.decode(
+                tlin_params, CFG, t2[:, s], jnp.full((B,), s, jnp.int32),
+                ctx, gk, gv, hk, hv, hlen)
+            np.testing.assert_allclose(logits, full["logits"][:, s], **TOL)
+
+    def test_raw_history_changes_outputs(self, tlin_params):
+        """TLinFormer must actually use the raw path (vs zeroed history) —
+        these are the connections TConstFormer severs."""
+        B, W, hk, hv, hlen, ctx, nv = self._setup(tlin_params)
+        t1, t2 = toks(16, B, W), toks(17, B, W)
+        o1 = tl.window_forward(tlin_params, CFG, t1, nv, ctx, hk, hv, hlen)
+        hk2 = jax.lax.dynamic_update_slice(hk, o1["append_k"], (0, 0, 0, 0))
+        hv2 = jax.lax.dynamic_update_slice(hv, o1["append_v"], (0, 0, 0, 0))
+        ctx2 = o1["new_ctx"]
+        with_hist = tl.window_forward(
+            tlin_params, CFG, t2, nv, ctx2, hk2, hv2, hlen + W)["logits"]
+        without = tl.window_forward(
+            tlin_params, CFG, t2, nv, ctx2, hk, hv, hlen)["logits"]
+        assert float(jnp.max(jnp.abs(with_hist - without))) > 1e-4
+
+    def test_history_mask_blocks_padding(self, tlin_params):
+        B, W, hk, hv, hlen, ctx, nv = self._setup(tlin_params)
+        t1, t2 = toks(18, B, W), toks(19, B, W)
+        o1 = tl.window_forward(tlin_params, CFG, t1, nv, ctx, hk, hv, hlen)
+        hk2 = jax.lax.dynamic_update_slice(hk, o1["append_k"], (0, 0, 0, 0))
+        hv2 = jax.lax.dynamic_update_slice(hv, o1["append_v"], (0, 0, 0, 0))
+        # garbage beyond hist_len must be invisible
+        hk3 = hk2.at[:, :, W:, :].set(5.0)
+        hv3 = hv2.at[:, :, W:, :].set(-5.0)
+        a = tl.window_forward(tlin_params, CFG, t2, nv, o1["new_ctx"],
+                              hk2, hv2, hlen + W)["logits"]
+        b = tl.window_forward(tlin_params, CFG, t2, nv, o1["new_ctx"],
+                              hk3, hv3, hlen + W)["logits"]
+        np.testing.assert_allclose(a, b, **TOL)
+
+    def test_append_kv_is_projection_of_embeddings(self, tlin_params):
+        """append_k/v must be this window's raw-history K/V: recomputable
+        from the token embeddings alone."""
+        from compile.layers import project_kv
+        B, W, hk, hv, hlen, ctx, nv = self._setup(tlin_params)
+        t1 = toks(21, B, W)
+        o1 = tl.window_forward(tlin_params, CFG, t1, nv, ctx, hk, hv, hlen)
+        emb = tlin_params["tok_emb"][t1] + tlin_params["pos_emb"][jnp.arange(W)[None]]
+        for b in range(CFG.n_block):
+            gp0 = tlin_params["blocks"][str(b)]["gen_layers"]["0"]
+            ek, ev = project_kv(emb, gp0["raw_attn"])
+            np.testing.assert_allclose(o1["append_k"][b], ek, **TOL)
+            np.testing.assert_allclose(o1["append_v"][b], ev, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Cross-architecture
+# ---------------------------------------------------------------------------
+
+def test_param_counts_are_comparable():
+    """The paper claims exact parity; our wiring adds explicit cross
+    sublayers, so we assert the same order of magnitude and record the
+    exact counts in EXPERIMENTS.md instead."""
+    for preset in ("tiny", "small"):
+        cfg = PRESETS[preset]
+        nb = P.num_params(cfg, "base")
+        nt = P.num_params(cfg, "tconst")
+        nl = P.num_params(cfg, "tlin")
+        assert nb < nt <= nl < 3 * nb

@@ -1,0 +1,73 @@
+"""Parameter-tree plumbing: spec / flatten / unflatten / init invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import params as P
+from compile.configs import PRESETS
+
+ARCHS = ["base", "tlin", "tconst"]
+
+
+@pytest.mark.parametrize("preset", ["tiny", "small"])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_flatten_unflatten_roundtrip(preset, arch):
+    cfg = PRESETS[preset]
+    tree = P.init_params(cfg, arch, seed=3)
+    flat = P.flatten(tree)
+    tree2 = P.unflatten(cfg, arch, flat)
+    flat2 = P.flatten(tree2)
+    assert len(flat) == len(flat2) == len(P.param_spec(cfg, arch))
+    for a, b in zip(flat, flat2):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_spec_order_is_deterministic(arch):
+    cfg = PRESETS["tiny"]
+    s1 = P.param_spec(cfg, arch)
+    s2 = P.param_spec(cfg, arch)
+    assert s1 == s2
+    assert len({n for n, _ in s1}) == len(s1), "duplicate parameter names"
+
+
+def test_numeric_key_ordering():
+    # layer "10" must sort after layer "9", not between "1" and "2".
+    cfg = PRESETS["small"]
+    names = [n for n, _ in P.param_spec(cfg, "base")]
+    idx = {n: i for i, n in enumerate(names)}
+    assert idx["layers.0.ln1.g"] < idx["layers.7.ln1.g"]
+    layer_positions = [idx[f"layers.{i}.ln1.g"] for i in range(8)]
+    assert layer_positions == sorted(layer_positions)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_init_statistics(arch):
+    cfg = PRESETS["tiny"]
+    tree = P.init_params(cfg, arch, seed=0)
+    flat = dict(zip([n for n, _ in P.param_spec(cfg, arch)], P.flatten(tree)))
+    # LN gains are ones, biases zeros, weights ~N(0, 0.02).
+    for name, arr in flat.items():
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf == "g":
+            assert np.allclose(arr, 1.0)
+        elif leaf in ("b", "b1", "b2", "bq", "bk", "bv", "bo"):
+            assert np.allclose(arr, 0.0)
+        else:
+            assert abs(float(jnp.std(arr)) - 0.02) < 0.01, name
+
+
+def test_parity_depth_rule_enforced():
+    import dataclasses
+
+    from compile.configs import ModelConfig
+    with pytest.raises(AssertionError):
+        ModelConfig(name="bad", n_layer=8, n_block=1, h_inner=2)
+
+
+def test_num_params_matches_flat_sizes():
+    cfg = PRESETS["tiny"]
+    for arch in ARCHS:
+        flat = P.flatten(P.init_params(cfg, arch))
+        assert sum(int(np.prod(a.shape)) for a in flat) == P.num_params(cfg, arch)

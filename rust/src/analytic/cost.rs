@@ -1,0 +1,198 @@
+//! Attention-cost model (paper §4 + Appendix A), in MAC units (the paper's
+//! "cost" counts multiply–accumulates of the attention contractions; D is
+//! the model width).
+//!
+//! Two views are provided for the cache-hit cost:
+//! * [`tconst_hit_eq5`] — the paper's Eq. (5), which prices the in-window
+//!   causal self-attention at its full `(H+2)·D·W_og²` *upper bound*
+//!   (i.e. recomputing the whole window every step);
+//! * [`tconst_hit_cached`] — what our implementation actually does: the
+//!   window K/V are cached, so one step costs `(H+2)·D·W_og` self-attention
+//!   — strictly cheaper, still O(1) in N.
+
+use crate::runtime::ModelConfig;
+
+/// Paper Eq. (1)–(4): TConstFormer cache-miss cost for total length `n`.
+/// Strictly linear: `C1·n + C0`.
+pub fn tconst_miss(cfg: &ModelConfig, n: u64) -> u64 {
+    let d = cfg.d_model as u64;
+    let (woh, wog, h) = (cfg.w_oh as u64, cfg.w_og as u64, cfg.h_inner as u64);
+    let c1 = d * 2 * woh;
+    let c0 = d * (h * (woh * woh + wog * wog + wog * woh) + 2 * wog * wog)
+        - d * wog * woh;
+    c1 * n + c0
+}
+
+/// Slope/intercept of Eq. (1) — used by tests and the figure annotations.
+pub fn tconst_miss_coeffs(cfg: &ModelConfig) -> (u64, u64) {
+    let c0 = tconst_miss(cfg, 0);
+    let c1 = tconst_miss(cfg, 1) - c0;
+    (c1, c0)
+}
+
+/// Paper Eq. (5): TConstFormer cache-hit cost (constant in N).
+pub fn tconst_hit_eq5(cfg: &ModelConfig) -> u64 {
+    let d = cfg.d_model as u64;
+    let (woh, wog, h) = (cfg.w_oh as u64, cfg.w_og as u64, cfg.h_inner as u64);
+    (h + 1) * d * woh + (h + 2) * d * wog * wog
+}
+
+/// Our implementation's cache-hit cost: window self-attention served from
+/// the gen KV cache (one query row instead of W_og rows).
+pub fn tconst_hit_cached(cfg: &ModelConfig) -> u64 {
+    let d = cfg.d_model as u64;
+    let (woh, wog, h) = (cfg.w_oh as u64, cfg.w_og as u64, cfg.h_inner as u64);
+    (h + 1) * d * woh + (h + 2) * d * wog
+}
+
+/// Incremental sync (DESIGN.md D1): compress over `[C_H_old ‖ window]` plus
+/// H self layers — constant in N.
+pub fn tconst_sync_inc(cfg: &ModelConfig) -> u64 {
+    let d = cfg.d_model as u64;
+    let (woh, wog, h) = (cfg.w_oh as u64, cfg.w_og as u64, cfg.h_inner as u64);
+    let nb = cfg.n_block as u64;
+    nb * (d * woh * (woh + wog) + h * d * woh * woh)
+}
+
+/// Paper-literal full sync: recompress from the raw length-`n` history
+/// (linear in n; the paper's cache-miss line during generation).
+pub fn tconst_sync_full(cfg: &ModelConfig, n: u64) -> u64 {
+    let d = cfg.d_model as u64;
+    let (woh, h) = (cfg.w_oh as u64, cfg.h_inner as u64);
+    let nb = cfg.n_block as u64;
+    // per block: compress over n keys + H self layers + restore (n queries)
+    nb * (d * woh * n + h * d * woh * woh) + (nb - 1) * d * woh * n
+}
+
+/// Amortized per-token cost of the paper's schedule: k−1 hits + one sync
+/// every k = W_og steps.
+pub fn tconst_amortized(cfg: &ModelConfig, n: u64, full_sync: bool) -> f64 {
+    let k = cfg.w_og as f64;
+    let hit = tconst_hit_cached(cfg) as f64;
+    let sync = if full_sync {
+        tconst_sync_full(cfg, n) as f64
+    } else {
+        tconst_sync_inc(cfg) as f64
+    };
+    hit + sync / k
+}
+
+/// Standard decoder baseline, cache hit: one token attends `n` cached keys
+/// across all layers.
+pub fn base_hit(cfg: &ModelConfig, n: u64) -> u64 {
+    let d = cfg.d_model as u64;
+    let nl = cfg.n_layer as u64;
+    2 * nl * d * n
+}
+
+/// Standard decoder baseline, cache miss (full prefill): causal attention
+/// over n tokens in every layer.
+pub fn base_miss(cfg: &ModelConfig, n: u64) -> u64 {
+    let d = cfg.d_model as u64;
+    let nl = cfg.n_layer as u64;
+    nl * d * n * n // causal halves this; constant factors are irrelevant here
+}
+
+/// TLinFormer cache hit: TConstFormer's constant step + the raw-history
+/// cross-attention over n keys in generation layer 0 of every block.
+pub fn tlin_hit(cfg: &ModelConfig, n: u64) -> u64 {
+    let d = cfg.d_model as u64;
+    let nb = cfg.n_block as u64;
+    tconst_hit_cached(cfg) + 2 * nb * d * n
+}
+
+/// TLinFormer cache miss: the window pass plus raw projections over n.
+pub fn tlin_miss(cfg: &ModelConfig, n: u64) -> u64 {
+    let d = cfg.d_model as u64;
+    let nb = cfg.n_block as u64;
+    let wog = cfg.w_og as u64;
+    tconst_miss(cfg, n) + nb * d * wog * n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "test".into(),
+            vocab: 256,
+            d_model: 128,
+            n_head: 4,
+            n_layer: 8,
+            max_seq: 2048,
+            w_oh: 128,
+            w_og: 128,
+            n_block: 2,
+            h_inner: 2,
+            ffn_mult: 4,
+            train_seq: 512,
+            train_batch: 2,
+        }
+    }
+
+    #[test]
+    fn eq1_matches_appendix_expansion() {
+        // T = 2D(N−Wog)Woh + HDWoh² + (H+1)DWogWoh + (H+2)DWog²
+        let c = cfg();
+        let (d, woh, wog, h) = (128u64, 128u64, 128u64, 2u64);
+        for n in [256u64, 1024, 65536] {
+            let direct = 2 * d * (n - wog) * woh
+                + h * d * woh * woh
+                + (h + 1) * d * wog * woh
+                + (h + 2) * d * wog * wog;
+            assert_eq!(tconst_miss(&c, n), direct, "n={n}");
+        }
+    }
+
+    #[test]
+    fn miss_is_strictly_linear() {
+        let c = cfg();
+        let (c1, c0) = tconst_miss_coeffs(&c);
+        for n in [10u64, 1000, 1_000_000] {
+            assert_eq!(tconst_miss(&c, n), c1 * n + c0);
+        }
+        assert_eq!(c1, 128 * 2 * 128); // D·2W_oh
+    }
+
+    #[test]
+    fn hit_is_constant_in_n() {
+        let c = cfg();
+        let h = tconst_hit_eq5(&c);
+        assert_eq!(h, 3 * 128 * 128 + 4 * 128 * 128 * 128);
+        assert!(tconst_hit_cached(&c) < h);
+    }
+
+    #[test]
+    fn baseline_grows_faster_than_tconst() {
+        let c = cfg();
+        // crossover must exist and persist
+        assert!(base_hit(&c, 1 << 20) > u64::from(tconst_hit_cached(&c)));
+        assert!(base_miss(&c, 1 << 20) > tconst_miss(&c, 1 << 20));
+    }
+
+    #[test]
+    fn tlin_between_base_and_tconst_at_large_n() {
+        let c = cfg();
+        let n = 1u64 << 20;
+        let tl = tlin_hit(&c, n);
+        assert!(tl > tconst_hit_cached(&c));
+        assert!(tl < base_hit(&c, n));
+    }
+
+    #[test]
+    fn amortized_incremental_is_constant() {
+        let c = cfg();
+        let a = tconst_amortized(&c, 1_000, false);
+        let b = tconst_amortized(&c, 1_000_000_000, false);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn amortized_full_sync_grows() {
+        let c = cfg();
+        assert!(
+            tconst_amortized(&c, 1_000_000, true) > tconst_amortized(&c, 1_000, true)
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! Analytic cost/memory models — the paper's Eq. (1)–(7) in executable form.
+//!
+//! Two uses:
+//! * unit/property tests pin the serving stack's byte accounting and FLOP
+//!   counters to these closed forms;
+//! * the figure harnesses extend measured curves past the largest compiled
+//!   bucket (clearly labelled as model-extrapolated; DESIGN.md D4).
+
+pub mod cost;
+pub mod memory;

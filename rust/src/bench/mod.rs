@@ -1,0 +1,278 @@
+//! Shared harness logic for the paper-figure benchmarks (used by both the
+//! `repro sweep` CLI and the `cargo bench` targets, so every figure can be
+//! regenerated either way).
+//!
+//! Methodology mirrors the paper §6.4.1: for each initial sequence length N
+//! feed a random prompt, generate a few tokens, and record
+//! * token #1 — the **cache miss** (prefill / full recompute), and
+//! * token #3 — the **cache hit** (steady-state decode),
+//! plus the exact KV bytes held. Beyond the largest compiled bucket the
+//! curves are extended with the analytic cost model (Eq. 1–7), emitted as
+//! separate `*_model` series so measured and extrapolated points are never
+//! mixed (DESIGN.md D4).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::analytic::{cost, memory};
+use crate::model::{Arch, ModelDriver, SyncMode};
+use crate::runtime::Runtime;
+use crate::util::bench::{series_to_csv, series_to_markdown, write_results_file, Series};
+use crate::util::rng::Rng;
+
+/// Measurements at one (arch, N) point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub n: usize,
+    pub miss_ms: f64,
+    pub hit_ms: f64,
+    pub kv_bytes: u64,
+    pub syncs: u64,
+}
+
+/// Measure one architecture at history length `n`.
+///
+/// `reps` decode steps are timed after a 2-step warm-in; the reported hit
+/// latency is the median. The miss latency is the full prompt absorption
+/// (token #1, paper methodology).
+pub fn measure_point(
+    rt: &mut Runtime,
+    driver: &ModelDriver,
+    n: usize,
+    reps: usize,
+) -> Result<Point> {
+    let mut rng = Rng::new(0xC0FFEE ^ n as u64);
+    let prompt: Vec<i32> = (0..n.max(1))
+        .map(|_| rng.range(1, 256) as i32)
+        .collect();
+
+    // Warm pass: triggers PJRT compilation of every graph this point needs
+    // so the timed miss measures execution, not compilation.
+    {
+        let mut warm = driver.new_state();
+        driver.prefill(rt, &mut warm, &prompt)?;
+        driver.decode_batch(rt, &mut [&mut warm], &[65])?;
+    }
+
+    let mut state = driver.new_state();
+    let t0 = Instant::now();
+    let logits = driver.prefill(rt, &mut state, &prompt)?;
+    let miss_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+    let mut last = crate::model::sampler::argmax(&logits);
+    let mut times = Vec::with_capacity(reps);
+    for i in 0..reps + 2 {
+        let t0 = Instant::now();
+        let out = driver.decode_batch(rt, &mut [&mut state], &[last])?;
+        let dt = t0.elapsed().as_secs_f64() * 1000.0;
+        if i >= 2 {
+            times.push(dt);
+        }
+        last = crate::model::sampler::argmax(&out[0]);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let hit_ms = times[times.len() / 2];
+
+    let syncs = match &state {
+        crate::model::state::SeqState::TConst(s) => s.syncs,
+        crate::model::state::SeqState::TLin(s) => s.inner.syncs,
+        _ => 0,
+    };
+    Ok(Point { n, miss_ms, hit_ms, kv_bytes: state.bytes(), syncs })
+}
+
+/// The measured N grid for a preset (kept inside the largest bucket with
+/// headroom for the timed decode steps).
+pub fn n_grid(rt: &Runtime, preset: &str, max_n: usize, quick: bool) -> Vec<usize> {
+    let buckets = rt.manifest.buckets(preset);
+    let cap = buckets.last().copied().unwrap_or(512).min(max_n);
+    let base: Vec<usize> = if quick {
+        vec![16, 128, 480, 2016]
+    } else {
+        vec![16, 64, 128, 256, 480, 1000, 1500, 2016]
+    };
+    base.into_iter().filter(|&n| n + 16 <= cap.max(32)).collect()
+}
+
+/// Full Fig. 8 sweep over the three architectures.
+pub struct Fig8Output {
+    pub points: Vec<(Arch, Point)>,
+    pub files: Vec<String>,
+}
+
+pub fn run_fig8_sweep(
+    artifacts: &str,
+    preset: &str,
+    max_n: usize,
+    quick: bool,
+    out_dir: &str,
+) -> Result<()> {
+    let out = fig8_sweep(artifacts, preset, max_n, quick)?;
+    std::fs::create_dir_all(out_dir)?;
+    for f in &out.files {
+        println!("[sweep] wrote {f}");
+    }
+    Ok(())
+}
+
+pub fn fig8_sweep(
+    artifacts: &str,
+    preset: &str,
+    max_n: usize,
+    quick: bool,
+) -> Result<Fig8Output> {
+    let mut rt = Runtime::load(artifacts)?;
+    let cfg = rt.manifest.config(preset)?.clone();
+    let reps = if quick { 3 } else { 7 };
+    let archs = [Arch::Base, Arch::TLin, Arch::TConst];
+
+    let mut points = Vec::new();
+    for arch in archs {
+        let driver = ModelDriver::new(&rt, preset, arch)?;
+        for &n in &n_grid(&rt, preset, max_n, quick) {
+            let p = measure_point(&mut rt, &driver, n, reps)?;
+            println!(
+                "[fig8] {:<7} N={:<6} miss {:>9.3} ms  hit {:>8.3} ms  kv {:>10} B  syncs {}",
+                arch.as_str(),
+                p.n,
+                p.miss_ms,
+                p.hit_ms,
+                p.kv_bytes,
+                p.syncs
+            );
+            points.push((arch, p));
+        }
+    }
+
+    // --- assemble the paper's panels -------------------------------------
+    let mut files = Vec::new();
+    let series_of = |arch: Arch, f: &dyn Fn(&Point) -> f64, name: &str| -> Series {
+        let mut s = Series::new(name);
+        for (a, p) in &points {
+            if *a == arch {
+                s.push(p.n as f64, f(p));
+            }
+        }
+        s
+    };
+
+    // (a,b,c) latency vs N: miss & hit per arch
+    let mut latency = Vec::new();
+    for arch in archs {
+        latency.push(series_of(arch, &|p| p.miss_ms, &format!("{}_miss_ms", arch.as_str())));
+        latency.push(series_of(arch, &|p| p.hit_ms, &format!("{}_hit_ms", arch.as_str())));
+    }
+    files.push(emit("fig8_abc_latency", &latency, "N")?);
+
+    // (d,e,f) cache speedup = miss/hit per arch
+    let mut speedup = Vec::new();
+    for arch in archs {
+        speedup.push(series_of(
+            arch,
+            &|p| p.miss_ms / p.hit_ms.max(1e-9),
+            &format!("{}_speedup", arch.as_str()),
+        ));
+    }
+    files.push(emit("fig8_def_cache_speedup", &speedup, "N")?);
+
+    // (g) memory vs N (measured) + analytic overlays incl. model extension
+    let mut mem = Vec::new();
+    for arch in archs {
+        mem.push(series_of(arch, &|p| p.kv_bytes as f64, &format!("{}_kv_bytes", arch.as_str())));
+    }
+    let mut model_ns: Vec<u64> = vec![1_000, 10_000, 100_000, 1_000_000];
+    model_ns.retain(|&n| n > max_n as u64);
+    let mut base_model = Series::new("base_kv_bytes_model");
+    let mut tlin_model = Series::new("tlin_kv_bytes_model");
+    let mut tconst_model = Series::new("tconst_kv_bytes_model");
+    for &n in &model_ns {
+        base_model.push(n as f64, memory::base_bytes(&cfg, 1, n) as f64);
+        tlin_model.push(n as f64, memory::tlin_bytes(&cfg, 1, n) as f64);
+        tconst_model.push(n as f64, memory::tconst_bytes(&cfg, 1) as f64);
+    }
+    mem.extend([base_model, tlin_model, tconst_model]);
+    files.push(emit("fig8_g_memory", &mem, "N")?);
+
+    // (h, i) end-to-end hit-path speedups + analytic extension
+    let hit_of = |arch: Arch, n: usize| -> Option<f64> {
+        points
+            .iter()
+            .find(|(a, p)| *a == arch && p.n == n)
+            .map(|(_, p)| p.hit_ms)
+    };
+    let mut h = Series::new("tconst_vs_base_speedup");
+    let mut i = Series::new("tconst_vs_tlin_speedup");
+    for &n in &n_grid(&rt, preset, max_n, quick) {
+        if let (Some(b), Some(t), Some(l)) =
+            (hit_of(Arch::Base, n), hit_of(Arch::TConst, n), hit_of(Arch::TLin, n))
+        {
+            h.push(n as f64, b / t.max(1e-9));
+            i.push(n as f64, l / t.max(1e-9));
+        }
+    }
+    // model extension: scale measured anchors by the cost model's growth
+    if let (Some(&n_anchor), Some(bh), Some(th), Some(lh)) = (
+        n_grid(&rt, preset, max_n, quick).last(),
+        hit_of(Arch::Base, *n_grid(&rt, preset, max_n, quick).last().unwrap()),
+        hit_of(Arch::TConst, *n_grid(&rt, preset, max_n, quick).last().unwrap()),
+        hit_of(Arch::TLin, *n_grid(&rt, preset, max_n, quick).last().unwrap()),
+    ) {
+        let mut hm = Series::new("tconst_vs_base_speedup_model");
+        let mut im = Series::new("tconst_vs_tlin_speedup_model");
+        for &n in &model_ns {
+            let base_scale =
+                cost::base_hit(&cfg, n) as f64 / cost::base_hit(&cfg, n_anchor as u64) as f64;
+            let tlin_scale =
+                cost::tlin_hit(&cfg, n) as f64 / cost::tlin_hit(&cfg, n_anchor as u64) as f64;
+            hm.push(n as f64, bh * base_scale / th.max(1e-9));
+            im.push(n as f64, lh * tlin_scale / th.max(1e-9));
+        }
+        files.push(emit("fig8_hi_speedup", &[h, hm, i, im], "N")?);
+    } else {
+        files.push(emit("fig8_hi_speedup", &[h, i], "N")?);
+    }
+
+    Ok(Fig8Output { points, files })
+}
+
+/// Measure the sync (cache-miss-during-generation) cost at a given history
+/// length, for the sync-mode ablation.
+pub fn measure_sync_cost(
+    rt: &mut Runtime,
+    preset: &str,
+    mode: SyncMode,
+    n_history: usize,
+) -> Result<f64> {
+    let driver = ModelDriver::new(rt, preset, Arch::TConst)?.with_sync_mode(mode);
+    let cfg = driver.cfg.clone();
+    let mut rng = Rng::new(42);
+    let prompt: Vec<i32> = (0..n_history)
+        .map(|_| rng.range(1, 256) as i32)
+        .collect();
+    let mut state = driver.new_state();
+    driver.prefill(rt, &mut state, &prompt)?;
+    // fill the window so the next decode must sync
+    loop {
+        let slot = match &state {
+            crate::model::state::SeqState::TConst(s) => s.slot,
+            _ => unreachable!(),
+        };
+        if slot >= cfg.w_og {
+            break;
+        }
+        driver.decode_batch(rt, &mut [&mut state], &[65])?;
+    }
+    // timed step includes the forced sync
+    let t0 = Instant::now();
+    driver.decode_batch(rt, &mut [&mut state], &[66])?;
+    Ok(t0.elapsed().as_secs_f64() * 1000.0)
+}
+
+fn emit(name: &str, series: &[Series], x: &str) -> Result<String> {
+    let csv = series_to_csv(series);
+    let md = series_to_markdown(series, x);
+    let p1 = write_results_file(&format!("{name}.csv"), &csv).context("write csv")?;
+    let _ = write_results_file(&format!("{name}.md"), &md).context("write md")?;
+    Ok(p1.display().to_string())
+}

@@ -1,0 +1,424 @@
+//! The engine: event loop that owns the PJRT runtime and turns requests
+//! into tokens via the scheduler's rounds.
+//!
+//! Two ways to drive it:
+//! * **owned** — construct [`Engine`] and call [`Engine::run_workload`] /
+//!   [`Engine::step`] directly (benches, examples, tests);
+//! * **spawned** — [`Engine::spawn`] moves it onto a dedicated thread
+//!   (PJRT handles are not `Send`, so the runtime is *created on* that
+//!   thread) and returns a cloneable [`EngineHandle`] for the HTTP server.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::kv_manager::{KvLimits, KvManager};
+use super::metrics::EngineMetrics;
+use super::request::{FinishReason, Request, RequestMetrics, Response};
+use super::scheduler::{SchedConfig, Scheduler};
+use crate::data::tokenizer::BOS;
+use crate::model::{sampler, Arch, ModelDriver, SyncMode};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Engine construction parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: String,
+    pub preset: String,
+    pub arch: Arch,
+    pub sync_mode: SyncMode,
+    pub max_lanes: usize,
+    pub sched: SchedConfig,
+    /// Optional trained checkpoint (tensor-file stem) to load over the
+    /// seeded init weights.
+    pub checkpoint: Option<String>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: "artifacts".into(),
+            preset: "small".into(),
+            arch: Arch::TConst,
+            sync_mode: SyncMode::Incremental,
+            max_lanes: 4,
+            sched: SchedConfig::default(),
+            checkpoint: None,
+        }
+    }
+}
+
+struct Pending {
+    req: Request,
+    submitted: Instant,
+    tx: Option<mpsc::Sender<Response>>,
+}
+
+struct Live {
+    req: Request,
+    seq_id: u64,
+    submitted: Instant,
+    prefill_done: Instant,
+    queue_ms: f64,
+    generated: Vec<i32>,
+    last_token: i32,
+    rng: Rng,
+    tx: Option<mpsc::Sender<Response>>,
+    peak_kv: u64,
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub driver: ModelDriver,
+    kv: KvManager,
+    sched: Scheduler,
+    max_lanes: usize,
+    pub metrics: EngineMetrics,
+    waiting: VecDeque<Pending>,
+    live: Vec<Live>,
+    next_seq: u64,
+    /// Completed responses for owned-mode callers that did not attach a
+    /// channel.
+    pub completed: Vec<Response>,
+}
+
+impl Engine {
+    pub fn new(cfg: &EngineConfig) -> Result<Self> {
+        let mut rt = Runtime::load(&cfg.artifacts_dir)?;
+        let driver =
+            ModelDriver::new(&rt, &cfg.preset, cfg.arch)?.with_sync_mode(cfg.sync_mode);
+        if let Some(ck) = &cfg.checkpoint {
+            rt.load_checkpoint(&cfg.preset, cfg.arch.as_str(), ck)?;
+        }
+        Ok(Engine {
+            rt,
+            driver,
+            kv: KvManager::new(KvLimits { max_slots: cfg.max_lanes, max_bytes: 0 }),
+            sched: Scheduler::new(cfg.sched.clone()),
+            max_lanes: cfg.max_lanes,
+            metrics: EngineMetrics::default(),
+            waiting: VecDeque::new(),
+            live: Vec::new(),
+            next_seq: 1,
+            completed: Vec::new(),
+        })
+    }
+
+    /// Enqueue a request (owned mode: response lands in `self.completed`).
+    pub fn submit(&mut self, req: Request) {
+        self.waiting.push_back(Pending { req, submitted: Instant::now(), tx: None });
+    }
+
+    fn submit_with_tx(&mut self, req: Request, tx: mpsc::Sender<Response>) {
+        self.waiting
+            .push_back(Pending { req, submitted: Instant::now(), tx: Some(tx) });
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.live.is_empty()
+    }
+
+    /// One scheduler round: admissions (prefill) + one decode step for
+    /// every running lane. Returns the number of tokens produced.
+    pub fn step(&mut self) -> Result<usize> {
+        let round_t0 = Instant::now();
+        let waiting_ids: Vec<u64> = (0..self.waiting.len() as u64).collect();
+        let running_ids: Vec<u64> = self.live.iter().map(|l| l.seq_id).collect();
+        let free = self.max_lanes.saturating_sub(self.live.len());
+        let plan = self.sched.plan_round(&waiting_ids, &running_ids, free);
+
+        let mut produced = 0;
+
+        // 1. admissions (prefill = the cache-miss path)
+        for _ in plan.admit {
+            let pending = self.waiting.pop_front().context("admit from empty queue")?;
+            produced += self.prefill_one(pending)?;
+        }
+
+        // 2. batched decode rounds
+        for group in plan.groups {
+            produced += self.decode_group(&group)?;
+        }
+
+        let kv_now = self.kv.touch();
+        self.metrics.observe_kv(kv_now);
+        self.metrics
+            .round_ms
+            .add(round_t0.elapsed().as_secs_f64() * 1000.0);
+        Ok(produced)
+    }
+
+    fn prefill_one(&mut self, pending: Pending) -> Result<usize> {
+        let Pending { req, submitted, tx } = pending;
+        let queue_ms = submitted.elapsed().as_secs_f64() * 1000.0;
+        let seq_id = self.next_seq;
+        self.next_seq += 1;
+
+        let mut state = self.driver.new_state();
+        // BOS-prefixed prompt: guarantees prefill is never empty.
+        let mut prompt = Vec::with_capacity(req.prompt.len() + 1);
+        prompt.push(BOS);
+        prompt.extend_from_slice(&req.prompt);
+
+        let logits = self.driver.prefill(&mut self.rt, &mut state, &prompt)?;
+        self.metrics.prefill_tokens += prompt.len() as u64;
+
+        let mut rng = Rng::new(req.sampling.seed ^ seq_id);
+        let first = sampler::sample(&logits, &req.sampling, &mut rng);
+        let prefill_done = Instant::now();
+
+        let peak_kv = state.bytes();
+        self.kv.alloc(seq_id, state)?;
+        let live = Live {
+            req,
+            seq_id,
+            submitted,
+            prefill_done,
+            queue_ms,
+            generated: vec![first],
+            last_token: first,
+            rng,
+            tx,
+            peak_kv,
+        };
+        self.settle(live)?;
+        Ok(1)
+    }
+
+    fn decode_group(&mut self, group: &[u64]) -> Result<usize> {
+        // Collect lanes still needing tokens (others complete below).
+        let mut ids = Vec::new();
+        let mut tokens = Vec::new();
+        for &id in group {
+            if let Some(l) = self.live.iter().find(|l| l.seq_id == id) {
+                ids.push(id);
+                tokens.push(l.last_token);
+            }
+        }
+        if ids.is_empty() {
+            return Ok(0);
+        }
+        let t0 = Instant::now();
+        let mut lanes = self.kv.get_many_mut(&ids)?;
+        let all_logits = self
+            .driver
+            .decode_batch(&mut self.rt, lanes.as_mut_slice(), &tokens)?;
+        let dt_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        self.metrics.decode_steps += 1;
+
+        let mut produced = 0;
+        for (i, id) in ids.iter().enumerate() {
+            let idx = self
+                .live
+                .iter()
+                .position(|l| l.seq_id == *id)
+                .context("live lane vanished")?;
+            let mut live = self.live.swap_remove(idx);
+            let next = sampler::sample(&all_logits[i], &live.req.sampling, &mut live.rng);
+            live.generated.push(next);
+            live.last_token = next;
+            live.peak_kv = live
+                .peak_kv
+                .max(self.kv.get(*id).map(|s| s.bytes()).unwrap_or(0));
+            self.metrics.per_token_ms.add(dt_ms);
+            produced += 1;
+            self.settle(live)?;
+        }
+        Ok(produced)
+    }
+
+    /// Decide whether a lane just produced its last token; either finish it
+    /// or return it to the live set.
+    fn settle(&mut self, live: Live) -> Result<()> {
+        let hit_stop = live.req.stop_token == Some(live.last_token);
+        let hit_len = live.generated.len() >= live.req.max_new_tokens;
+        if hit_stop || hit_len {
+            self.finish(
+                live,
+                if hit_stop { FinishReason::Stop } else { FinishReason::Length },
+            )
+        } else {
+            self.live.push(live);
+            Ok(())
+        }
+    }
+
+    fn finish(&mut self, live: Live, reason: FinishReason) -> Result<()> {
+        let state = self.kv.free(live.seq_id)?;
+        let syncs = match &state {
+            crate::model::state::SeqState::TConst(s) => s.syncs,
+            crate::model::state::SeqState::TLin(s) => s.inner.syncs,
+            _ => 0,
+        };
+        self.metrics.sync_events += syncs;
+        let total_ms = live.submitted.elapsed().as_secs_f64() * 1000.0;
+        let ttft_ms = live
+            .prefill_done
+            .duration_since(live.submitted)
+            .as_secs_f64()
+            * 1000.0;
+        let mut generated = live.generated;
+        if reason == FinishReason::Stop {
+            generated.pop(); // drop the stop token itself
+        }
+        let metrics = RequestMetrics {
+            queue_ms: live.queue_ms,
+            ttft_ms,
+            total_ms,
+            n_prompt: live.req.prompt.len(),
+            n_generated: generated.len(),
+            syncs,
+            peak_kv_bytes: live.peak_kv.max(state.bytes()),
+        };
+        self.metrics.ttft_ms.add(ttft_ms);
+        self.metrics.total_ms.add(total_ms);
+        self.metrics.tokens_generated += generated.len() as u64;
+        self.metrics.requests_completed += 1;
+        let resp = Response { id: live.req.id, tokens: generated, finish_reason: reason, metrics };
+        match live.tx {
+            Some(tx) => {
+                let _ = tx.send(resp);
+            }
+            None => self.completed.push(resp),
+        }
+        Ok(())
+    }
+
+    /// Drive until all submitted work completes; returns completed count.
+    pub fn run_to_completion(&mut self) -> Result<usize> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(self.completed.len())
+    }
+
+    /// Convenience: run a closed-loop workload (all requests queued up
+    /// front) and drain it.
+    pub fn run_workload(&mut self, reqs: Vec<Request>) -> Result<Vec<Response>> {
+        for r in reqs {
+            self.submit(r);
+        }
+        self.run_to_completion()?;
+        Ok(std::mem::take(&mut self.completed))
+    }
+
+    pub fn metrics_json(&self) -> Json {
+        self.metrics.snapshot()
+    }
+
+    // -- spawned mode ---------------------------------------------------------
+
+    /// Create the engine on a dedicated thread; returns a `Send + Clone`
+    /// handle. The runtime (PJRT client) is constructed on that thread.
+    pub fn spawn(cfg: EngineConfig) -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::new(&cfg) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                loop {
+                    // Drain control messages; block briefly when idle.
+                    let msg = if engine.has_work() {
+                        rx.try_recv().ok()
+                    } else {
+                        rx.recv_timeout(Duration::from_millis(20)).ok()
+                    };
+                    match msg {
+                        Some(Msg::Submit(req, tx)) => engine.submit_with_tx(req, tx),
+                        Some(Msg::Metrics(tx)) => {
+                            let _ = tx.send(engine.metrics_json());
+                        }
+                        Some(Msg::Shutdown) => break,
+                        None => {}
+                    }
+                    if engine.has_work() {
+                        if let Err(e) = engine.step() {
+                            eprintln!("[engine] round error: {e:#}");
+                            // abort all live work
+                            let lanes: Vec<u64> =
+                                engine.live.iter().map(|l| l.seq_id).collect();
+                            for id in lanes {
+                                if let Some(idx) =
+                                    engine.live.iter().position(|l| l.seq_id == id)
+                                {
+                                    let live = engine.live.swap_remove(idx);
+                                    let _ = engine.finish(live, FinishReason::Aborted);
+                                }
+                            }
+                        }
+                    }
+                }
+            })
+            .context("spawning engine thread")?;
+        ready_rx
+            .recv()
+            .context("engine thread died during startup")??;
+        Ok(EngineHandle { tx, _thread: std::sync::Arc::new(ThreadGuard(Some(thread))) })
+    }
+}
+
+enum Msg {
+    Submit(Request, mpsc::Sender<Response>),
+    Metrics(mpsc::Sender<Json>),
+    Shutdown,
+}
+
+struct ThreadGuard(Option<std::thread::JoinHandle<()>>);
+
+impl Drop for ThreadGuard {
+    fn drop(&mut self) {
+        if let Some(h) = self.0.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cloneable, Send handle to a spawned engine.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Msg>,
+    _thread: std::sync::Arc<ThreadGuard>,
+}
+
+impl EngineHandle {
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Submit(req, tx));
+        rx
+    }
+
+    /// Blocking generate.
+    pub fn generate(&self, req: Request) -> Result<Response> {
+        self.submit(req)
+            .recv()
+            .context("engine dropped the request")
+    }
+
+    pub fn metrics(&self) -> Result<Json> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Metrics(tx))
+            .ok()
+            .context("engine gone")?;
+        rx.recv_timeout(Duration::from_secs(5)).context("metrics timeout")
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}

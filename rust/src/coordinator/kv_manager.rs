@@ -1,0 +1,223 @@
+//! KV slot manager: bounded pool of per-sequence state slots with exact
+//! byte metering — the component behind Fig. 8(g)'s memory readout and the
+//! engine's admission control.
+//!
+//! For TConstFormer every slot is a constant-size slab (Eq. 7), so the
+//! pool's capacity in *sequences* is exact and admission never depends on
+//! sequence length. For the O(N) architectures slots grow by bucket
+//! migration and the pool enforces a total byte budget instead.
+
+use anyhow::{bail, Result};
+
+use crate::model::state::SeqState;
+
+/// A live sequence slot.
+#[derive(Debug)]
+pub struct Slot {
+    pub seq_id: u64,
+    pub state: SeqState,
+}
+
+/// Pool policy limits.
+#[derive(Debug, Clone)]
+pub struct KvLimits {
+    /// Max concurrent sequences (lanes).
+    pub max_slots: usize,
+    /// Total KV byte budget across all slots (0 = unlimited).
+    pub max_bytes: u64,
+}
+
+impl Default for KvLimits {
+    fn default() -> Self {
+        KvLimits { max_slots: 8, max_bytes: 0 }
+    }
+}
+
+#[derive(Debug)]
+pub struct KvManager {
+    limits: KvLimits,
+    slots: Vec<Slot>,
+    peak_bytes: u64,
+}
+
+impl KvManager {
+    pub fn new(limits: KvLimits) -> Self {
+        KvManager { limits, slots: Vec::new(), peak_bytes: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.slots.len() < self.limits.max_slots
+            && (self.limits.max_bytes == 0 || self.total_bytes() < self.limits.max_bytes)
+    }
+
+    /// Admit a new sequence. Errors when the pool is exhausted (the engine
+    /// keeps the request queued — backpressure, not failure).
+    pub fn alloc(&mut self, seq_id: u64, state: SeqState) -> Result<()> {
+        if !self.has_capacity() {
+            bail!("kv pool exhausted ({} slots)", self.slots.len());
+        }
+        if self.slots.iter().any(|s| s.seq_id == seq_id) {
+            bail!("duplicate seq id {seq_id}");
+        }
+        self.slots.push(Slot { seq_id, state });
+        self.peak_bytes = self.peak_bytes.max(self.total_bytes());
+        Ok(())
+    }
+
+    /// Release a sequence, returning its final state.
+    pub fn free(&mut self, seq_id: u64) -> Result<SeqState> {
+        let idx = self
+            .slots
+            .iter()
+            .position(|s| s.seq_id == seq_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown seq id {seq_id}"))?;
+        Ok(self.slots.swap_remove(idx).state)
+    }
+
+    pub fn get_mut(&mut self, seq_id: u64) -> Option<&mut SeqState> {
+        self.slots
+            .iter_mut()
+            .find(|s| s.seq_id == seq_id)
+            .map(|s| &mut s.state)
+    }
+
+    pub fn get(&self, seq_id: u64) -> Option<&SeqState> {
+        self.slots.iter().find(|s| s.seq_id == seq_id).map(|s| &s.state)
+    }
+
+    /// All live sequence ids, in admission order.
+    pub fn seq_ids(&self) -> Vec<u64> {
+        self.slots.iter().map(|s| s.seq_id).collect()
+    }
+
+    /// Mutable access to several slots at once (for batched decode):
+    /// returns states in the order of `ids`.
+    pub fn get_many_mut(&mut self, ids: &[u64]) -> Result<Vec<&mut SeqState>> {
+        // Safe multi-borrow: verify ids are distinct and all present, then
+        // hand out disjoint &mut via a single pass.
+        for (i, a) in ids.iter().enumerate() {
+            if ids[i + 1..].contains(a) {
+                bail!("duplicate id in get_many_mut");
+            }
+        }
+        let mut out: Vec<Option<&mut SeqState>> = Vec::with_capacity(ids.len());
+        for _ in ids {
+            out.push(None);
+        }
+        for slot in self.slots.iter_mut() {
+            if let Some(pos) = ids.iter().position(|&id| id == slot.seq_id) {
+                out[pos] = Some(&mut slot.state);
+            }
+        }
+        out.into_iter()
+            .enumerate()
+            .map(|(i, s)| s.ok_or_else(|| anyhow::anyhow!("unknown seq id {}", ids[i])))
+            .collect()
+    }
+
+    /// Exact total KV bytes across live slots (what Fig. 8(g) meters).
+    pub fn total_bytes(&self) -> u64 {
+        self.slots.iter().map(|s| s.state.bytes()).sum()
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    /// Re-observe after decode rounds (growth happens inside drivers).
+    pub fn touch(&mut self) -> u64 {
+        let b = self.total_bytes();
+        self.peak_bytes = self.peak_bytes.max(b);
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::state::{BaseState, SeqState, TConstState};
+    use crate::runtime::ModelConfig;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 256,
+            d_model: 64,
+            n_head: 4,
+            n_layer: 4,
+            max_seq: 512,
+            w_oh: 32,
+            w_og: 32,
+            n_block: 1,
+            h_inner: 2,
+            ffn_mult: 4,
+            train_seq: 256,
+            train_batch: 4,
+        }
+    }
+
+    fn tconst_state() -> SeqState {
+        SeqState::TConst(TConstState::new(&cfg()))
+    }
+
+    #[test]
+    fn slot_limit_enforced() {
+        let mut kv = KvManager::new(KvLimits { max_slots: 2, max_bytes: 0 });
+        kv.alloc(1, tconst_state()).unwrap();
+        kv.alloc(2, tconst_state()).unwrap();
+        assert!(!kv.has_capacity());
+        assert!(kv.alloc(3, tconst_state()).is_err());
+        kv.free(1).unwrap();
+        assert!(kv.alloc(3, tconst_state()).is_ok());
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let mut kv = KvManager::new(KvLimits::default());
+        kv.alloc(5, tconst_state()).unwrap();
+        assert!(kv.alloc(5, tconst_state()).is_err());
+    }
+
+    #[test]
+    fn byte_metering_tracks_states() {
+        let mut kv = KvManager::new(KvLimits::default());
+        kv.alloc(1, tconst_state()).unwrap();
+        let per = kv.total_bytes();
+        assert!(per > 0);
+        kv.alloc(2, tconst_state()).unwrap();
+        assert_eq!(kv.total_bytes(), 2 * per);
+        assert_eq!(kv.peak_bytes(), 2 * per);
+        kv.free(1).unwrap();
+        assert_eq!(kv.total_bytes(), per);
+        assert_eq!(kv.peak_bytes(), 2 * per); // peak is sticky
+    }
+
+    #[test]
+    fn byte_budget_blocks_admission() {
+        let per = tconst_state().bytes();
+        let mut kv = KvManager::new(KvLimits { max_slots: 100, max_bytes: per });
+        kv.alloc(1, tconst_state()).unwrap();
+        assert!(!kv.has_capacity());
+    }
+
+    #[test]
+    fn get_many_mut_disjoint() {
+        let mut kv = KvManager::new(KvLimits::default());
+        kv.alloc(1, tconst_state()).unwrap();
+        kv.alloc(2, SeqState::Base(BaseState::new(&cfg()))).unwrap();
+        let states = kv.get_many_mut(&[2, 1]).unwrap();
+        assert_eq!(states.len(), 2);
+        assert!(matches!(states[0], SeqState::Base(_)));
+        assert!(matches!(states[1], SeqState::TConst(_)));
+        assert!(kv.get_many_mut(&[1, 1]).is_err());
+        assert!(kv.get_many_mut(&[9]).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Engine-level metrics: latency histograms, throughput counters, KV-cache
+//! byte gauges — snapshotted as JSON for `/metrics` and the bench reports.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::{Percentiles, Summary};
+
+#[derive(Debug)]
+pub struct EngineMetrics {
+    started: Instant,
+    pub requests_completed: u64,
+    pub requests_aborted: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub decode_steps: u64,
+    pub sync_events: u64,
+    /// Per-request latency distributions (ms).
+    pub ttft_ms: Percentiles,
+    pub total_ms: Percentiles,
+    pub per_token_ms: Percentiles,
+    /// Decode-round wall time (ms) — the hot-loop health signal.
+    pub round_ms: Summary,
+    /// KV byte gauges across all live sequences.
+    pub kv_bytes_current: u64,
+    pub kv_bytes_peak: u64,
+}
+
+impl Default for EngineMetrics {
+    fn default() -> Self {
+        EngineMetrics {
+            started: Instant::now(),
+            requests_completed: 0,
+            requests_aborted: 0,
+            tokens_generated: 0,
+            prefill_tokens: 0,
+            decode_steps: 0,
+            sync_events: 0,
+            ttft_ms: Percentiles::default(),
+            total_ms: Percentiles::default(),
+            per_token_ms: Percentiles::default(),
+            round_ms: Summary::new(),
+            kv_bytes_current: 0,
+            kv_bytes_peak: 0,
+        }
+    }
+}
+
+impl EngineMetrics {
+    pub fn observe_kv(&mut self, current: u64) {
+        self.kv_bytes_current = current;
+        self.kv_bytes_peak = self.kv_bytes_peak.max(current);
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        self.tokens_generated as f64 / self.uptime_s().max(1e-9)
+    }
+
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("uptime_s", Json::num(self.uptime_s())),
+            ("requests_completed", Json::num(self.requests_completed as f64)),
+            ("requests_aborted", Json::num(self.requests_aborted as f64)),
+            ("tokens_generated", Json::num(self.tokens_generated as f64)),
+            ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
+            ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("sync_events", Json::num(self.sync_events as f64)),
+            ("throughput_tok_s", Json::num(self.throughput_tok_s())),
+            ("ttft_ms_p50", Json::num(nan0(self.ttft_ms.p50()))),
+            ("ttft_ms_p95", Json::num(nan0(self.ttft_ms.p95()))),
+            ("total_ms_p50", Json::num(nan0(self.total_ms.p50()))),
+            ("total_ms_p95", Json::num(nan0(self.total_ms.p95()))),
+            ("per_token_ms_p50", Json::num(nan0(self.per_token_ms.p50()))),
+            ("round_ms_mean", Json::num(nan0(self.round_ms.mean()))),
+            ("kv_bytes_current", Json::num(self.kv_bytes_current as f64)),
+            ("kv_bytes_peak", Json::num(self.kv_bytes_peak as f64)),
+        ])
+    }
+}
+
+fn nan0(x: f64) -> f64 {
+    if x.is_finite() { x } else { 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_valid_json() {
+        let mut m = EngineMetrics::default();
+        m.tokens_generated = 10;
+        m.ttft_ms.add(12.5);
+        m.observe_kv(1000);
+        m.observe_kv(500);
+        let j = m.snapshot();
+        assert_eq!(j.get("kv_bytes_peak").as_usize(), Some(1000));
+        assert_eq!(j.get("kv_bytes_current").as_usize(), Some(500));
+        // round-trips through the serializer
+        let txt = j.to_string();
+        assert!(Json::parse(&txt).is_ok());
+    }
+}

@@ -1,0 +1,19 @@
+//! The serving coordinator (Layer 3 proper): request types, admission
+//! queue, continuous batcher/scheduler, KV slot manager, metrics, and the
+//! engine event loop that owns the PJRT runtime.
+//!
+//! Threading model: PJRT handles are not `Send`, so a single **engine
+//! thread** owns the [`crate::runtime::Runtime`] and all model state;
+//! clients talk to it through an mpsc channel via [`engine::EngineHandle`]
+//! (which is `Send + Clone` and what the HTTP frontend holds). This mirrors
+//! the single-GPU worker loop of vLLM-style routers: admission →
+//! prefill → batched decode rounds → completion.
+
+pub mod engine;
+pub mod kv_manager;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+
+pub use engine::{Engine, EngineConfig, EngineHandle};
+pub use request::{Request, RequestMetrics, Response};

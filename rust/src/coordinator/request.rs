@@ -1,0 +1,108 @@
+//! Request/response types crossing the client ↔ engine boundary.
+
+use crate::model::sampler::SamplingParams;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Client-supplied id (echoed back; the engine also assigns lane ids).
+    pub id: u64,
+    /// Prompt tokens. May be empty — the engine prepends BOS regardless.
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    /// Stop generation when this token is produced (None = run to budget).
+    pub stop_token: Option<i32>,
+}
+
+impl Request {
+    pub fn greedy(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            sampling: SamplingParams::greedy(),
+            stop_token: None,
+        }
+    }
+}
+
+/// Per-request timing and accounting, filled by the engine.
+#[derive(Debug, Clone, Default)]
+pub struct RequestMetrics {
+    /// Queue wait before prefill started.
+    pub queue_ms: f64,
+    /// Time to first token (prefill + first decode sample).
+    pub ttft_ms: f64,
+    /// Total latency from submission to completion.
+    pub total_ms: f64,
+    pub n_prompt: usize,
+    pub n_generated: usize,
+    /// Periodic context synchronizations performed for this sequence
+    /// (TConst/TLin; the paper's cache-miss events).
+    pub syncs: u64,
+    /// Peak KV-cache bytes held by this sequence.
+    pub peak_kv_bytes: u64,
+}
+
+impl RequestMetrics {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_ms <= 0.0 {
+            0.0
+        } else {
+            self.n_generated as f64 / (self.total_ms / 1000.0)
+        }
+    }
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub finish_reason: FinishReason,
+    pub metrics: RequestMetrics,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit max_new_tokens.
+    Length,
+    /// Produced the stop token.
+    Stop,
+    /// Engine shutting down / error.
+    Aborted,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Aborted => "aborted",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_per_s() {
+        let m = RequestMetrics {
+            total_ms: 500.0,
+            n_generated: 50,
+            ..Default::default()
+        };
+        assert!((m.tokens_per_s() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn greedy_ctor() {
+        let r = Request::greedy(7, vec![1, 2], 16);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.sampling.temperature, 0.0);
+        assert!(r.stop_token.is_none());
+    }
+}

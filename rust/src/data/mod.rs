@@ -1,0 +1,6 @@
+//! Data substrates: byte-level tokenizer, synthetic training corpus, and
+//! the serving workload generator.
+
+pub mod corpus;
+pub mod tokenizer;
+pub mod workload;

@@ -1,0 +1,85 @@
+//! Byte-level tokenizer (vocab = 256).
+//!
+//! Token id == byte value; id 0 (NUL, which never appears in text) doubles
+//! as BOS/EOS/pad. This matches the `vocab: 256` the artifact graphs were
+//! lowered with, keeps the LM head tiny, and needs no vocabulary file —
+//! the right trade-off for a reproduction whose claims are about
+//! asymptotics, not token quality (DESIGN.md §3).
+
+/// Reserved control byte: BOS when prepended, EOS when emitted, pad inside
+/// fixed-shape buffers.
+pub const BOS: i32 = 0;
+pub const EOS: i32 = 0;
+
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+
+    /// Encode text to token ids (raw UTF-8 bytes).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    /// Encode with a leading BOS (what the engine feeds prefill).
+    pub fn encode_with_bos(&self, text: &str) -> Vec<i32> {
+        let mut v = Vec::with_capacity(text.len() + 1);
+        v.push(BOS);
+        v.extend(text.bytes().map(|b| b as i32));
+        v
+    }
+
+    /// Decode token ids back to text. Control bytes (0) are dropped;
+    /// invalid UTF-8 is replaced.
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| t > 0 && t < 256)
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tk = ByteTokenizer;
+        let s = "hello, TConstFormer!";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let tk = ByteTokenizer;
+        let s = "héllo 😀";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn bos_prepended() {
+        let tk = ByteTokenizer;
+        let v = tk.encode_with_bos("a");
+        assert_eq!(v, vec![0, 97]);
+    }
+
+    #[test]
+    fn decode_strips_control() {
+        let tk = ByteTokenizer;
+        assert_eq!(tk.decode(&[0, 104, 0, 105]), "hi");
+    }
+
+    #[test]
+    fn all_tokens_in_vocab() {
+        let tk = ByteTokenizer;
+        for t in tk.encode("any text at all \u{00ff}") {
+            assert!((0..256).contains(&t));
+        }
+    }
+}

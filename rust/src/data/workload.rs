@@ -1,0 +1,113 @@
+//! Serving workload generator: Poisson arrivals with configurable prompt /
+//! output length distributions — the request streams behind the Fig. 8
+//! end-to-end comparisons and the `serve_stream` example.
+
+use crate::util::rng::Rng;
+
+/// One synthetic request to be issued `at_ms` after workload start.
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    pub id: u64,
+    pub at_ms: f64,
+    pub prompt_tokens: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Workload shape parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub seed: u64,
+    pub n_requests: usize,
+    /// Mean arrival rate (requests/second); 0 = all at t=0 (closed loop).
+    pub rate_per_s: f64,
+    pub prompt_len_min: usize,
+    pub prompt_len_max: usize,
+    pub new_tokens_min: usize,
+    pub new_tokens_max: usize,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            seed: 99,
+            n_requests: 32,
+            rate_per_s: 4.0,
+            prompt_len_min: 16,
+            prompt_len_max: 128,
+            new_tokens_min: 16,
+            new_tokens_max: 64,
+        }
+    }
+}
+
+/// Generate the request schedule. Prompts are drawn from `corpus` at random
+/// offsets (falling back to synthetic bytes if the corpus is too small).
+pub fn generate(spec: &WorkloadSpec, corpus: &[i32]) -> Vec<WorkItem> {
+    let mut rng = Rng::new(spec.seed);
+    let mut at = 0.0f64;
+    let mut out = Vec::with_capacity(spec.n_requests);
+    for id in 0..spec.n_requests {
+        if spec.rate_per_s > 0.0 {
+            at += rng.exp(spec.rate_per_s) * 1000.0;
+        }
+        let plen = rng.usize(spec.prompt_len_min, spec.prompt_len_max + 1);
+        let prompt = if corpus.len() > plen + 1 {
+            let start = rng.usize(0, corpus.len() - plen);
+            corpus[start..start + plen].to_vec()
+        } else {
+            (0..plen).map(|_| rng.range(1, 256) as i32).collect()
+        };
+        out.push(WorkItem {
+            id: id as u64,
+            at_ms: at,
+            prompt_tokens: prompt,
+            max_new_tokens: rng.usize(spec.new_tokens_min, spec.new_tokens_max + 1),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_bounds_and_count() {
+        let spec = WorkloadSpec { n_requests: 50, ..Default::default() };
+        let corpus: Vec<i32> = (0..10_000).map(|i| 1 + (i % 255) as i32).collect();
+        let w = generate(&spec, &corpus);
+        assert_eq!(w.len(), 50);
+        for item in &w {
+            assert!(item.prompt_tokens.len() >= spec.prompt_len_min);
+            assert!(item.prompt_tokens.len() <= spec.prompt_len_max);
+            assert!(item.max_new_tokens >= spec.new_tokens_min);
+            assert!(item.max_new_tokens <= spec.new_tokens_max);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let spec = WorkloadSpec::default();
+        let w = generate(&spec, &[]);
+        for pair in w.windows(2) {
+            assert!(pair[0].at_ms <= pair[1].at_ms);
+        }
+    }
+
+    #[test]
+    fn closed_loop_all_at_zero() {
+        let spec = WorkloadSpec { rate_per_s: 0.0, ..Default::default() };
+        let w = generate(&spec, &[]);
+        assert!(w.iter().all(|i| i.at_ms == 0.0));
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = WorkloadSpec::default();
+        let a = generate(&spec, &[]);
+        let b = generate(&spec, &[]);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[0].prompt_tokens, b[0].prompt_tokens);
+        assert_eq!(a.last().unwrap().at_ms, b.last().unwrap().at_ms);
+    }
+}

@@ -1,0 +1,40 @@
+//! # TConstFormer serving stack (Layer 3)
+//!
+//! Rust reproduction of *"From TLinFormer to TConstFormer: The Leap to
+//! Constant-Time Transformer Attention"* (Tang, 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 1/2 (build time)** — Pallas attention kernels and JAX model
+//!   graphs live under `python/compile/` and are AOT-lowered to HLO text in
+//!   `artifacts/` by `make artifacts`.
+//! * **Layer 3 (this crate)** — loads the artifacts through PJRT
+//!   ([`runtime`]), drives the three architectures' cache schedules
+//!   ([`model`]), and serves them behind a continuous-batching coordinator
+//!   ([`coordinator`]) with an HTTP frontend ([`server`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `repro` binary is self-contained.
+//!
+//! The paper's headline claims map to code as follows:
+//!
+//! | Claim | Where |
+//! |---|---|
+//! | O(1) KV cache (Eq. 7) | [`model::state::TConstState`] + [`analytic::memory`] |
+//! | O(1) cache-hit step (Eq. 5) | [`model::tconstformer`] decode path |
+//! | periodic sync (the paper's k) | [`coordinator::scheduler`] |
+//! | linear/quadratic baselines | [`model::baseline`], [`model::tlinformer`] |
+//! | Fig. 8 / Table 1 harnesses | `benches/`, `examples/sweep_inference.rs` |
+
+pub mod analytic;
+#[path = "bench/mod.rs"]
+pub mod bench_support;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod trainer;
+pub mod util;
+
+/// Convenience result type used across the crate.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,232 @@
+//! `repro` — the TConstFormer serving/training CLI.
+//!
+//! Subcommands:
+//!   serve   boot the engine + HTTP server
+//!   gen     one-shot generation from a prompt
+//!   train   train a model on the synthetic corpus (tiny preset)
+//!   sweep   regenerate the paper's Fig. 8 panels as CSV/markdown
+//!   info    print manifest / configs / artifact inventory
+
+use anyhow::{bail, Result};
+use tconstformer::coordinator::{Engine, EngineConfig, Request};
+use tconstformer::data::corpus::{self, CorpusSpec};
+use tconstformer::data::tokenizer::ByteTokenizer;
+use tconstformer::model::{Arch, SyncMode};
+use tconstformer::runtime::Runtime;
+use tconstformer::server::{self, ServerConfig};
+use tconstformer::trainer::{TrainConfig, Trainer};
+use tconstformer::util::cli::Command;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(sub) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match sub.as_str() {
+        "serve" => cmd_serve(rest),
+        "gen" => cmd_gen(rest),
+        "train" => cmd_train(rest),
+        "sweep" => cmd_sweep(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}; try `repro help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — TConstFormer reproduction (rust + JAX + Pallas)\n\n\
+         usage: repro <subcommand> [options]\n\n\
+         subcommands:\n  \
+         serve   boot the engine + HTTP server (/generate, /metrics)\n  \
+         gen     one-shot generation from a prompt\n  \
+         train   train on the synthetic corpus (tiny preset)\n  \
+         sweep   regenerate Fig. 8 panels (see also cargo bench)\n  \
+         info    print manifest inventory\n\n\
+         run any subcommand with --help for options"
+    );
+}
+
+fn engine_cfg_from(args: &tconstformer::util::cli::Args) -> Result<EngineConfig> {
+    Ok(EngineConfig {
+        artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+        preset: args.get_or("preset", "small").to_string(),
+        arch: Arch::parse(args.get_or("arch", "tconst"))?,
+        sync_mode: match args.get_or("sync-mode", "incremental") {
+            "incremental" | "inc" => SyncMode::Incremental,
+            "full" => SyncMode::Full,
+            m => bail!("bad --sync-mode {m:?}"),
+        },
+        max_lanes: args.get_usize("max-lanes", 4)?,
+        sched: Default::default(),
+        checkpoint: args.get("checkpoint").map(str::to_string),
+    })
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "boot the engine + HTTP server")
+        .opt_default("artifacts", "artifact directory", "artifacts")
+        .opt_default("preset", "model preset (tiny|small)", "small")
+        .opt_default("arch", "architecture (base|tlin|tconst)", "tconst")
+        .opt_default("sync-mode", "tconst sync mode (incremental|full)", "incremental")
+        .opt_default("max-lanes", "max concurrent sequences", "4")
+        .opt_default("addr", "listen address", "127.0.0.1:8077")
+        .opt("checkpoint", "trained checkpoint stem to load");
+    let args = cmd.parse(rest)?;
+    let cfg = engine_cfg_from(&args)?;
+    println!(
+        "[serve] preset={} arch={} sync={:?}",
+        cfg.preset,
+        cfg.arch.as_str(),
+        cfg.sync_mode
+    );
+    let handle = Engine::spawn(cfg)?;
+    server::serve(
+        &ServerConfig { addr: args.get_or("addr", "127.0.0.1:8077").to_string() },
+        handle,
+        None,
+    )
+}
+
+fn cmd_gen(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("gen", "one-shot generation")
+        .opt_default("artifacts", "artifact directory", "artifacts")
+        .opt_default("preset", "model preset", "small")
+        .opt_default("arch", "architecture", "tconst")
+        .opt_default("sync-mode", "tconst sync mode", "incremental")
+        .opt_default("max-lanes", "max concurrent sequences", "4")
+        .opt_default("prompt", "prompt text", "the transformer architecture")
+        .opt_default("max-new-tokens", "tokens to generate", "64")
+        .opt_default("temperature", "sampling temperature (0=greedy)", "0")
+        .opt("checkpoint", "trained checkpoint stem to load");
+    let args = cmd.parse(rest)?;
+    let cfg = engine_cfg_from(&args)?;
+    let mut engine = Engine::new(&cfg)?;
+    let tk = ByteTokenizer;
+    let mut req = Request::greedy(
+        1,
+        tk.encode(args.get_or("prompt", "")),
+        args.get_usize("max-new-tokens", 64)?,
+    );
+    req.sampling.temperature = args.get_f64("temperature", 0.0)? as f32;
+    let responses = engine.run_workload(vec![req])?;
+    let r = &responses[0];
+    println!("--- generation ({} tokens) ---", r.tokens.len());
+    println!("{}", tk.decode(&r.tokens));
+    println!(
+        "--- ttft {:.1} ms | total {:.1} ms | {:.1} tok/s | syncs {} | peak KV {} B ---",
+        r.metrics.ttft_ms,
+        r.metrics.total_ms,
+        r.metrics.tokens_per_s(),
+        r.metrics.syncs,
+        r.metrics.peak_kv_bytes
+    );
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "train on the synthetic corpus")
+        .opt_default("artifacts", "artifact directory", "artifacts")
+        .opt_default("preset", "model preset (train graphs: tiny)", "tiny")
+        .opt_default("arch", "architecture", "tconst")
+        .opt_default("steps", "optimizer steps", "200")
+        .opt_default("lr", "peak learning rate", "0.003")
+        .opt_default("corpus-tokens", "synthetic corpus size", "262144")
+        .opt_default("eval-every", "steps between evals", "50")
+        .opt("save", "checkpoint stem to write at the end");
+    let args = cmd.parse(rest)?;
+    let mut rt = Runtime::load(args.get_or("artifacts", "artifacts"))?;
+    let tc = TrainConfig {
+        preset: args.get_or("preset", "tiny").to_string(),
+        arch: args.get_or("arch", "tconst").to_string(),
+        steps: args.get_usize("steps", 200)?,
+        lr: args.get_f64("lr", 3e-3)? as f32,
+        eval_every: args.get_usize("eval-every", 50)?,
+        ..Default::default()
+    };
+    let corp = corpus::generate(&CorpusSpec {
+        total_tokens: args.get_usize("corpus-tokens", 1 << 18)?,
+        ..Default::default()
+    });
+    println!(
+        "[train] corpus: {} train / {} valid tokens",
+        corp.train.len(),
+        corp.valid.len()
+    );
+    let mut trainer = Trainer::new(&mut rt, tc)?;
+    let log = trainer.run(&mut rt, &corp)?;
+    if let Some(stem) = args.get("save") {
+        trainer.save_checkpoint(&rt, stem)?;
+        println!("[train] checkpoint saved to {stem}.bin/.json");
+    }
+    if let Some(last) = log.last() {
+        println!(
+            "[train] final: step {} loss {:.4} (ppl {:.1})",
+            last.step,
+            last.train_loss,
+            last.train_loss.exp()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("sweep", "regenerate Fig. 8 panels")
+        .opt_default("artifacts", "artifact directory", "artifacts")
+        .opt_default("preset", "model preset", "small")
+        .opt_default("max-n", "largest measured history length", "2048")
+        .opt_default("out", "results directory", "results")
+        .flag("quick", "fewer points / faster timing");
+    let args = cmd.parse(rest)?;
+    // The sweep logic lives in the library so benches reuse it.
+    tconstformer::bench_support::run_fig8_sweep(
+        args.get_or("artifacts", "artifacts"),
+        args.get_or("preset", "small"),
+        args.get_usize("max-n", 2048)?,
+        args.flag("quick"),
+        args.get_or("out", "results"),
+    )
+}
+
+fn cmd_info(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("info", "print manifest inventory")
+        .opt_default("artifacts", "artifact directory", "artifacts");
+    let args = cmd.parse(rest)?;
+    let m = tconstformer::runtime::Manifest::load(args.get_or("artifacts", "artifacts"))?;
+    m.validate()?;
+    println!("presets:");
+    for (name, cfg) in &m.configs {
+        println!(
+            "  {name}: d={} heads={} depth={} W_oh={} W_og={} blocks={} H={}",
+            cfg.d_model, cfg.n_head, cfg.n_layer, cfg.w_oh, cfg.w_og, cfg.n_block, cfg.h_inner
+        );
+        println!("    buckets: {:?}", m.buckets(name));
+    }
+    println!("graphs ({}):", m.graphs.len());
+    for (name, g) in &m.graphs {
+        println!(
+            "  {name}: kind={} args={} results={}",
+            g.kind,
+            g.args.len(),
+            g.results.len()
+        );
+    }
+    println!("golden vectors: {}", m.golden.len());
+    Ok(())
+}

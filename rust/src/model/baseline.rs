@@ -1,0 +1,155 @@
+//! Standard decoder-only baseline driver (`Base XXX`): the O(N) KV cache
+//! the paper's Fig. 8(a/d/g) characterizes. Serving uses bucketed
+//! pre-allocated slabs (DESIGN.md D4) that migrate to the next bucket when
+//! full — per-token cost and cache bytes both grow with the bucket.
+
+use anyhow::{bail, Context, Result};
+
+use super::batch::{concat_axis, grow_axis, split_axis};
+use super::state::{BaseState, SeqState};
+use super::tconstformer::logits_row;
+use super::ModelDriver;
+use crate::runtime::{HostTensor, Runtime};
+
+/// Absorb a prompt through the bucketed prefill graph.
+pub fn prefill(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    s: &mut BaseState,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    if tokens.is_empty() {
+        bail!("empty prompt (the engine prepends a BOS byte)");
+    }
+    let bucket = rt
+        .manifest
+        .bucket_for(&drv.preset, tokens.len())
+        .with_context(|| {
+            format!("prompt of {} exceeds the largest baseline bucket", tokens.len())
+        })?;
+    let mut padded = vec![0i32; bucket];
+    padded[..tokens.len()].copy_from_slice(tokens);
+    let name = rt.manifest.name_base_prefill(&drv.preset, bucket);
+    let a_toks = HostTensor::from_i32(&[1, bucket], padded)?;
+    let a_len = HostTensor::scalar_i32(tokens.len() as i32);
+    let out = rt.execute(&name, &[&a_toks, &a_len])?;
+    let logits = logits_row(&out[0], 0, drv.cfg.vocab)?;
+    s.cache_k = Some(out[1].clone());
+    s.cache_v = Some(out[2].clone());
+    s.bucket = bucket;
+    s.pos = tokens.len();
+    Ok(logits)
+}
+
+/// Grow a lane's cache slabs to the next bucket when the current one is
+/// exhausted (axis 2 of (n_layer, 1, L, D)).
+fn ensure_capacity(drv: &ModelDriver, rt: &Runtime, s: &mut BaseState) -> Result<()> {
+    if s.pos < s.bucket && s.cache_k.is_some() {
+        return Ok(());
+    }
+    let bucket = rt
+        .manifest
+        .bucket_for(&drv.preset, s.pos + 1)
+        .with_context(|| format!("sequence of {} exceeds the largest bucket", s.pos + 1))?;
+    match (&s.cache_k, &s.cache_v) {
+        (Some(k), Some(v)) => {
+            s.cache_k = Some(grow_axis(k, 2, bucket)?);
+            s.cache_v = Some(grow_axis(v, 2, bucket)?);
+        }
+        _ => {
+            let (nl, d) = (drv.cfg.n_layer, drv.cfg.d_model);
+            s.cache_k = Some(HostTensor::zeros_f32(&[nl, 1, bucket, d]));
+            s.cache_v = Some(HostTensor::zeros_f32(&[nl, 1, bucket, d]));
+        }
+    }
+    s.bucket = bucket;
+    Ok(())
+}
+
+pub fn decode_batch(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    lanes: &mut [&mut SeqState],
+    tokens: &[i32],
+) -> Result<Vec<Vec<f32>>> {
+    if lanes.len() != tokens.len() || lanes.is_empty() {
+        bail!("decode_batch: {} lanes vs {} tokens", lanes.len(), tokens.len());
+    }
+    for lane in lanes.iter_mut() {
+        let s = match lane {
+            SeqState::Base(s) => s,
+            _ => bail!("non-base lane"),
+        };
+        ensure_capacity(drv, rt, s)?;
+    }
+    let max_bucket = lanes
+        .iter()
+        .map(|l| match &**l {
+            SeqState::Base(s) => s.bucket,
+            _ => unreachable!(),
+        })
+        .max()
+        .unwrap();
+    for lane in lanes.iter_mut() {
+        let s = match lane {
+            SeqState::Base(s) => s,
+            _ => unreachable!(),
+        };
+        if s.bucket < max_bucket {
+            s.cache_k = Some(grow_axis(s.cache_k.as_ref().unwrap(), 2, max_bucket)?);
+            s.cache_v = Some(grow_axis(s.cache_v.as_ref().unwrap(), 2, max_bucket)?);
+            s.bucket = max_bucket;
+        }
+    }
+
+    let n = lanes.len();
+    let bucket_b = rt
+        .manifest
+        .batch_bucket_for(n)
+        .with_context(|| format!("no batch bucket for {n} lanes"))?;
+    let states: Vec<&BaseState> = lanes
+        .iter()
+        .map(|l| match &**l {
+            SeqState::Base(s) => s,
+            _ => unreachable!(),
+        })
+        .collect();
+
+    let (nl, d) = (drv.cfg.n_layer, drv.cfg.d_model);
+    let dummy_k = HostTensor::zeros_f32(&[nl, 1, max_bucket, d]);
+    let mut ks: Vec<&HostTensor> = states.iter().map(|s| s.cache_k.as_ref().unwrap()).collect();
+    let mut vs: Vec<&HostTensor> = states.iter().map(|s| s.cache_v.as_ref().unwrap()).collect();
+    while ks.len() < bucket_b {
+        ks.push(&dummy_k);
+        vs.push(&dummy_k);
+    }
+
+    let mut tok = vec![0i32; bucket_b];
+    tok[..n].copy_from_slice(tokens);
+    let mut pos = vec![0i32; bucket_b];
+    for (i, s) in states.iter().enumerate() {
+        pos[i] = s.pos as i32;
+    }
+
+    let name = rt.manifest.name_base_decode(&drv.preset, max_bucket, bucket_b);
+    let a_tok = HostTensor::from_i32(&[bucket_b], tok)?;
+    let a_pos = HostTensor::from_i32(&[bucket_b], pos)?;
+    let a_k = concat_axis(&ks, 1)?;
+    let a_v = concat_axis(&vs, 1)?;
+    let out = rt.execute(&name, &[&a_tok, &a_pos, &a_k, &a_v])?;
+
+    let mut k_parts = split_axis(&out[1], 1, bucket_b)?.into_iter();
+    let mut v_parts = split_axis(&out[2], 1, bucket_b)?.into_iter();
+    let mut logits = Vec::with_capacity(n);
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        let s = match lane {
+            SeqState::Base(s) => s,
+            _ => unreachable!(),
+        };
+        s.cache_k = Some(k_parts.next().unwrap());
+        s.cache_v = Some(v_parts.next().unwrap());
+        s.pos += 1;
+        logits.push(logits_row(&out[0], i, drv.cfg.vocab)?);
+    }
+    Ok(logits)
+}

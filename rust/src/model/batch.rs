@@ -1,0 +1,254 @@
+//! Tensor concatenation / splitting / in-place insertion along an axis —
+//! the host-side plumbing for batching per-lane states into the static
+//! batch-bucket shapes the decode graphs expect, and back.
+//!
+//! All operations are f32/i32-agnostic straight memcpys organized by
+//! (outer, axis, inner) strides.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::HostTensor;
+
+fn strides(shape: &[usize], axis: usize) -> (usize, usize, usize) {
+    let outer: usize = shape[..axis].iter().product();
+    let ax = shape[axis];
+    let inner: usize = shape[axis + 1..].iter().product();
+    (outer, ax, inner)
+}
+
+/// Concatenate tensors along `axis`. All other dims must match.
+pub fn concat_axis(tensors: &[&HostTensor], axis: usize) -> Result<HostTensor> {
+    if tensors.is_empty() {
+        bail!("concat of zero tensors");
+    }
+    let first = tensors[0];
+    let rank = first.shape().len();
+    if axis >= rank {
+        bail!("axis {axis} out of range for rank {rank}");
+    }
+    let mut out_shape = first.shape().to_vec();
+    out_shape[axis] = tensors.iter().map(|t| t.shape()[axis]).sum();
+    for t in tensors {
+        if t.shape().len() != rank
+            || t.shape()[..axis] != first.shape()[..axis]
+            || t.shape()[axis + 1..] != first.shape()[axis + 1..]
+        {
+            bail!("concat shape mismatch: {:?} vs {:?}", t.shape(), first.shape());
+        }
+        if t.dtype_str() != first.dtype_str() {
+            bail!("concat dtype mismatch");
+        }
+    }
+    let (outer, _, inner) = strides(&out_shape, axis);
+    match first {
+        HostTensor::F32 { .. } => {
+            let mut data = vec![0f32; out_shape.iter().product()];
+            let out_ax = out_shape[axis];
+            let mut off = 0usize;
+            for t in tensors {
+                let src = t.as_f32()?;
+                let t_ax = t.shape()[axis];
+                for o in 0..outer {
+                    let dst_start = (o * out_ax + off) * inner;
+                    let src_start = o * t_ax * inner;
+                    data[dst_start..dst_start + t_ax * inner]
+                        .copy_from_slice(&src[src_start..src_start + t_ax * inner]);
+                }
+                off += t_ax;
+            }
+            HostTensor::from_f32(&out_shape, data)
+        }
+        HostTensor::I32 { .. } => {
+            let mut data = vec![0i32; out_shape.iter().product()];
+            let out_ax = out_shape[axis];
+            let mut off = 0usize;
+            for t in tensors {
+                let src = t.as_i32()?;
+                let t_ax = t.shape()[axis];
+                for o in 0..outer {
+                    let dst_start = (o * out_ax + off) * inner;
+                    let src_start = o * t_ax * inner;
+                    data[dst_start..dst_start + t_ax * inner]
+                        .copy_from_slice(&src[src_start..src_start + t_ax * inner]);
+                }
+                off += t_ax;
+            }
+            HostTensor::from_i32(&out_shape, data)
+        }
+    }
+}
+
+/// Split a tensor into `parts` equal chunks along `axis` (inverse of
+/// [`concat_axis`] for equal sizes).
+pub fn split_axis(t: &HostTensor, axis: usize, parts: usize) -> Result<Vec<HostTensor>> {
+    let shape = t.shape().to_vec();
+    if axis >= shape.len() || parts == 0 || shape[axis] % parts != 0 {
+        bail!("cannot split shape {:?} axis {axis} into {parts}", shape);
+    }
+    let chunk_ax = shape[axis] / parts;
+    let (outer, ax, inner) = strides(&shape, axis);
+    let mut out_shape = shape.clone();
+    out_shape[axis] = chunk_ax;
+    let mut out = Vec::with_capacity(parts);
+    for p in 0..parts {
+        match t {
+            HostTensor::F32 { data, .. } => {
+                let mut d = vec![0f32; out_shape.iter().product()];
+                for o in 0..outer {
+                    let src_start = (o * ax + p * chunk_ax) * inner;
+                    let dst_start = o * chunk_ax * inner;
+                    d[dst_start..dst_start + chunk_ax * inner]
+                        .copy_from_slice(&data[src_start..src_start + chunk_ax * inner]);
+                }
+                out.push(HostTensor::from_f32(&out_shape, d)?);
+            }
+            HostTensor::I32 { data, .. } => {
+                let mut d = vec![0i32; out_shape.iter().product()];
+                for o in 0..outer {
+                    let src_start = (o * ax + p * chunk_ax) * inner;
+                    let dst_start = o * chunk_ax * inner;
+                    d[dst_start..dst_start + chunk_ax * inner]
+                        .copy_from_slice(&data[src_start..src_start + chunk_ax * inner]);
+                }
+                out.push(HostTensor::from_i32(&out_shape, d)?);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Copy `src` into `dst` at `offset` along `axis`. `src` must match `dst`
+/// on all other dims, and fit: `offset + src[axis] <= dst[axis]`.
+/// Used to append a window's raw-history K/V and to migrate a cache into a
+/// bigger bucket.
+pub fn insert_axis(
+    dst: &mut HostTensor,
+    src: &HostTensor,
+    axis: usize,
+    offset: usize,
+) -> Result<()> {
+    let dshape = dst.shape().to_vec();
+    let sshape = src.shape().to_vec();
+    if dshape.len() != sshape.len()
+        || dshape[..axis] != sshape[..axis]
+        || dshape[axis + 1..] != sshape[axis + 1..]
+    {
+        bail!("insert shape mismatch {:?} into {:?}", sshape, dshape);
+    }
+    if offset + sshape[axis] > dshape[axis] {
+        bail!(
+            "insert overflow: offset {offset} + {} > {}",
+            sshape[axis],
+            dshape[axis]
+        );
+    }
+    let (outer, dax, inner) = strides(&dshape, axis);
+    let sax = sshape[axis];
+    match (dst, src) {
+        (HostTensor::F32 { data: d, .. }, HostTensor::F32 { data: s, .. }) => {
+            for o in 0..outer {
+                let dst_start = (o * dax + offset) * inner;
+                let src_start = o * sax * inner;
+                d[dst_start..dst_start + sax * inner]
+                    .copy_from_slice(&s[src_start..src_start + sax * inner]);
+            }
+        }
+        (HostTensor::I32 { data: d, .. }, HostTensor::I32 { data: s, .. }) => {
+            for o in 0..outer {
+                let dst_start = (o * dax + offset) * inner;
+                let src_start = o * sax * inner;
+                d[dst_start..dst_start + sax * inner]
+                    .copy_from_slice(&s[src_start..src_start + sax * inner]);
+            }
+        }
+        _ => bail!("insert dtype mismatch"),
+    }
+    Ok(())
+}
+
+/// Zero-filled tensor shaped like `t` but with `axis` resized to `new_len`,
+/// with the prefix copied — bucket migration for growing caches.
+pub fn grow_axis(t: &HostTensor, axis: usize, new_len: usize) -> Result<HostTensor> {
+    let mut shape = t.shape().to_vec();
+    let old_len = shape[axis];
+    if new_len < old_len {
+        bail!("grow_axis: {new_len} < {old_len}");
+    }
+    shape[axis] = new_len;
+    let mut out = match t {
+        HostTensor::F32 { .. } => HostTensor::zeros_f32(&shape),
+        HostTensor::I32 { .. } => HostTensor::zeros_i32(&shape),
+    };
+    insert_axis(&mut out, t, axis, 0)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], start: f32) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor::from_f32(shape, (0..n).map(|i| start + i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn concat_then_split_roundtrip() {
+        let a = t(&[2, 1, 3], 0.0);
+        let b = t(&[2, 1, 3], 100.0);
+        let c = concat_axis(&[&a, &b], 1).unwrap();
+        assert_eq!(c.shape(), &[2, 2, 3]);
+        let parts = split_axis(&c, 1, 2).unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn concat_axis0_is_append() {
+        let a = t(&[2, 3], 0.0);
+        let b = t(&[1, 3], 50.0);
+        let c = concat_axis(&[&a, &b], 0).unwrap();
+        assert_eq!(c.as_f32().unwrap()[6..9], [50.0, 51.0, 52.0]);
+    }
+
+    #[test]
+    fn concat_interleaves_middle_axis_correctly() {
+        // shape (2, 1, 2): values laid out [o0: a0 a1][o1: a2 a3]
+        let a = t(&[2, 1, 2], 0.0); // [[0,1]],[[2,3]]
+        let b = t(&[2, 1, 2], 10.0); // [[10,11]],[[12,13]]
+        let c = concat_axis(&[&a, &b], 1).unwrap();
+        assert_eq!(c.as_f32().unwrap(), &[0.0, 1.0, 10.0, 11.0, 2.0, 3.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn insert_at_offset() {
+        let mut dst = HostTensor::zeros_f32(&[2, 4, 2]);
+        let src = t(&[2, 1, 2], 1.0);
+        insert_axis(&mut dst, &src, 1, 2).unwrap();
+        let d = dst.as_f32().unwrap();
+        // outer 0, axis slot 2 -> elements (0*4+2)*2..+2 = 4..6
+        assert_eq!(&d[4..6], &[1.0, 2.0]);
+        // outer 1, axis slot 2 -> (1*4+2)*2 = 12..14
+        assert_eq!(&d[12..14], &[3.0, 4.0]);
+        assert_eq!(d[0], 0.0);
+    }
+
+    #[test]
+    fn grow_preserves_prefix() {
+        let a = t(&[2, 2, 2], 0.0);
+        let g = grow_axis(&a, 1, 4).unwrap();
+        assert_eq!(g.shape(), &[2, 4, 2]);
+        let parts = split_axis(&g, 1, 2).unwrap();
+        assert_eq!(parts[0], a);
+        assert!(parts[1].as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn mismatches_error() {
+        let a = t(&[2, 3], 0.0);
+        let b = t(&[3, 3], 0.0);
+        assert!(concat_axis(&[&a, &b], 1).is_err());
+        let mut dst = HostTensor::zeros_f32(&[2, 2]);
+        assert!(insert_axis(&mut dst, &t(&[2, 3], 0.0), 1, 0).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Architecture drivers: the serving-side state machines for the three
+//! model families, built on the AOT graphs in [`crate::runtime`].
+//!
+//! Each driver owns the *schedule* the paper analyses:
+//! * [`baseline`] — standard decoder: O(N) KV cache in bucketed slabs,
+//!   per-token cost grows with the bucket;
+//! * [`tlinformer`] — constant context state + O(N) raw-history cache;
+//! * [`tconstformer`] — constant state, constant hit step, periodic sync
+//!   every `W_og` tokens (cache miss), in either the incremental (D1) or
+//!   the paper-literal full-recompress mode.
+//!
+//! States are plain host tensors; byte accounting matches
+//! [`crate::analytic::memory`] exactly (asserted in tests).
+
+pub mod baseline;
+pub mod batch;
+pub mod sampler;
+pub mod state;
+pub mod tconstformer;
+pub mod tlinformer;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{ModelConfig, Runtime};
+use state::SeqState;
+
+/// The three architectures under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Base,
+    TLin,
+    TConst,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Result<Arch> {
+        Ok(match s {
+            "base" | "baseline" => Arch::Base,
+            "tlin" | "tlinformer" => Arch::TLin,
+            "tconst" | "tconstformer" => Arch::TConst,
+            _ => bail!("unknown arch {s:?} (expected base|tlin|tconst)"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Arch::Base => "base",
+            Arch::TLin => "tlin",
+            Arch::TConst => "tconst",
+        }
+    }
+}
+
+/// How TConstFormer refreshes its context state when the generation window
+/// fills (DESIGN.md D1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Fold the old summary + the finished window — O(1), canonical.
+    Incremental,
+    /// Recompress the raw token history — O(N), the paper's literal Eq. (1)
+    /// cache-miss cost; kept as an ablation.
+    Full,
+}
+
+/// One architecture bound to a preset: graph-name resolution + the decode /
+/// prefill / sync schedule. Cloneable and cheap; all real state lives in
+/// [`SeqState`] and the [`Runtime`].
+#[derive(Debug, Clone)]
+pub struct ModelDriver {
+    pub preset: String,
+    pub arch: Arch,
+    pub cfg: ModelConfig,
+    pub sync_mode: SyncMode,
+}
+
+impl ModelDriver {
+    pub fn new(rt: &Runtime, preset: &str, arch: Arch) -> Result<Self> {
+        let cfg = rt.manifest.config(preset)?.clone();
+        Ok(ModelDriver {
+            preset: preset.to_string(),
+            arch,
+            cfg,
+            sync_mode: SyncMode::Incremental,
+        })
+    }
+
+    pub fn with_sync_mode(mut self, mode: SyncMode) -> Self {
+        self.sync_mode = mode;
+        self
+    }
+
+    /// Fresh per-sequence state.
+    pub fn new_state(&self) -> SeqState {
+        match self.arch {
+            Arch::Base => SeqState::Base(state::BaseState::new(&self.cfg)),
+            Arch::TLin => SeqState::TLin(state::TLinState::new(&self.cfg)),
+            Arch::TConst => SeqState::TConst(state::TConstState::new(&self.cfg)),
+        }
+    }
+
+    /// Process a whole prompt (the cache-miss path); returns the logits
+    /// predicting the first new token.
+    pub fn prefill(
+        &self,
+        rt: &mut Runtime,
+        st: &mut SeqState,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        match (self.arch, st) {
+            (Arch::Base, SeqState::Base(s)) => baseline::prefill(self, rt, s, tokens),
+            (Arch::TLin, SeqState::TLin(s)) => tlinformer::prefill(self, rt, s, tokens),
+            (Arch::TConst, SeqState::TConst(s)) => {
+                tconstformer::prefill(self, rt, s, tokens)
+            }
+            _ => bail!("state/arch mismatch"),
+        }
+    }
+
+    /// One decode step for a batch of lanes (all same arch; the scheduler
+    /// groups them). `tokens[i]` is the token to feed lane `i`. Any lane
+    /// whose generation window is full is synchronized first (the periodic
+    /// cache miss). Returns one logits vector per lane.
+    pub fn decode_batch(
+        &self,
+        rt: &mut Runtime,
+        lanes: &mut [&mut SeqState],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        match self.arch {
+            Arch::Base => baseline::decode_batch(self, rt, lanes, tokens),
+            Arch::TLin => tlinformer::decode_batch(self, rt, lanes, tokens),
+            Arch::TConst => tconstformer::decode_batch(self, rt, lanes, tokens),
+        }
+    }
+
+    /// Exact KV-cache bytes currently held by a sequence state.
+    pub fn state_bytes(&self, st: &SeqState) -> u64 {
+        st.bytes()
+    }
+}

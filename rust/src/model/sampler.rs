@@ -1,0 +1,122 @@
+//! Token sampling from logits: greedy, temperature, top-k.
+//! Pure host-side math; lives in the coordinator's hot loop.
+
+use crate::util::rng::Rng;
+
+/// Sampling parameters carried by each request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    /// 0 = disabled (full distribution).
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+}
+
+/// Pick the next token. `temperature == 0` means greedy argmax.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> i32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // temperature softmax over (optionally) the top-k slice
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if params.top_k > 0 && params.top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(params.top_k);
+    }
+    let inv_t = 1.0 / params.temperature;
+    let max = idx
+        .iter()
+        .map(|&i| logits[i])
+        .fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - max) * inv_t) as f64).exp())
+        .collect();
+    idx[rng.weighted(&weights)] as i32
+}
+
+/// Greedy argmax with deterministic lowest-index tie-breaking.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// log-softmax probability of `target` under `logits` — used by the
+/// perplexity evaluator.
+pub fn log_prob(logits: &[f32], target: usize) -> f64 {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse: f64 = logits
+        .iter()
+        .map(|&v| ((v - max) as f64).exp())
+        .sum::<f64>()
+        .ln()
+        + max as f64;
+    logits[target] as f64 - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        assert_eq!(sample(&logits, &SamplingParams::greedy(), &mut Rng::new(0)), 1);
+    }
+
+    #[test]
+    fn argmax_ties_break_low() {
+        assert_eq!(argmax(&[1.0, 1.0, 0.0]), 0);
+    }
+
+    #[test]
+    fn temperature_sampling_is_distributional() {
+        let logits = vec![0.0, 3.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 0, seed: 0 };
+        let mut rng = Rng::new(42);
+        let n = 2000;
+        let ones = (0..n)
+            .filter(|_| sample(&logits, &p, &mut rng) == 1)
+            .count();
+        let frac = ones as f64 / n as f64;
+        let expect = (3.0f64).exp() / (1.0 + (3.0f64).exp()); // ≈ 0.953
+        assert!((frac - expect).abs() < 0.03, "frac {frac}");
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = vec![5.0, 4.0, -10.0, -10.0];
+        let p = SamplingParams { temperature: 2.0, top_k: 2, seed: 0 };
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let t = sample(&logits, &p, &mut rng);
+            assert!(t == 0 || t == 1);
+        }
+    }
+
+    #[test]
+    fn log_prob_normalizes() {
+        let logits = vec![1.0, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_prob(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,240 @@
+//! Per-sequence inference state for the three architectures, with exact
+//! byte accounting (pinned to [`crate::analytic::memory`] by tests).
+//!
+//! Shapes follow the artifact graphs (batch dim = 1 inside a lane; the
+//! scheduler concatenates lanes along the batch axis for bucketed decode):
+//!
+//! * TConst: `ctx_k/ctx_v (nb, H+1, 1, W_oh, D)`, `ctx_sum (nb, 1, W_oh, D)`,
+//!   `gen_k/gen_v (nb, H+2, 1, W_og, D)` — all **fixed-size** (Eq. 7).
+//! * TLin: the above + `hist_k/hist_v (nb, 1, L_bucket, D)` growing by
+//!   bucket migration.
+//! * Base: `cache_k/cache_v (n_layer, 1, L_bucket, D)` growing by bucket
+//!   migration (the pre-allocation variant of the paper's §6.4.2 note).
+
+use crate::runtime::{HostTensor, ModelConfig};
+
+/// Dispatchable per-sequence state.
+#[derive(Debug, Clone)]
+pub enum SeqState {
+    Base(BaseState),
+    TLin(TLinState),
+    TConst(TConstState),
+}
+
+impl SeqState {
+    /// Total tokens absorbed so far (prompt + generated).
+    pub fn tokens_seen(&self) -> usize {
+        match self {
+            SeqState::Base(s) => s.pos,
+            SeqState::TLin(s) => s.tokens_seen,
+            SeqState::TConst(s) => s.tokens_seen,
+        }
+    }
+
+    /// Exact KV-cache bytes currently allocated by this sequence.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            SeqState::Base(s) => s.bytes(),
+            SeqState::TLin(s) => s.bytes(),
+            SeqState::TConst(s) => s.bytes(),
+        }
+    }
+
+    pub fn as_tconst(&self) -> Option<&TConstState> {
+        match self {
+            SeqState::TConst(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct BaseState {
+    /// (n_layer, 1, L_bucket, D) projected K/V; None until prefill.
+    pub cache_k: Option<HostTensor>,
+    pub cache_v: Option<HostTensor>,
+    /// Current bucket capacity (0 until allocated).
+    pub bucket: usize,
+    /// Number of valid positions (== total tokens seen).
+    pub pos: usize,
+}
+
+impl BaseState {
+    pub fn new(_cfg: &ModelConfig) -> Self {
+        BaseState { cache_k: None, cache_v: None, bucket: 0, pos: 0 }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.cache_k
+            .as_ref()
+            .map(|t| t.nbytes() as u64)
+            .unwrap_or(0)
+            + self.cache_v.as_ref().map(|t| t.nbytes() as u64).unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TConstFormer
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct TConstState {
+    pub ctx_k: HostTensor,   // (nb, H+1, 1, W_oh, D)
+    pub ctx_v: HostTensor,   // (nb, H+1, 1, W_oh, D)
+    pub ctx_sum: HostTensor, // (nb, 1, W_oh, D)
+    pub ctx_gate: f32,       // 0 until first sync
+    pub gen_k: HostTensor,   // (nb, H+2, 1, W_og, D)
+    pub gen_v: HostTensor,   // (nb, H+2, 1, W_og, D)
+    /// Next free slot in the generation window (== valid window tokens).
+    pub slot: usize,
+    /// Tokens currently in the (unsynced) generation window.
+    pub window_tokens: Vec<i32>,
+    /// Full raw token history — needed only by the paper-literal full-sync
+    /// ablation; token ids are NOT KV cache and excluded from `bytes()`
+    /// (the paper's Fig. 8(g) counts cache tensors only).
+    pub history: Vec<i32>,
+    pub tokens_seen: usize,
+    /// Cache-miss (sync) events so far — the scheduler's cadence counter.
+    pub syncs: u64,
+}
+
+impl TConstState {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let (nb, h1, h2) = (cfg.n_block, cfg.h_inner + 1, cfg.h_inner + 2);
+        let (woh, wog, d) = (cfg.w_oh, cfg.w_og, cfg.d_model);
+        TConstState {
+            ctx_k: HostTensor::zeros_f32(&[nb, h1, 1, woh, d]),
+            ctx_v: HostTensor::zeros_f32(&[nb, h1, 1, woh, d]),
+            ctx_sum: HostTensor::zeros_f32(&[nb, 1, woh, d]),
+            ctx_gate: 0.0,
+            gen_k: HostTensor::zeros_f32(&[nb, h2, 1, wog, d]),
+            gen_v: HostTensor::zeros_f32(&[nb, h2, 1, wog, d]),
+            slot: 0,
+            window_tokens: Vec::with_capacity(wog),
+            history: Vec::new(),
+            tokens_seen: 0,
+            syncs: 0,
+        }
+    }
+
+    /// Constant by construction — this is Eq. (7) in struct form.
+    pub fn bytes(&self) -> u64 {
+        (self.ctx_k.nbytes()
+            + self.ctx_v.nbytes()
+            + self.ctx_sum.nbytes()
+            + self.gen_k.nbytes()
+            + self.gen_v.nbytes()) as u64
+    }
+
+    pub fn window_full(&self, cfg: &ModelConfig) -> bool {
+        self.slot >= cfg.w_og
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TLinFormer
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct TLinState {
+    /// Constant context + window state (identical layout to TConst).
+    pub inner: TConstState,
+    /// (nb, 1, L_bucket, D) raw-history K/V; None until first window.
+    pub hist_k: Option<HostTensor>,
+    pub hist_v: Option<HostTensor>,
+    pub hist_bucket: usize,
+    pub hist_len: usize,
+    pub tokens_seen: usize,
+}
+
+impl TLinState {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        TLinState {
+            inner: TConstState::new(cfg),
+            hist_k: None,
+            hist_v: None,
+            hist_bucket: 0,
+            hist_len: 0,
+            tokens_seen: 0,
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.inner.bytes()
+            + self.hist_k.as_ref().map(|t| t.nbytes() as u64).unwrap_or(0)
+            + self.hist_v.as_ref().map(|t| t.nbytes() as u64).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::memory;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 256,
+            d_model: 64,
+            n_head: 4,
+            n_layer: 4,
+            max_seq: 512,
+            w_oh: 32,
+            w_og: 32,
+            n_block: 1,
+            h_inner: 2,
+            ffn_mult: 4,
+            train_seq: 256,
+            train_batch: 4,
+        }
+    }
+
+    #[test]
+    fn tconst_bytes_match_eq7_model() {
+        let c = cfg();
+        let s = TConstState::new(&c);
+        assert_eq!(s.bytes(), memory::tconst_bytes(&c, 1));
+    }
+
+    #[test]
+    fn tlin_bytes_match_model_after_alloc() {
+        let c = cfg();
+        let mut s = TLinState::new(&c);
+        assert_eq!(s.bytes(), memory::tlin_bytes(&c, 1, 0));
+        let bucket = 128;
+        s.hist_k = Some(HostTensor::zeros_f32(&[c.n_block, 1, bucket, c.d_model]));
+        s.hist_v = Some(HostTensor::zeros_f32(&[c.n_block, 1, bucket, c.d_model]));
+        s.hist_bucket = bucket;
+        assert_eq!(s.bytes(), memory::tlin_bytes(&c, 1, bucket as u64));
+    }
+
+    #[test]
+    fn base_bytes_match_eq6_model_for_bucket() {
+        let c = cfg();
+        let mut s = BaseState::new(&c);
+        assert_eq!(s.bytes(), 0);
+        let bucket = 128;
+        s.cache_k = Some(HostTensor::zeros_f32(&[c.n_layer, 1, bucket, c.d_model]));
+        s.cache_v = Some(HostTensor::zeros_f32(&[c.n_layer, 1, bucket, c.d_model]));
+        s.bucket = bucket;
+        assert_eq!(s.bytes(), memory::base_bytes(&c, 1, bucket as u64));
+    }
+
+    #[test]
+    fn tconst_state_is_constant_under_window_churn() {
+        let c = cfg();
+        let mut s = TConstState::new(&c);
+        let b0 = s.bytes();
+        for i in 0..200 {
+            s.window_tokens.push(i as i32 % 250);
+            s.history.push(i as i32 % 250);
+            s.slot = (s.slot + 1) % c.w_og;
+            s.tokens_seen += 1;
+        }
+        assert_eq!(s.bytes(), b0, "KV bytes must not grow with tokens");
+    }
+}

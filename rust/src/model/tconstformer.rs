@@ -1,0 +1,244 @@
+//! TConstFormer serving driver — the paper's contribution, as a schedule:
+//!
+//! * **prefill**: the prompt is absorbed in `W_og`-sized windows through the
+//!   `tconst_window` graph; after every *full* window the context state is
+//!   synchronized (the periodic cache miss). Prefill therefore costs
+//!   O(N/W_og) constant-size graph calls and the state never grows.
+//! * **decode (cache hit)**: one `tconst_decode` call touching only the
+//!   constant-size state — Eq. (5), O(1) in the sequence length.
+//! * **sync (cache miss)**: when the generation window fills. Incremental
+//!   mode folds `[ctx_sum ‖ window]` (O(1), DESIGN.md D1); Full mode
+//!   recompresses the raw history through `tconst_sync_full_L*` (O(N),
+//!   the paper's literal Eq. (1) cost), as an ablation.
+
+use anyhow::{bail, Context, Result};
+
+use super::batch::{concat_axis, split_axis};
+use super::state::{SeqState, TConstState};
+use super::{ModelDriver, SyncMode};
+use crate::runtime::{HostTensor, Runtime};
+
+/// Extract row `row` of a (.., V)-shaped logits tensor as a Vec.
+pub(crate) fn logits_row(t: &HostTensor, row: usize, vocab: usize) -> Result<Vec<f32>> {
+    let data = t.as_f32()?;
+    let start = row * vocab;
+    if start + vocab > data.len() {
+        bail!("logits row {row} out of range");
+    }
+    Ok(data[start..start + vocab].to_vec())
+}
+
+/// Pad a token chunk to a fixed window as a (1, w) i32 tensor.
+pub(crate) fn window_tokens_tensor(chunk: &[i32], w: usize) -> Result<HostTensor> {
+    let mut data = vec![0i32; w];
+    data[..chunk.len()].copy_from_slice(chunk);
+    HostTensor::from_i32(&[1, w], data)
+}
+
+/// Run one window pass (forward + fold) and return
+/// (logits tensor, gen_k, gen_v, new_ctx_k, new_ctx_v, new_ctx_sum).
+fn run_window(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    s: &TConstState,
+    chunk: &[i32],
+) -> Result<Vec<HostTensor>> {
+    let w = drv.cfg.w_og;
+    assert!(!chunk.is_empty() && chunk.len() <= w);
+    let name = rt.manifest.name_tconst_window(&drv.preset);
+    let toks = window_tokens_tensor(chunk, w)?;
+    let nv = HostTensor::from_i32(&[1], vec![chunk.len() as i32])?;
+    let gate = HostTensor::from_f32(&[1], vec![s.ctx_gate])?;
+    rt.execute(
+        &name,
+        &[&toks, &nv, &s.ctx_k, &s.ctx_v, &s.ctx_sum, &gate],
+    )
+}
+
+/// Synchronize a lane whose generation window is full (cache miss).
+pub fn sync(drv: &ModelDriver, rt: &mut Runtime, s: &mut TConstState) -> Result<()> {
+    let w = drv.cfg.w_og;
+    if s.window_tokens.len() != w {
+        bail!("sync called with {}/{} window tokens", s.window_tokens.len(), w);
+    }
+    match drv.sync_mode {
+        SyncMode::Incremental => {
+            let chunk: Vec<i32> = s.window_tokens.clone();
+            let mut out = run_window(drv, rt, s, &chunk)?;
+            // results: logits, gen_k, gen_v, new_ctx_k, new_ctx_v, new_ctx_sum
+            s.ctx_sum = out.pop().context("ctx_sum")?;
+            s.ctx_v = out.pop().context("ctx_v")?;
+            s.ctx_k = out.pop().context("ctx_k")?;
+        }
+        SyncMode::Full => {
+            sync_full(drv, rt, s)?;
+        }
+    }
+    s.ctx_gate = 1.0;
+    s.slot = 0;
+    s.window_tokens.clear();
+    s.syncs += 1;
+    Ok(())
+}
+
+/// Paper-literal full recompression from the raw token history.
+fn sync_full(drv: &ModelDriver, rt: &mut Runtime, s: &mut TConstState) -> Result<()> {
+    let buckets = rt.manifest.buckets(&drv.preset);
+    let max_bucket = *buckets.last().context("no history buckets")?;
+    // Bounded by the largest exported bucket; beyond it the ablation keeps
+    // the most recent window of raw history (documented in DESIGN.md D4).
+    let hist: Vec<i32> = if s.history.len() > max_bucket {
+        s.history[s.history.len() - max_bucket..].to_vec()
+    } else {
+        s.history.clone()
+    };
+    let bucket = rt
+        .manifest
+        .bucket_for(&drv.preset, hist.len().max(1))
+        .context("no bucket fits history")?;
+    let mut toks = vec![0i32; bucket];
+    toks[..hist.len()].copy_from_slice(&hist);
+    let name = rt.manifest.name_tconst_sync_full(&drv.preset, bucket);
+    let t_toks = HostTensor::from_i32(&[1, bucket], toks)?;
+    let t_len = HostTensor::from_i32(&[1], vec![hist.len() as i32])?;
+    let mut out = rt.execute(&name, &[&t_toks, &t_len])?;
+    s.ctx_sum = out.pop().context("ctx_sum")?;
+    s.ctx_v = out.pop().context("ctx_v")?;
+    s.ctx_k = out.pop().context("ctx_k")?;
+    Ok(())
+}
+
+/// Absorb a prompt; returns the logits predicting the first new token.
+pub fn prefill(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    s: &mut TConstState,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    if tokens.is_empty() {
+        bail!("empty prompt (the engine prepends a BOS byte)");
+    }
+    let w = drv.cfg.w_og;
+    let mut last_logits = Vec::new();
+    for chunk in tokens.chunks(w) {
+        let out = run_window(drv, rt, s, chunk)?;
+        last_logits = logits_row(&out[0], chunk.len() - 1, drv.cfg.vocab)?;
+        s.history.extend_from_slice(chunk);
+        s.tokens_seen += chunk.len();
+        if chunk.len() == w {
+            // Full window: fold it into the context (periodic sync).
+            match drv.sync_mode {
+                SyncMode::Incremental => {
+                    s.ctx_k = out[3].clone();
+                    s.ctx_v = out[4].clone();
+                    s.ctx_sum = out[5].clone();
+                }
+                SyncMode::Full => {
+                    s.window_tokens = chunk.to_vec();
+                    sync_full(drv, rt, s)?;
+                }
+            }
+            s.ctx_gate = 1.0;
+            s.slot = 0;
+            s.window_tokens.clear();
+            s.syncs += 1;
+        } else {
+            // Partial window: keep its KV caches for in-window decode.
+            s.gen_k = out[1].clone();
+            s.gen_v = out[2].clone();
+            s.slot = chunk.len();
+            s.window_tokens = chunk.to_vec();
+        }
+    }
+    Ok(last_logits)
+}
+
+/// One batched cache-hit decode step (syncing any lane whose window is
+/// full first). `lanes` must all be `SeqState::TConst`.
+pub fn decode_batch(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    lanes: &mut [&mut SeqState],
+    tokens: &[i32],
+) -> Result<Vec<Vec<f32>>> {
+    if lanes.len() != tokens.len() || lanes.is_empty() {
+        bail!("decode_batch: {} lanes vs {} tokens", lanes.len(), tokens.len());
+    }
+    // 1. periodic sync for any full window (cache miss, per paper schedule)
+    for lane in lanes.iter_mut() {
+        let s = match lane {
+            SeqState::TConst(s) => s,
+            _ => bail!("non-tconst lane"),
+        };
+        if s.window_full(&drv.cfg) {
+            sync(drv, rt, s)?;
+        }
+    }
+    // 2. pick the batch bucket and assemble lane tensors
+    let n = lanes.len();
+    let bucket = rt
+        .manifest
+        .batch_bucket_for(n)
+        .with_context(|| format!("no batch bucket for {n} lanes"))?;
+    let states: Vec<&TConstState> = lanes
+        .iter()
+        .map(|l| match &**l {
+            SeqState::TConst(s) => s,
+            _ => unreachable!(),
+        })
+        .collect();
+
+    let dummy = TConstState::new(&drv.cfg);
+    let mut all: Vec<&TConstState> = states.clone();
+    while all.len() < bucket {
+        all.push(&dummy);
+    }
+
+    let gather = |f: fn(&TConstState) -> &HostTensor, axis: usize| -> Result<HostTensor> {
+        let ts: Vec<&HostTensor> = all.iter().map(|s| f(s)).collect();
+        concat_axis(&ts, axis)
+    };
+
+    let mut tok = vec![0i32; bucket];
+    tok[..n].copy_from_slice(tokens);
+    let mut slot = vec![0i32; bucket];
+    let mut gate = vec![0f32; bucket];
+    for (i, s) in states.iter().enumerate() {
+        slot[i] = s.slot as i32;
+        gate[i] = s.ctx_gate;
+    }
+
+    let name = rt.manifest.name_tconst_decode(&drv.preset, bucket);
+    let a_tok = HostTensor::from_i32(&[bucket], tok)?;
+    let a_slot = HostTensor::from_i32(&[bucket], slot)?;
+    let a_ctx_k = gather(|s| &s.ctx_k, 2)?;
+    let a_ctx_v = gather(|s| &s.ctx_v, 2)?;
+    let a_ctx_sum = gather(|s| &s.ctx_sum, 1)?;
+    let a_gate = HostTensor::from_f32(&[bucket], gate)?;
+    let a_gen_k = gather(|s| &s.gen_k, 2)?;
+    let a_gen_v = gather(|s| &s.gen_v, 2)?;
+    let out = rt.execute(
+        &name,
+        &[&a_tok, &a_slot, &a_ctx_k, &a_ctx_v, &a_ctx_sum, &a_gate, &a_gen_k, &a_gen_v],
+    )?;
+
+    // 3. scatter updated window caches back and advance lane clocks
+    // (parts are moved, not cloned — this is the decode hot loop)
+    let mut gen_k_parts = split_axis(&out[1], 2, bucket)?.into_iter();
+    let mut gen_v_parts = split_axis(&out[2], 2, bucket)?.into_iter();
+    let mut logits = Vec::with_capacity(n);
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        let s = match lane {
+            SeqState::TConst(s) => s,
+            _ => unreachable!(),
+        };
+        s.gen_k = gen_k_parts.next().unwrap();
+        s.gen_v = gen_v_parts.next().unwrap();
+        s.window_tokens.push(tokens[i]);
+        s.history.push(tokens[i]);
+        s.slot += 1;
+        s.tokens_seen += 1;
+        logits.push(logits_row(&out[0], i, drv.cfg.vocab)?);
+    }
+    Ok(logits)
+}

@@ -1,0 +1,256 @@
+//! TLinFormer serving driver — the predecessor architecture: constant
+//! context state *plus* a raw-history K/V cache that grows O(N) and is
+//! attended on every step (both hit and miss costs stay linear; Fig. 8 b/e).
+//!
+//! The raw cache lives in bucketed slabs (`hist_k/hist_v`), appended at
+//! fold time with the `append_k/append_v` slabs the window graph returns,
+//! and migrated to the next bucket when full.
+
+use anyhow::{bail, Context, Result};
+
+use super::batch::{concat_axis, grow_axis, insert_axis, split_axis};
+use super::state::{SeqState, TLinState};
+use super::tconstformer::{logits_row, window_tokens_tensor};
+use super::ModelDriver;
+use crate::runtime::{HostTensor, Runtime};
+
+/// Make sure the history slabs can absorb `extra` more tokens, allocating
+/// or bucket-migrating as needed.
+fn ensure_capacity(
+    drv: &ModelDriver,
+    rt: &Runtime,
+    s: &mut TLinState,
+    extra: usize,
+) -> Result<()> {
+    let need = s.hist_len + extra;
+    if s.hist_bucket >= need && s.hist_k.is_some() {
+        return Ok(());
+    }
+    let bucket = rt
+        .manifest
+        .bucket_for(&drv.preset, need.max(1))
+        .with_context(|| format!("history {need} exceeds largest bucket"))?;
+    let (nb, d) = (drv.cfg.n_block, drv.cfg.d_model);
+    match (&s.hist_k, &s.hist_v) {
+        (Some(k), Some(v)) => {
+            s.hist_k = Some(grow_axis(k, 2, bucket)?);
+            s.hist_v = Some(grow_axis(v, 2, bucket)?);
+        }
+        _ => {
+            s.hist_k = Some(HostTensor::zeros_f32(&[nb, 1, bucket, d]));
+            s.hist_v = Some(HostTensor::zeros_f32(&[nb, 1, bucket, d]));
+        }
+    }
+    s.hist_bucket = bucket;
+    Ok(())
+}
+
+/// One window pass at the lane's current bucket. Returns the full result
+/// vector of the `tlin_window` graph.
+fn run_window(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    s: &TLinState,
+    chunk: &[i32],
+) -> Result<Vec<HostTensor>> {
+    let w = drv.cfg.w_og;
+    let name = rt.manifest.name_tlin_window(&drv.preset, s.hist_bucket);
+    let toks = window_tokens_tensor(chunk, w)?;
+    let nv = HostTensor::from_i32(&[1], vec![chunk.len() as i32])?;
+    let gate = HostTensor::from_f32(&[1], vec![s.inner.ctx_gate])?;
+    let hlen = HostTensor::from_i32(&[1], vec![s.hist_len as i32])?;
+    rt.execute(
+        &name,
+        &[
+            &toks,
+            &nv,
+            &s.inner.ctx_k,
+            &s.inner.ctx_v,
+            &s.inner.ctx_sum,
+            &gate,
+            s.hist_k.as_ref().context("hist_k unset")?,
+            s.hist_v.as_ref().context("hist_v unset")?,
+            &hlen,
+        ],
+    )
+}
+
+/// Fold a completed window: adopt the new context AND append the window's
+/// raw K/V to the growing history cache.
+fn fold(s: &mut TLinState, out: &[HostTensor], w: usize) -> Result<()> {
+    s.inner.ctx_k = out[3].clone();
+    s.inner.ctx_v = out[4].clone();
+    s.inner.ctx_sum = out[5].clone();
+    s.inner.ctx_gate = 1.0;
+    insert_axis(s.hist_k.as_mut().unwrap(), &out[6], 2, s.hist_len)?;
+    insert_axis(s.hist_v.as_mut().unwrap(), &out[7], 2, s.hist_len)?;
+    s.hist_len += w;
+    s.inner.slot = 0;
+    s.inner.window_tokens.clear();
+    s.inner.syncs += 1;
+    Ok(())
+}
+
+pub fn prefill(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    s: &mut TLinState,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    if tokens.is_empty() {
+        bail!("empty prompt (the engine prepends a BOS byte)");
+    }
+    let w = drv.cfg.w_og;
+    let mut last_logits = Vec::new();
+    for chunk in tokens.chunks(w) {
+        ensure_capacity(drv, rt, s, w)?;
+        let out = run_window(drv, rt, s, chunk)?;
+        last_logits = logits_row(&out[0], chunk.len() - 1, drv.cfg.vocab)?;
+        s.inner.history.extend_from_slice(chunk);
+        s.inner.tokens_seen += chunk.len();
+        s.tokens_seen += chunk.len();
+        if chunk.len() == w {
+            fold(s, &out, w)?;
+        } else {
+            s.inner.gen_k = out[1].clone();
+            s.inner.gen_v = out[2].clone();
+            s.inner.slot = chunk.len();
+            s.inner.window_tokens = chunk.to_vec();
+        }
+    }
+    Ok(last_logits)
+}
+
+/// Sync a lane whose generation window is full: re-run the window forward
+/// (cache miss) to fold it and extend the raw history.
+pub fn sync(drv: &ModelDriver, rt: &mut Runtime, s: &mut TLinState) -> Result<()> {
+    let w = drv.cfg.w_og;
+    if s.inner.window_tokens.len() != w {
+        bail!("tlin sync with {}/{} window tokens", s.inner.window_tokens.len(), w);
+    }
+    ensure_capacity(drv, rt, s, w)?;
+    let chunk = s.inner.window_tokens.clone();
+    let out = run_window(drv, rt, s, &chunk)?;
+    fold(s, &out, w)
+}
+
+pub fn decode_batch(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    lanes: &mut [&mut SeqState],
+    tokens: &[i32],
+) -> Result<Vec<Vec<f32>>> {
+    if lanes.len() != tokens.len() || lanes.is_empty() {
+        bail!("decode_batch: {} lanes vs {} tokens", lanes.len(), tokens.len());
+    }
+    // sync full windows + make sure every lane has history slabs
+    for lane in lanes.iter_mut() {
+        let s = match lane {
+            SeqState::TLin(s) => s,
+            _ => bail!("non-tlin lane"),
+        };
+        if s.inner.window_full(&drv.cfg) {
+            sync(drv, rt, s)?;
+        }
+        ensure_capacity(drv, rt, s, 0)?;
+    }
+    // promote all lanes to a common bucket (monotone growth; lanes batched
+    // together converge to the same slab size anyway)
+    let max_bucket = lanes
+        .iter()
+        .map(|l| match &**l {
+            SeqState::TLin(s) => s.hist_bucket,
+            _ => unreachable!(),
+        })
+        .max()
+        .unwrap();
+    for lane in lanes.iter_mut() {
+        let s = match lane {
+            SeqState::TLin(s) => s,
+            _ => unreachable!(),
+        };
+        if s.hist_bucket < max_bucket {
+            s.hist_k = Some(grow_axis(s.hist_k.as_ref().unwrap(), 2, max_bucket)?);
+            s.hist_v = Some(grow_axis(s.hist_v.as_ref().unwrap(), 2, max_bucket)?);
+            s.hist_bucket = max_bucket;
+        }
+    }
+
+    let n = lanes.len();
+    let bucket = rt
+        .manifest
+        .batch_bucket_for(n)
+        .with_context(|| format!("no batch bucket for {n} lanes"))?;
+    let states: Vec<&TLinState> = lanes
+        .iter()
+        .map(|l| match &**l {
+            SeqState::TLin(s) => s,
+            _ => unreachable!(),
+        })
+        .collect();
+
+    let mut dummy = TLinState::new(&drv.cfg);
+    let (nb, d) = (drv.cfg.n_block, drv.cfg.d_model);
+    dummy.hist_k = Some(HostTensor::zeros_f32(&[nb, 1, max_bucket, d]));
+    dummy.hist_v = Some(HostTensor::zeros_f32(&[nb, 1, max_bucket, d]));
+    dummy.hist_bucket = max_bucket;
+    let mut all: Vec<&TLinState> = states.clone();
+    while all.len() < bucket {
+        all.push(&dummy);
+    }
+
+    let mut tok = vec![0i32; bucket];
+    tok[..n].copy_from_slice(tokens);
+    let mut slot = vec![0i32; bucket];
+    let mut gate = vec![0f32; bucket];
+    let mut hlen = vec![0i32; bucket];
+    for (i, s) in states.iter().enumerate() {
+        slot[i] = s.inner.slot as i32;
+        gate[i] = s.inner.ctx_gate;
+        hlen[i] = s.hist_len as i32;
+    }
+
+    let cat = |mk: &dyn Fn(&TLinState) -> &HostTensor, axis: usize| -> Result<HostTensor> {
+        let ts: Vec<&HostTensor> = all.iter().map(|s| mk(s)).collect();
+        concat_axis(&ts, axis)
+    };
+
+    let name = rt.manifest.name_tlin_decode(&drv.preset, max_bucket, bucket);
+    let a_tok = HostTensor::from_i32(&[bucket], tok)?;
+    let a_slot = HostTensor::from_i32(&[bucket], slot)?;
+    let a_ctx_k = cat(&|s| &s.inner.ctx_k, 2)?;
+    let a_ctx_v = cat(&|s| &s.inner.ctx_v, 2)?;
+    let a_ctx_sum = cat(&|s| &s.inner.ctx_sum, 1)?;
+    let a_gate = HostTensor::from_f32(&[bucket], gate)?;
+    let a_gen_k = cat(&|s| &s.inner.gen_k, 2)?;
+    let a_gen_v = cat(&|s| &s.inner.gen_v, 2)?;
+    let a_hist_k = cat(&|s| s.hist_k.as_ref().unwrap(), 1)?;
+    let a_hist_v = cat(&|s| s.hist_v.as_ref().unwrap(), 1)?;
+    let a_hlen = HostTensor::from_i32(&[bucket], hlen)?;
+    let out = rt.execute(
+        &name,
+        &[
+            &a_tok, &a_slot, &a_ctx_k, &a_ctx_v, &a_ctx_sum, &a_gate,
+            &a_gen_k, &a_gen_v, &a_hist_k, &a_hist_v, &a_hlen,
+        ],
+    )?;
+
+    let mut gen_k_parts = split_axis(&out[1], 2, bucket)?.into_iter();
+    let mut gen_v_parts = split_axis(&out[2], 2, bucket)?.into_iter();
+    let mut logits = Vec::with_capacity(n);
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        let s = match lane {
+            SeqState::TLin(s) => s,
+            _ => unreachable!(),
+        };
+        s.inner.gen_k = gen_k_parts.next().unwrap();
+        s.inner.gen_v = gen_v_parts.next().unwrap();
+        s.inner.window_tokens.push(tokens[i]);
+        s.inner.history.push(tokens[i]);
+        s.inner.slot += 1;
+        s.inner.tokens_seen += 1;
+        s.tokens_seen += 1;
+        logits.push(logits_row(&out[0], i, drv.cfg.vocab)?);
+    }
+    Ok(logits)
+}

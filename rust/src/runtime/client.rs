@@ -1,0 +1,280 @@
+//! The PJRT runtime: compile-once executable cache + device-resident
+//! parameters + the execute entry points used by the model drivers.
+//!
+//! Design notes:
+//! * Executables are compiled lazily on first use and cached by graph name
+//!   (startup compiles only what the chosen architecture needs).
+//! * Parameters are uploaded to the device **once** per (preset, arch) and
+//!   passed as `PjRtBuffer`s on every call — the hot path uploads only the
+//!   small changing inputs (tokens, positions, state slabs).
+//! * Results come back as one tuple literal (graphs are lowered with
+//!   `return_tuple=True`), decomposed into `HostTensor`s. On the CPU PJRT
+//!   backend these transfers are plain memcpys; their cost is part of what
+//!   the paper measures (its baseline bottleneck *is* cache memory traffic).
+//! * The runtime is deliberately single-threaded (`&mut self`): the
+//!   coordinator owns it from one worker thread, which is also what keeps
+//!   the PJRT client contention-free.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{GraphMeta, Manifest};
+use super::tensor::HostTensor;
+use super::weights;
+
+/// Per-graph execution statistics (for metrics and the §Perf pass).
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_ns: u64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    params_host: HashMap<(String, String), Vec<HostTensor>>,
+    params_dev: HashMap<(String, String), Vec<xla::PjRtBuffer>>,
+    stats: HashMap<String, ExecStats>,
+}
+
+impl Runtime {
+    /// Open the artifact directory and create the CPU PJRT client.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: HashMap::new(),
+            params_host: HashMap::new(),
+            params_dev: HashMap::new(),
+            stats: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (and cache) a graph by manifest name. Returns compile time
+    /// in seconds when a compile actually happened.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<Option<f64>> {
+        if self.exes.contains_key(name) {
+            return Ok(None);
+        }
+        let meta = self.manifest.graph(name)?.clone();
+        let path = self.manifest.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf8")?,
+        )
+        .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.exes.insert(name.to_string(), exe);
+        Ok(Some(dt))
+    }
+
+    // -- parameters ---------------------------------------------------------
+
+    /// Load (and cache) host-side weights for (preset, arch) from the
+    /// artifact weight files.
+    pub fn load_params(&mut self, preset: &str, arch: &str) -> Result<&[HostTensor]> {
+        let key = (preset.to_string(), arch.to_string());
+        if !self.params_host.contains_key(&key) {
+            let wm = self
+                .manifest
+                .weights
+                .get(&key)
+                .with_context(|| format!("no weights for {preset}/{arch}"))?;
+            let stem = self.manifest.dir.join(&wm.file);
+            let tensors = weights::load_tensors(&stem)?;
+            self.params_host
+                .insert(key.clone(), tensors.into_iter().map(|(_, t)| t).collect());
+        }
+        Ok(self.params_host.get(&key).unwrap())
+    }
+
+    /// Replace the host weights (e.g. with a trained checkpoint) and drop
+    /// any device copies so the next execute re-uploads.
+    pub fn set_params(&mut self, preset: &str, arch: &str, params: Vec<HostTensor>) {
+        let key = (preset.to_string(), arch.to_string());
+        self.params_dev.remove(&key);
+        self.params_host.insert(key, params);
+    }
+
+    /// Load a checkpoint produced by the trainer (tensor-file stem).
+    pub fn load_checkpoint(&mut self, preset: &str, arch: &str, stem: impl AsRef<Path>) -> Result<()> {
+        let tensors = weights::load_tensors(stem)?;
+        self.set_params(preset, arch, tensors.into_iter().map(|(_, t)| t).collect());
+        Ok(())
+    }
+
+    fn ensure_params_dev(&mut self, preset: &str, arch: &str) -> Result<()> {
+        let key = (preset.to_string(), arch.to_string());
+        if self.params_dev.contains_key(&key) {
+            return Ok(());
+        }
+        self.load_params(preset, arch)?;
+        let host = self.params_host.get(&key).unwrap();
+        let mut bufs = Vec::with_capacity(host.len());
+        for t in host {
+            bufs.push(t.to_buffer(&self.client)?);
+        }
+        self.params_dev.insert(key, bufs);
+        Ok(())
+    }
+
+    // -- execution ------------------------------------------------------------
+
+    /// Execute a graph whose leading args are the (preset, arch) parameters,
+    /// passing only the non-parameter args. This is the serving hot path —
+    /// args are borrowed so callers never clone state slabs just to call.
+    pub fn execute(&mut self, name: &str, extra: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        // Mutating setup first (compile cache, param upload), so the hot
+        // loop below can borrow `meta` without cloning its ~150 arg specs.
+        let key = {
+            let meta = self.manifest.graph(name)?;
+            (meta.preset.clone(), meta.arch.clone())
+        };
+        self.ensure_compiled(name)?;
+        self.ensure_params_dev(&key.0, &key.1)?;
+
+        let meta = self.manifest.graphs.get(name).unwrap();
+        Self::check_extra_args_impl(meta, extra)?;
+
+        let t0 = Instant::now();
+        let mut upload = 0u64;
+        let extra_bufs: Vec<xla::PjRtBuffer> = extra
+            .iter()
+            .map(|t| {
+                upload += t.nbytes() as u64;
+                t.to_buffer(&self.client)
+            })
+            .collect::<Result<_>>()?;
+        let param_bufs = self.params_dev.get(&key).unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(param_bufs.len() + extra_bufs.len());
+        args.extend(param_bufs.iter());
+        args.extend(extra_bufs.iter());
+
+        let exe = self.exes.get(name).unwrap();
+        let out = exe
+            .execute_b(&args)
+            .with_context(|| format!("executing {name}"))?;
+        let results = Self::unpack(meta, out)?;
+
+        let st = self.stats.entry(name.to_string()).or_default();
+        st.calls += 1;
+        st.total_ns += t0.elapsed().as_nanos() as u64;
+        st.upload_bytes += upload;
+        st.download_bytes += results.iter().map(|t| t.nbytes() as u64).sum::<u64>();
+        Ok(results)
+    }
+
+    /// Execute a graph passing *all* args explicitly (training, where the
+    /// parameters change every step and flow through as inputs/outputs).
+    pub fn execute_full(&mut self, name: &str, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let meta = self.manifest.graph(name)?.clone();
+        if args.len() != meta.args.len() {
+            bail!(
+                "{name}: expected {} args, got {}",
+                meta.args.len(),
+                args.len()
+            );
+        }
+        self.ensure_compiled(name)?;
+        let t0 = Instant::now();
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|t| t.to_buffer(&self.client))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let exe = self.exes.get(name).unwrap();
+        let out = exe
+            .execute_b(&refs)
+            .with_context(|| format!("executing {name}"))?;
+        let results = Self::unpack(&meta, out)?;
+        let st = self.stats.entry(name.to_string()).or_default();
+        st.calls += 1;
+        st.total_ns += t0.elapsed().as_nanos() as u64;
+        Ok(results)
+    }
+
+    fn unpack(
+        meta: &GraphMeta,
+        out: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> Result<Vec<HostTensor>> {
+        let buf = out
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?;
+        let lit = buf.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != meta.results.len() {
+            bail!(
+                "{}: result tuple has {} elements, manifest says {}",
+                meta.name,
+                parts.len(),
+                meta.results.len()
+            );
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    fn check_extra_args_impl(meta: &GraphMeta, extra: &[&HostTensor]) -> Result<()> {
+        let expected = &meta.args[meta.n_param_args..];
+        if extra.len() != expected.len() {
+            bail!(
+                "{}: expected {} non-param args, got {}",
+                meta.name,
+                expected.len(),
+                extra.len()
+            );
+        }
+        for (spec, t) in expected.iter().zip(extra) {
+            if spec.shape != t.shape() || spec.dtype != t.dtype_str() {
+                bail!(
+                    "{}: arg {:?} expects {} {:?}, got {} {:?}",
+                    meta.name,
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    t.dtype_str(),
+                    t.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    // -- introspection --------------------------------------------------------
+
+    pub fn stats(&self) -> &HashMap<String, ExecStats> {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats.clear();
+    }
+
+    pub fn compiled_graphs(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.exes.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}

@@ -1,0 +1,319 @@
+//! Typed view of `artifacts/manifest.json` produced by `python -m compile.aot`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Mirror of `python/compile/configs.py::ModelConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_layer: usize,
+    pub max_seq: usize,
+    pub w_oh: usize,
+    pub w_og: usize,
+    pub n_block: usize,
+    pub h_inner: usize,
+    pub ffn_mult: usize,
+    pub train_seq: usize,
+    pub train_batch: usize,
+}
+
+impl ModelConfig {
+    fn from_json(j: &Json) -> Result<Self> {
+        let u = |k: &str| -> Result<usize> {
+            j.get(k)
+                .as_usize()
+                .with_context(|| format!("config field {k}"))
+        };
+        Ok(ModelConfig {
+            name: j.get("name").as_str().context("config name")?.to_string(),
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_head: u("n_head")?,
+            n_layer: u("n_layer")?,
+            max_seq: u("max_seq")?,
+            w_oh: u("w_oh")?,
+            w_og: u("w_og")?,
+            n_block: u("n_block")?,
+            h_inner: u("h_inner")?,
+            ffn_mult: u("ffn_mult")?,
+            train_seq: u("train_seq")?,
+            train_batch: u("train_batch")?,
+        })
+    }
+
+    /// Paper-style variant name, e.g. `TConstFormer 512-256-0.5`.
+    pub fn paper_name(&self, arch: &str) -> String {
+        match arch {
+            "base" => format!("Base {}", self.train_seq),
+            _ => {
+                let label = if arch == "tlin" { "TLinFormer" } else { "TConstFormer" };
+                let total = self.w_oh + self.w_og;
+                format!(
+                    "{label} {}-{}-{:.3}",
+                    self.train_seq,
+                    total,
+                    self.w_oh as f64 / total as f64
+                )
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported graph.
+#[derive(Debug, Clone)]
+pub struct GraphMeta {
+    pub name: String,
+    pub file: String,
+    pub preset: String,
+    pub arch: String,
+    pub kind: String,
+    pub batch: usize,
+    pub bucket: Option<usize>,
+    pub n_param_args: usize,
+    pub args: Vec<ArgSpec>,
+    pub results: Vec<String>,
+}
+
+/// Weight-file entry per (preset, arch).
+#[derive(Debug, Clone)]
+pub struct WeightsMeta {
+    pub file: String,
+    pub n_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenMeta {
+    pub graph: String,
+    pub args_stem: String,
+    pub results_stem: String,
+}
+
+/// The parsed manifest plus the artifact directory it was loaded from.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ModelConfig>,
+    pub history_buckets: BTreeMap<String, Vec<usize>>,
+    pub batch_buckets: Vec<usize>,
+    pub weights: BTreeMap<(String, String), WeightsMeta>, // (preset, arch)
+    pub graphs: BTreeMap<String, GraphMeta>,
+    pub golden: Vec<GoldenMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.get("configs").as_obj().context("configs")? {
+            configs.insert(name.clone(), ModelConfig::from_json(cj)?);
+        }
+
+        let mut history_buckets = BTreeMap::new();
+        for (name, bj) in j.get("history_buckets").as_obj().context("history_buckets")? {
+            let v: Vec<usize> = bj
+                .as_arr()
+                .context("bucket list")?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect();
+            history_buckets.insert(name.clone(), v);
+        }
+
+        let batch_buckets: Vec<usize> = j
+            .get("batch_buckets")
+            .as_arr()
+            .context("batch_buckets")?
+            .iter()
+            .filter_map(|x| x.as_usize())
+            .collect();
+
+        let mut weights = BTreeMap::new();
+        for (preset, archs) in j.get("weights").as_obj().context("weights")? {
+            for (arch, wj) in archs.as_obj().context("weights entry")? {
+                weights.insert(
+                    (preset.clone(), arch.clone()),
+                    WeightsMeta {
+                        file: wj.get("file").as_str().context("weights file")?.to_string(),
+                        n_params: wj.get("n_params").as_usize().unwrap_or(0),
+                    },
+                );
+            }
+        }
+
+        let mut graphs = BTreeMap::new();
+        for gj in j.get("graphs").as_arr().context("graphs")? {
+            let g = GraphMeta {
+                name: gj.get("name").as_str().context("graph name")?.to_string(),
+                file: gj.get("file").as_str().context("graph file")?.to_string(),
+                preset: gj.get("preset").as_str().unwrap_or("").to_string(),
+                arch: gj.get("arch").as_str().unwrap_or("").to_string(),
+                kind: gj.get("kind").as_str().unwrap_or("").to_string(),
+                batch: gj.get("batch").as_usize().unwrap_or(1),
+                bucket: gj.get("bucket").as_usize(),
+                n_param_args: gj.get("n_param_args").as_usize().unwrap_or(0),
+                args: gj
+                    .get("args")
+                    .as_arr()
+                    .context("graph args")?
+                    .iter()
+                    .map(|aj| {
+                        Ok(ArgSpec {
+                            name: aj.get("name").as_str().context("arg name")?.to_string(),
+                            dtype: aj.get("dtype").as_str().unwrap_or("f32").to_string(),
+                            shape: aj
+                                .get("shape")
+                                .as_arr()
+                                .context("arg shape")?
+                                .iter()
+                                .filter_map(|x| x.as_usize())
+                                .collect(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                results: gj
+                    .get("results")
+                    .as_arr()
+                    .context("graph results")?
+                    .iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect(),
+            };
+            graphs.insert(g.name.clone(), g);
+        }
+
+        let golden = j
+            .get("golden")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|gj| {
+                Some(GoldenMeta {
+                    graph: gj.get("graph").as_str()?.to_string(),
+                    args_stem: gj.get("args").as_str()?.to_string(),
+                    results_stem: gj.get("results").as_str()?.to_string(),
+                })
+            })
+            .collect();
+
+        Ok(Manifest {
+            dir,
+            configs,
+            history_buckets,
+            batch_buckets,
+            weights,
+            graphs,
+            golden,
+        })
+    }
+
+    pub fn config(&self, preset: &str) -> Result<&ModelConfig> {
+        self.configs
+            .get(preset)
+            .with_context(|| format!("preset {preset:?} not in manifest"))
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphMeta> {
+        self.graphs
+            .get(name)
+            .with_context(|| format!("graph {name:?} not in manifest"))
+    }
+
+    /// Buckets available for an O(N)-state architecture, ascending.
+    pub fn buckets(&self, preset: &str) -> Vec<usize> {
+        self.history_buckets.get(preset).cloned().unwrap_or_default()
+    }
+
+    /// Smallest bucket that can hold `n` history tokens.
+    pub fn bucket_for(&self, preset: &str, n: usize) -> Option<usize> {
+        self.buckets(preset).into_iter().find(|&b| b >= n)
+    }
+
+    /// Smallest batch bucket that can hold `n` lanes.
+    pub fn batch_bucket_for(&self, n: usize) -> Option<usize> {
+        self.batch_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Graph-name helpers (mirroring the aot.py naming scheme).
+    pub fn name_base_prefill(&self, preset: &str, bucket: usize) -> String {
+        format!("{preset}_base_prefill_L{bucket}")
+    }
+
+    pub fn name_base_decode(&self, preset: &str, bucket: usize, batch: usize) -> String {
+        format!("{preset}_base_decode_L{bucket}_B{batch}")
+    }
+
+    pub fn name_tconst_window(&self, preset: &str) -> String {
+        format!("{preset}_tconst_window_B1")
+    }
+
+    pub fn name_tconst_decode(&self, preset: &str, batch: usize) -> String {
+        format!("{preset}_tconst_decode_B{batch}")
+    }
+
+    pub fn name_tconst_sync_full(&self, preset: &str, bucket: usize) -> String {
+        format!("{preset}_tconst_sync_full_L{bucket}")
+    }
+
+    pub fn name_tlin_window(&self, preset: &str, bucket: usize) -> String {
+        format!("{preset}_tlin_window_L{bucket}_B1")
+    }
+
+    pub fn name_tlin_decode(&self, preset: &str, bucket: usize, batch: usize) -> String {
+        format!("{preset}_tlin_decode_L{bucket}_B{batch}")
+    }
+
+    pub fn name_train_step(&self, preset: &str, arch: &str) -> String {
+        format!("{preset}_{arch}_train_step")
+    }
+
+    pub fn name_eval_loss(&self, preset: &str, arch: &str) -> String {
+        format!("{preset}_{arch}_eval_loss")
+    }
+
+    /// Validate internal consistency (used by integration tests).
+    pub fn validate(&self) -> Result<()> {
+        for (name, g) in &self.graphs {
+            if !self.dir.join(&g.file).exists() {
+                bail!("graph {name}: missing HLO file {}", g.file);
+            }
+            if g.n_param_args > g.args.len() {
+                bail!("graph {name}: n_param_args > args");
+            }
+            if !self.configs.contains_key(&g.preset) {
+                bail!("graph {name}: unknown preset {}", g.preset);
+            }
+        }
+        for ((preset, arch), w) in &self.weights {
+            if !self.dir.join(format!("{}.bin", w.file)).exists() {
+                bail!("weights {preset}/{arch}: missing {}.bin", w.file);
+            }
+        }
+        Ok(())
+    }
+}

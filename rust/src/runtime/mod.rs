@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
+//! the serving hot path.
+//!
+//! Layering:
+//! * [`tensor`] — host-side tensors (`HostTensor`) and Literal conversion;
+//! * [`manifest`] — typed view of `artifacts/manifest.json`;
+//! * [`weights`] — the flat tensor-file format shared with
+//!   `python/compile/tensorio.py` (weights, golden vectors, checkpoints);
+//! * [`client`] — the [`client::Runtime`]: executable cache keyed by graph
+//!   name, per-(preset, arch) parameter buffers resident on device, and the
+//!   `execute` entry points the model drivers use.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+pub use client::Runtime;
+pub use manifest::{ArgSpec, GraphMeta, Manifest, ModelConfig};
+pub use tensor::HostTensor;

@@ -1,0 +1,191 @@
+//! Host-side tensors and conversions to/from XLA literals.
+//!
+//! Only the two dtypes the artifact graphs use (f32, i32) are supported —
+//! deliberately, so every conversion is a straight memcpy.
+
+use anyhow::{bail, Context, Result};
+
+/// A host tensor: shape + data. The layout is row-major (C order), matching
+/// both numpy and XLA literals' default layout.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> Self {
+        HostTensor::I32 { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor::F32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor::I32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "f32",
+            HostTensor::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// Scalar extraction (also accepts shape [1]).
+    pub fn scalar(&self) -> Result<f64> {
+        if self.len() != 1 {
+            bail!("not a scalar: shape {:?}", self.shape());
+        }
+        Ok(match self {
+            HostTensor::F32 { data, .. } => data[0] as f64,
+            HostTensor::I32 { data, .. } => data[0] as f64,
+        })
+    }
+
+    /// Max |a - b| over two tensors of identical shape/dtype.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f64> {
+        if self.shape() != other.shape() {
+            bail!("shape mismatch {:?} vs {:?}", self.shape(), other.shape());
+        }
+        Ok(match (self, other) {
+            (HostTensor::F32 { data: a, .. }, HostTensor::F32 { data: b, .. }) => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs() as f64)
+                .fold(0.0, f64::max),
+            (HostTensor::I32 { data: a, .. }, HostTensor::I32 { data: b, .. }) => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs() as f64)
+                .fold(0.0, f64::max),
+            _ => bail!("dtype mismatch"),
+        })
+    }
+
+    // -- XLA conversions ---------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        lit.reshape(&dims).context("reshape literal")
+    }
+
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let buf = match self {
+            HostTensor::F32 { shape, data } => {
+                client.buffer_from_host_buffer(data, shape, None)?
+            }
+            HostTensor::I32 { shape, data } => {
+                client.buffer_from_host_buffer(data, shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match lit.ty()? {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(HostTensor::from_f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::from_f32(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_diff() {
+        let a = HostTensor::scalar_f32(2.0);
+        assert_eq!(a.scalar().unwrap(), 2.0);
+        let x = HostTensor::from_f32(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let y = HostTensor::from_f32(&[3], vec![1.0, 2.5, 3.0]).unwrap();
+        assert_eq!(x.max_abs_diff(&y).unwrap(), 0.5);
+        assert!(x.max_abs_diff(&HostTensor::zeros_i32(&[3])).is_err());
+    }
+
+    #[test]
+    fn nbytes() {
+        assert_eq!(HostTensor::zeros_f32(&[4, 5]).nbytes(), 80);
+    }
+}

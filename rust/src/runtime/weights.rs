@@ -1,0 +1,134 @@
+//! Reader/writer for the flat tensor-file format shared with
+//! `python/compile/tensorio.py` (`<stem>.bin` + `<stem>.json`), used for
+//! initial weights, golden vectors and training checkpoints.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::HostTensor;
+use crate::util::json::Json;
+
+/// Load a named tensor set from `<stem>.bin`/`<stem>.json`.
+pub fn load_tensors(stem: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
+    let stem = stem.as_ref();
+    // append (not with_extension: stems like "graph.args" contain dots)
+    let json_path = std::path::PathBuf::from(format!("{}.json", stem.display()));
+    let bin_path = std::path::PathBuf::from(format!("{}.bin", stem.display()));
+    let index = Json::parse(
+        &std::fs::read_to_string(&json_path)
+            .with_context(|| format!("reading {json_path:?}"))?,
+    )?;
+    let blob = std::fs::read(&bin_path).with_context(|| format!("reading {bin_path:?}"))?;
+
+    let mut out = Vec::new();
+    for ent in index.as_arr().context("tensor index must be an array")? {
+        let name = ent.get("name").as_str().context("tensor name")?.to_string();
+        let dtype = ent.get("dtype").as_str().context("tensor dtype")?;
+        let shape: Vec<usize> = ent
+            .get("shape")
+            .as_arr()
+            .context("tensor shape")?
+            .iter()
+            .filter_map(|x| x.as_usize())
+            .collect();
+        let offset = ent.get("offset").as_usize().context("tensor offset")?;
+        let nbytes = ent.get("nbytes").as_usize().context("tensor nbytes")?;
+        let bytes = blob
+            .get(offset..offset + nbytes)
+            .with_context(|| format!("tensor {name}: out of range"))?;
+        let numel: usize = shape.iter().product();
+        if numel * 4 != nbytes {
+            bail!("tensor {name}: {nbytes} bytes for {numel} elements");
+        }
+        let t = match dtype {
+            "f32" => {
+                let mut data = vec![0f32; numel];
+                for (i, c) in bytes.chunks_exact(4).enumerate() {
+                    data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                HostTensor::F32 { shape, data }
+            }
+            "i32" => {
+                let mut data = vec![0i32; numel];
+                for (i, c) in bytes.chunks_exact(4).enumerate() {
+                    data[i] = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                HostTensor::I32 { shape, data }
+            }
+            other => bail!("tensor {name}: unsupported dtype {other}"),
+        };
+        out.push((name, t));
+    }
+    Ok(out)
+}
+
+/// Save a named tensor set to `<stem>.bin`/`<stem>.json` (checkpoints).
+pub fn save_tensors(stem: impl AsRef<Path>, tensors: &[(String, HostTensor)]) -> Result<()> {
+    let stem = stem.as_ref();
+    if let Some(parent) = stem.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut blob: Vec<u8> = Vec::new();
+    let mut index = Vec::new();
+    for (name, t) in tensors {
+        let offset = blob.len();
+        match t {
+            HostTensor::F32 { data, .. } => {
+                for v in data {
+                    blob.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            HostTensor::I32 { data, .. } => {
+                for v in data {
+                    blob.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        index.push(Json::obj(vec![
+            ("name", Json::str(name.clone())),
+            ("dtype", Json::str(t.dtype_str())),
+            (
+                "shape",
+                Json::Arr(t.shape().iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            ("offset", Json::num(offset as f64)),
+            ("nbytes", Json::num((blob.len() - offset) as f64)),
+        ]));
+    }
+    std::fs::write(format!("{}.bin", stem.display()), &blob)?;
+    std::fs::write(format!("{}.json", stem.display()), Json::Arr(index).to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("tconst_wtest_{}", std::process::id()));
+        let stem = dir.join("ckpt");
+        let tensors = vec![
+            (
+                "a.w".to_string(),
+                HostTensor::from_f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]).unwrap(),
+            ),
+            ("b".to_string(), HostTensor::from_i32(&[4], vec![1, 2, 3, -4]).unwrap()),
+            ("s".to_string(), HostTensor::scalar_f32(9.0)),
+        ];
+        save_tensors(&stem, &tensors).unwrap();
+        let back = load_tensors(&stem).unwrap();
+        assert_eq!(back.len(), 3);
+        for ((n1, t1), (n2, t2)) in tensors.iter().zip(&back) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load_tensors("/nonexistent/stem").is_err());
+    }
+}

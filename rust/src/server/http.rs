@@ -1,0 +1,220 @@
+//! Minimal HTTP/1.1 server (offline stand-in for a web framework).
+//!
+//! Endpoints:
+//! * `POST /generate` — body `{"prompt": "...", "max_new_tokens": 32,
+//!   "temperature": 0.0, "top_k": 0, "stop_on_eos": false}` →
+//!   `{"id", "text", "tokens", "finish_reason", "metrics": {...}}`
+//! * `GET /metrics` — engine metrics snapshot (JSON)
+//! * `GET /healthz` — liveness
+//!
+//! One thread per connection; requests are forwarded to the engine thread
+//! through [`EngineHandle`], so HTTP concurrency never touches PJRT state.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{EngineHandle, Request};
+use crate::data::tokenizer::{ByteTokenizer, EOS};
+use crate::model::sampler::SamplingParams;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:8077".into() }
+    }
+}
+
+/// A parsed HTTP request (just enough of HTTP/1.1 for our API).
+#[derive(Debug)]
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if !body.is_empty() {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest { method, path, body })
+}
+
+fn respond(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    Ok(())
+}
+
+fn handle_generate(engine: &EngineHandle, body: &[u8], next_id: &AtomicU64) -> Result<Json> {
+    let j = Json::parse(std::str::from_utf8(body).context("utf8 body")?)
+        .map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let tk = ByteTokenizer;
+    let prompt = tk.encode(j.get("prompt").as_str().unwrap_or(""));
+    let req = Request {
+        id: next_id.fetch_add(1, Ordering::Relaxed),
+        prompt,
+        max_new_tokens: j.get("max_new_tokens").as_usize().unwrap_or(32).min(4096),
+        sampling: SamplingParams {
+            temperature: j.get("temperature").as_f64().unwrap_or(0.0) as f32,
+            top_k: j.get("top_k").as_usize().unwrap_or(0),
+            seed: j.get("seed").as_i64().unwrap_or(0) as u64,
+        },
+        stop_token: if j.get("stop_on_eos").as_bool().unwrap_or(false) {
+            Some(EOS)
+        } else {
+            None
+        },
+    };
+    let resp = engine.generate(req)?;
+    Ok(Json::obj(vec![
+        ("id", Json::num(resp.id as f64)),
+        ("text", Json::str(tk.decode(&resp.tokens))),
+        (
+            "tokens",
+            Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("finish_reason", Json::str(resp.finish_reason.as_str())),
+        (
+            "metrics",
+            Json::obj(vec![
+                ("queue_ms", Json::num(resp.metrics.queue_ms)),
+                ("ttft_ms", Json::num(resp.metrics.ttft_ms)),
+                ("total_ms", Json::num(resp.metrics.total_ms)),
+                ("n_prompt", Json::num(resp.metrics.n_prompt as f64)),
+                ("n_generated", Json::num(resp.metrics.n_generated as f64)),
+                ("syncs", Json::num(resp.metrics.syncs as f64)),
+                ("peak_kv_bytes", Json::num(resp.metrics.peak_kv_bytes as f64)),
+                ("tokens_per_s", Json::num(resp.metrics.tokens_per_s())),
+            ]),
+        ),
+    ]))
+}
+
+fn handle_conn(mut stream: TcpStream, engine: EngineHandle, next_id: Arc<AtomicU64>) {
+    let result = (|| -> Result<()> {
+        let req = read_request(&mut stream)?;
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/generate") => match handle_generate(&engine, &req.body, &next_id) {
+                Ok(j) => respond(&mut stream, 200, &j.to_string()),
+                Err(e) => respond(
+                    &mut stream,
+                    400,
+                    &Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string(),
+                ),
+            },
+            ("GET", "/metrics") => {
+                let m = engine.metrics()?;
+                respond(&mut stream, 200, &m.to_string())
+            }
+            ("GET", "/healthz") => respond(&mut stream, 200, r#"{"ok":true}"#),
+            _ => respond(&mut stream, 404, r#"{"error":"not found"}"#),
+        }
+    })();
+    if let Err(e) = result {
+        eprintln!("[http] connection error: {e:#}");
+    }
+}
+
+/// Serve until `stop` flips true (tests) or forever (stop = None).
+pub fn serve(cfg: &ServerConfig, engine: EngineHandle, stop: Option<Arc<AtomicBool>>) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    listener.set_nonblocking(true)?;
+    println!("[http] serving on http://{}", cfg.addr);
+    let next_id = Arc::new(AtomicU64::new(1));
+    loop {
+        if let Some(s) = &stop {
+            if s.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let engine = engine.clone();
+                let next_id = next_id.clone();
+                std::thread::spawn(move || handle_conn(stream, engine, next_id));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Tiny blocking HTTP client for tests and the workload replayer.
+pub fn http_post(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    read_response(&mut stream)
+}
+
+pub fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+    )?;
+    read_response(&mut stream)
+}
+
+fn read_response(stream: &mut TcpStream) -> Result<(u16, String)> {
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let body = buf
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
+}

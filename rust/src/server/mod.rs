@@ -1,0 +1,6 @@
+//! HTTP frontend: a hand-rolled HTTP/1.1 micro-server (std::net, one
+//! thread per connection) exposing the engine as a JSON API.
+
+pub mod http;
+
+pub use http::{serve, ServerConfig};

@@ -1,0 +1,231 @@
+//! Training loop: drives the AOT `*_train_step` graphs (loss + grads +
+//! AdamW fused in-graph; see `python/compile/train.py`) from Rust. Python
+//! never runs — the optimizer state lives here as flat tensors and flows
+//! through the graph as inputs/outputs.
+//!
+//! This is the substrate behind the Table 1 / Fig. 6 / Fig. 7 harnesses and
+//! the `train_tiny` end-to-end example.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::corpus;
+use crate::model::sampler;
+use crate::runtime::{weights, HostTensor, Runtime};
+use crate::util::rng::Rng;
+
+/// Hyper-parameters for a training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub preset: String,
+    pub arch: String,
+    pub steps: usize,
+    pub lr: f32,
+    /// Linear warmup steps (lr ramps 0 → lr).
+    pub warmup: usize,
+    pub eval_every: usize,
+    /// Batches averaged per evaluation.
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "tiny".into(),
+            arch: "tconst".into(),
+            steps: 200,
+            lr: 3e-3,
+            warmup: 20,
+            eval_every: 50,
+            eval_batches: 4,
+            seed: 17,
+            log_every: 10,
+        }
+    }
+}
+
+/// One logged point of the run.
+#[derive(Debug, Clone)]
+pub struct LogPoint {
+    pub step: usize,
+    pub train_loss: f64,
+    pub valid_loss: Option<f64>,
+    pub elapsed_s: f64,
+}
+
+/// Trainer state: parameters + AdamW moments, all host tensors in manifest
+/// order.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub params: Vec<HostTensor>,
+    m: Vec<HostTensor>,
+    v: Vec<HostTensor>,
+    pub step: usize,
+    graph_train: String,
+    graph_eval: String,
+    train_batch: usize,
+    train_seq: usize,
+}
+
+impl Trainer {
+    /// Initialize from the artifact weight files (seeded init from aot.py).
+    pub fn new(rt: &mut Runtime, cfg: TrainConfig) -> Result<Self> {
+        let params: Vec<HostTensor> = rt.load_params(&cfg.preset, &cfg.arch)?.to_vec();
+        let zeros = |ps: &[HostTensor]| -> Vec<HostTensor> {
+            ps.iter()
+                .map(|t| match t {
+                    HostTensor::F32 { shape, .. } => HostTensor::zeros_f32(shape),
+                    HostTensor::I32 { shape, .. } => HostTensor::zeros_i32(shape),
+                })
+                .collect()
+        };
+        let mcfg = rt.manifest.config(&cfg.preset)?.clone();
+        let graph_train = rt.manifest.name_train_step(&cfg.preset, &cfg.arch);
+        let graph_eval = rt.manifest.name_eval_loss(&cfg.preset, &cfg.arch);
+        if !rt.manifest.graphs.contains_key(&graph_train) {
+            bail!(
+                "no train_step graph for preset {:?} (train graphs are \
+                 exported for the tiny preset; see aot.py)",
+                cfg.preset
+            );
+        }
+        Ok(Trainer {
+            m: zeros(&params),
+            v: zeros(&params),
+            params,
+            step: 0,
+            graph_train,
+            graph_eval,
+            train_batch: mcfg.train_batch,
+            train_seq: mcfg.train_seq,
+            cfg,
+        })
+    }
+
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.train_batch, self.train_seq + 1)
+    }
+
+    fn lr_at(&self, step: usize) -> f32 {
+        if step < self.cfg.warmup {
+            self.cfg.lr * (step + 1) as f32 / self.cfg.warmup as f32
+        } else {
+            self.cfg.lr
+        }
+    }
+
+    /// One optimizer step on a flat (batch*(seq+1)) token buffer.
+    pub fn train_step(&mut self, rt: &mut Runtime, tokens: &[i32]) -> Result<f64> {
+        let (b, t1) = self.batch_shape();
+        if tokens.len() != b * t1 {
+            bail!("batch must be {}x{} tokens", b, t1);
+        }
+        let n = self.params.len();
+        let mut args = Vec::with_capacity(3 * n + 3);
+        args.extend(self.params.iter().cloned());
+        args.extend(self.m.iter().cloned());
+        args.extend(self.v.iter().cloned());
+        args.push(HostTensor::scalar_i32(self.step as i32));
+        args.push(HostTensor::from_i32(&[b, t1], tokens.to_vec())?);
+        args.push(HostTensor::scalar_f32(self.lr_at(self.step)));
+        let mut out = rt.execute_full(&self.graph_train, &args)?;
+        if out.len() != 1 + 3 * n {
+            bail!("train_step returned {} tensors, expected {}", out.len(), 1 + 3 * n);
+        }
+        let loss = out[0].scalar()?;
+        if !loss.is_finite() {
+            bail!("training diverged at step {}: loss {loss}", self.step);
+        }
+        self.v = out.split_off(1 + 2 * n);
+        self.m = out.split_off(1 + n);
+        self.params = out.split_off(1);
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Mean eval loss over `n_batches` sampled from `stream`.
+    pub fn eval(&self, rt: &mut Runtime, stream: &[i32], n_batches: usize, seed: u64) -> Result<f64> {
+        let (b, t1) = self.batch_shape();
+        let mut rng = Rng::new(seed);
+        let n = self.params.len();
+        let mut total = 0.0;
+        for _ in 0..n_batches {
+            let batch = corpus::sample_batch(stream, b, t1, &mut rng);
+            let mut args = Vec::with_capacity(n + 1);
+            args.extend(self.params.iter().cloned());
+            args.push(HostTensor::from_i32(&[b, t1], batch)?);
+            let out = rt.execute_full(&self.graph_eval, &args)?;
+            total += out[0].scalar()?;
+        }
+        Ok(total / n_batches as f64)
+    }
+
+    /// Full training run over a corpus; returns the loss log.
+    pub fn run(&mut self, rt: &mut Runtime, corp: &corpus::Corpus) -> Result<Vec<LogPoint>> {
+        let (b, t1) = self.batch_shape();
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut log = Vec::new();
+        let t0 = Instant::now();
+        for s in 0..self.cfg.steps {
+            let batch = corpus::sample_batch(&corp.train, b, t1, &mut rng);
+            let loss = self.train_step(rt, &batch)?;
+            let do_eval = self.cfg.eval_every > 0
+                && (s + 1) % self.cfg.eval_every == 0;
+            let valid = if do_eval {
+                Some(self.eval(rt, &corp.valid, self.cfg.eval_batches, 7)?)
+            } else {
+                None
+            };
+            if (s + 1) % self.cfg.log_every == 0 || do_eval || s == 0 {
+                let pt = LogPoint {
+                    step: s + 1,
+                    train_loss: loss,
+                    valid_loss: valid,
+                    elapsed_s: t0.elapsed().as_secs_f64(),
+                };
+                println!(
+                    "[train {}/{}] step {:>5} loss {:.4} ppl {:.1}{}",
+                    self.cfg.arch,
+                    self.cfg.preset,
+                    pt.step,
+                    pt.train_loss,
+                    pt.train_loss.exp(),
+                    pt.valid_loss
+                        .map(|v| format!(" | valid {:.4} ppl {:.1}", v, v.exp()))
+                        .unwrap_or_default()
+                );
+                log.push(pt);
+            }
+        }
+        Ok(log)
+    }
+
+    /// Save parameters as a checkpoint loadable by
+    /// [`Runtime::load_checkpoint`].
+    pub fn save_checkpoint(&self, rt: &Runtime, stem: &str) -> Result<()> {
+        // Names come from the manifest weight tensor list order == params order.
+        let key = (self.cfg.preset.clone(), self.cfg.arch.clone());
+        let _ = rt
+            .manifest
+            .weights
+            .get(&key)
+            .context("weights meta for checkpoint naming")?;
+        let named: Vec<(String, HostTensor)> = self
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (format!("p{i:04}"), t.clone()))
+            .collect();
+        weights::save_tensors(stem, &named)
+    }
+
+    /// Greedy perplexity probe: next-token log-prob of a held-out stream
+    /// under the *serving* decode path (sanity link between trainer and
+    /// server numerics, used by tests).
+    pub fn logits_sanity(logits: &[f32]) -> f64 {
+        sampler::log_prob(logits, sampler::argmax(logits) as usize)
+    }
+}

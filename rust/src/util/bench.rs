@@ -1,0 +1,264 @@
+//! Bench harness (offline stand-in for criterion): warmup, adaptive
+//! iteration count, robust statistics, and CSV/markdown emission.
+//!
+//! Every `benches/*.rs` target (`cargo bench`, `harness = false`) drives
+//! this module; the figure harnesses also use [`Series`] to print the
+//! paper-style tables that EXPERIMENTS.md records.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{Percentiles, Summary};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} it {:>12.3} ms ±{:>8.3} p50 {:>10.3} p95 {:>10.3}",
+            self.name,
+            self.iters,
+            self.mean_ns / 1e6,
+            self.std_ns / 1e6,
+            self.p50_ns / 1e6,
+            self.p95_ns / 1e6,
+        )
+    }
+}
+
+/// Harness configuration. Defaults favour wall-clock-bounded runs since
+/// several of our "iterations" are full model-forward executions.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(500),
+            min_iters: 3,
+            max_iters: 100_000,
+        }
+    }
+
+    /// Time `f` repeatedly; each call is one iteration.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut summary = Summary::new();
+        let mut pcts = Percentiles::with_capacity(1 << 14);
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while (start.elapsed() < self.measure || iters < self.min_iters)
+            && iters < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            let dt = t0.elapsed().as_nanos() as f64;
+            summary.add(dt);
+            pcts.add(dt);
+            iters += 1;
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: summary.mean(),
+            std_ns: summary.std(),
+            p50_ns: pcts.p50(),
+            p95_ns: pcts.p95(),
+            min_ns: summary.min(),
+        };
+        println!("{}", r.row());
+        r
+    }
+
+    /// Time `f` once (for expensive cases like a full training epoch).
+    pub fn run_once<F: FnOnce()>(&self, name: &str, f: F) -> BenchResult {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_nanos() as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: dt,
+            std_ns: 0.0,
+            p50_ns: dt,
+            p95_ns: dt,
+            min_ns: dt,
+        };
+        println!("{}", r.row());
+        r
+    }
+}
+
+/// A named (x, y) series — one curve of a paper figure.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Emit a set of series as CSV (one `x` column, one column per series;
+/// series may have different x-grids — missing cells are blank).
+pub fn series_to_csv(series: &[Series]) -> String {
+    use std::collections::BTreeMap;
+    let mut xs: Vec<f64> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|(x, _)| *x))
+        .collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    let maps: Vec<BTreeMap<u64, f64>> = series
+        .iter()
+        .map(|s| {
+            s.points
+                .iter()
+                .map(|(x, y)| (x.to_bits(), *y))
+                .collect()
+        })
+        .collect();
+    let mut out = String::from("x");
+    for s in series {
+        out.push(',');
+        out.push_str(&s.name);
+    }
+    out.push('\n');
+    for x in xs {
+        out.push_str(&format!("{x}"));
+        for m in &maps {
+            out.push(',');
+            if let Some(y) = m.get(&x.to_bits()) {
+                out.push_str(&format!("{y}"));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Markdown table of series aligned on their x-grid (for EXPERIMENTS.md).
+pub fn series_to_markdown(series: &[Series], x_label: &str) -> String {
+    let csv = series_to_csv(series);
+    let mut lines = csv.lines();
+    let header = lines.next().unwrap_or("");
+    let mut out = String::new();
+    let cols: Vec<&str> = header.split(',').collect();
+    out.push_str(&format!("| {} |\n", {
+        let mut h = vec![x_label];
+        h.extend(&cols[1..]);
+        h.join(" | ")
+    }));
+    out.push_str(&format!("|{}\n", "---|".repeat(cols.len())));
+    for line in lines {
+        let cells: Vec<String> = line
+            .split(',')
+            .map(|c| {
+                c.parse::<f64>()
+                    .map(|v| {
+                        if v == 0.0 || (0.001..1e6).contains(&v.abs()) {
+                            format!("{v:.4}")
+                        } else {
+                            format!("{v:.3e}")
+                        }
+                    })
+                    .unwrap_or_else(|_| c.to_string())
+            })
+            .collect();
+        out.push_str(&format!("| {} |\n", cells.join(" | ")));
+    }
+    out
+}
+
+/// Write a string to `results/<name>`, creating the directory.
+pub fn write_results_file(name: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, contents)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(30),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let r = b.run("sleep_1ms", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.mean_ns > 8e5, "mean {}", r.mean_ns);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn csv_merges_grids() {
+        let mut a = Series::new("a");
+        a.push(1.0, 10.0);
+        a.push(2.0, 20.0);
+        let mut b = Series::new("b");
+        b.push(2.0, 200.0);
+        b.push(3.0, 300.0);
+        let csv = series_to_csv(&[a, b]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "x,a,b");
+        assert_eq!(lines[1], "1,10,");
+        assert_eq!(lines[2], "2,20,200");
+        assert_eq!(lines[3], "3,,300");
+    }
+
+    #[test]
+    fn markdown_has_header() {
+        let mut a = Series::new("lat");
+        a.push(1.0, 0.5);
+        let md = series_to_markdown(&[a], "N");
+        assert!(md.starts_with("| N | lat |"));
+    }
+}

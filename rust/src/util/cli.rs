@@ -1,0 +1,211 @@
+//! Declarative command-line parsing (offline stand-in for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// A parsed argument set for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Command definition: name, help, and accepted options.
+pub struct Command {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub args: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, help: &'static str) -> Self {
+        Command { name, help, args: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: &str,
+    ) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse raw args (no program/subcommand name). Unknown `--options`
+    /// are errors; `--help` short-circuits.
+    pub fn parse(&self, raw: &[String]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        for spec in &self.args {
+            if let Some(d) = &spec.default {
+                out.values.insert(spec.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if tok == "--help" || tok == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown option --{key}\n{}", self.usage())
+                    })?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("--{key} is a flag and takes no value");
+                    }
+                    out.flags.push(key.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                        }
+                    };
+                    out.values.insert(key.to_string(), val);
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: repro {} [options]\n  {}\n\noptions:\n", self.name, self.help);
+        for a in &self.args {
+            let kind = if a.is_flag { "".to_string() } else { " <value>".to_string() };
+            let def = a
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\n      {}{def}\n", a.name, a.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "test command")
+            .opt("name", "a name")
+            .opt_default("count", "a count", "5")
+            .flag("verbose", "noisy")
+    }
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = cmd().parse(&v(&["--name", "x", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.get("name"), Some("x"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.get_usize("count", 0).unwrap(), 5); // default applied
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = cmd().parse(&v(&["--count=9"])).unwrap();
+        assert_eq!(a.get_usize("count", 0).unwrap(), 9);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&v(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(&v(&["--name"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = cmd().parse(&v(&["--count", "abc"])).unwrap();
+        assert!(a.get_usize("count", 0).is_err());
+    }
+
+    #[test]
+    fn help_produces_usage() {
+        let err = cmd().parse(&v(&["--help"])).unwrap_err();
+        assert!(err.to_string().contains("usage: repro test"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Dependency-free substrates: JSON, CLI parsing, PRNG, statistics, a
+//! bench harness and a mini property-testing engine.
+//!
+//! This build is fully offline (only `xla` + `anyhow` are vendored), so the
+//! pieces a serving framework would normally pull from crates.io —
+//! serde_json, clap, rand, criterion, proptest — are implemented here as
+//! small, tested modules.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

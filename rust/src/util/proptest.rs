@@ -1,0 +1,176 @@
+//! Mini property-testing engine (offline stand-in for proptest):
+//! seeded random case generation + greedy shrinking on failure.
+//!
+//! Used by `rust/tests/proptests.rs` to check coordinator invariants
+//! (routing, batching, KV accounting, sync cadence).
+
+use super::rng::Rng;
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random inputs drawn by `gen`. On failure, try to
+/// shrink via `shrink` (which proposes smaller candidates) and panic with
+/// the smallest failing case.
+pub fn check<T, G, S, P>(name: &str, cases: usize, seed: u64, mut gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> PropResult,
+{
+    let mut rng = Rng::new(seed ^ fnv(name));
+    for case_idx in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (smallest, smallest_msg) = shrink_loop(input, msg, &shrink, &prop);
+            panic!(
+                "property '{name}' failed (case {case_idx}, seed {seed}):\n  \
+                 input: {smallest:?}\n  error: {smallest_msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: no shrinking.
+pub fn check_no_shrink<T, G, P>(name: &str, cases: usize, seed: u64, gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+{
+    check(name, cases, seed, gen, |_| Vec::new(), prop);
+}
+
+fn shrink_loop<T, S, P>(mut cur: T, mut msg: String, shrink: &S, prop: &P) -> (T, String)
+where
+    T: Clone + std::fmt::Debug,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> PropResult,
+{
+    // Greedy descent, bounded to avoid pathological shrinker loops.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in shrink(&cur) {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (cur, msg)
+}
+
+/// Standard shrinkers for common shapes.
+pub mod shrinkers {
+    /// Halving + decrement candidates for a usize (toward `lo`).
+    pub fn usize_toward(lo: usize) -> impl Fn(&usize) -> Vec<usize> {
+        move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                let mid = lo + (v - lo) / 2;
+                if mid != lo && mid != v {
+                    out.push(mid);
+                }
+                out.push(v - 1);
+            }
+            out.dedup();
+            out
+        }
+    }
+
+    /// Shrink a Vec by removing chunks, then shrinking elements.
+    pub fn vec<T: Clone>(elem: impl Fn(&T) -> Vec<T>) -> impl Fn(&Vec<T>) -> Vec<Vec<T>> {
+        move |v: &Vec<T>| {
+            let mut out = Vec::new();
+            let n = v.len();
+            if n > 0 {
+                out.push(v[..n / 2].to_vec());
+                out.push(v[n / 2..].to_vec());
+                if n > 1 {
+                    let mut w = v.clone();
+                    w.pop();
+                    out.push(w);
+                    out.push(v[1..].to_vec());
+                }
+                for (i, e) in v.iter().enumerate().take(8) {
+                    for cand in elem(e) {
+                        let mut w = v.clone();
+                        w[i] = cand;
+                        out.push(w);
+                    }
+                }
+            }
+            out
+        }
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_no_shrink("add_commutes", 200, 1, |r| (r.range(0, 100), r.range(0, 100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_small' failed")]
+    fn failing_property_panics_with_input() {
+        check_no_shrink("always_small", 500, 2, |r| r.range(0, 1000), |&v| {
+            if v < 900 {
+                Ok(())
+            } else {
+                Err(format!("{v} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_boundary() {
+        // Capture the panic message and assert the shrunk value is minimal.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "boundary",
+                500,
+                3,
+                |r| r.usize(0, 1000),
+                shrinkers::usize_toward(0),
+                |&v| if v < 500 { Ok(()) } else { Err("big".into()) },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // greedy shrink should land exactly on the boundary value 500
+        assert!(msg.contains("input: 500"), "msg: {msg}");
+    }
+
+    #[test]
+    fn vec_shrinker_reduces_length() {
+        let sh = shrinkers::vec(shrinkers::usize_toward(0));
+        let cands = sh(&vec![5usize, 6, 7, 8]);
+        assert!(cands.iter().any(|c| c.len() == 2));
+        assert!(cands.iter().any(|c| c.len() == 3));
+    }
+}

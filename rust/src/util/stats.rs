@@ -1,0 +1,275 @@
+//! Streaming statistics: online mean/variance, reservoir-free percentile
+//! tracking over bounded samples, and log-scale latency histograms.
+//! Shared by the serving metrics ([`crate::coordinator::metrics`]) and the
+//! bench harness ([`super::bench`]).
+
+/// Online mean/variance (Welford) plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.max }
+    }
+}
+
+/// Percentile tracker over a bounded sample buffer. For our workloads
+/// (≤ a few hundred thousand points) exact storage is fine; if the cap is
+/// exceeded we decimate by 2 (keeping every other sample) which preserves
+/// percentile estimates well for stationary streams.
+#[derive(Debug, Clone)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+    cap: usize,
+    stride: usize,
+    skip: usize,
+}
+
+impl Default for Percentiles {
+    fn default() -> Self {
+        Self::with_capacity(1 << 16)
+    }
+}
+
+impl Percentiles {
+    pub fn with_capacity(cap: usize) -> Self {
+        Percentiles { samples: Vec::new(), cap: cap.max(16), stride: 1, skip: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if self.skip > 0 {
+            self.skip -= 1;
+            return;
+        }
+        self.skip = self.stride - 1;
+        if self.samples.len() >= self.cap {
+            let mut i = 0;
+            self.samples.retain(|_| {
+                i += 1;
+                i % 2 == 0
+            });
+            self.stride *= 2;
+        }
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// p in [0, 100]. Nearest-rank on the sorted copy.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // nearest-rank: smallest value with at least p% of samples <= it
+        let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Log₂-bucketed histogram for latencies in nanoseconds (lock-free-friendly:
+/// fixed bucket array, add is O(1), no allocation).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    buckets: [u64; 64],
+    count: u64,
+    sum: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { buckets: [0; 64], count: 0, sum: 0.0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn add(&mut self, value_ns: u64) {
+        let b = 63 - value_ns.max(1).leading_zeros() as usize;
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += value_ns as f64;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 { f64::NAN } else { self.sum / self.count as f64 }
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound of the
+    /// bucket containing the rank).
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Ordinary least squares fit y = a + b·x. Used by the figure harnesses to
+/// report empirical slopes (e.g. latency-vs-N linearity checks).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (sy / n, 0.0);
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Coefficient of determination for a fit.
+pub fn r_squared(xs: &[f64], ys: &[f64], a: f64, b: f64) -> f64 {
+    let mean_y = ys.iter().sum::<f64>() / ys.len() as f64;
+    let ss_tot: f64 = ys.iter().map(|y| (y - mean_y).powi(2)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (y - (a + b * x)).powi(2))
+        .sum();
+    if ss_tot == 0.0 {
+        1.0
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.var() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn percentiles_exact_small() {
+        let mut p = Percentiles::default();
+        for i in 1..=100 {
+            p.add(i as f64);
+        }
+        assert_eq!(p.p50(), 50.0);
+        assert_eq!(p.percentile(0.0), 1.0);
+        assert_eq!(p.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn percentiles_decimation_keeps_distribution() {
+        let mut p = Percentiles::with_capacity(64);
+        for i in 0..10_000 {
+            p.add((i % 1000) as f64);
+        }
+        assert!(p.len() <= 64 + 1);
+        let med = p.p50();
+        assert!((300.0..700.0).contains(&med), "median {med}");
+    }
+
+    #[test]
+    fn histogram_percentile_monotone() {
+        let mut h = LogHistogram::default();
+        for v in [100u64, 1_000, 10_000, 100_000, 1_000_000] {
+            for _ in 0..100 {
+                h.add(v);
+            }
+        }
+        assert!(h.percentile_ns(10.0) <= h.percentile_ns(90.0));
+        assert_eq!(h.count(), 500);
+    }
+
+    #[test]
+    fn fit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r_squared(&xs, &ys, a, b) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,170 @@
+//! End-to-end engine + HTTP tests over the tiny artifacts: batched serving
+//! must be correct (identical to solo generation), bounded (KV slots), and
+//! observable (metrics), and the HTTP frontend must round-trip JSON.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use tconstformer::coordinator::{Engine, EngineConfig, Request};
+use tconstformer::model::{Arch, SyncMode};
+use tconstformer::server::http;
+use tconstformer::server::ServerConfig;
+use tconstformer::util::json::Json;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn tiny_cfg(arch: Arch) -> EngineConfig {
+    EngineConfig {
+        artifacts_dir: "artifacts".into(),
+        preset: "tiny".into(),
+        arch,
+        sync_mode: SyncMode::Incremental,
+        max_lanes: 4,
+        sched: Default::default(),
+        checkpoint: None,
+    }
+}
+
+fn prompt(n: usize, seed: usize) -> Vec<i32> {
+    (0..n).map(|i| 1 + ((i * 37 + seed * 101) % 255) as i32).collect()
+}
+
+#[test]
+fn engine_batched_equals_sequential() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    // Sequential: one engine, one request at a time.
+    let mut seq_engine = Engine::new(&EngineConfig { max_lanes: 1, ..tiny_cfg(Arch::TConst) }).unwrap();
+    let mut solo = Vec::new();
+    for i in 0..6 {
+        let out = seq_engine
+            .run_workload(vec![Request::greedy(i, prompt(5 + 7 * i as usize, i as usize), 10)])
+            .unwrap();
+        solo.push(out[0].tokens.clone());
+    }
+
+    // Concurrent: all six queued at once, batched decode.
+    let mut batch_engine = Engine::new(&tiny_cfg(Arch::TConst)).unwrap();
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| Request::greedy(i, prompt(5 + 7 * i as usize, i as usize), 10))
+        .collect();
+    let mut out = batch_engine.run_workload(reqs).unwrap();
+    out.sort_by_key(|r| r.id);
+    let batched: Vec<Vec<i32>> = out.iter().map(|r| r.tokens.clone()).collect();
+
+    assert_eq!(solo, batched, "continuous batching changed outputs");
+}
+
+#[test]
+fn engine_respects_max_lanes_and_completes_all() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine = Engine::new(&EngineConfig { max_lanes: 2, ..tiny_cfg(Arch::TConst) }).unwrap();
+    let reqs: Vec<Request> = (0..7)
+        .map(|i| Request::greedy(i, prompt(4, i as usize), 6))
+        .collect();
+    let out = engine.run_workload(reqs).unwrap();
+    assert_eq!(out.len(), 7);
+    for r in &out {
+        assert_eq!(r.tokens.len(), 6);
+        assert_eq!(r.finish_reason.as_str(), "length");
+        assert!(r.metrics.ttft_ms > 0.0);
+        assert!(r.metrics.total_ms >= r.metrics.ttft_ms);
+    }
+    let m = engine.metrics_json();
+    assert_eq!(m.get("requests_completed").as_usize(), Some(7));
+    assert_eq!(m.get("tokens_generated").as_usize(), Some(42));
+    assert!(m.get("kv_bytes_peak").as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn engine_stop_token_truncates() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine = Engine::new(&tiny_cfg(Arch::TConst)).unwrap();
+    // With untrained weights we can't force a stop token reliably; instead
+    // pick the stop token as whatever greedy produces second, and re-run.
+    let probe = engine
+        .run_workload(vec![Request::greedy(1, prompt(6, 1), 5)])
+        .unwrap();
+    let second = probe[0].tokens[1];
+    let mut req = Request::greedy(2, prompt(6, 1), 5);
+    req.stop_token = Some(second);
+    let out = engine.run_workload(vec![req]).unwrap();
+    assert_eq!(out[0].finish_reason.as_str(), "stop");
+    // generation must stop at the first occurrence of the stop token
+    // (untrained models often repeat, so it may appear before position 1)
+    let cut = probe[0].tokens.iter().position(|&t| t == second).unwrap();
+    assert_eq!(out[0].tokens, probe[0].tokens[..cut].to_vec());
+}
+
+#[test]
+fn engine_all_archs_serve() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    for arch in [Arch::Base, Arch::TLin, Arch::TConst] {
+        let mut engine = Engine::new(&tiny_cfg(arch)).unwrap();
+        let out = engine
+            .run_workload(vec![Request::greedy(1, prompt(40, 3), 5)])
+            .unwrap();
+        assert_eq!(out[0].tokens.len(), 5, "{:?}", arch);
+    }
+}
+
+#[test]
+fn http_server_round_trip() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let handle = Engine::spawn(tiny_cfg(Arch::TConst)).unwrap();
+    let addr = "127.0.0.1:8191";
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let h2 = handle.clone();
+    let server = std::thread::spawn(move || {
+        http::serve(&ServerConfig { addr: addr.to_string() }, h2, Some(stop2)).unwrap();
+    });
+    // wait for the listener
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    let (code, body) = http::http_get(addr, "/healthz").unwrap();
+    assert_eq!(code, 200, "{body}");
+
+    let (code, body) = http::http_post(
+        addr,
+        "/generate",
+        r#"{"prompt": "hello", "max_new_tokens": 4}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("tokens").as_arr().unwrap().len(), 4);
+    assert_eq!(j.get("finish_reason").as_str(), Some("length"));
+    assert!(j.get("metrics").get("ttft_ms").as_f64().unwrap() > 0.0);
+
+    let (code, body) = http::http_get(addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    let m = Json::parse(&body).unwrap();
+    assert_eq!(m.get("requests_completed").as_usize(), Some(1));
+
+    let (code, _) = http::http_get(addr, "/nope").unwrap();
+    assert_eq!(code, 404);
+
+    let (code, body) = http::http_post(addr, "/generate", "not json").unwrap();
+    assert_eq!(code, 400, "{body}");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+    handle.shutdown();
+}

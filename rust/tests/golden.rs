@@ -1,0 +1,58 @@
+//! Golden-vector integration tests: every tiny graph's compiled artifact,
+//! executed through PJRT from Rust, must reproduce the outputs Python
+//! recorded at export time (python/compile/aot.py::export_golden).
+//!
+//! This is the L2↔L3 numeric seam: if it holds, the Rust serving stack is
+//! running the same math the (kernel-validated) JAX graphs define.
+
+use tconstformer::runtime::{weights, HostTensor, Runtime};
+
+const ATOL: f64 = 2e-3; // fp32 across two different executors
+
+fn artifacts_dir() -> String {
+    std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
+}
+
+#[test]
+fn golden_vectors_all_tiny_graphs() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let golden = rt.manifest.golden.clone();
+    assert!(!golden.is_empty(), "manifest has no golden vectors");
+    let mut checked = 0;
+    for g in &golden {
+        let meta = rt.manifest.graph(&g.graph).unwrap().clone();
+        let dir = rt.manifest.dir.join("golden");
+        let args: Vec<HostTensor> = weights::load_tensors(dir.join(&g.args_stem))
+            .unwrap()
+            .into_iter()
+            .map(|(_, t)| t)
+            .collect();
+        let expected = weights::load_tensors(dir.join(&g.results_stem)).unwrap();
+        let arg_refs: Vec<&HostTensor> = args.iter().collect();
+        let got = rt
+            .execute(&g.graph, &arg_refs)
+            .unwrap_or_else(|e| panic!("executing {}: {e:#}", g.graph));
+        assert_eq!(got.len(), expected.len(), "{}: result arity", g.graph);
+        for ((name, exp), act) in expected.iter().zip(&got) {
+            let diff = exp.max_abs_diff(act).unwrap_or_else(|e| {
+                panic!("{}: result {name}: {e:#}", g.graph)
+            });
+            assert!(
+                diff <= ATOL,
+                "{}: result {name} differs by {diff:.3e} (> {ATOL:.0e}); meta kind {}",
+                g.graph,
+                meta.kind
+            );
+        }
+        checked += 1;
+    }
+    println!("golden: {checked} graphs verified against python outputs");
+}

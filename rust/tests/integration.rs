@@ -1,0 +1,245 @@
+//! Driver-level integration tests over the compiled tiny artifacts:
+//! cache-schedule semantics (the paper's hit/miss state machine), state
+//! growth laws (Eq. 6/7 at the serving layer), and determinism.
+
+use tconstformer::analytic::memory;
+use tconstformer::model::state::SeqState;
+use tconstformer::model::{Arch, ModelDriver, SyncMode};
+use tconstformer::runtime::Runtime;
+
+fn artifacts_dir() -> String {
+    std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn rt() -> Runtime {
+    Runtime::load(artifacts_dir()).unwrap()
+}
+
+fn prompt(n: usize) -> Vec<i32> {
+    (0..n).map(|i| 1 + (i * 31 % 255) as i32).collect()
+}
+
+#[test]
+fn manifest_is_internally_consistent() {
+    require_artifacts!();
+    let rt = rt();
+    rt.manifest.validate().unwrap();
+    // every referenced weight file loads with the advertised tensor count
+    for ((preset, arch), _) in rt.manifest.weights.clone() {
+        let mut r2 = Runtime::load(artifacts_dir()).unwrap();
+        let n = r2.load_params(&preset, &arch).unwrap().len();
+        assert!(n > 10, "{preset}/{arch}: {n} params");
+    }
+}
+
+#[test]
+fn tconst_greedy_generation_is_deterministic() {
+    require_artifacts!();
+    let mut rt = rt();
+    let driver = ModelDriver::new(&rt, "tiny", Arch::TConst).unwrap();
+    let run = |rt: &mut Runtime| {
+        let mut st = driver.new_state();
+        let logits = driver.prefill(rt, &mut st, &prompt(10)).unwrap();
+        let mut tok = tconstformer::model::sampler::argmax(&logits);
+        let mut out = vec![tok];
+        for _ in 0..8 {
+            let l = driver.decode_batch(rt, &mut [&mut st], &[tok]).unwrap();
+            tok = tconstformer::model::sampler::argmax(&l[0]);
+            out.push(tok);
+        }
+        out
+    };
+    assert_eq!(run(&mut rt), run(&mut rt));
+}
+
+#[test]
+fn tconst_state_bytes_constant_and_syncs_counted() {
+    require_artifacts!();
+    let mut rt = rt();
+    let driver = ModelDriver::new(&rt, "tiny", Arch::TConst).unwrap();
+    let w = driver.cfg.w_og; // 32 for tiny
+    let mut st = driver.new_state();
+    driver.prefill(&mut rt, &mut st, &prompt(2 * w + 5)).unwrap();
+    let b0 = st.bytes();
+    assert_eq!(b0, memory::tconst_bytes(&driver.cfg, 1), "Eq. 7 at serving layer");
+    let syncs0 = match &st {
+        SeqState::TConst(s) => s.syncs,
+        _ => unreachable!(),
+    };
+    assert_eq!(syncs0, 2, "one sync per full prefill window");
+
+    // decode far past several window boundaries
+    let mut tok = 65;
+    for _ in 0..(2 * w + 3) {
+        let l = driver.decode_batch(&mut rt, &mut [&mut st], &[tok]).unwrap();
+        tok = tconstformer::model::sampler::argmax(&l[0]);
+        assert_eq!(st.bytes(), b0, "O(1) KV cache must never grow");
+    }
+    let s = match &st {
+        SeqState::TConst(s) => s,
+        _ => unreachable!(),
+    };
+    assert!(s.syncs > syncs0, "periodic sync events must fire during decode");
+    // sync cadence: one per W_og generated tokens
+    let expected = (2 * w + 5 + 2 * w + 3) / w;
+    assert_eq!(s.syncs as usize, expected, "sync cadence (paper's k={w})");
+}
+
+#[test]
+fn base_state_grows_by_buckets() {
+    require_artifacts!();
+    let mut rt = rt();
+    let driver = ModelDriver::new(&rt, "tiny", Arch::Base).unwrap();
+    let mut st = driver.new_state();
+    driver.prefill(&mut rt, &mut st, &prompt(100)).unwrap();
+    let b128 = st.bytes();
+    assert_eq!(b128, memory::base_bytes(&driver.cfg, 1, 128), "Eq. 6 at bucket 128");
+
+    // decode across the 128 -> 512 bucket boundary
+    let mut tok = 65;
+    for _ in 0..40 {
+        let l = driver.decode_batch(&mut rt, &mut [&mut st], &[tok]).unwrap();
+        tok = tconstformer::model::sampler::argmax(&l[0]);
+    }
+    let b512 = st.bytes();
+    assert_eq!(b512, memory::base_bytes(&driver.cfg, 1, 512), "Eq. 6 at bucket 512");
+    assert!(b512 > b128);
+}
+
+#[test]
+fn tlin_history_grows_and_tconst_does_not() {
+    require_artifacts!();
+    let mut rt = rt();
+    let tlin = ModelDriver::new(&rt, "tiny", Arch::TLin).unwrap();
+    let tconst = ModelDriver::new(&rt, "tiny", Arch::TConst).unwrap();
+    let w = tlin.cfg.w_og;
+
+    // short history
+    let mut st_l = tlin.new_state();
+    let mut st_c = tconst.new_state();
+    tlin.prefill(&mut rt, &mut st_l, &prompt(w)).unwrap();
+    tconst.prefill(&mut rt, &mut st_c, &prompt(w)).unwrap();
+    let l1 = st_l.bytes();
+    let c1 = st_c.bytes();
+
+    // 5x longer history, fresh sequences
+    let mut st_l5 = tlin.new_state();
+    tlin.prefill(&mut rt, &mut st_l5, &prompt(5 * w)).unwrap();
+    let mut st_c5 = tconst.new_state();
+    tconst.prefill(&mut rt, &mut st_c5, &prompt(5 * w)).unwrap();
+
+    assert!(st_l5.bytes() > l1, "tlin raw-history cache must grow with N");
+    assert_eq!(st_c5.bytes(), c1, "tconst cache must not grow with N");
+    // 5w = 160 tokens: capacity check (hist_len+w > 128) migrated to bucket 512
+    assert_eq!(st_l5.bytes(), memory::tlin_bytes(&tlin.cfg, 1, 512));
+}
+
+#[test]
+fn batched_decode_matches_single_lane() {
+    require_artifacts!();
+    let mut rt = rt();
+    let driver = ModelDriver::new(&rt, "tiny", Arch::TConst).unwrap();
+
+    // Four lanes with different prompts; batch-decode them together and
+    // compare with solo decoding. Greedy tokens must match exactly.
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|i| prompt(6 + 9 * i))
+        .collect();
+
+    let solo: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| {
+            let mut st = driver.new_state();
+            let logits = driver.prefill(&mut rt, &mut st, p).unwrap();
+            let mut tok = tconstformer::model::sampler::argmax(&logits);
+            let mut out = vec![tok];
+            for _ in 0..6 {
+                let l = driver.decode_batch(&mut rt, &mut [&mut st], &[tok]).unwrap();
+                tok = tconstformer::model::sampler::argmax(&l[0]);
+                out.push(tok);
+            }
+            out
+        })
+        .collect();
+
+    // batched
+    let mut states: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let mut st = driver.new_state();
+            let logits = driver.prefill(&mut rt, &mut st, p).unwrap();
+            (st, tconstformer::model::sampler::argmax(&logits))
+        })
+        .collect();
+    let mut batched: Vec<Vec<i32>> = states.iter().map(|(_, t)| vec![*t]).collect();
+    for _ in 0..6 {
+        let tokens: Vec<i32> = states.iter().map(|(_, t)| *t).collect();
+        let mut refs: Vec<&mut SeqState> = Vec::new();
+        let (s0, rest) = states.split_at_mut(1);
+        // collect &mut to each state without cloning
+        refs.push(&mut s0[0].0);
+        let (s1, rest2) = rest.split_at_mut(1);
+        refs.push(&mut s1[0].0);
+        let (s2, s3) = rest2.split_at_mut(1);
+        refs.push(&mut s2[0].0);
+        refs.push(&mut s3[0].0);
+        let logits = driver.decode_batch(&mut rt, refs.as_mut_slice(), &tokens).unwrap();
+        for i in 0..4 {
+            let t = tconstformer::model::sampler::argmax(&logits[i]);
+            states[i].1 = t;
+            batched[i].push(t);
+        }
+    }
+    assert_eq!(solo, batched, "continuous batching must not change outputs");
+}
+
+#[test]
+fn sync_full_mode_runs_and_differs_only_numerically() {
+    require_artifacts!();
+    let mut rt = rt();
+    let inc = ModelDriver::new(&rt, "tiny", Arch::TConst)
+        .unwrap()
+        .with_sync_mode(SyncMode::Incremental);
+    let full = ModelDriver::new(&rt, "tiny", Arch::TConst)
+        .unwrap()
+        .with_sync_mode(SyncMode::Full);
+    let p = prompt(80); // > 2 windows for tiny (w=32)
+    let mut si = inc.new_state();
+    let mut sf = full.new_state();
+    let li = inc.prefill(&mut rt, &mut si, &p).unwrap();
+    let lf = full.prefill(&mut rt, &mut sf, &p).unwrap();
+    assert_eq!(li.len(), lf.len());
+    // Different sync algorithms -> different (finite) logits, same state size
+    assert!(li.iter().all(|x| x.is_finite()));
+    assert!(lf.iter().all(|x| x.is_finite()));
+    assert_eq!(si.bytes(), sf.bytes(), "both modes keep O(1) state");
+}
+
+#[test]
+fn exec_stats_are_recorded() {
+    require_artifacts!();
+    let mut rt = rt();
+    let driver = ModelDriver::new(&rt, "tiny", Arch::TConst).unwrap();
+    let mut st = driver.new_state();
+    driver.prefill(&mut rt, &mut st, &prompt(5)).unwrap();
+    driver.decode_batch(&mut rt, &mut [&mut st], &[65]).unwrap();
+    let stats = rt.stats();
+    assert!(stats.keys().any(|k| k.contains("tconst_window")));
+    assert!(stats.keys().any(|k| k.contains("tconst_decode")));
+    for st in stats.values() {
+        assert!(st.calls > 0 && st.total_ns > 0);
+    }
+}

@@ -1,0 +1,372 @@
+//! Property-based tests (via the in-crate mini-proptest engine) over the
+//! coordinator's pure logic and the substrate modules. No artifacts or
+//! PJRT needed — these run everywhere, fast.
+
+use tconstformer::analytic::{cost, memory};
+use tconstformer::coordinator::kv_manager::{KvLimits, KvManager};
+use tconstformer::coordinator::scheduler::{SchedConfig, Scheduler};
+use tconstformer::model::batch::{concat_axis, grow_axis, insert_axis, split_axis};
+use tconstformer::model::state::{SeqState, TConstState};
+use tconstformer::runtime::{HostTensor, ModelConfig};
+use tconstformer::util::json::Json;
+use tconstformer::util::proptest::{check, check_no_shrink, shrinkers};
+use tconstformer::util::rng::Rng;
+
+fn arb_cfg(r: &mut Rng) -> ModelConfig {
+    let h_inner = r.usize(1, 4);
+    let n_block = r.usize(1, 3);
+    ModelConfig {
+        name: "prop".into(),
+        vocab: 256,
+        d_model: 16 * r.usize(1, 8),
+        n_head: 4,
+        n_layer: n_block * (h_inner + 2),
+        max_seq: 2048,
+        w_oh: 16 * r.usize(1, 16),
+        w_og: 16 * r.usize(1, 16),
+        n_block,
+        h_inner,
+        ffn_mult: 4,
+        train_seq: 512,
+        train_batch: 2,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_covers_every_running_lane_once() {
+    check_no_shrink(
+        "scheduler_coverage",
+        300,
+        1,
+        |r| {
+            let running: Vec<u64> = (0..r.range(0, 40)).collect();
+            let waiting: Vec<u64> = (0..r.range(0, 10)).collect();
+            let free = r.usize(0, 8);
+            let max_batch = r.usize(1, 6);
+            (running, waiting, free, max_batch)
+        },
+        |(running, waiting, free, max_batch)| {
+            let mut s = Scheduler::new(SchedConfig {
+                max_batch: *max_batch,
+                prefill_per_round: 2,
+            });
+            let plan = s.plan_round(waiting, running, *free);
+            let mut seen: Vec<u64> = plan.groups.concat();
+            seen.sort();
+            let mut expect = running.clone();
+            expect.sort();
+            if seen != expect {
+                return Err(format!("coverage broken: {seen:?} vs {expect:?}"));
+            }
+            if plan.groups.iter().any(|g| g.len() > *max_batch || g.is_empty()) {
+                return Err("bad group size".into());
+            }
+            if plan.admit.len() > *free || plan.admit.len() > 2 {
+                return Err("admission over budget".into());
+            }
+            // FIFO: admitted ids must be the waiting prefix
+            if plan.admit != waiting[..plan.admit.len()] {
+                return Err("admission not FIFO".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_rotation_is_fair() {
+    // Over many rounds with max_batch=1, every lane must lead equally often.
+    let running: Vec<u64> = (0..5).collect();
+    let mut s = Scheduler::new(SchedConfig { max_batch: 1, prefill_per_round: 1 });
+    let mut lead_counts = [0usize; 5];
+    for _ in 0..100 {
+        let plan = s.plan_round(&[], &running, 0);
+        lead_counts[plan.groups[0][0] as usize] += 1;
+    }
+    assert!(lead_counts.iter().all(|&c| c == 20), "{lead_counts:?}");
+}
+
+// ---------------------------------------------------------------------------
+// KV manager invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kv_manager_accounting_is_exact() {
+    check_no_shrink(
+        "kv_accounting",
+        100,
+        2,
+        |r| {
+            // sequence of alloc/free ops
+            let ops: Vec<(bool, u64)> = (0..r.range(1, 30))
+                .map(|i| (r.bool(0.6), i))
+                .collect();
+            let max_slots = r.usize(1, 12);
+            (ops, max_slots)
+        },
+        |(ops, max_slots)| {
+            let mut r = Rng::new(9);
+            let cfg = arb_cfg(&mut r);
+            let mut kv = KvManager::new(KvLimits { max_slots: *max_slots, max_bytes: 0 });
+            let mut live = std::collections::BTreeSet::new();
+            for (is_alloc, id) in ops {
+                if *is_alloc {
+                    let st = SeqState::TConst(TConstState::new(&cfg));
+                    match kv.alloc(*id, st) {
+                        Ok(()) => {
+                            if live.len() >= *max_slots {
+                                return Err("alloc above slot limit".into());
+                            }
+                            live.insert(*id);
+                        }
+                        Err(_) => {
+                            if live.len() < *max_slots && !live.contains(id) {
+                                return Err("spurious alloc failure".into());
+                            }
+                        }
+                    }
+                } else if live.contains(id) {
+                    kv.free(*id).map_err(|e| e.to_string())?;
+                    live.remove(id);
+                } else if kv.free(*id).is_ok() {
+                    return Err("freed a non-live id".into());
+                }
+                let per = memory::tconst_bytes(&cfg, 1);
+                if kv.total_bytes() != per * live.len() as u64 {
+                    return Err(format!(
+                        "byte meter {} != {}x{}",
+                        kv.total_bytes(),
+                        live.len(),
+                        per
+                    ));
+                }
+                if kv.len() != live.len() {
+                    return Err("slot count drift".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Tensor batching algebra
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_concat_split_roundtrip_any_axis() {
+    check_no_shrink(
+        "concat_split_roundtrip",
+        200,
+        3,
+        |r| {
+            let rank = r.usize(1, 5);
+            let shape: Vec<usize> = (0..rank).map(|_| r.usize(1, 5)).collect();
+            let axis = r.usize(0, rank);
+            let parts = r.usize(1, 4);
+            let seed = r.next_u64();
+            (shape, axis, parts, seed)
+        },
+        |(shape, axis, parts, seed)| {
+            let mut r = Rng::new(*seed);
+            let tensors: Vec<HostTensor> = (0..*parts)
+                .map(|_| {
+                    let n: usize = shape.iter().product();
+                    HostTensor::from_f32(
+                        shape,
+                        (0..n).map(|_| r.f32()).collect(),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let refs: Vec<&HostTensor> = tensors.iter().collect();
+            let cat = concat_axis(&refs, *axis).map_err(|e| e.to_string())?;
+            if cat.shape()[*axis] != shape[*axis] * parts {
+                return Err("bad concat shape".into());
+            }
+            let back = split_axis(&cat, *axis, *parts).map_err(|e| e.to_string())?;
+            for (a, b) in tensors.iter().zip(&back) {
+                if a != b {
+                    return Err("roundtrip mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_insert_then_grow_preserves_content() {
+    check_no_shrink(
+        "insert_grow",
+        200,
+        4,
+        |r| (r.usize(1, 6), r.usize(1, 6), r.usize(1, 4), r.next_u64()),
+        |(outer, len, ins, seed)| {
+            let mut r = Rng::new(*seed);
+            let cap = len + ins + r.usize(0, 4);
+            let mut dst = HostTensor::zeros_f32(&[*outer, cap, 3]);
+            let src = HostTensor::from_f32(
+                &[*outer, *ins, 3],
+                (0..outer * ins * 3).map(|_| 1.0 + r.f32()).collect(),
+            )
+            .unwrap();
+            let off = r.usize(0, cap - ins + 1);
+            insert_axis(&mut dst, &src, 1, off).map_err(|e| e.to_string())?;
+            let grown = grow_axis(&dst, 1, cap + 5).map_err(|e| e.to_string())?;
+            // src must be recoverable from grown at the same offset
+            let d = grown.as_f32().unwrap();
+            let s = src.as_f32().unwrap();
+            for o in 0..*outer {
+                for i in 0..*ins {
+                    for c in 0..3 {
+                        let dv = d[(o * (cap + 5) + off + i) * 3 + c];
+                        let sv = s[(o * ins + i) * 3 + c];
+                        if dv != sv {
+                            return Err(format!("lost value at {o},{i},{c}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Analytic model properties (Eq. 1–7)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_eq1_linearity_and_eq5_constancy() {
+    check_no_shrink(
+        "cost_model_shape",
+        200,
+        5,
+        |r| (arb_cfg(r), r.range(1, 1 << 20), r.range(1, 1 << 20)),
+        |(cfg, n1, n2)| {
+            // Eq. 1 is exactly linear: finite differences are constant.
+            let (c1, c0) = cost::tconst_miss_coeffs(cfg);
+            if cost::tconst_miss(cfg, *n1) != c1 * n1 + c0 {
+                return Err("miss not linear".into());
+            }
+            // Eq. 5 is constant in N (trivially: no N argument) but must
+            // also dominate the cached-hit variant.
+            if cost::tconst_hit_cached(cfg) > cost::tconst_hit_eq5(cfg) {
+                return Err("cached hit above eq5 upper bound".into());
+            }
+            // baselines grow: larger N never gets cheaper
+            let (lo, hi) = if n1 <= n2 { (*n1, *n2) } else { (*n2, *n1) };
+            if cost::base_hit(cfg, lo) > cost::base_hit(cfg, hi)
+                || cost::tlin_hit(cfg, lo) > cost::tlin_hit(cfg, hi)
+            {
+                return Err("baseline hit cost not monotone".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_memory_model_matches_states() {
+    check_no_shrink(
+        "memory_model_vs_state",
+        100,
+        6,
+        |r| {
+            let cfg = arb_cfg(r);
+            (cfg,)
+        },
+        |(cfg,)| {
+            let st = TConstState::new(cfg);
+            if st.bytes() != memory::tconst_bytes(cfg, 1) {
+                return Err(format!(
+                    "state {} != model {}",
+                    st.bytes(),
+                    memory::tconst_bytes(cfg, 1)
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_amortized_cost_constant_iff_incremental() {
+    check_no_shrink(
+        "amortized_o1",
+        100,
+        7,
+        |r| (arb_cfg(r), r.range(1_000, 1 << 22)),
+        |(cfg, n)| {
+            let a = cost::tconst_amortized(cfg, 1_000, false);
+            let b = cost::tconst_amortized(cfg, *n, false);
+            if (a - b).abs() > 1e-9 {
+                return Err("incremental amortized cost not constant".into());
+            }
+            let af = cost::tconst_amortized(cfg, 1_000, true);
+            let bf = cost::tconst_amortized(cfg, (*n).max(2_000), true);
+            if bf < af {
+                return Err("full-sync amortized cost should grow".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// JSON round-trip property
+// ---------------------------------------------------------------------------
+
+fn arb_json(r: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { r.usize(0, 4) } else { r.usize(0, 6) } {
+        0 => Json::Null,
+        1 => Json::Bool(r.bool(0.5)),
+        2 => Json::Num((r.range(0, 2_000_000) as f64 - 1e6) / 64.0),
+        3 => Json::Str(
+            (0..r.usize(0, 12))
+                .map(|_| char::from(r.range(32, 127) as u8))
+                .collect(),
+        ),
+        4 | 5 if depth > 0 => {
+            if r.bool(0.5) {
+                Json::Arr((0..r.usize(0, 4)).map(|_| arb_json(r, depth - 1)).collect())
+            } else {
+                Json::Obj(
+                    (0..r.usize(0, 4))
+                        .map(|i| (format!("k{i}"), arb_json(r, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+        _ => Json::Null,
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check(
+        "json_roundtrip",
+        500,
+        8,
+        |r| {
+            let seed = r.next_u64();
+            seed as usize
+        },
+        shrinkers::usize_toward(0),
+        |&seed| {
+            let mut r = Rng::new(seed as u64);
+            let v = arb_json(&mut r, 3);
+            let txt = v.to_string();
+            let back = Json::parse(&txt).map_err(|e| format!("{e} in {txt}"))?;
+            if back != v {
+                return Err(format!("{v:?} -> {txt} -> {back:?}"));
+            }
+            Ok(())
+        },
+    );
+}
