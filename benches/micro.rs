@@ -2,11 +2,14 @@
 //! * decode_hot_path: full `decode_batch` vs the raw PJRT execute time —
 //!   the difference is coordinator overhead (gather/scatter, upload,
 //!   sampling), which DESIGN.md §10 bounds at <10% of step time at B=4;
+//! * host copy traffic per decode step: legacy gather/scatter vs the
+//!   resident batch-major arena (DESIGN.md D5) — bytes, state-tensor
+//!   allocations, and gather/scatter calls per step, before/after;
 //! * tensor batching algebra (concat/split/insert) at decode shapes;
 //! * JSON parse of the real manifest;
 //! * sampler + rng throughput.
 
-use tconstformer::model::batch::{concat_axis, split_axis};
+use tconstformer::model::batch::{concat_axis, copy_metrics, split_axis};
 use tconstformer::model::state::SeqState;
 use tconstformer::model::{Arch, ModelDriver};
 use tconstformer::runtime::{HostTensor, Runtime};
@@ -36,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         driver.decode_batch(&mut rt, refs.as_mut_slice(), &toks)?; // warm + compile
     }
     rt.reset_stats();
+    copy_metrics::reset();
     let t0 = std::time::Instant::now();
     let reps = 30;
     for _ in 0..reps {
@@ -43,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         driver.decode_batch(&mut rt, refs.as_mut_slice(), &toks)?;
     }
     let total_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let legacy_copy = copy_metrics::snapshot();
     let exec_ns: u64 = rt.stats().values().map(|s| s.total_ns).sum();
     let exec_ms = exec_ns as f64 / 1e6;
     let overhead = (total_ms - exec_ms) / total_ms * 100.0;
@@ -51,6 +56,44 @@ fn main() -> anyhow::Result<()> {
         total_ms / reps as f64,
         exec_ms / reps as f64,
         overhead
+    );
+
+    // --- host copy traffic: gather/scatter vs resident arena ----------------
+    // Same lanes, resident in a batch-major arena. The legacy path pays
+    // O(batch x state_bytes) of memcpy + allocation per step; the arena's
+    // steady state pays zero (sync steps, 1-in-W_og, still copy one lane).
+    let cap = rt
+        .manifest
+        .batch_bucket_for(lanes)
+        .expect("no batch bucket for bench lanes");
+    let mut arena = driver.new_arena(cap);
+    let mut slots = Vec::new();
+    for st in &states {
+        let slot = arena.alloc()?;
+        arena.load_state(slot, st)?;
+        slots.push(slot);
+    }
+    driver.decode_resident(&mut rt, &mut arena, &slots, &toks)?; // warm
+    copy_metrics::reset();
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        driver.decode_resident(&mut rt, &mut arena, &slots, &toks)?;
+    }
+    let arena_ms = t0.elapsed().as_secs_f64() * 1000.0 / reps as f64;
+    let arena_copy = copy_metrics::snapshot();
+    let per = |v: u64| v as f64 / reps as f64;
+    println!(
+        "host copy/step  legacy: {:>12.1} B {:>6.2} allocs {:>6.2} gather-scatter calls",
+        per(legacy_copy.bytes_copied),
+        per(legacy_copy.tensor_allocs),
+        per(legacy_copy.gather_scatter_calls),
+    );
+    println!(
+        "host copy/step  arena:  {:>12.1} B {:>6.2} allocs {:>6.2} gather-scatter calls ({:.3} ms/round)",
+        per(arena_copy.bytes_copied),
+        per(arena_copy.tensor_allocs),
+        per(arena_copy.gather_scatter_calls),
+        arena_ms,
     );
 
     // --- batching algebra at decode shapes -----------------------------------

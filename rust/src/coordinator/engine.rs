@@ -19,6 +19,7 @@ use super::metrics::EngineMetrics;
 use super::request::{FinishReason, Request, RequestMetrics, Response};
 use super::scheduler::{SchedConfig, Scheduler};
 use crate::data::tokenizer::BOS;
+use crate::model::batch::copy_metrics;
 use crate::model::{sampler, Arch, ModelDriver, SyncMode};
 use crate::runtime::Runtime;
 use crate::util::json::Json;
@@ -36,6 +37,10 @@ pub struct EngineConfig {
     /// Optional trained checkpoint (tensor-file stem) to load over the
     /// seeded init weights.
     pub checkpoint: Option<String>,
+    /// Serve from a resident batch-major lane arena (DESIGN.md D5) — the
+    /// zero-gather decode path. `false` falls back to the legacy per-lane
+    /// gather/scatter path (kept for parity testing and A/B benches).
+    pub resident: bool,
 }
 
 impl Default for EngineConfig {
@@ -48,6 +53,7 @@ impl Default for EngineConfig {
             max_lanes: 4,
             sched: SchedConfig::default(),
             checkpoint: None,
+            resident: true,
         }
     }
 }
@@ -77,6 +83,9 @@ pub struct Engine {
     kv: KvManager,
     sched: Scheduler,
     max_lanes: usize,
+    /// Whether sequences live in a resident arena (set from the config,
+    /// falling back to legacy when no batch bucket covers `max_lanes`).
+    resident: bool,
     pub metrics: EngineMetrics,
     waiting: VecDeque<Pending>,
     live: Vec<Live>,
@@ -94,18 +103,41 @@ impl Engine {
         if let Some(ck) = &cfg.checkpoint {
             rt.load_checkpoint(&cfg.preset, cfg.arch.as_str(), ck)?;
         }
+        let mut kv = KvManager::new(KvLimits { max_slots: cfg.max_lanes, max_bytes: 0 });
+        let mut resident = cfg.resident;
+        if resident {
+            match rt.manifest.batch_bucket_for(cfg.max_lanes) {
+                Some(cap) => kv.attach_arena(driver.new_arena(cap)),
+                None => {
+                    // No exported batch bucket covers max_lanes: serve via
+                    // the legacy per-lane path rather than failing startup.
+                    eprintln!(
+                        "[engine] no batch bucket holds {} lanes; using the \
+                         gather/scatter decode path",
+                        cfg.max_lanes
+                    );
+                    resident = false;
+                }
+            }
+        }
         Ok(Engine {
             rt,
             driver,
-            kv: KvManager::new(KvLimits { max_slots: cfg.max_lanes, max_bytes: 0 }),
+            kv,
             sched: Scheduler::new(cfg.sched.clone()),
             max_lanes: cfg.max_lanes,
+            resident,
             metrics: EngineMetrics::default(),
             waiting: VecDeque::new(),
             live: Vec::new(),
             next_seq: 1,
             completed: Vec::new(),
         })
+    }
+
+    /// Whether this engine serves from the resident arena.
+    pub fn is_resident(&self) -> bool {
+        self.resident
     }
 
     /// Enqueue a request (owned mode: response lands in `self.completed`).
@@ -127,9 +159,20 @@ impl Engine {
     pub fn step(&mut self) -> Result<usize> {
         let round_t0 = Instant::now();
         let waiting_ids: Vec<u64> = (0..self.waiting.len() as u64).collect();
-        let running_ids: Vec<u64> = self.live.iter().map(|l| l.seq_id).collect();
         let free = self.max_lanes.saturating_sub(self.live.len());
-        let plan = self.sched.plan_round(&waiting_ids, &running_ids, free);
+        let plan = if self.resident {
+            // Group running lanes by their arena slot so decode groups are
+            // contiguous sub-batches of the resident slabs.
+            let running: Vec<(u64, usize)> = self
+                .live
+                .iter()
+                .map(|l| (l.seq_id, self.kv.lane_of(l.seq_id).unwrap_or(usize::MAX)))
+                .collect();
+            self.sched.plan_round_resident(&waiting_ids, &running, free)
+        } else {
+            let running_ids: Vec<u64> = self.live.iter().map(|l| l.seq_id).collect();
+            self.sched.plan_round(&waiting_ids, &running_ids, free)
+        };
 
         let mut produced = 0;
 
@@ -139,11 +182,22 @@ impl Engine {
             produced += self.prefill_one(pending)?;
         }
 
-        // 2. batched decode rounds
+        // 2. batched decode rounds (the copy meters cover only this loop:
+        // admission prefill legitimately copies state into its slot, and
+        // must not be mistaken for decode-path gather/scatter traffic)
+        let copy0 = copy_metrics::snapshot();
         for group in plan.groups {
             produced += self.decode_group(&group)?;
         }
 
+        let copy1 = copy_metrics::snapshot();
+        self.metrics.host_copy_bytes +=
+            copy1.bytes_copied.saturating_sub(copy0.bytes_copied);
+        self.metrics.host_tensor_allocs +=
+            copy1.tensor_allocs.saturating_sub(copy0.tensor_allocs);
+        self.metrics.host_gather_scatter_calls += copy1
+            .gather_scatter_calls
+            .saturating_sub(copy0.gather_scatter_calls);
         let kv_now = self.kv.touch();
         self.metrics.observe_kv(kv_now);
         self.metrics
@@ -158,21 +212,36 @@ impl Engine {
         let seq_id = self.next_seq;
         self.next_seq += 1;
 
-        let mut state = self.driver.new_state();
         // BOS-prefixed prompt: guarantees prefill is never empty.
         let mut prompt = Vec::with_capacity(req.prompt.len() + 1);
         prompt.push(BOS);
         prompt.extend_from_slice(&req.prompt);
 
-        let logits = self.driver.prefill(&mut self.rt, &mut state, &prompt)?;
+        let logits = if self.resident {
+            // Admission in resident mode: claim an arena lane, then prefill
+            // straight into it. On error the lane is returned to the pool.
+            let slot = self.kv.alloc_lane(seq_id)?;
+            let arena = self.kv.arena_mut().context("resident pool lost its arena")?;
+            match self.driver.prefill_resident(&mut self.rt, arena, slot, &prompt) {
+                Ok(l) => l,
+                Err(e) => {
+                    let _ = self.kv.free_lane(seq_id);
+                    return Err(e);
+                }
+            }
+        } else {
+            let mut state = self.driver.new_state();
+            let logits = self.driver.prefill(&mut self.rt, &mut state, &prompt)?;
+            self.kv.alloc(seq_id, state)?;
+            logits
+        };
         self.metrics.prefill_tokens += prompt.len() as u64;
 
         let mut rng = Rng::new(req.sampling.seed ^ seq_id);
         let first = sampler::sample(&logits, &req.sampling, &mut rng);
         let prefill_done = Instant::now();
 
-        let peak_kv = state.bytes();
-        self.kv.alloc(seq_id, state)?;
+        let peak_kv = self.kv.seq_bytes(seq_id);
         let live = Live {
             req,
             seq_id,
@@ -203,10 +272,19 @@ impl Engine {
             return Ok(0);
         }
         let t0 = Instant::now();
-        let mut lanes = self.kv.get_many_mut(&ids)?;
-        let all_logits = self
-            .driver
-            .decode_batch(&mut self.rt, lanes.as_mut_slice(), &tokens)?;
+        let all_logits = if self.resident {
+            let slots: Vec<usize> = ids
+                .iter()
+                .map(|&id| self.kv.lane_of(id).context("live lane has no arena slot"))
+                .collect::<Result<_>>()?;
+            let arena = self.kv.arena_mut().context("resident pool lost its arena")?;
+            self.driver
+                .decode_resident(&mut self.rt, arena, &slots, &tokens)?
+        } else {
+            let mut lanes = self.kv.get_many_mut(&ids)?;
+            self.driver
+                .decode_batch(&mut self.rt, lanes.as_mut_slice(), &tokens)?
+        };
         let dt_ms = t0.elapsed().as_secs_f64() * 1000.0;
         self.metrics.decode_steps += 1;
 
@@ -221,9 +299,7 @@ impl Engine {
             let next = sampler::sample(&all_logits[i], &live.req.sampling, &mut live.rng);
             live.generated.push(next);
             live.last_token = next;
-            live.peak_kv = live
-                .peak_kv
-                .max(self.kv.get(*id).map(|s| s.bytes()).unwrap_or(0));
+            live.peak_kv = live.peak_kv.max(self.kv.seq_bytes(*id));
             self.metrics.per_token_ms.add(dt_ms);
             produced += 1;
             self.settle(live)?;
@@ -248,11 +324,18 @@ impl Engine {
     }
 
     fn finish(&mut self, live: Live, reason: FinishReason) -> Result<()> {
-        let state = self.kv.free(live.seq_id)?;
-        let syncs = match &state {
-            crate::model::state::SeqState::TConst(s) => s.syncs,
-            crate::model::state::SeqState::TLin(s) => s.inner.syncs,
-            _ => 0,
+        let (syncs, final_bytes) = if self.resident {
+            let bytes = self.kv.seq_bytes(live.seq_id);
+            let meta = self.kv.free_lane(live.seq_id)?;
+            (meta.syncs, bytes)
+        } else {
+            let state = self.kv.free(live.seq_id)?;
+            let syncs = match &state {
+                crate::model::state::SeqState::TConst(s) => s.syncs,
+                crate::model::state::SeqState::TLin(s) => s.inner.syncs,
+                _ => 0,
+            };
+            (syncs, state.bytes())
         };
         self.metrics.sync_events += syncs;
         let total_ms = live.submitted.elapsed().as_secs_f64() * 1000.0;
@@ -272,7 +355,7 @@ impl Engine {
             n_prompt: live.req.prompt.len(),
             n_generated: generated.len(),
             syncs,
-            peak_kv_bytes: live.peak_kv.max(state.bytes()),
+            peak_kv_bytes: live.peak_kv.max(final_bytes),
         };
         self.metrics.ttft_ms.add(ttft_ms);
         self.metrics.total_ms.add(total_ms);

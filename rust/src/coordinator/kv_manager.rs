@@ -2,13 +2,21 @@
 //! byte metering — the component behind Fig. 8(g)'s memory readout and the
 //! engine's admission control.
 //!
+//! Two backings:
+//! * **resident** (default serving path) — sequences are lanes of a
+//!   batch-major [`LaneArena`] (DESIGN.md D5); alloc/free hand out arena
+//!   slots and never move state bytes;
+//! * **boxed** (legacy / tests) — each sequence owns its own [`SeqState`]
+//!   slabs, gathered/scattered per decode step.
+//!
 //! For TConstFormer every slot is a constant-size slab (Eq. 7), so the
 //! pool's capacity in *sequences* is exact and admission never depends on
 //! sequence length. For the O(N) architectures slots grow by bucket
 //! migration and the pool enforces a total byte budget instead.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::model::arena::{LaneArena, LaneMeta};
 use crate::model::state::SeqState;
 
 /// A live sequence slot.
@@ -33,29 +41,109 @@ impl Default for KvLimits {
     }
 }
 
+/// Resident backing: a batch-major arena plus the seq-id ↔ lane mapping.
+#[derive(Debug)]
+struct Resident {
+    arena: LaneArena,
+    /// Lane slot → owning sequence id.
+    seqs: Vec<Option<u64>>,
+}
+
 #[derive(Debug)]
 pub struct KvManager {
     limits: KvLimits,
     slots: Vec<Slot>,
+    resident: Option<Resident>,
     peak_bytes: u64,
 }
 
 impl KvManager {
     pub fn new(limits: KvLimits) -> Self {
-        KvManager { limits, slots: Vec::new(), peak_bytes: 0 }
+        KvManager { limits, slots: Vec::new(), resident: None, peak_bytes: 0 }
+    }
+
+    /// Switch the pool to resident mode, backed by `arena`. Must be called
+    /// before any sequence is admitted.
+    pub fn attach_arena(&mut self, arena: LaneArena) {
+        let cap = arena.cap;
+        self.resident = Some(Resident { arena, seqs: vec![None; cap] });
+    }
+
+    pub fn is_resident(&self) -> bool {
+        self.resident.is_some()
+    }
+
+    pub fn arena(&self) -> Option<&LaneArena> {
+        self.resident.as_ref().map(|r| &r.arena)
+    }
+
+    pub fn arena_mut(&mut self) -> Option<&mut LaneArena> {
+        self.resident.as_mut().map(|r| &mut r.arena)
     }
 
     pub fn len(&self) -> usize {
         self.slots.len()
+            + self.resident.as_ref().map(|r| r.arena.n_occupied()).unwrap_or(0)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.slots.is_empty()
+        self.len() == 0
     }
 
     pub fn has_capacity(&self) -> bool {
-        self.slots.len() < self.limits.max_slots
+        self.len() < self.limits.max_slots
             && (self.limits.max_bytes == 0 || self.total_bytes() < self.limits.max_bytes)
+            && self.resident.as_ref().map(|r| r.arena.n_occupied() < r.arena.cap).unwrap_or(true)
+    }
+
+    // -- resident lanes -----------------------------------------------------
+
+    /// Admit a sequence into an arena lane; returns its slot index.
+    pub fn alloc_lane(&mut self, seq_id: u64) -> Result<usize> {
+        if !self.has_capacity() {
+            bail!("kv pool exhausted ({} sequences)", self.len());
+        }
+        let r = self.resident.as_mut().context("pool is not resident")?;
+        if r.seqs.iter().flatten().any(|&id| id == seq_id) {
+            bail!("duplicate seq id {seq_id}");
+        }
+        let slot = r.arena.alloc()?;
+        r.seqs[slot] = Some(seq_id);
+        self.peak_bytes = self.peak_bytes.max(self.total_bytes());
+        Ok(slot)
+    }
+
+    /// Release a sequence's lane; returns its final lane bookkeeping
+    /// (sync counters etc. for the request metrics).
+    pub fn free_lane(&mut self, seq_id: u64) -> Result<LaneMeta> {
+        let r = self.resident.as_mut().context("pool is not resident")?;
+        let slot = r
+            .seqs
+            .iter()
+            .position(|&id| id == Some(seq_id))
+            .with_context(|| format!("unknown seq id {seq_id}"))?;
+        let meta = r.arena.lanes[slot].clone();
+        r.arena.free(slot)?;
+        r.seqs[slot] = None;
+        Ok(meta)
+    }
+
+    /// Arena slot of a live resident sequence.
+    pub fn lane_of(&self, seq_id: u64) -> Option<usize> {
+        self.resident
+            .as_ref()
+            .and_then(|r| r.seqs.iter().position(|&id| id == Some(seq_id)))
+    }
+
+    /// Exact KV bytes currently attributable to one live sequence, in
+    /// either backing.
+    pub fn seq_bytes(&self, seq_id: u64) -> u64 {
+        if let Some(r) = &self.resident {
+            if r.seqs.iter().any(|&id| id == Some(seq_id)) {
+                return r.arena.bytes_per_slot();
+            }
+        }
+        self.get(seq_id).map(|s| s.bytes()).unwrap_or(0)
     }
 
     /// Admit a new sequence. Errors when the pool is exhausted (the engine
@@ -125,7 +213,13 @@ impl KvManager {
 
     /// Exact total KV bytes across live slots (what Fig. 8(g) meters).
     pub fn total_bytes(&self) -> u64 {
-        self.slots.iter().map(|s| s.state.bytes()).sum()
+        let boxed: u64 = self.slots.iter().map(|s| s.state.bytes()).sum();
+        let arena = self
+            .resident
+            .as_ref()
+            .map(|r| r.arena.bytes_per_slot() * r.arena.n_occupied() as u64)
+            .unwrap_or(0);
+        boxed + arena
     }
 
     pub fn peak_bytes(&self) -> u64 {
@@ -206,6 +300,40 @@ mod tests {
         let mut kv = KvManager::new(KvLimits { max_slots: 100, max_bytes: per });
         kv.alloc(1, tconst_state()).unwrap();
         assert!(!kv.has_capacity());
+    }
+
+    #[test]
+    fn resident_lane_lifecycle_and_metering() {
+        use crate::model::arena::LaneArena;
+        use crate::model::Arch;
+        let c = cfg();
+        let mut kv = KvManager::new(KvLimits { max_slots: 3, max_bytes: 0 });
+        kv.attach_arena(LaneArena::new(Arch::TConst, &c, 4));
+        assert!(kv.is_resident());
+        assert_eq!(kv.total_bytes(), 0);
+
+        let s1 = kv.alloc_lane(1).unwrap();
+        let s2 = kv.alloc_lane(2).unwrap();
+        assert_ne!(s1, s2);
+        assert_eq!(kv.len(), 2);
+        assert_eq!(kv.lane_of(2), Some(s2));
+        let per = kv.arena().unwrap().bytes_per_slot();
+        assert!(per > 0);
+        assert_eq!(kv.total_bytes(), 2 * per);
+        assert_eq!(kv.seq_bytes(1), per);
+
+        assert!(kv.alloc_lane(1).is_err(), "duplicate id rejected");
+        kv.alloc_lane(3).unwrap();
+        // max_slots (3) binds before the arena capacity (4)
+        assert!(!kv.has_capacity());
+        assert!(kv.alloc_lane(4).is_err());
+
+        let meta = kv.free_lane(2).unwrap();
+        assert_eq!(meta.tokens_seen, 0);
+        assert_eq!(kv.len(), 2);
+        assert_eq!(kv.lane_of(2), None);
+        assert!(kv.free_lane(2).is_err());
+        assert_eq!(kv.peak_bytes(), 3 * per, "peak is sticky");
     }
 
     #[test]

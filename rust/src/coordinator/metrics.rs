@@ -24,6 +24,12 @@ pub struct EngineMetrics {
     /// KV byte gauges across all live sequences.
     pub kv_bytes_current: u64,
     pub kv_bytes_peak: u64,
+    /// Host gather/scatter traffic on the decode path (from
+    /// [`crate::model::batch::copy_metrics`]): with the resident arena the
+    /// steady-state per-step figures are zero.
+    pub host_copy_bytes: u64,
+    pub host_tensor_allocs: u64,
+    pub host_gather_scatter_calls: u64,
 }
 
 impl Default for EngineMetrics {
@@ -42,6 +48,9 @@ impl Default for EngineMetrics {
             round_ms: Summary::new(),
             kv_bytes_current: 0,
             kv_bytes_peak: 0,
+            host_copy_bytes: 0,
+            host_tensor_allocs: 0,
+            host_gather_scatter_calls: 0,
         }
     }
 }
@@ -78,6 +87,12 @@ impl EngineMetrics {
             ("round_ms_mean", Json::num(nan0(self.round_ms.mean()))),
             ("kv_bytes_current", Json::num(self.kv_bytes_current as f64)),
             ("kv_bytes_peak", Json::num(self.kv_bytes_peak as f64)),
+            ("host_copy_bytes", Json::num(self.host_copy_bytes as f64)),
+            ("host_tensor_allocs", Json::num(self.host_tensor_allocs as f64)),
+            (
+                "host_gather_scatter_calls",
+                Json::num(self.host_gather_scatter_calls as f64),
+            ),
         ])
     }
 }

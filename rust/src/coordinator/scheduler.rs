@@ -49,6 +49,36 @@ impl Scheduler {
         Scheduler { cfg, rotate: 0 }
     }
 
+    /// Plan a round for a **resident arena**: all running lanes form ONE
+    /// group, in arena-slot order. The arena executes its full-capacity
+    /// graph per group regardless of group size (its capacity is already a
+    /// batch bucket ≥ max lanes, so `max_batch` does not apply), and a
+    /// group covering every occupied lane lets the drivers adopt graph
+    /// outputs wholesale — zero copies. Rotation is unnecessary: every
+    /// running lane decodes every round and the batch-major graph treats
+    /// rows symmetrically.
+    pub fn plan_round_resident(
+        &mut self,
+        waiting: &[u64],
+        running: &[(u64, usize)],
+        free_slots: usize,
+    ) -> Plan {
+        let n_admit = waiting
+            .len()
+            .min(free_slots)
+            .min(self.cfg.prefill_per_round);
+        let admit = waiting[..n_admit].to_vec();
+
+        let mut by_slot: Vec<(u64, usize)> = running.to_vec();
+        by_slot.sort_by_key(|&(_, slot)| slot);
+        let groups = if by_slot.is_empty() {
+            Vec::new()
+        } else {
+            vec![by_slot.iter().map(|&(id, _)| id).collect()]
+        };
+        Plan { admit, groups }
+    }
+
     pub fn plan_round(&mut self, waiting: &[u64], running: &[u64], free_slots: usize) -> Plan {
         let n_admit = waiting
             .len()
@@ -117,5 +147,19 @@ mod tests {
     fn empty_running_no_groups() {
         let mut s = Scheduler::new(SchedConfig::default());
         assert!(s.plan_round(&ids(2), &[], 0).groups.is_empty());
+    }
+
+    #[test]
+    fn resident_plan_is_one_group_in_slot_order() {
+        let mut s = Scheduler::new(SchedConfig { max_batch: 2, prefill_per_round: 1 });
+        // seq ids with scrambled slots; max_batch does not split the group
+        let running = [(10u64, 3usize), (11, 0), (12, 2), (13, 1)];
+        let p = s.plan_round_resident(&[7, 8], &running, 1);
+        assert_eq!(p.admit, vec![7]);
+        assert_eq!(p.groups, vec![vec![11, 13, 12, 10]]);
+        // stable across rounds (no rotation in resident mode)
+        let p2 = s.plan_round_resident(&[], &running, 0);
+        assert_eq!(p2.groups, p.groups);
+        assert!(s.plan_round_resident(&[], &[], 0).groups.is_empty());
     }
 }

@@ -76,6 +76,7 @@ fn engine_cfg_from(args: &tconstformer::util::cli::Args) -> Result<EngineConfig>
         max_lanes: args.get_usize("max-lanes", 4)?,
         sched: Default::default(),
         checkpoint: args.get("checkpoint").map(str::to_string),
+        resident: !args.flag("legacy-batching"),
     })
 }
 
@@ -87,7 +88,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt_default("sync-mode", "tconst sync mode (incremental|full)", "incremental")
         .opt_default("max-lanes", "max concurrent sequences", "4")
         .opt_default("addr", "listen address", "127.0.0.1:8077")
-        .opt("checkpoint", "trained checkpoint stem to load");
+        .opt("checkpoint", "trained checkpoint stem to load")
+        .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)");
     let args = cmd.parse(rest)?;
     let cfg = engine_cfg_from(&args)?;
     println!(
@@ -114,7 +116,8 @@ fn cmd_gen(rest: &[String]) -> Result<()> {
         .opt_default("prompt", "prompt text", "the transformer architecture")
         .opt_default("max-new-tokens", "tokens to generate", "64")
         .opt_default("temperature", "sampling temperature (0=greedy)", "0")
-        .opt("checkpoint", "trained checkpoint stem to load");
+        .opt("checkpoint", "trained checkpoint stem to load")
+        .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)");
     let args = cmd.parse(rest)?;
     let cfg = engine_cfg_from(&args)?;
     let mut engine = Engine::new(&cfg)?;

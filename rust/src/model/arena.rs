@@ -1,0 +1,804 @@
+//! Resident batch-major lane arena (DESIGN.md D5) — the steady-state
+//! decode hot path with **zero** per-token gather/scatter.
+//!
+//! The legacy path re-materializes the whole batched state every token:
+//! per-lane slabs are `concat_axis`ed into the graph's batch-major input
+//! shapes, and the outputs `split_axis`ed back — O(batch × state_bytes) of
+//! host memcpy and allocation per step, on the very path the paper proves
+//! is O(1). Here all lane state for a bucket lives *permanently* in the
+//! graph's batch-major shapes:
+//!
+//! * TConst: `ctx_k/ctx_v (nb, H+1, cap, W_oh, D)`, `ctx_sum (nb, cap,
+//!   W_oh, D)`, `gen_k/gen_v (nb, H+2, cap, W_og, D)`;
+//! * TLin: the above + `hist_k/hist_v (nb, cap, L_bucket, D)`;
+//! * Base: `cache_k/cache_v (n_layer, cap, L_bucket, D)`.
+//!
+//! A sequence is an **arena slot** — an index along the lane axis. Decode
+//! passes the slabs straight to `rt.execute` and adopts (or lane-copies)
+//! the graph's outputs in place; per-lane tensors exist only at slot
+//! *boundaries* (admission prefill, the periodic sync cache miss, and
+//! eviction), where their cost is amortized O(1/W_og) or one-off.
+//!
+//! Freed slots are simply masked: their slab lanes keep whatever bytes the
+//! last occupant (or the graph) wrote, which is safe because every decode
+//! graph masks positions `>= slot/pos/hist_len` and admission rewrites the
+//! full lane before the slot is read again.
+
+use anyhow::{bail, Context, Result};
+
+use super::batch::{copy_block, grow_axis, insert_axis, read_block};
+use super::state::{BaseState, SeqState, TConstState, TLinState};
+use super::tconstformer::logits_row;
+use super::{tconstformer, tlinformer, Arch, ModelDriver, SyncMode};
+use crate::runtime::{HostTensor, ModelConfig, Runtime};
+
+/// Per-slot lane bookkeeping (the scalar half of a sequence's state; the
+/// tensor half lives in the batch-major slabs).
+#[derive(Debug, Clone, Default)]
+pub struct LaneMeta {
+    pub occupied: bool,
+    /// Generation-window fill (TConst/TLin: the old `TConstState::slot`).
+    pub fill: usize,
+    /// Context gate (0 until the first sync folds a window).
+    pub gate: f32,
+    /// Tokens currently in the unsynced generation window.
+    pub window_tokens: Vec<i32>,
+    /// Raw token history — recorded only under the Full-sync ablation.
+    pub history: Vec<i32>,
+    /// Valid raw-history positions (TLin).
+    pub hist_len: usize,
+    /// Valid cache positions (Base).
+    pub pos: usize,
+    pub tokens_seen: usize,
+    pub syncs: u64,
+}
+
+impl LaneMeta {
+    fn reset(&mut self) {
+        *self = LaneMeta::default();
+    }
+}
+
+/// One lane's constant-state tensors in slab order:
+/// (ctx_k, ctx_v, ctx_sum, gen_k, gen_v).
+type LaneSlabs = (HostTensor, HostTensor, HostTensor, HostTensor, HostTensor);
+
+/// The constant-size batch-major slabs shared by TConst and TLin.
+#[derive(Debug)]
+pub struct ConstSlabs {
+    pub ctx_k: HostTensor,
+    pub ctx_v: HostTensor,
+    pub ctx_sum: HostTensor,
+    pub gen_k: HostTensor,
+    pub gen_v: HostTensor,
+}
+
+impl ConstSlabs {
+    fn new(cfg: &ModelConfig, cap: usize) -> Self {
+        let (nb, h1, h2) = (cfg.n_block, cfg.h_inner + 1, cfg.h_inner + 2);
+        let (woh, wog, d) = (cfg.w_oh, cfg.w_og, cfg.d_model);
+        ConstSlabs {
+            ctx_k: HostTensor::zeros_f32(&[nb, h1, cap, woh, d]),
+            ctx_v: HostTensor::zeros_f32(&[nb, h1, cap, woh, d]),
+            ctx_sum: HostTensor::zeros_f32(&[nb, cap, woh, d]),
+            gen_k: HostTensor::zeros_f32(&[nb, h2, cap, wog, d]),
+            gen_v: HostTensor::zeros_f32(&[nb, h2, cap, wog, d]),
+        }
+    }
+
+    fn nbytes(&self) -> u64 {
+        (self.ctx_k.nbytes()
+            + self.ctx_v.nbytes()
+            + self.ctx_sum.nbytes()
+            + self.gen_k.nbytes()
+            + self.gen_v.nbytes()) as u64
+    }
+
+    fn load(&mut self, slot: usize, s: &TConstState) -> Result<()> {
+        insert_axis(&mut self.ctx_k, &s.ctx_k, 2, slot)?;
+        insert_axis(&mut self.ctx_v, &s.ctx_v, 2, slot)?;
+        insert_axis(&mut self.ctx_sum, &s.ctx_sum, 1, slot)?;
+        insert_axis(&mut self.gen_k, &s.gen_k, 2, slot)?;
+        insert_axis(&mut self.gen_v, &s.gen_v, 2, slot)?;
+        Ok(())
+    }
+
+    fn extract(&self, cfg: &ModelConfig, slot: usize) -> Result<LaneSlabs> {
+        let (nb, h1, h2) = (cfg.n_block, cfg.h_inner + 1, cfg.h_inner + 2);
+        let (woh, wog, d) = (cfg.w_oh, cfg.w_og, cfg.d_model);
+        Ok((
+            read_block(&self.ctx_k, &[0, 0, slot, 0, 0], &[nb, h1, 1, woh, d])?,
+            read_block(&self.ctx_v, &[0, 0, slot, 0, 0], &[nb, h1, 1, woh, d])?,
+            read_block(&self.ctx_sum, &[0, slot, 0, 0], &[nb, 1, woh, d])?,
+            read_block(&self.gen_k, &[0, 0, slot, 0, 0], &[nb, h2, 1, wog, d])?,
+            read_block(&self.gen_v, &[0, 0, slot, 0, 0], &[nb, h2, 1, wog, d])?,
+        ))
+    }
+}
+
+/// Architecture-specific slab set.
+#[derive(Debug)]
+pub enum ArenaState {
+    TConst(ConstSlabs),
+    TLin {
+        inner: ConstSlabs,
+        /// (nb, cap, L_bucket, D); L_bucket grows monotonically by bucket
+        /// migration (starts at 0 = unallocated).
+        hist_k: HostTensor,
+        hist_v: HostTensor,
+        hist_bucket: usize,
+    },
+    Base {
+        /// (n_layer, cap, L_bucket, D); L_bucket grows monotonically.
+        cache_k: HostTensor,
+        cache_v: HostTensor,
+        bucket: usize,
+    },
+}
+
+/// A fixed-capacity pool of resident lanes for one architecture, sized to
+/// an exported batch bucket so its slabs are the decode graph's inputs.
+#[derive(Debug)]
+pub struct LaneArena {
+    pub arch: Arch,
+    pub cfg: ModelConfig,
+    pub cap: usize,
+    pub lanes: Vec<LaneMeta>,
+    pub state: ArenaState,
+    free: Vec<usize>,
+    // Reusable per-step input vectors, written in place — the decode loop
+    // never allocates these.
+    scr_tok: HostTensor,
+    scr_slot: HostTensor,
+    scr_gate: HostTensor,
+    scr_aux: HostTensor,
+}
+
+impl LaneArena {
+    pub fn new(arch: Arch, cfg: &ModelConfig, cap: usize) -> Self {
+        assert!(cap > 0, "arena capacity must be positive");
+        let state = match arch {
+            Arch::TConst => ArenaState::TConst(ConstSlabs::new(cfg, cap)),
+            Arch::TLin => ArenaState::TLin {
+                inner: ConstSlabs::new(cfg, cap),
+                hist_k: HostTensor::zeros_f32(&[cfg.n_block, cap, 0, cfg.d_model]),
+                hist_v: HostTensor::zeros_f32(&[cfg.n_block, cap, 0, cfg.d_model]),
+                hist_bucket: 0,
+            },
+            Arch::Base => ArenaState::Base {
+                cache_k: HostTensor::zeros_f32(&[cfg.n_layer, cap, 0, cfg.d_model]),
+                cache_v: HostTensor::zeros_f32(&[cfg.n_layer, cap, 0, cfg.d_model]),
+                bucket: 0,
+            },
+        };
+        LaneArena {
+            arch,
+            cfg: cfg.clone(),
+            cap,
+            lanes: vec![LaneMeta::default(); cap],
+            state,
+            free: (0..cap).rev().collect(),
+            scr_tok: HostTensor::zeros_i32(&[cap]),
+            scr_slot: HostTensor::zeros_i32(&[cap]),
+            scr_gate: HostTensor::zeros_f32(&[cap]),
+            scr_aux: HostTensor::zeros_i32(&[cap]),
+        }
+    }
+
+    // -- slot lifecycle -----------------------------------------------------
+
+    /// Claim a free slot. The slab lane may hold a previous occupant's
+    /// bytes; they are masked until `load_state` rewrites the lane.
+    pub fn alloc(&mut self) -> Result<usize> {
+        let slot = self.free.pop().context("arena full")?;
+        self.lanes[slot].reset();
+        self.lanes[slot].occupied = true;
+        Ok(slot)
+    }
+
+    /// Release a slot (no slab writes — freeing is O(1)).
+    pub fn free(&mut self, slot: usize) -> Result<()> {
+        if slot >= self.cap || !self.lanes[slot].occupied {
+            bail!("free of unoccupied arena slot {slot}");
+        }
+        self.lanes[slot].reset();
+        self.free.push(slot);
+        Ok(())
+    }
+
+    pub fn n_occupied(&self) -> usize {
+        self.cap - self.free.len()
+    }
+
+    pub fn occupied_slots(&self) -> Vec<usize> {
+        (0..self.cap).filter(|&s| self.lanes[s].occupied).collect()
+    }
+
+    /// Exact KV bytes attributable to one slot — the slabs are uniform
+    /// along the lane axis, so this is total slab bytes / capacity and
+    /// matches the per-sequence figures in [`crate::analytic::memory`].
+    pub fn bytes_per_slot(&self) -> u64 {
+        let total = match &self.state {
+            ArenaState::TConst(s) => s.nbytes(),
+            ArenaState::TLin { inner, hist_k, hist_v, .. } => {
+                inner.nbytes() + (hist_k.nbytes() + hist_v.nbytes()) as u64
+            }
+            ArenaState::Base { cache_k, cache_v, .. } => {
+                (cache_k.nbytes() + cache_v.nbytes()) as u64
+            }
+        };
+        total / self.cap as u64
+    }
+
+    // -- slot <-> per-lane state conversion (boundary paths only) -----------
+
+    /// Write a per-lane state into its slot (admission / post-sync).
+    pub fn load_state(&mut self, slot: usize, st: &SeqState) -> Result<()> {
+        if slot >= self.cap || !self.lanes[slot].occupied {
+            bail!("load_state into unoccupied slot {slot}");
+        }
+        match (&mut self.state, st) {
+            (ArenaState::TConst(slabs), SeqState::TConst(s)) => {
+                slabs.load(slot, s)?;
+                let m = &mut self.lanes[slot];
+                m.fill = s.slot;
+                m.gate = s.ctx_gate;
+                m.window_tokens = s.window_tokens.clone();
+                m.history = s.history.clone();
+                m.tokens_seen = s.tokens_seen;
+                m.syncs = s.syncs;
+            }
+            (
+                ArenaState::TLin { inner, hist_k, hist_v, hist_bucket },
+                SeqState::TLin(s),
+            ) => {
+                inner.load(slot, &s.inner)?;
+                if s.hist_bucket > 0 {
+                    if *hist_bucket < s.hist_bucket {
+                        *hist_k = grow_axis(hist_k, 2, s.hist_bucket)?;
+                        *hist_v = grow_axis(hist_v, 2, s.hist_bucket)?;
+                        *hist_bucket = s.hist_bucket;
+                    }
+                    let (nb, d) = (self.cfg.n_block, self.cfg.d_model);
+                    let size = [nb, 1, s.hist_bucket, d];
+                    let dst_off = [0, slot, 0, 0];
+                    let src_off = [0; 4];
+                    let src_k = s.hist_k.as_ref().context("hist_k")?;
+                    let src_v = s.hist_v.as_ref().context("hist_v")?;
+                    copy_block(hist_k, &dst_off, src_k, &src_off, &size)?;
+                    copy_block(hist_v, &dst_off, src_v, &src_off, &size)?;
+                }
+                let m = &mut self.lanes[slot];
+                m.fill = s.inner.slot;
+                m.gate = s.inner.ctx_gate;
+                m.window_tokens = s.inner.window_tokens.clone();
+                m.history = s.inner.history.clone();
+                m.hist_len = s.hist_len;
+                m.tokens_seen = s.tokens_seen;
+                m.syncs = s.inner.syncs;
+            }
+            (ArenaState::Base { cache_k, cache_v, bucket }, SeqState::Base(s)) => {
+                if s.bucket > 0 {
+                    if *bucket < s.bucket {
+                        *cache_k = grow_axis(cache_k, 2, s.bucket)?;
+                        *cache_v = grow_axis(cache_v, 2, s.bucket)?;
+                        *bucket = s.bucket;
+                    }
+                    let (nl, d) = (self.cfg.n_layer, self.cfg.d_model);
+                    let size = [nl, 1, s.bucket, d];
+                    let dst_off = [0, slot, 0, 0];
+                    let src_off = [0; 4];
+                    let src_k = s.cache_k.as_ref().context("cache_k")?;
+                    let src_v = s.cache_v.as_ref().context("cache_v")?;
+                    copy_block(cache_k, &dst_off, src_k, &src_off, &size)?;
+                    copy_block(cache_v, &dst_off, src_v, &src_off, &size)?;
+                }
+                let m = &mut self.lanes[slot];
+                m.pos = s.pos;
+                m.tokens_seen = s.pos;
+            }
+            _ => bail!("arena/state arch mismatch"),
+        }
+        Ok(())
+    }
+
+    /// Read a slot back out as a per-lane state (sync / eviction / tests).
+    pub fn extract_state(&self, slot: usize) -> Result<SeqState> {
+        if slot >= self.cap || !self.lanes[slot].occupied {
+            bail!("extract_state of unoccupied slot {slot}");
+        }
+        let m = &self.lanes[slot];
+        Ok(match &self.state {
+            ArenaState::TConst(slabs) => {
+                let (ctx_k, ctx_v, ctx_sum, gen_k, gen_v) = slabs.extract(&self.cfg, slot)?;
+                SeqState::TConst(TConstState {
+                    ctx_k,
+                    ctx_v,
+                    ctx_sum,
+                    ctx_gate: m.gate,
+                    gen_k,
+                    gen_v,
+                    slot: m.fill,
+                    window_tokens: m.window_tokens.clone(),
+                    history: m.history.clone(),
+                    tokens_seen: m.tokens_seen,
+                    syncs: m.syncs,
+                })
+            }
+            ArenaState::TLin { inner, hist_k, hist_v, hist_bucket } => {
+                let (ctx_k, ctx_v, ctx_sum, gen_k, gen_v) = inner.extract(&self.cfg, slot)?;
+                let (nb, d) = (self.cfg.n_block, self.cfg.d_model);
+                let (hk, hv) = if *hist_bucket > 0 {
+                    let size = [nb, 1, *hist_bucket, d];
+                    let off = [0, slot, 0, 0];
+                    (
+                        Some(read_block(hist_k, &off, &size)?),
+                        Some(read_block(hist_v, &off, &size)?),
+                    )
+                } else {
+                    (None, None)
+                };
+                SeqState::TLin(TLinState {
+                    inner: TConstState {
+                        ctx_k,
+                        ctx_v,
+                        ctx_sum,
+                        ctx_gate: m.gate,
+                        gen_k,
+                        gen_v,
+                        slot: m.fill,
+                        window_tokens: m.window_tokens.clone(),
+                        history: m.history.clone(),
+                        tokens_seen: m.tokens_seen,
+                        syncs: m.syncs,
+                    },
+                    hist_k: hk,
+                    hist_v: hv,
+                    hist_bucket: *hist_bucket,
+                    hist_len: m.hist_len,
+                    tokens_seen: m.tokens_seen,
+                })
+            }
+            ArenaState::Base { cache_k, cache_v, bucket } => {
+                let (nl, d) = (self.cfg.n_layer, self.cfg.d_model);
+                let (ck, cv) = if *bucket > 0 {
+                    let size = [nl, 1, *bucket, d];
+                    let off = [0, slot, 0, 0];
+                    (
+                        Some(read_block(cache_k, &off, &size)?),
+                        Some(read_block(cache_v, &off, &size)?),
+                    )
+                } else {
+                    (None, None)
+                };
+                SeqState::Base(BaseState {
+                    cache_k: ck,
+                    cache_v: cv,
+                    bucket: *bucket,
+                    pos: m.pos,
+                })
+            }
+        })
+    }
+
+    // -- decode (the steady-state hot path) ---------------------------------
+
+    /// One batched decode step for `slots` (parallel to `tokens`). Lanes
+    /// whose generation window is full are synchronized first (the paper's
+    /// periodic cache miss — the only part of the loop that touches
+    /// per-lane tensors). Returns one logits vector per requested slot.
+    pub fn decode(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        slots: &[usize],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        if slots.is_empty() || slots.len() != tokens.len() {
+            bail!("arena decode: {} slots vs {} tokens", slots.len(), tokens.len());
+        }
+        if drv.arch != self.arch {
+            bail!("arena decode arch mismatch");
+        }
+        let mut seen = vec![false; self.cap];
+        for &s in slots {
+            if s >= self.cap || !self.lanes[s].occupied {
+                bail!("decode of unoccupied arena slot {s}");
+            }
+            if seen[s] {
+                bail!("duplicate arena slot {s} in decode group");
+            }
+            seen[s] = true;
+        }
+        match self.arch {
+            Arch::TConst => self.decode_tconst(drv, rt, slots, tokens),
+            Arch::TLin => self.decode_tlin(drv, rt, slots, tokens),
+            Arch::Base => self.decode_base(drv, rt, slots, tokens),
+        }
+    }
+
+    /// Sync one lane through the legacy per-lane state machine: extract →
+    /// sync → write back. Amortized O(1/W_og) per generated token.
+    fn sync_slot(&mut self, drv: &ModelDriver, rt: &mut Runtime, slot: usize) -> Result<()> {
+        let mut st = self.extract_state(slot)?;
+        match &mut st {
+            SeqState::TConst(s) => tconstformer::sync(drv, rt, s)?,
+            SeqState::TLin(s) => tlinformer::sync(drv, rt, s)?,
+            SeqState::Base(_) => bail!("baseline lanes do not sync"),
+        }
+        self.load_state(slot, &st)
+    }
+
+    /// Zero + fill the reusable input vectors in place.
+    fn fill_scratch(&mut self, slots: &[usize], tokens: &[i32]) -> Result<()> {
+        let tok = self.scr_tok.as_i32_mut()?;
+        tok.fill(0);
+        for (i, &s) in slots.iter().enumerate() {
+            tok[s] = tokens[i];
+        }
+        let fill = self.scr_slot.as_i32_mut()?;
+        fill.fill(0);
+        for &s in slots {
+            fill[s] = self.lanes[s].fill as i32;
+        }
+        let gate = self.scr_gate.as_f32_mut()?;
+        gate.fill(0.0);
+        for &s in slots {
+            gate[s] = self.lanes[s].gate;
+        }
+        Ok(())
+    }
+
+    /// Advance the lane clocks of the stepped slots and pull their logits
+    /// rows (row index == slot index: the slabs ARE the batch).
+    fn advance(
+        &mut self,
+        drv: &ModelDriver,
+        slots: &[usize],
+        tokens: &[i32],
+        logits_t: &HostTensor,
+    ) -> Result<Vec<Vec<f32>>> {
+        // Raw history feeds only TConst's Full-sync ablation; TLin shares
+        // this path but never reads token history — recording it would
+        // reintroduce the O(N) host-memory leak.
+        let record_history = drv.sync_mode == SyncMode::Full && drv.arch == Arch::TConst;
+        let mut logits = Vec::with_capacity(slots.len());
+        for (i, &s) in slots.iter().enumerate() {
+            let m = &mut self.lanes[s];
+            m.window_tokens.push(tokens[i]);
+            if record_history {
+                m.history.push(tokens[i]);
+            }
+            m.fill += 1;
+            m.tokens_seen += 1;
+            logits.push(logits_row(logits_t, s, drv.cfg.vocab)?);
+        }
+        Ok(logits)
+    }
+
+    fn decode_tconst(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        slots: &[usize],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let w = drv.cfg.w_og;
+        for &s in slots {
+            if self.lanes[s].fill >= w {
+                self.sync_slot(drv, rt, s)?;
+            }
+        }
+        self.fill_scratch(slots, tokens)?;
+        let name = rt.manifest.name_tconst_decode(&drv.preset, self.cap);
+        let out = {
+            let ArenaState::TConst(slabs) = &self.state else { unreachable!() };
+            rt.execute(
+                &name,
+                &[
+                    &self.scr_tok,
+                    &self.scr_slot,
+                    &slabs.ctx_k,
+                    &slabs.ctx_v,
+                    &slabs.ctx_sum,
+                    &self.scr_gate,
+                    &slabs.gen_k,
+                    &slabs.gen_v,
+                ],
+            )?
+        };
+        let mut it = out.into_iter();
+        let logits_t = it.next().context("logits")?;
+        let new_gen_k = it.next().context("gen_k")?;
+        let new_gen_v = it.next().context("gen_v")?;
+        let full = slots.len() == self.n_occupied();
+        {
+            let ArenaState::TConst(slabs) = &mut self.state else { unreachable!() };
+            if full {
+                // The group covers every occupied lane: adopt the whole
+                // output slab — zero host copies.
+                slabs.gen_k = new_gen_k;
+                slabs.gen_v = new_gen_v;
+            } else {
+                for &s in slots {
+                    copy_lane(&mut slabs.gen_k, &new_gen_k, 2, s)?;
+                    copy_lane(&mut slabs.gen_v, &new_gen_v, 2, s)?;
+                }
+            }
+        }
+        self.advance(drv, slots, tokens, &logits_t)
+    }
+
+    fn decode_tlin(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        slots: &[usize],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let w = drv.cfg.w_og;
+        for &s in slots {
+            if self.lanes[s].fill >= w {
+                self.sync_slot(drv, rt, s)?;
+            }
+        }
+        // History-bucket migration: the arena-wide bucket must fit every
+        // stepped lane (monotone growth, one grow per migration event).
+        let need = slots
+            .iter()
+            .map(|&s| self.lanes[s].hist_len)
+            .max()
+            .unwrap()
+            .max(1);
+        let target = rt
+            .manifest
+            .bucket_for(&drv.preset, need)
+            .with_context(|| format!("history {need} exceeds largest bucket"))?;
+        {
+            let ArenaState::TLin { hist_k, hist_v, hist_bucket, .. } = &mut self.state else {
+                unreachable!()
+            };
+            if *hist_bucket < target {
+                *hist_k = grow_axis(hist_k, 2, target)?;
+                *hist_v = grow_axis(hist_v, 2, target)?;
+                *hist_bucket = target;
+            }
+        }
+        self.fill_scratch(slots, tokens)?;
+        {
+            let hlen = self.scr_aux.as_i32_mut()?;
+            hlen.fill(0);
+            for &s in slots {
+                hlen[s] = self.lanes[s].hist_len as i32;
+            }
+        }
+        let out = {
+            let ArenaState::TLin { inner, hist_k, hist_v, hist_bucket } = &self.state else {
+                unreachable!()
+            };
+            let name = rt.manifest.name_tlin_decode(&drv.preset, *hist_bucket, self.cap);
+            rt.execute(
+                &name,
+                &[
+                    &self.scr_tok,
+                    &self.scr_slot,
+                    &inner.ctx_k,
+                    &inner.ctx_v,
+                    &inner.ctx_sum,
+                    &self.scr_gate,
+                    &inner.gen_k,
+                    &inner.gen_v,
+                    hist_k,
+                    hist_v,
+                    &self.scr_aux,
+                ],
+            )?
+        };
+        let mut it = out.into_iter();
+        let logits_t = it.next().context("logits")?;
+        let new_gen_k = it.next().context("gen_k")?;
+        let new_gen_v = it.next().context("gen_v")?;
+        let full = slots.len() == self.n_occupied();
+        {
+            let ArenaState::TLin { inner, .. } = &mut self.state else { unreachable!() };
+            if full {
+                inner.gen_k = new_gen_k;
+                inner.gen_v = new_gen_v;
+            } else {
+                for &s in slots {
+                    copy_lane(&mut inner.gen_k, &new_gen_k, 2, s)?;
+                    copy_lane(&mut inner.gen_v, &new_gen_v, 2, s)?;
+                }
+            }
+        }
+        self.advance(drv, slots, tokens, &logits_t)
+    }
+
+    fn decode_base(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        slots: &[usize],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        // Bucket migration: grow the arena cache when any stepped lane is
+        // about to write past the current bucket.
+        let need = slots.iter().map(|&s| self.lanes[s].pos + 1).max().unwrap();
+        {
+            let ArenaState::Base { cache_k, cache_v, bucket } = &mut self.state else {
+                unreachable!()
+            };
+            if need > *bucket {
+                let target = rt
+                    .manifest
+                    .bucket_for(&drv.preset, need)
+                    .with_context(|| format!("sequence of {need} exceeds the largest bucket"))?;
+                *cache_k = grow_axis(cache_k, 2, target)?;
+                *cache_v = grow_axis(cache_v, 2, target)?;
+                *bucket = target;
+            }
+        }
+        {
+            let tok = self.scr_tok.as_i32_mut()?;
+            tok.fill(0);
+            for (i, &s) in slots.iter().enumerate() {
+                tok[s] = tokens[i];
+            }
+            let pos = self.scr_aux.as_i32_mut()?;
+            pos.fill(0);
+            for &s in slots {
+                pos[s] = self.lanes[s].pos as i32;
+            }
+        }
+        let out = {
+            let ArenaState::Base { cache_k, cache_v, bucket } = &self.state else {
+                unreachable!()
+            };
+            let name = rt.manifest.name_base_decode(&drv.preset, *bucket, self.cap);
+            rt.execute(&name, &[&self.scr_tok, &self.scr_aux, cache_k, cache_v])?
+        };
+        let mut it = out.into_iter();
+        let logits_t = it.next().context("logits")?;
+        let new_k = it.next().context("cache_k")?;
+        let new_v = it.next().context("cache_v")?;
+        let full = slots.len() == self.n_occupied();
+        {
+            let ArenaState::Base { cache_k, cache_v, .. } = &mut self.state else {
+                unreachable!()
+            };
+            if full {
+                *cache_k = new_k;
+                *cache_v = new_v;
+            } else {
+                for &s in slots {
+                    copy_lane(cache_k, &new_k, 1, s)?;
+                    copy_lane(cache_v, &new_v, 1, s)?;
+                }
+            }
+        }
+        let mut logits = Vec::with_capacity(slots.len());
+        for &s in slots {
+            let m = &mut self.lanes[s];
+            m.pos += 1;
+            m.tokens_seen += 1;
+            logits.push(logits_row(&logits_t, s, drv.cfg.vocab)?);
+        }
+        Ok(logits)
+    }
+}
+
+/// Copy lane `idx` along `axis` from `src` into the same lane of `dst`
+/// (both batch-major, identical shapes) — the partial-group write-back.
+fn copy_lane(dst: &mut HostTensor, src: &HostTensor, axis: usize, idx: usize) -> Result<()> {
+    let shape = src.shape().to_vec();
+    if dst.shape() != shape.as_slice() {
+        bail!("copy_lane shape mismatch {:?} vs {:?}", dst.shape(), shape);
+    }
+    let mut off = vec![0usize; shape.len()];
+    off[axis] = idx;
+    let mut size = shape.clone();
+    size[axis] = 1;
+    copy_block(dst, &off, src, &off, &size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::memory;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 256,
+            d_model: 32,
+            n_head: 4,
+            n_layer: 4,
+            max_seq: 512,
+            w_oh: 16,
+            w_og: 16,
+            n_block: 1,
+            h_inner: 2,
+            ffn_mult: 4,
+            train_seq: 256,
+            train_batch: 4,
+        }
+    }
+
+    fn random_tconst(c: &ModelConfig, seed: u64) -> TConstState {
+        let mut s = TConstState::new(c);
+        let mut r = Rng::new(seed);
+        for t in [&mut s.ctx_k, &mut s.ctx_v, &mut s.ctx_sum, &mut s.gen_k, &mut s.gen_v] {
+            for v in t.as_f32_mut().unwrap() {
+                *v = r.f32();
+            }
+        }
+        s.ctx_gate = 1.0;
+        s.slot = 3;
+        s.window_tokens = vec![1, 2, 3];
+        s.tokens_seen = 19;
+        s.syncs = 1;
+        s
+    }
+
+    #[test]
+    fn slot_roundtrip_is_exact() {
+        let c = cfg();
+        let mut arena = LaneArena::new(Arch::TConst, &c, 4);
+        let a = arena.alloc().unwrap();
+        let b = arena.alloc().unwrap();
+        let sa = SeqState::TConst(random_tconst(&c, 7));
+        let sb = SeqState::TConst(random_tconst(&c, 8));
+        arena.load_state(a, &sa).unwrap();
+        arena.load_state(b, &sb).unwrap();
+        // writing lane b must not disturb lane a
+        let back_a = arena.extract_state(a).unwrap();
+        let back_b = arena.extract_state(b).unwrap();
+        match (&sa, &back_a, &sb, &back_b) {
+            (
+                SeqState::TConst(x),
+                SeqState::TConst(xa),
+                SeqState::TConst(y),
+                SeqState::TConst(yb),
+            ) => {
+                assert_eq!(x.ctx_k, xa.ctx_k);
+                assert_eq!(x.gen_v, xa.gen_v);
+                assert_eq!(x.ctx_sum, xa.ctx_sum);
+                assert_eq!(x.slot, xa.slot);
+                assert_eq!(x.window_tokens, xa.window_tokens);
+                assert_eq!(y.ctx_v, yb.ctx_v);
+                assert_eq!(y.gen_k, yb.gen_k);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn alloc_free_reuses_slots_and_meters_bytes() {
+        let c = cfg();
+        let mut arena = LaneArena::new(Arch::TConst, &c, 3);
+        assert_eq!(arena.bytes_per_slot(), memory::tconst_bytes(&c, 1));
+        let s0 = arena.alloc().unwrap();
+        let s1 = arena.alloc().unwrap();
+        let s2 = arena.alloc().unwrap();
+        assert!(arena.alloc().is_err(), "capacity enforced");
+        assert_eq!(arena.n_occupied(), 3);
+        arena.free(s1).unwrap();
+        assert_eq!(arena.n_occupied(), 2);
+        let s1b = arena.alloc().unwrap();
+        assert_eq!(s1b, s1, "freed slot is reused");
+        assert!(arena.free(99).is_err());
+        arena.free(s0).unwrap();
+        assert!(arena.free(s0).is_err(), "double free rejected");
+        let _ = s2;
+    }
+
+    #[test]
+    fn base_and_tlin_arenas_start_at_zero_bytes() {
+        let c = cfg();
+        let base = LaneArena::new(Arch::Base, &c, 2);
+        assert_eq!(base.bytes_per_slot(), 0);
+        let tlin = LaneArena::new(Arch::TLin, &c, 2);
+        assert_eq!(tlin.bytes_per_slot(), memory::tlin_bytes(&c, 1, 0));
+    }
+}

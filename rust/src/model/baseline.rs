@@ -115,13 +115,16 @@ pub fn decode_batch(
         })
         .collect();
 
-    let (nl, d) = (drv.cfg.n_layer, drv.cfg.d_model);
-    let dummy_k = HostTensor::zeros_f32(&[nl, 1, max_bucket, d]);
+    let dummy_k: HostTensor;
     let mut ks: Vec<&HostTensor> = states.iter().map(|s| s.cache_k.as_ref().unwrap()).collect();
     let mut vs: Vec<&HostTensor> = states.iter().map(|s| s.cache_v.as_ref().unwrap()).collect();
-    while ks.len() < bucket_b {
-        ks.push(&dummy_k);
-        vs.push(&dummy_k);
+    if ks.len() < bucket_b {
+        let (nl, d) = (drv.cfg.n_layer, drv.cfg.d_model);
+        dummy_k = HostTensor::zeros_f32(&[nl, 1, max_bucket, d]);
+        while ks.len() < bucket_b {
+            ks.push(&dummy_k);
+            vs.push(&dummy_k);
+        }
     }
 
     let mut tok = vec![0i32; bucket_b];

@@ -1,13 +1,62 @@
 //! Tensor concatenation / splitting / in-place insertion along an axis —
 //! the host-side plumbing for batching per-lane states into the static
-//! batch-bucket shapes the decode graphs expect, and back.
+//! batch-bucket shapes the decode graphs expect, and back — plus the
+//! strided block copies the resident [`crate::model::arena`] uses to read
+//! and write single lanes of a batch-major slab in place.
 //!
 //! All operations are f32/i32-agnostic straight memcpys organized by
-//! (outer, axis, inner) strides.
+//! (outer, axis, inner) strides. Every gather/scatter-layer operation is
+//! metered through [`copy_metrics`], which is what the steady-state
+//! "zero copies per decode step" tests and the micro bench read.
 
 use anyhow::{bail, Result};
 
 use crate::runtime::HostTensor;
+
+/// Thread-local meters for the host gather/scatter layer: how many
+/// concat/split-style calls ran, how many state tensors they allocated,
+/// and how many bytes they copied. Thread-local (not process-global) so
+/// parallel tests and engines never see each other's traffic.
+pub mod copy_metrics {
+    use std::cell::Cell;
+
+    thread_local! {
+        static CALLS: Cell<u64> = const { Cell::new(0) };
+        static ALLOCS: Cell<u64> = const { Cell::new(0) };
+        static BYTES: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Snapshot of the current thread's gather/scatter traffic.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+    pub struct CopyStats {
+        /// concat/split/grow/block-copy invocations.
+        pub gather_scatter_calls: u64,
+        /// Fresh state tensors those invocations allocated.
+        pub tensor_allocs: u64,
+        /// Bytes memcpyed between host state tensors.
+        pub bytes_copied: u64,
+    }
+
+    pub(super) fn record(calls: u64, allocs: u64, bytes: u64) {
+        CALLS.with(|c| c.set(c.get() + calls));
+        ALLOCS.with(|c| c.set(c.get() + allocs));
+        BYTES.with(|c| c.set(c.get() + bytes));
+    }
+
+    pub fn reset() {
+        CALLS.with(|c| c.set(0));
+        ALLOCS.with(|c| c.set(0));
+        BYTES.with(|c| c.set(0));
+    }
+
+    pub fn snapshot() -> CopyStats {
+        CopyStats {
+            gather_scatter_calls: CALLS.with(|c| c.get()),
+            tensor_allocs: ALLOCS.with(|c| c.get()),
+            bytes_copied: BYTES.with(|c| c.get()),
+        }
+    }
+}
 
 fn strides(shape: &[usize], axis: usize) -> (usize, usize, usize) {
     let outer: usize = shape[..axis].iter().product();
@@ -40,6 +89,8 @@ pub fn concat_axis(tensors: &[&HostTensor], axis: usize) -> Result<HostTensor> {
         }
     }
     let (outer, _, inner) = strides(&out_shape, axis);
+    let out_numel: usize = out_shape.iter().product();
+    copy_metrics::record(1, 1, 4 * out_numel as u64);
     match first {
         HostTensor::F32 { .. } => {
             let mut data = vec![0f32; out_shape.iter().product()];
@@ -89,6 +140,7 @@ pub fn split_axis(t: &HostTensor, axis: usize, parts: usize) -> Result<Vec<HostT
     let (outer, ax, inner) = strides(&shape, axis);
     let mut out_shape = shape.clone();
     out_shape[axis] = chunk_ax;
+    copy_metrics::record(1, parts as u64, 4 * t.len() as u64);
     let mut out = Vec::with_capacity(parts);
     for p in 0..parts {
         match t {
@@ -144,6 +196,7 @@ pub fn insert_axis(
     }
     let (outer, dax, inner) = strides(&dshape, axis);
     let sax = sshape[axis];
+    copy_metrics::record(1, 0, 4 * (outer * sax * inner) as u64);
     match (dst, src) {
         (HostTensor::F32 { data: d, .. }, HostTensor::F32 { data: s, .. }) => {
             for o in 0..outer {
@@ -175,11 +228,143 @@ pub fn grow_axis(t: &HostTensor, axis: usize, new_len: usize) -> Result<HostTens
         bail!("grow_axis: {new_len} < {old_len}");
     }
     shape[axis] = new_len;
+    copy_metrics::record(0, 1, 0); // the copy itself is metered by insert_axis
     let mut out = match t {
         HostTensor::F32 { .. } => HostTensor::zeros_f32(&shape),
         HostTensor::I32 { .. } => HostTensor::zeros_i32(&shape),
     };
     insert_axis(&mut out, t, axis, 0)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Strided block copies (the arena's lane read/write primitives)
+// ---------------------------------------------------------------------------
+
+fn check_block(
+    dshape: &[usize],
+    sshape: &[usize],
+    dst_off: &[usize],
+    src_off: &[usize],
+    size: &[usize],
+) -> Result<()> {
+    let rank = dshape.len();
+    if sshape.len() != rank || dst_off.len() != rank || src_off.len() != rank || size.len() != rank
+    {
+        bail!(
+            "copy_block rank mismatch: dst {dshape:?} src {sshape:?} \
+             dst_off {dst_off:?} src_off {src_off:?} size {size:?}"
+        );
+    }
+    for a in 0..rank {
+        if dst_off[a] + size[a] > dshape[a] || src_off[a] + size[a] > sshape[a] {
+            bail!(
+                "copy_block out of range on axis {a}: dst {dshape:?} src {sshape:?} \
+                 dst_off {dst_off:?} src_off {src_off:?} size {size:?}"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Row-major linear offset of a coordinate.
+fn linear(shape: &[usize], coord: &[usize]) -> usize {
+    let mut off = 0usize;
+    for (d, c) in shape.iter().zip(coord) {
+        off = off * d + c;
+    }
+    off
+}
+
+fn copy_block_typed<T: Copy>(
+    dst: &mut [T],
+    dshape: &[usize],
+    src: &[T],
+    sshape: &[usize],
+    dst_off: &[usize],
+    src_off: &[usize],
+    size: &[usize],
+) {
+    let rank = size.len();
+    if rank == 0 {
+        dst[0] = src[0];
+        return;
+    }
+    // Iterate every coordinate of the block except the innermost axis and
+    // memcpy contiguous `size[rank-1]` runs.
+    let run = size[rank - 1];
+    if size.iter().any(|&s| s == 0) {
+        return;
+    }
+    let mut idx = vec![0usize; rank - 1];
+    let mut dc = vec![0usize; rank];
+    let mut sc = vec![0usize; rank];
+    loop {
+        for a in 0..rank - 1 {
+            dc[a] = dst_off[a] + idx[a];
+            sc[a] = src_off[a] + idx[a];
+        }
+        dc[rank - 1] = dst_off[rank - 1];
+        sc[rank - 1] = src_off[rank - 1];
+        let d0 = linear(dshape, &dc);
+        let s0 = linear(sshape, &sc);
+        dst[d0..d0 + run].copy_from_slice(&src[s0..s0 + run]);
+        // odometer increment over the outer block axes
+        let mut a = rank - 1;
+        loop {
+            if a == 0 {
+                return;
+            }
+            a -= 1;
+            idx[a] += 1;
+            if idx[a] < size[a] {
+                break;
+            }
+            idx[a] = 0;
+        }
+    }
+}
+
+/// Copy a hyper-rectangular block from `src` into `dst` in place:
+/// `dst[dst_off + i] = src[src_off + i]` for every `i < size`, all
+/// row-major. This is the arena's lane write-back primitive — it moves a
+/// single lane (or lane prefix) of a batch-major slab without allocating.
+pub fn copy_block(
+    dst: &mut HostTensor,
+    dst_off: &[usize],
+    src: &HostTensor,
+    src_off: &[usize],
+    size: &[usize],
+) -> Result<()> {
+    let dshape = dst.shape().to_vec();
+    let sshape = src.shape().to_vec();
+    check_block(&dshape, &sshape, dst_off, src_off, size)?;
+    let numel: usize = size.iter().product();
+    copy_metrics::record(1, 0, 4 * numel as u64);
+    match (dst, src) {
+        (HostTensor::F32 { data: d, .. }, HostTensor::F32 { data: s, .. }) => {
+            copy_block_typed(d, &dshape, s, &sshape, dst_off, src_off, size)
+        }
+        (HostTensor::I32 { data: d, .. }, HostTensor::I32 { data: s, .. }) => {
+            copy_block_typed(d, &dshape, s, &sshape, dst_off, src_off, size)
+        }
+        _ => bail!("copy_block dtype mismatch"),
+    }
+    Ok(())
+}
+
+/// Read a hyper-rectangular block of `src` out into a fresh tensor of
+/// shape `size` (the arena's lane *extraction* primitive — cache-miss /
+/// admission paths only; the steady-state decode loop never calls it).
+pub fn read_block(src: &HostTensor, src_off: &[usize], size: &[usize]) -> Result<HostTensor> {
+    let sshape = src.shape().to_vec();
+    check_block(&sshape, &sshape, &vec![0; sshape.len()], src_off, size)?;
+    copy_metrics::record(0, 1, 0); // the copy itself is metered by copy_block
+    let mut out = match src {
+        HostTensor::F32 { .. } => HostTensor::zeros_f32(size),
+        HostTensor::I32 { .. } => HostTensor::zeros_i32(size),
+    };
+    copy_block(&mut out, &vec![0; size.len()], src, src_off, size)?;
     Ok(out)
 }
 

@@ -12,6 +12,7 @@
 //! States are plain host tensors; byte accounting matches
 //! [`crate::analytic::memory`] exactly (asserted in tests).
 
+pub mod arena;
 pub mod baseline;
 pub mod batch;
 pub mod sampler;
@@ -19,9 +20,12 @@ pub mod state;
 pub mod tconstformer;
 pub mod tlinformer;
 
+use std::cell::OnceCell;
+
 use anyhow::{bail, Result};
 
 use crate::runtime::{ModelConfig, Runtime};
+use arena::LaneArena;
 use state::SeqState;
 
 /// The three architectures under comparison.
@@ -71,6 +75,9 @@ pub struct ModelDriver {
     pub arch: Arch,
     pub cfg: ModelConfig,
     pub sync_mode: SyncMode,
+    /// Lazily-created zero pad state for bucket padding on the legacy
+    /// gather/scatter decode path (one per driver, not one per step).
+    pad: OnceCell<state::TConstState>,
 }
 
 impl ModelDriver {
@@ -81,6 +88,7 @@ impl ModelDriver {
             arch,
             cfg,
             sync_mode: SyncMode::Incremental,
+            pad: OnceCell::new(),
         })
     }
 
@@ -136,5 +144,48 @@ impl ModelDriver {
     /// Exact KV-cache bytes currently held by a sequence state.
     pub fn state_bytes(&self, st: &SeqState) -> u64 {
         st.bytes()
+    }
+
+    /// The driver's shared zero pad state (legacy bucket padding).
+    pub(crate) fn pad_state(&self) -> &state::TConstState {
+        self.pad.get_or_init(|| state::TConstState::new(&self.cfg))
+    }
+
+    // -- resident batch-major arena path (DESIGN.md D5) ----------------------
+
+    /// Create a resident lane arena for this architecture. `cap` must be an
+    /// exported batch bucket: the arena's slabs are exactly the decode
+    /// graph's batch-major input shapes, so decode passes them straight to
+    /// `rt.execute` with no per-step gather.
+    pub fn new_arena(&self, cap: usize) -> LaneArena {
+        LaneArena::new(self.arch, &self.cfg, cap)
+    }
+
+    /// Absorb a prompt directly into an arena slot (admission path: runs
+    /// the ordinary per-lane prefill, then writes the resulting state into
+    /// the slot's lane of the batch-major slabs).
+    pub fn prefill_resident(
+        &self,
+        rt: &mut Runtime,
+        arena: &mut LaneArena,
+        slot: usize,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let mut st = self.new_state();
+        let logits = self.prefill(rt, &mut st, tokens)?;
+        arena.load_state(slot, &st)?;
+        Ok(logits)
+    }
+
+    /// One decode step for `slots` of a resident arena — the steady-state
+    /// hot path: no gather, no scatter, no state-tensor allocation.
+    pub fn decode_resident(
+        &self,
+        rt: &mut Runtime,
+        arena: &mut LaneArena,
+        slots: &[usize],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        arena.decode(self, rt, slots, tokens)
     }
 }

@@ -94,8 +94,10 @@ pub struct TConstState {
     /// Tokens currently in the (unsynced) generation window.
     pub window_tokens: Vec<i32>,
     /// Full raw token history — needed only by the paper-literal full-sync
-    /// ablation; token ids are NOT KV cache and excluded from `bytes()`
-    /// (the paper's Fig. 8(g) counts cache tensors only).
+    /// ablation, and therefore only *recorded* when `SyncMode::Full` is
+    /// active (Incremental streaming stays O(1) in host memory too). Token
+    /// ids are NOT KV cache and excluded from `bytes()` (the paper's
+    /// Fig. 8(g) counts cache tensors only).
     pub history: Vec<i32>,
     pub tokens_seen: usize,
     /// Cache-miss (sync) events so far — the scheduler's cadence counter.

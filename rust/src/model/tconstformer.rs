@@ -37,12 +37,16 @@ pub(crate) fn window_tokens_tensor(chunk: &[i32], w: usize) -> Result<HostTensor
 
 /// Run one window pass (forward + fold) and return
 /// (logits tensor, gen_k, gen_v, new_ctx_k, new_ctx_v, new_ctx_sum).
+/// `chunk = None` folds the state's own `window_tokens` (the sync path) —
+/// taking the chunk through the state avoids cloning it just to appease
+/// the borrow checker.
 fn run_window(
     drv: &ModelDriver,
     rt: &mut Runtime,
     s: &TConstState,
-    chunk: &[i32],
+    chunk: Option<&[i32]>,
 ) -> Result<Vec<HostTensor>> {
+    let chunk = chunk.unwrap_or(&s.window_tokens);
     let w = drv.cfg.w_og;
     assert!(!chunk.is_empty() && chunk.len() <= w);
     let name = rt.manifest.name_tconst_window(&drv.preset);
@@ -63,8 +67,7 @@ pub fn sync(drv: &ModelDriver, rt: &mut Runtime, s: &mut TConstState) -> Result<
     }
     match drv.sync_mode {
         SyncMode::Incremental => {
-            let chunk: Vec<i32> = s.window_tokens.clone();
-            let mut out = run_window(drv, rt, s, &chunk)?;
+            let mut out = run_window(drv, rt, s, None)?;
             // results: logits, gen_k, gen_v, new_ctx_k, new_ctx_v, new_ctx_sum
             s.ctx_sum = out.pop().context("ctx_sum")?;
             s.ctx_v = out.pop().context("ctx_v")?;
@@ -121,9 +124,13 @@ pub fn prefill(
     let w = drv.cfg.w_og;
     let mut last_logits = Vec::new();
     for chunk in tokens.chunks(w) {
-        let out = run_window(drv, rt, s, chunk)?;
+        let out = run_window(drv, rt, s, Some(chunk))?;
         last_logits = logits_row(&out[0], chunk.len() - 1, drv.cfg.vocab)?;
-        s.history.extend_from_slice(chunk);
+        if drv.sync_mode == SyncMode::Full {
+            // Raw history feeds only the Full-sync ablation; recording it in
+            // Incremental mode would grow O(N) memory the paper doesn't pay.
+            s.history.extend_from_slice(chunk);
+        }
         s.tokens_seen += chunk.len();
         if chunk.len() == w {
             // Full window: fold it into the context (periodic sync).
@@ -188,10 +195,14 @@ pub fn decode_batch(
         })
         .collect();
 
-    let dummy = TConstState::new(&drv.cfg);
     let mut all: Vec<&TConstState> = states.clone();
-    while all.len() < bucket {
-        all.push(&dummy);
+    if all.len() < bucket {
+        // One pad state per driver, created on first use — allocating fresh
+        // zeroed slabs every step just to pad the bucket was pure waste.
+        let pad = drv.pad_state();
+        while all.len() < bucket {
+            all.push(pad);
+        }
     }
 
     let gather = |f: fn(&TConstState) -> &HostTensor, axis: usize| -> Result<HostTensor> {
@@ -235,7 +246,9 @@ pub fn decode_batch(
         s.gen_k = gen_k_parts.next().unwrap();
         s.gen_v = gen_v_parts.next().unwrap();
         s.window_tokens.push(tokens[i]);
-        s.history.push(tokens[i]);
+        if drv.sync_mode == SyncMode::Full {
+            s.history.push(tokens[i]);
+        }
         s.slot += 1;
         s.tokens_seen += 1;
         logits.push(logits_row(&out[0], i, drv.cfg.vocab)?);

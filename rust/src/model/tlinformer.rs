@@ -46,13 +46,15 @@ fn ensure_capacity(
 }
 
 /// One window pass at the lane's current bucket. Returns the full result
-/// vector of the `tlin_window` graph.
+/// vector of the `tlin_window` graph. `chunk = None` folds the state's own
+/// `window_tokens` (the sync path) without cloning them.
 fn run_window(
     drv: &ModelDriver,
     rt: &mut Runtime,
     s: &TLinState,
-    chunk: &[i32],
+    chunk: Option<&[i32]>,
 ) -> Result<Vec<HostTensor>> {
+    let chunk = chunk.unwrap_or(&s.inner.window_tokens);
     let w = drv.cfg.w_og;
     let name = rt.manifest.name_tlin_window(&drv.preset, s.hist_bucket);
     let toks = window_tokens_tensor(chunk, w)?;
@@ -104,9 +106,10 @@ pub fn prefill(
     let mut last_logits = Vec::new();
     for chunk in tokens.chunks(w) {
         ensure_capacity(drv, rt, s, w)?;
-        let out = run_window(drv, rt, s, chunk)?;
+        let out = run_window(drv, rt, s, Some(chunk))?;
         last_logits = logits_row(&out[0], chunk.len() - 1, drv.cfg.vocab)?;
-        s.inner.history.extend_from_slice(chunk);
+        // No raw token history here: TLinFormer's "history" is the projected
+        // K/V slabs; keeping token ids too would grow O(N) for nothing.
         s.inner.tokens_seen += chunk.len();
         s.tokens_seen += chunk.len();
         if chunk.len() == w {
@@ -129,8 +132,7 @@ pub fn sync(drv: &ModelDriver, rt: &mut Runtime, s: &mut TLinState) -> Result<()
         bail!("tlin sync with {}/{} window tokens", s.inner.window_tokens.len(), w);
     }
     ensure_capacity(drv, rt, s, w)?;
-    let chunk = s.inner.window_tokens.clone();
-    let out = run_window(drv, rt, s, &chunk)?;
+    let out = run_window(drv, rt, s, None)?;
     fold(s, &out, w)
 }
 
@@ -189,14 +191,18 @@ pub fn decode_batch(
         })
         .collect();
 
-    let mut dummy = TLinState::new(&drv.cfg);
-    let (nb, d) = (drv.cfg.n_block, drv.cfg.d_model);
-    dummy.hist_k = Some(HostTensor::zeros_f32(&[nb, 1, max_bucket, d]));
-    dummy.hist_v = Some(HostTensor::zeros_f32(&[nb, 1, max_bucket, d]));
-    dummy.hist_bucket = max_bucket;
+    let dummy: TLinState;
     let mut all: Vec<&TLinState> = states.clone();
-    while all.len() < bucket {
-        all.push(&dummy);
+    if all.len() < bucket {
+        let mut d = TLinState::new(&drv.cfg);
+        let (nb, dm) = (drv.cfg.n_block, drv.cfg.d_model);
+        d.hist_k = Some(HostTensor::zeros_f32(&[nb, 1, max_bucket, dm]));
+        d.hist_v = Some(HostTensor::zeros_f32(&[nb, 1, max_bucket, dm]));
+        d.hist_bucket = max_bucket;
+        dummy = d;
+        while all.len() < bucket {
+            all.push(&dummy);
+        }
     }
 
     let mut tok = vec![0i32; bucket];
@@ -246,7 +252,6 @@ pub fn decode_batch(
         s.inner.gen_k = gen_k_parts.next().unwrap();
         s.inner.gen_v = gen_v_parts.next().unwrap();
         s.inner.window_tokens.push(tokens[i]);
-        s.inner.history.push(tokens[i]);
         s.inner.slot += 1;
         s.inner.tokens_seen += 1;
         s.tokens_seen += 1;

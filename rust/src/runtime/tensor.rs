@@ -95,6 +95,13 @@ impl HostTensor {
         }
     }
 
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
     /// Scalar extraction (also accepts shape [1]).
     pub fn scalar(&self) -> Result<f64> {
         if self.len() != 1 {

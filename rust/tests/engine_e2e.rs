@@ -24,6 +24,7 @@ fn tiny_cfg(arch: Arch) -> EngineConfig {
         max_lanes: 4,
         sched: Default::default(),
         checkpoint: None,
+        resident: true,
     }
 }
 
@@ -38,7 +39,8 @@ fn engine_batched_equals_sequential() {
         return;
     }
     // Sequential: one engine, one request at a time.
-    let mut seq_engine = Engine::new(&EngineConfig { max_lanes: 1, ..tiny_cfg(Arch::TConst) }).unwrap();
+    let mut seq_engine =
+        Engine::new(&EngineConfig { max_lanes: 1, ..tiny_cfg(Arch::TConst) }).unwrap();
     let mut solo = Vec::new();
     for i in 0..6 {
         let out = seq_engine
@@ -118,6 +120,61 @@ fn engine_all_archs_serve() {
             .run_workload(vec![Request::greedy(1, prompt(40, 3), 5)])
             .unwrap();
         assert_eq!(out[0].tokens.len(), 5, "{:?}", arch);
+    }
+}
+
+#[test]
+fn resident_engine_matches_legacy_engine() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    for arch in [Arch::Base, Arch::TLin, Arch::TConst] {
+        let reqs = |n: u64| -> Vec<Request> {
+            (0..n)
+                .map(|i| Request::greedy(i, prompt(5 + 9 * i as usize, i as usize), 12))
+                .collect()
+        };
+        let mut resident = Engine::new(&tiny_cfg(arch)).unwrap();
+        assert!(resident.is_resident());
+        let mut a = resident.run_workload(reqs(4)).unwrap();
+        a.sort_by_key(|r| r.id);
+
+        let mut legacy =
+            Engine::new(&EngineConfig { resident: false, ..tiny_cfg(arch) }).unwrap();
+        assert!(!legacy.is_resident());
+        let mut b = legacy.run_workload(reqs(4)).unwrap();
+        b.sort_by_key(|r| r.id);
+
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens, "{arch:?}: resident engine diverged");
+            // For TConst the per-sequence accounting models coincide
+            // exactly (constant Eq. 7 state). For the O(N) archs the
+            // resident arena charges each lane its share of the shared
+            // bucket (>= the legacy per-lane bucket), so only a lower
+            // bound holds in general.
+            if arch == Arch::TConst {
+                assert_eq!(
+                    x.metrics.peak_kv_bytes, y.metrics.peak_kv_bytes,
+                    "tconst: per-sequence KV accounting diverged"
+                );
+            } else {
+                assert!(
+                    x.metrics.peak_kv_bytes >= y.metrics.peak_kv_bytes,
+                    "{arch:?}: resident lane charged less than its legacy state"
+                );
+            }
+        }
+        // The resident engine's steady-state decode must report far less
+        // gather/scatter traffic than the legacy one.
+        let ma = resident.metrics_json();
+        let mb = legacy.metrics_json();
+        let bytes_resident = ma.get("host_copy_bytes").as_f64().unwrap();
+        let bytes_legacy = mb.get("host_copy_bytes").as_f64().unwrap();
+        assert!(
+            bytes_resident < bytes_legacy,
+            "{arch:?}: resident {bytes_resident} B >= legacy {bytes_legacy} B"
+        );
     }
 }
 

@@ -3,6 +3,7 @@
 //! growth laws (Eq. 6/7 at the serving layer), and determinism.
 
 use tconstformer::analytic::memory;
+use tconstformer::model::batch::copy_metrics;
 use tconstformer::model::state::SeqState;
 use tconstformer::model::{Arch, ModelDriver, SyncMode};
 use tconstformer::runtime::Runtime;
@@ -226,6 +227,143 @@ fn sync_full_mode_runs_and_differs_only_numerically() {
     assert!(li.iter().all(|x| x.is_finite()));
     assert!(lf.iter().all(|x| x.is_finite()));
     assert_eq!(si.bytes(), sf.bytes(), "both modes keep O(1) state");
+}
+
+// ---------------------------------------------------------------------------
+// Resident batch-major arena (DESIGN.md D5)
+// ---------------------------------------------------------------------------
+
+/// The arena-resident decode path must be *bit-identical* to the legacy
+/// gather/scatter path across prefill → decode → sync boundaries, and its
+/// per-lane state bytes must match exactly.
+fn assert_arena_parity(arch: Arch, prompt_lens: &[usize], steps: usize) {
+    let mut rt = rt();
+    let driver = ModelDriver::new(&rt, "tiny", arch).unwrap();
+    let n = prompt_lens.len();
+    let cap = rt.manifest.batch_bucket_for(n).unwrap();
+    let mut arena = driver.new_arena(cap);
+
+    let mut legacy: Vec<SeqState> = Vec::new();
+    let mut slots: Vec<usize> = Vec::new();
+    let mut toks: Vec<i32> = Vec::new();
+    for &len in prompt_lens {
+        let p = prompt(len);
+        let mut st = driver.new_state();
+        let l_legacy = driver.prefill(&mut rt, &mut st, &p).unwrap();
+        let slot = arena.alloc().unwrap();
+        let l_arena = driver.prefill_resident(&mut rt, &mut arena, slot, &p).unwrap();
+        assert_eq!(l_legacy, l_arena, "prefill logits must match");
+        toks.push(tconstformer::model::sampler::argmax(&l_legacy));
+        legacy.push(st);
+        slots.push(slot);
+    }
+
+    for step in 0..steps {
+        let mut refs: Vec<&mut SeqState> = legacy.iter_mut().collect();
+        let l_legacy = driver
+            .decode_batch(&mut rt, refs.as_mut_slice(), &toks)
+            .unwrap();
+        let l_arena = driver
+            .decode_resident(&mut rt, &mut arena, &slots, &toks)
+            .unwrap();
+        assert_eq!(
+            l_legacy, l_arena,
+            "{arch:?} step {step}: resident decode diverged from gather/scatter"
+        );
+        toks = l_legacy
+            .iter()
+            .map(|l| tconstformer::model::sampler::argmax(l))
+            .collect();
+    }
+
+    for (st, &slot) in legacy.iter().zip(&slots) {
+        let resident = arena.extract_state(slot).unwrap();
+        assert_eq!(
+            st.bytes(),
+            resident.bytes(),
+            "{arch:?}: per-lane state bytes must match"
+        );
+        assert_eq!(st.tokens_seen(), resident.tokens_seen());
+    }
+}
+
+#[test]
+fn arena_decode_matches_legacy_tconst() {
+    require_artifacts!();
+    // crosses several W_og=32 sync boundaries during decode
+    assert_arena_parity(Arch::TConst, &[6, 15, 24], 40);
+}
+
+#[test]
+fn arena_decode_matches_legacy_tlin() {
+    require_artifacts!();
+    // prompts longer than a window so the raw-history cache is live too
+    assert_arena_parity(Arch::TLin, &[40, 7, 33], 40);
+}
+
+#[test]
+fn arena_decode_matches_legacy_base() {
+    require_artifacts!();
+    // 100-token prompts decode across the 128 -> 512 bucket migration
+    assert_arena_parity(Arch::Base, &[100, 101], 40);
+}
+
+#[test]
+fn arena_steady_state_decode_is_copy_free() {
+    require_artifacts!();
+    use tconstformer::model::arena::ArenaState;
+    let mut rt = rt();
+    for arch in [Arch::TConst, Arch::TLin, Arch::Base] {
+        let driver = ModelDriver::new(&rt, "tiny", arch).unwrap();
+        let w = driver.cfg.w_og;
+        let cap = rt.manifest.batch_bucket_for(2).unwrap();
+        let mut arena = driver.new_arena(cap);
+        let mut slots = Vec::new();
+        let mut toks = Vec::new();
+        for i in 0..2 {
+            let slot = arena.alloc().unwrap();
+            let l = driver
+                .prefill_resident(&mut rt, &mut arena, slot, &prompt(5 + i))
+                .unwrap();
+            toks.push(tconstformer::model::sampler::argmax(&l));
+            slots.push(slot);
+        }
+        // warm (compiles the decode graph)
+        driver
+            .decode_resident(&mut rt, &mut arena, &slots, &toks)
+            .unwrap();
+
+        let mut asserted = 0;
+        for _ in 0..(w + 5) {
+            // Steps that hit a boundary event are the amortized cache miss
+            // and are allowed to touch per-lane tensors: a full-window sync
+            // (TConst/TLin) or a cache-bucket migration (Base). Every other
+            // step must be copy-free.
+            let boundary = match &arena.state {
+                ArenaState::Base { bucket, .. } => {
+                    let need = slots.iter().map(|&s| arena.lanes[s].pos + 1).max().unwrap();
+                    need > *bucket
+                }
+                _ => slots.iter().any(|&s| arena.lanes[s].fill >= w),
+            };
+            copy_metrics::reset();
+            let l = driver
+                .decode_resident(&mut rt, &mut arena, &slots, &toks)
+                .unwrap();
+            if !boundary {
+                let m = copy_metrics::snapshot();
+                assert_eq!(m.gather_scatter_calls, 0, "{arch:?}: steady state gathered");
+                assert_eq!(m.tensor_allocs, 0, "{arch:?}: steady state allocated");
+                assert_eq!(m.bytes_copied, 0, "{arch:?}: steady state memcpyed");
+                asserted += 1;
+            }
+            toks = l
+                .iter()
+                .map(|x| tconstformer::model::sampler::argmax(x))
+                .collect();
+        }
+        assert!(asserted >= w, "{arch:?}: steady-state steps must dominate");
+    }
 }
 
 #[test]
