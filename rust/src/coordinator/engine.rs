@@ -25,6 +25,18 @@ use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+/// Where the resident arena's slabs live between decode steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArenaStaging {
+    /// Slabs live in host memory and are uploaded on every execute (the
+    /// PR-1 behavior; kept for A/B parity, mirroring `--legacy-batching`).
+    HostArena,
+    /// Slabs live as pooled PJRT device buffers; decode uploads only the
+    /// token/position vectors and rotates state outputs in place
+    /// (DESIGN.md D5 device residency). The default serving path.
+    DeviceArena,
+}
+
 /// Engine construction parameters.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -41,6 +53,9 @@ pub struct EngineConfig {
     /// zero-gather decode path. `false` falls back to the legacy per-lane
     /// gather/scatter path (kept for parity testing and A/B benches).
     pub resident: bool,
+    /// Host-arena vs device-arena staging of the resident slabs (ignored
+    /// when `resident` is false).
+    pub staging: ArenaStaging,
 }
 
 impl Default for EngineConfig {
@@ -54,6 +69,7 @@ impl Default for EngineConfig {
             sched: SchedConfig::default(),
             checkpoint: None,
             resident: true,
+            staging: ArenaStaging::DeviceArena,
         }
     }
 }
@@ -107,7 +123,15 @@ impl Engine {
         let mut resident = cfg.resident;
         if resident {
             match rt.manifest.batch_bucket_for(cfg.max_lanes) {
-                Some(cap) => kv.attach_arena(driver.new_arena(cap)),
+                Some(cap) => {
+                    let mut arena = driver.new_arena(cap);
+                    if cfg.staging == ArenaStaging::DeviceArena {
+                        // Slabs join the parameters as device-resident:
+                        // decode uploads only tokens from here on.
+                        arena.enable_device(&mut rt);
+                    }
+                    kv.attach_arena(arena);
+                }
                 None => {
                     // No exported batch bucket covers max_lanes: serve via
                     // the legacy per-lane path rather than failing startup.
@@ -138,6 +162,12 @@ impl Engine {
     /// Whether this engine serves from the resident arena.
     pub fn is_resident(&self) -> bool {
         self.resident
+    }
+
+    /// Whether the resident arena's slabs are staged on device (the
+    /// decode-uploads-only-tokens path).
+    pub fn is_device_staged(&self) -> bool {
+        self.kv.is_device_staged()
     }
 
     /// Enqueue a request (owned mode: response lands in `self.completed`).
@@ -182,10 +212,12 @@ impl Engine {
             produced += self.prefill_one(pending)?;
         }
 
-        // 2. batched decode rounds (the copy meters cover only this loop:
-        // admission prefill legitimately copies state into its slot, and
-        // must not be mistaken for decode-path gather/scatter traffic)
+        // 2. batched decode rounds (the copy/transfer meters cover only
+        // this loop: admission prefill legitimately copies state into its
+        // slot and uploads it, and must not be mistaken for decode-path
+        // traffic)
         let copy0 = copy_metrics::snapshot();
+        let xfer0 = self.rt.transfer_stats();
         for group in plan.groups {
             produced += self.decode_group(&group)?;
         }
@@ -198,6 +230,11 @@ impl Engine {
         self.metrics.host_gather_scatter_calls += copy1
             .gather_scatter_calls
             .saturating_sub(copy0.gather_scatter_calls);
+        let xfer = self.rt.transfer_stats().delta_since(&xfer0);
+        self.metrics.dev_upload_bytes += xfer.upload_bytes;
+        self.metrics.dev_upload_calls += xfer.upload_calls;
+        self.metrics.dev_download_bytes += xfer.download_bytes;
+        self.metrics.dev_download_calls += xfer.download_calls;
         let kv_now = self.kv.touch();
         self.metrics.observe_kv(kv_now);
         self.metrics

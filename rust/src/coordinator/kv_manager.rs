@@ -5,7 +5,9 @@
 //! Two backings:
 //! * **resident** (default serving path) — sequences are lanes of a
 //!   batch-major [`LaneArena`] (DESIGN.md D5); alloc/free hand out arena
-//!   slots and never move state bytes;
+//!   slots and never move state bytes. With device staging the arena's
+//!   slabs additionally live as pooled PJRT buffers, so alloc/free also
+//!   never move bytes across the host↔device boundary;
 //! * **boxed** (legacy / tests) — each sequence owns its own [`SeqState`]
 //!   slabs, gathered/scattered per decode step.
 //!
@@ -71,6 +73,15 @@ impl KvManager {
 
     pub fn is_resident(&self) -> bool {
         self.resident.is_some()
+    }
+
+    /// Whether the resident arena's slabs are staged on device
+    /// (DESIGN.md D5 device residency).
+    pub fn is_device_staged(&self) -> bool {
+        self.resident
+            .as_ref()
+            .map(|r| r.arena.is_device())
+            .unwrap_or(false)
     }
 
     pub fn arena(&self) -> Option<&LaneArena> {

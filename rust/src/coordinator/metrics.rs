@@ -30,6 +30,14 @@ pub struct EngineMetrics {
     pub host_copy_bytes: u64,
     pub host_tensor_allocs: u64,
     pub host_gather_scatter_calls: u64,
+    /// Host↔device traffic on the decode path (from
+    /// [`crate::runtime::TransferStats`]): with device-arena staging the
+    /// steady-state upload is the token/position vectors and the download
+    /// is logits — both O(batch), independent of state size.
+    pub dev_upload_bytes: u64,
+    pub dev_upload_calls: u64,
+    pub dev_download_bytes: u64,
+    pub dev_download_calls: u64,
 }
 
 impl Default for EngineMetrics {
@@ -51,6 +59,10 @@ impl Default for EngineMetrics {
             host_copy_bytes: 0,
             host_tensor_allocs: 0,
             host_gather_scatter_calls: 0,
+            dev_upload_bytes: 0,
+            dev_upload_calls: 0,
+            dev_download_bytes: 0,
+            dev_download_calls: 0,
         }
     }
 }
@@ -93,6 +105,10 @@ impl EngineMetrics {
                 "host_gather_scatter_calls",
                 Json::num(self.host_gather_scatter_calls as f64),
             ),
+            ("dev_upload_bytes", Json::num(self.dev_upload_bytes as f64)),
+            ("dev_upload_calls", Json::num(self.dev_upload_calls as f64)),
+            ("dev_download_bytes", Json::num(self.dev_download_bytes as f64)),
+            ("dev_download_calls", Json::num(self.dev_download_calls as f64)),
         ])
     }
 }

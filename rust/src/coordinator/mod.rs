@@ -15,5 +15,5 @@ pub mod metrics;
 pub mod request;
 pub mod scheduler;
 
-pub use engine::{Engine, EngineConfig, EngineHandle};
+pub use engine::{ArenaStaging, Engine, EngineConfig, EngineHandle};
 pub use request::{Request, RequestMetrics, Response};

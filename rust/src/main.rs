@@ -8,7 +8,7 @@
 //!   info    print manifest / configs / artifact inventory
 
 use anyhow::{bail, Result};
-use tconstformer::coordinator::{Engine, EngineConfig, Request};
+use tconstformer::coordinator::{ArenaStaging, Engine, EngineConfig, Request};
 use tconstformer::data::corpus::{self, CorpusSpec};
 use tconstformer::data::tokenizer::ByteTokenizer;
 use tconstformer::model::{Arch, SyncMode};
@@ -77,6 +77,11 @@ fn engine_cfg_from(args: &tconstformer::util::cli::Args) -> Result<EngineConfig>
         sched: Default::default(),
         checkpoint: args.get("checkpoint").map(str::to_string),
         resident: !args.flag("legacy-batching"),
+        staging: if args.flag("host-arena") {
+            ArenaStaging::HostArena
+        } else {
+            ArenaStaging::DeviceArena
+        },
     })
 }
 
@@ -89,7 +94,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt_default("max-lanes", "max concurrent sequences", "4")
         .opt_default("addr", "listen address", "127.0.0.1:8077")
         .opt("checkpoint", "trained checkpoint stem to load")
-        .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)");
+        .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)")
+        .flag("host-arena", "stage resident arena slabs on the host (disable device residency)");
     let args = cmd.parse(rest)?;
     let cfg = engine_cfg_from(&args)?;
     println!(
@@ -117,7 +123,8 @@ fn cmd_gen(rest: &[String]) -> Result<()> {
         .opt_default("max-new-tokens", "tokens to generate", "64")
         .opt_default("temperature", "sampling temperature (0=greedy)", "0")
         .opt("checkpoint", "trained checkpoint stem to load")
-        .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)");
+        .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)")
+        .flag("host-arena", "stage resident arena slabs on the host (disable device residency)");
     let args = cmd.parse(rest)?;
     let cfg = engine_cfg_from(&args)?;
     let mut engine = Engine::new(&cfg)?;

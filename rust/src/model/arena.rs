@@ -23,6 +23,17 @@
 //! last occupant (or the graph) wrote, which is safe because every decode
 //! graph masks positions `>= slot/pos/hist_len` and admission rewrites the
 //! full lane before the slot is read again.
+//!
+//! **Device staging** ([`LaneArena::enable_device`], DESIGN.md D5): the
+//! slabs additionally live as named buffers of a runtime state pool, and
+//! the `HostTensor` slabs here become the lazily-synchronized **host
+//! mirror**. Decode executes against the pooled buffers — uploading only
+//! the token/position scratch vectors — and adopts the graph's state
+//! outputs in place (buffer rotation). Per-slab [`MirrorFlags`] record
+//! which side is current, so a slab crosses the host↔device boundary only
+//! at the events that already touch per-lane tensors: admission, the
+//! periodic sync cache miss, partial-group lane-copy, bucket migration,
+//! and explicit [`LaneArena::sync_host`] (eviction inspection / tests).
 
 use anyhow::{bail, Context, Result};
 
@@ -30,7 +41,72 @@ use super::batch::{copy_block, grow_axis, insert_axis, read_block};
 use super::state::{BaseState, SeqState, TConstState, TLinState};
 use super::tconstformer::logits_row;
 use super::{tconstformer, tlinformer, Arch, ModelDriver, SyncMode};
-use crate::runtime::{HostTensor, ModelConfig, Runtime};
+use crate::runtime::{HostTensor, ModelConfig, ResidentArg, ResidentOut, Runtime};
+
+/// Host-mirror ↔ device-buffer synchronization flags, one pair per slab
+/// key. Invariant: at least one side is always current. Pure bookkeeping —
+/// the transfer decisions built on it are what keep steady-state decode
+/// free of O(state) host↔device traffic.
+#[derive(Debug, Clone)]
+pub struct MirrorFlags {
+    /// key → (host current, device current).
+    map: std::collections::HashMap<&'static str, (bool, bool)>,
+}
+
+impl MirrorFlags {
+    /// All slabs start host-current (freshly zeroed mirrors, no buffers).
+    pub fn new(keys: &[&'static str]) -> Self {
+        MirrorFlags { map: keys.iter().map(|&k| (k, (true, false))).collect() }
+    }
+
+    fn entry(&self, key: &str) -> (bool, bool) {
+        *self.map.get(key).expect("unknown arena slab key")
+    }
+
+    fn entry_mut(&mut self, key: &str) -> &mut (bool, bool) {
+        self.map.get_mut(key).expect("unknown arena slab key")
+    }
+
+    /// The host mirror was modified: the device buffer is stale.
+    pub fn host_wrote(&mut self, key: &str) {
+        *self.entry_mut(key) = (true, false);
+    }
+
+    /// A graph output was adopted on device: the host mirror is stale.
+    pub fn dev_wrote(&mut self, key: &str) {
+        *self.entry_mut(key) = (false, true);
+    }
+
+    /// A transfer made both sides current.
+    pub fn synced(&mut self, key: &str) {
+        *self.entry_mut(key) = (true, true);
+    }
+
+    /// Would an execute against the pooled buffer need a fresh upload?
+    pub fn needs_upload(&self, key: &str) -> bool {
+        !self.entry(key).1
+    }
+
+    /// Would a host read of the mirror need a download first?
+    pub fn needs_download(&self, key: &str) -> bool {
+        !self.entry(key).0
+    }
+}
+
+/// Device staging handle: the runtime state pool holding this arena's
+/// slabs plus the per-slab mirror flags. The pooled buffers themselves
+/// live in the [`Runtime`] (they die with it; the arena only holds the
+/// pool id).
+#[derive(Debug)]
+struct DeviceStaging {
+    pool: u64,
+    flags: MirrorFlags,
+}
+
+const TCONST_KEYS: &[&str] = &["ctx_k", "ctx_v", "ctx_sum", "gen_k", "gen_v"];
+const TLIN_KEYS: &[&str] =
+    &["ctx_k", "ctx_v", "ctx_sum", "gen_k", "gen_v", "hist_k", "hist_v"];
+const BASE_KEYS: &[&str] = &["cache_k", "cache_v"];
 
 /// Per-slot lane bookkeeping (the scalar half of a sequence's state; the
 /// tensor half lives in the batch-major slabs).
@@ -152,6 +228,9 @@ pub struct LaneArena {
     scr_slot: HostTensor,
     scr_gate: HostTensor,
     scr_aux: HostTensor,
+    /// `Some` once [`LaneArena::enable_device`] moved the slabs into a
+    /// runtime state pool; the `HostTensor` slabs are then the mirror.
+    device: Option<DeviceStaging>,
 }
 
 impl LaneArena {
@@ -182,7 +261,153 @@ impl LaneArena {
             scr_slot: HostTensor::zeros_i32(&[cap]),
             scr_gate: HostTensor::zeros_f32(&[cap]),
             scr_aux: HostTensor::zeros_i32(&[cap]),
+            device: None,
         }
+    }
+
+    // -- device staging (DESIGN.md D5 device residency) ----------------------
+
+    /// Slab keys for this architecture (the pool key space).
+    fn slab_keys(&self) -> &'static [&'static str] {
+        match self.arch {
+            Arch::TConst => TCONST_KEYS,
+            Arch::TLin => TLIN_KEYS,
+            Arch::Base => BASE_KEYS,
+        }
+    }
+
+    /// Switch to device staging: claims a runtime state pool for the
+    /// slabs. From here on decode executes against pooled buffers and the
+    /// host slabs are a lazily-synchronized mirror. Uploads are deferred
+    /// to the first decode that needs each slab.
+    pub fn enable_device(&mut self, rt: &mut Runtime) {
+        if self.device.is_none() {
+            self.device = Some(DeviceStaging {
+                pool: rt.new_state_pool(),
+                flags: MirrorFlags::new(self.slab_keys()),
+            });
+        }
+    }
+
+    pub fn is_device(&self) -> bool {
+        self.device.is_some()
+    }
+
+    /// Read-only view of the mirror flags (tests / metrics).
+    pub fn mirror_flags(&self) -> Option<&MirrorFlags> {
+        self.device.as_ref().map(|d| &d.flags)
+    }
+
+    /// Borrow the named host slab (mirror side).
+    fn host_slab(&self, key: &str) -> Result<&HostTensor> {
+        let t = match (&self.state, key) {
+            (ArenaState::TConst(s), "ctx_k") => &s.ctx_k,
+            (ArenaState::TConst(s), "ctx_v") => &s.ctx_v,
+            (ArenaState::TConst(s), "ctx_sum") => &s.ctx_sum,
+            (ArenaState::TConst(s), "gen_k") => &s.gen_k,
+            (ArenaState::TConst(s), "gen_v") => &s.gen_v,
+            (ArenaState::TLin { inner, .. }, "ctx_k") => &inner.ctx_k,
+            (ArenaState::TLin { inner, .. }, "ctx_v") => &inner.ctx_v,
+            (ArenaState::TLin { inner, .. }, "ctx_sum") => &inner.ctx_sum,
+            (ArenaState::TLin { inner, .. }, "gen_k") => &inner.gen_k,
+            (ArenaState::TLin { inner, .. }, "gen_v") => &inner.gen_v,
+            (ArenaState::TLin { hist_k, .. }, "hist_k") => hist_k,
+            (ArenaState::TLin { hist_v, .. }, "hist_v") => hist_v,
+            (ArenaState::Base { cache_k, .. }, "cache_k") => cache_k,
+            (ArenaState::Base { cache_v, .. }, "cache_v") => cache_v,
+            _ => bail!("unknown arena slab {key:?} for {:?}", self.arch),
+        };
+        Ok(t)
+    }
+
+    /// Borrow the named host slab mutably (download target).
+    fn host_slab_mut(&mut self, key: &str) -> Result<&mut HostTensor> {
+        let arch = self.arch;
+        let t = match (&mut self.state, key) {
+            (ArenaState::TConst(s), "ctx_k") => &mut s.ctx_k,
+            (ArenaState::TConst(s), "ctx_v") => &mut s.ctx_v,
+            (ArenaState::TConst(s), "ctx_sum") => &mut s.ctx_sum,
+            (ArenaState::TConst(s), "gen_k") => &mut s.gen_k,
+            (ArenaState::TConst(s), "gen_v") => &mut s.gen_v,
+            (ArenaState::TLin { inner, .. }, "ctx_k") => &mut inner.ctx_k,
+            (ArenaState::TLin { inner, .. }, "ctx_v") => &mut inner.ctx_v,
+            (ArenaState::TLin { inner, .. }, "ctx_sum") => &mut inner.ctx_sum,
+            (ArenaState::TLin { inner, .. }, "gen_k") => &mut inner.gen_k,
+            (ArenaState::TLin { inner, .. }, "gen_v") => &mut inner.gen_v,
+            (ArenaState::TLin { hist_k, .. }, "hist_k") => hist_k,
+            (ArenaState::TLin { hist_v, .. }, "hist_v") => hist_v,
+            (ArenaState::Base { cache_k, .. }, "cache_k") => cache_k,
+            (ArenaState::Base { cache_v, .. }, "cache_v") => cache_v,
+            _ => bail!("unknown arena slab {key:?} for {arch:?}"),
+        };
+        Ok(t)
+    }
+
+    /// Upload any of `keys` whose device buffer is stale (host-ahead).
+    /// No-op in host staging and for in-sync slabs — this is what keeps
+    /// steady-state decode uploads down to the scratch vectors.
+    fn ensure_dev(&mut self, rt: &mut Runtime, keys: &[&'static str]) -> Result<()> {
+        let Some(dev) = &self.device else { return Ok(()) };
+        let pool = dev.pool;
+        let pending: Vec<&'static str> = keys
+            .iter()
+            .copied()
+            .filter(|k| dev.flags.needs_upload(k))
+            .collect();
+        for k in &pending {
+            let t = self.host_slab(k)?;
+            rt.pool_upload(pool, k, t)?;
+        }
+        if let Some(dev) = self.device.as_mut() {
+            for k in pending {
+                dev.flags.synced(k);
+            }
+        }
+        Ok(())
+    }
+
+    /// Download any of `keys` whose host mirror is stale (device-ahead).
+    fn ensure_host(&mut self, rt: &mut Runtime, keys: &[&'static str]) -> Result<()> {
+        let Some(dev) = &self.device else { return Ok(()) };
+        let pool = dev.pool;
+        let pending: Vec<&'static str> = keys
+            .iter()
+            .copied()
+            .filter(|k| dev.flags.needs_download(k))
+            .collect();
+        for k in &pending {
+            let t = rt.pool_download(pool, k)?;
+            *self.host_slab_mut(k)? = t;
+        }
+        if let Some(dev) = self.device.as_mut() {
+            for k in pending {
+                dev.flags.synced(k);
+            }
+        }
+        Ok(())
+    }
+
+    /// Bring the whole host mirror up to date (post-decode inspection,
+    /// eviction-time state capture, parity tests). Downloads only slabs
+    /// the device is ahead on; in host staging it is free.
+    pub fn sync_host(&mut self, rt: &mut Runtime) -> Result<()> {
+        self.ensure_host(rt, self.slab_keys())
+    }
+
+    /// Guard for host-mirror reads/writes without a runtime at hand:
+    /// error out loudly instead of silently using stale lanes.
+    fn require_host(&self, keys: &[&'static str]) -> Result<()> {
+        if let Some(dev) = &self.device {
+            for k in keys {
+                if dev.flags.needs_download(k) {
+                    bail!(
+                        "arena host mirror is stale for slab {k:?}; call sync_host \
+                         (or decode through the device path) first"
+                    );
+                }
+            }
+        }
+        Ok(())
     }
 
     // -- slot lifecycle -----------------------------------------------------
@@ -233,10 +458,13 @@ impl LaneArena {
     // -- slot <-> per-lane state conversion (boundary paths only) -----------
 
     /// Write a per-lane state into its slot (admission / post-sync).
+    /// In device staging the mirror must be current first (writes go to
+    /// the mirror; the next decode re-uploads the touched slabs).
     pub fn load_state(&mut self, slot: usize, st: &SeqState) -> Result<()> {
         if slot >= self.cap || !self.lanes[slot].occupied {
             bail!("load_state into unoccupied slot {slot}");
         }
+        self.require_host(self.slab_keys())?;
         match (&mut self.state, st) {
             (ArenaState::TConst(slabs), SeqState::TConst(s)) => {
                 slabs.load(slot, s)?;
@@ -299,14 +527,24 @@ impl LaneArena {
             }
             _ => bail!("arena/state arch mismatch"),
         }
+        // The lane write went to the mirror: stale out any device copies
+        // so the next decode re-uploads the touched slabs.
+        let keys = self.slab_keys();
+        if let Some(dev) = self.device.as_mut() {
+            for k in keys {
+                dev.flags.host_wrote(k);
+            }
+        }
         Ok(())
     }
 
     /// Read a slot back out as a per-lane state (sync / eviction / tests).
+    /// In device staging, requires a current host mirror ([`Self::sync_host`]).
     pub fn extract_state(&self, slot: usize) -> Result<SeqState> {
         if slot >= self.cap || !self.lanes[slot].occupied {
             bail!("extract_state of unoccupied slot {slot}");
         }
+        self.require_host(self.slab_keys())?;
         let m = &self.lanes[slot];
         Ok(match &self.state {
             ArenaState::TConst(slabs) => {
@@ -418,8 +656,11 @@ impl LaneArena {
     }
 
     /// Sync one lane through the legacy per-lane state machine: extract →
-    /// sync → write back. Amortized O(1/W_og) per generated token.
+    /// sync → write back. Amortized O(1/W_og) per generated token. This is
+    /// the periodic cache miss — in device staging it is also where
+    /// device-ahead slabs come home (the allowed O(state) download).
     fn sync_slot(&mut self, drv: &ModelDriver, rt: &mut Runtime, slot: usize) -> Result<()> {
+        self.ensure_host(rt, self.slab_keys())?;
         let mut st = self.extract_state(slot)?;
         match &mut st {
             SeqState::TConst(s) => tconstformer::sync(drv, rt, s)?,
@@ -491,6 +732,18 @@ impl LaneArena {
         }
         self.fill_scratch(slots, tokens)?;
         let name = rt.manifest.name_tconst_decode(&drv.preset, self.cap);
+        let full = slots.len() == self.n_occupied();
+        if self.device.is_some() {
+            let logits_t = self.execute_gen_device(
+                rt,
+                &name,
+                full,
+                slots,
+                &["ctx_k", "ctx_v", "ctx_sum", "gen_k", "gen_v"],
+                false,
+            )?;
+            return self.advance(drv, slots, tokens, &logits_t);
+        }
         let out = {
             let ArenaState::TConst(slabs) = &self.state else { unreachable!() };
             rt.execute(
@@ -511,7 +764,6 @@ impl LaneArena {
         let logits_t = it.next().context("logits")?;
         let new_gen_k = it.next().context("gen_k")?;
         let new_gen_v = it.next().context("gen_v")?;
-        let full = slots.len() == self.n_occupied();
         {
             let ArenaState::TConst(slabs) = &mut self.state else { unreachable!() };
             if full {
@@ -527,6 +779,92 @@ impl LaneArena {
             }
         }
         self.advance(drv, slots, tokens, &logits_t)
+    }
+
+    /// The shared TConst/TLin device-staged decode execute: state stays in
+    /// the pool, `scr_*` vectors are the only uploads, and on a full group
+    /// the graph's `gen_k/gen_v` outputs are adopted in place (rotation) —
+    /// the next step's inputs without any transfer. Partial groups fetch
+    /// the outputs and lane-copy the stepped rows into the host mirror.
+    /// Returns the fetched logits tensor.
+    fn execute_gen_device(
+        &mut self,
+        rt: &mut Runtime,
+        name: &str,
+        full: bool,
+        slots: &[usize],
+        keys: &'static [&'static str],
+        with_hist: bool,
+    ) -> Result<HostTensor> {
+        if !full {
+            // Merging stepped rows needs the untouched lanes' pre-step
+            // rows in the mirror.
+            self.ensure_host(rt, &["gen_k", "gen_v"])?;
+        }
+        self.ensure_dev(rt, keys)?;
+        let pool = self.device.as_ref().unwrap().pool;
+        let outs: [ResidentOut; 3] = if full {
+            [ResidentOut::Fetch, ResidentOut::Adopt("gen_k"), ResidentOut::Adopt("gen_v")]
+        } else {
+            [ResidentOut::Fetch, ResidentOut::Fetch, ResidentOut::Fetch]
+        };
+        let mut args: Vec<ResidentArg> = vec![
+            ResidentArg::Host(&self.scr_tok),
+            ResidentArg::Host(&self.scr_slot),
+            ResidentArg::Pooled("ctx_k"),
+            ResidentArg::Pooled("ctx_v"),
+            ResidentArg::Pooled("ctx_sum"),
+            ResidentArg::Host(&self.scr_gate),
+            ResidentArg::Pooled("gen_k"),
+            ResidentArg::Pooled("gen_v"),
+        ];
+        if with_hist {
+            args.push(ResidentArg::Pooled("hist_k"));
+            args.push(ResidentArg::Pooled("hist_v"));
+            args.push(ResidentArg::Host(&self.scr_aux));
+        }
+        let mut res = rt.execute_resident(name, pool, &args, &outs)?;
+        let logits_t = res[0].take().context("logits")?;
+        if full {
+            // Adopted on device (None) → mirror goes stale; staged through
+            // the host (Some) → refresh the mirror for free so the next
+            // boundary event pays no second download.
+            match (res[1].take(), res[2].take()) {
+                (Some(k), Some(v)) => {
+                    let slabs = match &mut self.state {
+                        ArenaState::TConst(s) => s,
+                        ArenaState::TLin { inner, .. } => inner,
+                        ArenaState::Base { .. } => bail!("gen decode on a baseline arena"),
+                    };
+                    slabs.gen_k = k;
+                    slabs.gen_v = v;
+                    let dev = self.device.as_mut().unwrap();
+                    dev.flags.synced("gen_k");
+                    dev.flags.synced("gen_v");
+                }
+                _ => {
+                    let dev = self.device.as_mut().unwrap();
+                    dev.flags.dev_wrote("gen_k");
+                    dev.flags.dev_wrote("gen_v");
+                }
+            }
+        } else {
+            let new_gen_k = res[1].take().context("gen_k")?;
+            let new_gen_v = res[2].take().context("gen_v")?;
+            let slabs = match &mut self.state {
+                ArenaState::TConst(s) => s,
+                ArenaState::TLin { inner, .. } => inner,
+                ArenaState::Base { .. } => bail!("gen decode on a baseline arena"),
+            };
+            for &s in slots {
+                copy_lane(&mut slabs.gen_k, &new_gen_k, 2, s)?;
+                copy_lane(&mut slabs.gen_v, &new_gen_v, 2, s)?;
+            }
+            let dev = self.device.as_mut().unwrap();
+            dev.flags.host_wrote("gen_k");
+            dev.flags.host_wrote("gen_v");
+        }
+        Ok(logits_t)
     }
 
     fn decode_tlin(
@@ -554,7 +892,7 @@ impl LaneArena {
             .manifest
             .bucket_for(&drv.preset, need)
             .with_context(|| format!("history {need} exceeds largest bucket"))?;
-        {
+        let grew = {
             let ArenaState::TLin { hist_k, hist_v, hist_bucket, .. } = &mut self.state else {
                 unreachable!()
             };
@@ -562,6 +900,17 @@ impl LaneArena {
                 *hist_k = grow_axis(hist_k, 2, target)?;
                 *hist_v = grow_axis(hist_v, 2, target)?;
                 *hist_bucket = target;
+                true
+            } else {
+                false
+            }
+        };
+        if grew {
+            // Bucket migration happened on the host mirror (the history
+            // slabs are only ever written host-side): re-upload next.
+            if let Some(dev) = self.device.as_mut() {
+                dev.flags.host_wrote("hist_k");
+                dev.flags.host_wrote("hist_v");
             }
         }
         self.fill_scratch(slots, tokens)?;
@@ -571,6 +920,22 @@ impl LaneArena {
             for &s in slots {
                 hlen[s] = self.lanes[s].hist_len as i32;
             }
+        }
+        let full = slots.len() == self.n_occupied();
+        if self.device.is_some() {
+            let name = {
+                let ArenaState::TLin { hist_bucket, .. } = &self.state else { unreachable!() };
+                rt.manifest.name_tlin_decode(&drv.preset, *hist_bucket, self.cap)
+            };
+            let logits_t = self.execute_gen_device(
+                rt,
+                &name,
+                full,
+                slots,
+                &["ctx_k", "ctx_v", "ctx_sum", "gen_k", "gen_v", "hist_k", "hist_v"],
+                true,
+            )?;
+            return self.advance(drv, slots, tokens, &logits_t);
         }
         let out = {
             let ArenaState::TLin { inner, hist_k, hist_v, hist_bucket } = &self.state else {
@@ -598,7 +963,6 @@ impl LaneArena {
         let logits_t = it.next().context("logits")?;
         let new_gen_k = it.next().context("gen_k")?;
         let new_gen_v = it.next().context("gen_v")?;
-        let full = slots.len() == self.n_occupied();
         {
             let ArenaState::TLin { inner, .. } = &mut self.state else { unreachable!() };
             if full {
@@ -622,13 +986,20 @@ impl LaneArena {
         tokens: &[i32],
     ) -> Result<Vec<Vec<f32>>> {
         // Bucket migration: grow the arena cache when any stepped lane is
-        // about to write past the current bucket.
+        // about to write past the current bucket. Growth is a host-mirror
+        // operation, so a device-ahead cache must come home first (rare:
+        // once per migration event).
         let need = slots.iter().map(|&s| self.lanes[s].pos + 1).max().unwrap();
-        {
-            let ArenaState::Base { cache_k, cache_v, bucket } = &mut self.state else {
-                unreachable!()
-            };
-            if need > *bucket {
+        let must_grow = {
+            let ArenaState::Base { bucket, .. } = &self.state else { unreachable!() };
+            need > *bucket
+        };
+        if must_grow {
+            self.ensure_host(rt, BASE_KEYS)?;
+            {
+                let ArenaState::Base { cache_k, cache_v, bucket } = &mut self.state else {
+                    unreachable!()
+                };
                 let target = rt
                     .manifest
                     .bucket_for(&drv.preset, need)
@@ -636,6 +1007,10 @@ impl LaneArena {
                 *cache_k = grow_axis(cache_k, 2, target)?;
                 *cache_v = grow_axis(cache_v, 2, target)?;
                 *bucket = target;
+            }
+            if let Some(dev) = self.device.as_mut() {
+                dev.flags.host_wrote("cache_k");
+                dev.flags.host_wrote("cache_v");
             }
         }
         {
@@ -650,32 +1025,37 @@ impl LaneArena {
                 pos[s] = self.lanes[s].pos as i32;
             }
         }
-        let out = {
-            let ArenaState::Base { cache_k, cache_v, bucket } = &self.state else {
-                unreachable!()
-            };
-            let name = rt.manifest.name_base_decode(&drv.preset, *bucket, self.cap);
-            rt.execute(&name, &[&self.scr_tok, &self.scr_aux, cache_k, cache_v])?
-        };
-        let mut it = out.into_iter();
-        let logits_t = it.next().context("logits")?;
-        let new_k = it.next().context("cache_k")?;
-        let new_v = it.next().context("cache_v")?;
         let full = slots.len() == self.n_occupied();
-        {
-            let ArenaState::Base { cache_k, cache_v, .. } = &mut self.state else {
-                unreachable!()
+        let logits_t = if self.device.is_some() {
+            self.execute_base_device(rt, drv, full, slots)?
+        } else {
+            let out = {
+                let ArenaState::Base { cache_k, cache_v, bucket } = &self.state else {
+                    unreachable!()
+                };
+                let name = rt.manifest.name_base_decode(&drv.preset, *bucket, self.cap);
+                rt.execute(&name, &[&self.scr_tok, &self.scr_aux, cache_k, cache_v])?
             };
-            if full {
-                *cache_k = new_k;
-                *cache_v = new_v;
-            } else {
-                for &s in slots {
-                    copy_lane(cache_k, &new_k, 1, s)?;
-                    copy_lane(cache_v, &new_v, 1, s)?;
+            let mut it = out.into_iter();
+            let logits_t = it.next().context("logits")?;
+            let new_k = it.next().context("cache_k")?;
+            let new_v = it.next().context("cache_v")?;
+            {
+                let ArenaState::Base { cache_k, cache_v, .. } = &mut self.state else {
+                    unreachable!()
+                };
+                if full {
+                    *cache_k = new_k;
+                    *cache_v = new_v;
+                } else {
+                    for &s in slots {
+                        copy_lane(cache_k, &new_k, 1, s)?;
+                        copy_lane(cache_v, &new_v, 1, s)?;
+                    }
                 }
             }
-        }
+            logits_t
+        };
         let mut logits = Vec::with_capacity(slots.len());
         for &s in slots {
             let m = &mut self.lanes[s];
@@ -684,6 +1064,84 @@ impl LaneArena {
             logits.push(logits_row(&logits_t, s, drv.cfg.vocab)?);
         }
         Ok(logits)
+    }
+
+    /// Device-staged baseline decode: the O(N) cache slabs never cross the
+    /// boundary in steady state — the graph appends on device and the
+    /// output caches are adopted as the next step's inputs.
+    fn execute_base_device(
+        &mut self,
+        rt: &mut Runtime,
+        drv: &ModelDriver,
+        full: bool,
+        slots: &[usize],
+    ) -> Result<HostTensor> {
+        if !full {
+            self.ensure_host(rt, BASE_KEYS)?;
+        }
+        self.ensure_dev(rt, BASE_KEYS)?;
+        let name = {
+            let ArenaState::Base { bucket, .. } = &self.state else { unreachable!() };
+            rt.manifest.name_base_decode(&drv.preset, *bucket, self.cap)
+        };
+        let pool = self.device.as_ref().unwrap().pool;
+        let outs: [ResidentOut; 3] = if full {
+            [ResidentOut::Fetch, ResidentOut::Adopt("cache_k"), ResidentOut::Adopt("cache_v")]
+        } else {
+            [ResidentOut::Fetch, ResidentOut::Fetch, ResidentOut::Fetch]
+        };
+        let mut res = rt.execute_resident(
+            &name,
+            pool,
+            &[
+                ResidentArg::Host(&self.scr_tok),
+                ResidentArg::Host(&self.scr_aux),
+                ResidentArg::Pooled("cache_k"),
+                ResidentArg::Pooled("cache_v"),
+            ],
+            &outs,
+        )?;
+        let logits_t = res[0].take().context("logits")?;
+        if full {
+            // See execute_gen_device: Some = staged copy refreshes the
+            // mirror, None = rotated on device, mirror stale.
+            match (res[1].take(), res[2].take()) {
+                (Some(k), Some(v)) => {
+                    {
+                        let ArenaState::Base { cache_k, cache_v, .. } = &mut self.state
+                        else {
+                            unreachable!()
+                        };
+                        *cache_k = k;
+                        *cache_v = v;
+                    }
+                    let dev = self.device.as_mut().unwrap();
+                    dev.flags.synced("cache_k");
+                    dev.flags.synced("cache_v");
+                }
+                _ => {
+                    let dev = self.device.as_mut().unwrap();
+                    dev.flags.dev_wrote("cache_k");
+                    dev.flags.dev_wrote("cache_v");
+                }
+            }
+        } else {
+            let new_k = res[1].take().context("cache_k")?;
+            let new_v = res[2].take().context("cache_v")?;
+            {
+                let ArenaState::Base { cache_k, cache_v, .. } = &mut self.state else {
+                    unreachable!()
+                };
+                for &s in slots {
+                    copy_lane(cache_k, &new_k, 1, s)?;
+                    copy_lane(cache_v, &new_v, 1, s)?;
+                }
+            }
+            let dev = self.device.as_mut().unwrap();
+            dev.flags.host_wrote("cache_k");
+            dev.flags.host_wrote("cache_v");
+        }
+        Ok(logits_t)
     }
 }
 
@@ -800,5 +1258,64 @@ mod tests {
         assert_eq!(base.bytes_per_slot(), 0);
         let tlin = LaneArena::new(Arch::TLin, &c, 2);
         assert_eq!(tlin.bytes_per_slot(), memory::tlin_bytes(&c, 1, 0));
+    }
+
+    // -- device-staging mirror flags (pure logic; the transfer behavior
+    // built on them is exercised by the artifact-gated parity suite) ------
+
+    #[test]
+    fn mirror_flags_start_host_current() {
+        let f = MirrorFlags::new(TCONST_KEYS);
+        for k in TCONST_KEYS {
+            assert!(f.needs_upload(k), "{k}: fresh slab must upload before use");
+            assert!(!f.needs_download(k), "{k}: fresh mirror is current");
+        }
+    }
+
+    #[test]
+    fn mirror_flags_track_writer_sides() {
+        let mut f = MirrorFlags::new(TCONST_KEYS);
+        f.synced("gen_k");
+        assert!(!f.needs_upload("gen_k"));
+        assert!(!f.needs_download("gen_k"));
+
+        // device adopts an output: host mirror goes stale, no upload needed
+        f.dev_wrote("gen_k");
+        assert!(!f.needs_upload("gen_k"));
+        assert!(f.needs_download("gen_k"));
+
+        // a download re-syncs both sides
+        f.synced("gen_k");
+        assert!(!f.needs_download("gen_k"));
+
+        // host lane write (admission / post-sync): device goes stale
+        f.host_wrote("gen_k");
+        assert!(f.needs_upload("gen_k"));
+        assert!(!f.needs_download("gen_k"));
+
+        // untouched slabs never flip
+        assert!(!f.needs_download("ctx_k"));
+    }
+
+    #[test]
+    fn stale_mirror_reads_fail_loudly() {
+        let c = cfg();
+        let mut arena = LaneArena::new(Arch::TConst, &c, 2);
+        let slot = arena.alloc().unwrap();
+        let st = SeqState::TConst(random_tconst(&c, 3));
+        arena.load_state(slot, &st).unwrap();
+        // no device staging: extract always allowed
+        assert!(arena.extract_state(slot).is_ok());
+
+        // simulate device staging with an adopted (device-ahead) slab
+        arena.device = Some(DeviceStaging {
+            pool: 0,
+            flags: MirrorFlags::new(TCONST_KEYS),
+        });
+        arena.device.as_mut().unwrap().flags.dev_wrote("gen_k");
+        let err = arena.extract_state(slot).unwrap_err().to_string();
+        assert!(err.contains("stale"), "got: {err}");
+        let err = arena.load_state(slot, &st).unwrap_err().to_string();
+        assert!(err.contains("stale"), "got: {err}");
     }
 }

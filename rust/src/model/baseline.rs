@@ -2,6 +2,12 @@
 //! the paper's Fig. 8(a/d/g) characterizes. Serving uses bucketed
 //! pre-allocated slabs (DESIGN.md D4) that migrate to the next bucket when
 //! full — per-token cost and cache bytes both grow with the bucket.
+//!
+//! With device-arena staging (DESIGN.md D5) the growing cache is exactly
+//! the slab that benefits most from residency: the graph appends K/V on
+//! device and the arena rotates the output caches in as the next step's
+//! inputs, so the O(N) slabs stop crossing the host↔device boundary per
+//! token; only prefill (here) and bucket migration still move them.
 
 use anyhow::{bail, Context, Result};
 

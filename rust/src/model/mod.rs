@@ -163,7 +163,10 @@ impl ModelDriver {
 
     /// Absorb a prompt directly into an arena slot (admission path: runs
     /// the ordinary per-lane prefill, then writes the resulting state into
-    /// the slot's lane of the batch-major slabs).
+    /// the slot's lane of the batch-major slabs). Under device staging the
+    /// lane write targets the host mirror, so any device-ahead slabs are
+    /// brought home first — one amortized download per admission, off the
+    /// decode hot path.
     pub fn prefill_resident(
         &self,
         rt: &mut Runtime,
@@ -173,6 +176,7 @@ impl ModelDriver {
     ) -> Result<Vec<f32>> {
         let mut st = self.new_state();
         let logits = self.prefill(rt, &mut st, tokens)?;
+        arena.sync_host(rt)?;
         arena.load_state(slot, &st)?;
         Ok(logits)
     }

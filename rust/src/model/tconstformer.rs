@@ -85,25 +85,28 @@ pub fn sync(drv: &ModelDriver, rt: &mut Runtime, s: &mut TConstState) -> Result<
 }
 
 /// Paper-literal full recompression from the raw token history.
+///
+/// Bounded by the largest exported bucket (DESIGN.md D4): the *recorded*
+/// history is truncated to the most recent `max_bucket` tokens right here,
+/// which both keeps the ablation's host memory O(max_bucket) instead of
+/// O(N) and removes the per-sync O(N) history clone this function used to
+/// pay — the surviving copy is one memcpy into the bucket-sized scratch.
 fn sync_full(drv: &ModelDriver, rt: &mut Runtime, s: &mut TConstState) -> Result<()> {
     let buckets = rt.manifest.buckets(&drv.preset);
     let max_bucket = *buckets.last().context("no history buckets")?;
-    // Bounded by the largest exported bucket; beyond it the ablation keeps
-    // the most recent window of raw history (documented in DESIGN.md D4).
-    let hist: Vec<i32> = if s.history.len() > max_bucket {
-        s.history[s.history.len() - max_bucket..].to_vec()
-    } else {
-        s.history.clone()
-    };
+    if s.history.len() > max_bucket {
+        let cut = s.history.len() - max_bucket;
+        s.history.drain(..cut);
+    }
     let bucket = rt
         .manifest
-        .bucket_for(&drv.preset, hist.len().max(1))
+        .bucket_for(&drv.preset, s.history.len().max(1))
         .context("no bucket fits history")?;
     let mut toks = vec![0i32; bucket];
-    toks[..hist.len()].copy_from_slice(&hist);
+    toks[..s.history.len()].copy_from_slice(&s.history);
     let name = rt.manifest.name_tconst_sync_full(&drv.preset, bucket);
     let t_toks = HostTensor::from_i32(&[1, bucket], toks)?;
-    let t_len = HostTensor::from_i32(&[1], vec![hist.len() as i32])?;
+    let t_len = HostTensor::from_i32(&[1], vec![s.history.len() as i32])?;
     let mut out = rt.execute(&name, &[&t_toks, &t_len])?;
     s.ctx_sum = out.pop().context("ctx_sum")?;
     s.ctx_v = out.pop().context("ctx_v")?;

@@ -5,6 +5,12 @@
 //! The raw cache lives in bucketed slabs (`hist_k/hist_v`), appended at
 //! fold time with the `append_k/append_v` slabs the window graph returns,
 //! and migrated to the next bucket when full.
+//!
+//! Under the arena's device staging (DESIGN.md D5) this per-lane machinery
+//! runs only at slot boundaries (admission prefill and the periodic sync),
+//! writing the arena's *host mirror*; the arena re-uploads the touched
+//! slabs on the next decode. The steady-state decode itself never routes
+//! through this module's gather/scatter path.
 
 use anyhow::{bail, Context, Result};
 

@@ -1,16 +1,26 @@
 //! The PJRT runtime: compile-once executable cache + device-resident
-//! parameters + the execute entry points used by the model drivers.
+//! parameters + device-resident **state-buffer pools** + the execute
+//! entry points used by the model drivers.
 //!
 //! Design notes:
 //! * Executables are compiled lazily on first use and cached by graph name
 //!   (startup compiles only what the chosen architecture needs).
 //! * Parameters are uploaded to the device **once** per (preset, arch) and
 //!   passed as `PjRtBuffer`s on every call — the hot path uploads only the
-//!   small changing inputs (tokens, positions, state slabs).
-//! * Results come back as one tuple literal (graphs are lowered with
-//!   `return_tuple=True`), decomposed into `HostTensor`s. On the CPU PJRT
-//!   backend these transfers are plain memcpys; their cost is part of what
-//!   the paper measures (its baseline bottleneck *is* cache memory traffic).
+//!   small changing inputs (tokens, positions).
+//! * Serving state joins the parameters on device: a [`Runtime`] hands out
+//!   **state pools** of named [`DeviceTensor`]s. [`Runtime::execute_resident`]
+//!   mixes pooled buffers (no transfer) with small per-call host tensors
+//!   (uploaded, token-sized), and can *adopt* a result buffer in place as a
+//!   pool entry's next value — buffer rotation, the moral equivalent of
+//!   input/output donation on backends whose bindings don't expose
+//!   aliasing. Every byte that crosses the host↔device boundary is metered
+//!   in [`TransferStats`].
+//! * Results of the classic [`Runtime::execute`] come back as one tuple
+//!   literal (graphs are lowered with `return_tuple=True`), decomposed into
+//!   `HostTensor`s. On the CPU PJRT backend these transfers are plain
+//!   memcpys; their cost is part of what the paper measures (its baseline
+//!   bottleneck *is* cache memory traffic).
 //! * The runtime is deliberately single-threaded (`&mut self`): the
 //!   coordinator owns it from one worker thread, which is also what keeps
 //!   the PJRT client contention-free.
@@ -21,8 +31,8 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::manifest::{GraphMeta, Manifest};
-use super::tensor::HostTensor;
+use super::manifest::{ArgSpec, GraphMeta, Manifest};
+use super::tensor::{DeviceTensor, HostTensor};
 use super::weights;
 
 /// Per-graph execution statistics (for metrics and the §Perf pass).
@@ -34,6 +44,57 @@ pub struct ExecStats {
     pub download_bytes: u64,
 }
 
+/// Cumulative host↔device transfer meter across every execute path and
+/// pool operation — the device-residency counterpart of
+/// [`crate::model::batch::copy_metrics`]. The steady-state decode target
+/// is upload = the token/position vectors only and download = logits only;
+/// anything O(state) here is a hot-path regression.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    pub upload_bytes: u64,
+    pub upload_calls: u64,
+    pub download_bytes: u64,
+    pub download_calls: u64,
+}
+
+impl TransferStats {
+    /// Traffic since an earlier snapshot.
+    pub fn delta_since(&self, earlier: &TransferStats) -> TransferStats {
+        TransferStats {
+            upload_bytes: self.upload_bytes.saturating_sub(earlier.upload_bytes),
+            upload_calls: self.upload_calls.saturating_sub(earlier.upload_calls),
+            download_bytes: self.download_bytes.saturating_sub(earlier.download_bytes),
+            download_calls: self.download_calls.saturating_sub(earlier.download_calls),
+        }
+    }
+}
+
+/// One non-parameter argument of [`Runtime::execute_resident`].
+pub enum ResidentArg<'a> {
+    /// A small per-call tensor (tokens, positions, gates) — uploaded for
+    /// this call only, metered.
+    Host(&'a HostTensor),
+    /// A named buffer of the call's state pool — already on device, no
+    /// transfer.
+    Pooled(&'a str),
+}
+
+/// What to do with one result of [`Runtime::execute_resident`].
+pub enum ResidentOut<'a> {
+    /// Download to host (logits etc.) — metered.
+    Fetch,
+    /// Adopt the result buffer in place as the pool's new buffer under
+    /// this key (rotation). The key must already exist in the pool and
+    /// the result must match its recorded shape/dtype — rotation cannot
+    /// resize a buffer; size changes go through `pool_upload`. Zero
+    /// transfer when the backend returns per-output device buffers (the
+    /// result slot comes back `None`); staged through one download +
+    /// re-upload when results arrive as a packed tuple, in which case the
+    /// slot carries the staged host copy (`Some`) so callers can refresh
+    /// a host mirror without paying a second download.
+    Adopt(&'a str),
+}
+
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
@@ -41,6 +102,15 @@ pub struct Runtime {
     params_host: HashMap<(String, String), Vec<HostTensor>>,
     params_dev: HashMap<(String, String), Vec<xla::PjRtBuffer>>,
     stats: HashMap<String, ExecStats>,
+    /// Device-resident state pools: pool id → named state buffers.
+    pools: HashMap<u64, HashMap<String, DeviceTensor>>,
+    next_pool: u64,
+    transfers: TransferStats,
+    /// Whether `execute_b` returns one device buffer per result (true:
+    /// adopt is free rotation) or a single packed tuple buffer (false:
+    /// adopt stages through the host). Probed on the first resident
+    /// execute; `None` until then.
+    untupled_results: Option<bool>,
 }
 
 impl Runtime {
@@ -55,6 +125,10 @@ impl Runtime {
             params_host: HashMap::new(),
             params_dev: HashMap::new(),
             stats: HashMap::new(),
+            pools: HashMap::new(),
+            next_pool: 1,
+            transfers: TransferStats::default(),
+            untupled_results: None,
         })
     }
 
@@ -132,9 +206,13 @@ impl Runtime {
         self.load_params(preset, arch)?;
         let host = self.params_host.get(&key).unwrap();
         let mut bufs = Vec::with_capacity(host.len());
+        let mut upload = 0u64;
         for t in host {
+            upload += t.nbytes() as u64;
             bufs.push(t.to_buffer(&self.client)?);
         }
+        self.transfers.upload_bytes += upload;
+        self.transfers.upload_calls += bufs.len() as u64;
         self.params_dev.insert(key, bufs);
         Ok(())
     }
@@ -178,11 +256,16 @@ impl Runtime {
             .with_context(|| format!("executing {name}"))?;
         let results = Self::unpack(meta, out)?;
 
+        let download = results.iter().map(|t| t.nbytes() as u64).sum::<u64>();
         let st = self.stats.entry(name.to_string()).or_default();
         st.calls += 1;
         st.total_ns += t0.elapsed().as_nanos() as u64;
         st.upload_bytes += upload;
-        st.download_bytes += results.iter().map(|t| t.nbytes() as u64).sum::<u64>();
+        st.download_bytes += download;
+        self.transfers.upload_bytes += upload;
+        self.transfers.upload_calls += extra.len() as u64;
+        self.transfers.download_bytes += download;
+        self.transfers.download_calls += results.len() as u64;
         Ok(results)
     }
 
@@ -209,10 +292,317 @@ impl Runtime {
             .execute_b(&refs)
             .with_context(|| format!("executing {name}"))?;
         let results = Self::unpack(&meta, out)?;
+        let upload = args.iter().map(|t| t.nbytes() as u64).sum::<u64>();
+        let download = results.iter().map(|t| t.nbytes() as u64).sum::<u64>();
         let st = self.stats.entry(name.to_string()).or_default();
         st.calls += 1;
         st.total_ns += t0.elapsed().as_nanos() as u64;
+        st.upload_bytes += upload;
+        st.download_bytes += download;
+        self.transfers.upload_bytes += upload;
+        self.transfers.upload_calls += args.len() as u64;
+        self.transfers.download_bytes += download;
+        self.transfers.download_calls += results.len() as u64;
         Ok(results)
+    }
+
+    // -- device-resident state pools ------------------------------------------
+
+    /// Create an empty state pool; its buffers live on device until
+    /// [`Runtime::drop_state_pool`].
+    pub fn new_state_pool(&mut self) -> u64 {
+        let id = self.next_pool;
+        self.next_pool += 1;
+        self.pools.insert(id, HashMap::new());
+        id
+    }
+
+    /// Release a pool and all its device buffers.
+    pub fn drop_state_pool(&mut self, pool: u64) {
+        self.pools.remove(&pool);
+    }
+
+    /// Upload (or replace) a named pool buffer — one metered host→device
+    /// transfer. Replacing also replaces the recorded shape/dtype, which is
+    /// how bucket-migrated slabs change size.
+    pub fn pool_upload(&mut self, pool: u64, key: &str, t: &HostTensor) -> Result<()> {
+        let dt = t.to_device(&self.client)?;
+        self.pools
+            .get_mut(&pool)
+            .with_context(|| format!("unknown state pool {pool}"))?
+            .insert(key.to_string(), dt);
+        self.transfers.upload_bytes += t.nbytes() as u64;
+        self.transfers.upload_calls += 1;
+        Ok(())
+    }
+
+    /// Download a named pool buffer back to host — one metered
+    /// device→host transfer. The device buffer stays valid.
+    pub fn pool_download(&mut self, pool: u64, key: &str) -> Result<HostTensor> {
+        let dt = self
+            .pools
+            .get(&pool)
+            .with_context(|| format!("unknown state pool {pool}"))?
+            .get(key)
+            .with_context(|| format!("pool {pool} has no buffer {key:?}"))?;
+        let t = dt.to_host()?;
+        self.transfers.download_bytes += t.nbytes() as u64;
+        self.transfers.download_calls += 1;
+        Ok(t)
+    }
+
+    pub fn pool_contains(&self, pool: u64, key: &str) -> bool {
+        self.pools.get(&pool).map(|p| p.contains_key(key)).unwrap_or(false)
+    }
+
+    /// Total device bytes pinned by a pool.
+    pub fn pool_nbytes(&self, pool: u64) -> u64 {
+        self.pools
+            .get(&pool)
+            .map(|p| p.values().map(|d| d.nbytes() as u64).sum())
+            .unwrap_or(0)
+    }
+
+    /// Whether adopted results rotate on device for free (`Some(true)`),
+    /// stage through the host (`Some(false)`), or have not been probed yet
+    /// (`None` — no resident execute has run).
+    pub fn output_rotation_supported(&self) -> Option<bool> {
+        self.untupled_results
+    }
+
+    /// Execute a graph against a state pool: parameter buffers and
+    /// `Pooled` args stay on device, `Host` args are uploaded per call
+    /// (the token-sized inputs), and each result is either fetched to host
+    /// or adopted in place as the pool's next buffer under its key (see
+    /// [`ResidentOut`]). Returns one entry per result, `Some` for fetched,
+    /// `None` for adopted. This is the device-resident decode hot path:
+    /// in steady state its only transfers are the `Host` args up and the
+    /// fetched logits down.
+    pub fn execute_resident(
+        &mut self,
+        name: &str,
+        pool: u64,
+        extra: &[ResidentArg],
+        outs: &[ResidentOut],
+    ) -> Result<Vec<Option<HostTensor>>> {
+        let key = {
+            let meta = self.manifest.graph(name)?;
+            (meta.preset.clone(), meta.arch.clone())
+        };
+        self.ensure_compiled(name)?;
+        self.ensure_params_dev(&key.0, &key.1)?;
+
+        let t0 = Instant::now();
+        let mut upload = 0u64;
+        let mut upload_calls = 0u64;
+        let mut download = 0u64;
+        let mut download_calls = 0u64;
+
+        // Upload the per-call host args first (separate pass so the refs
+        // assembled below can borrow the finished Vec).
+        let mut temps: Vec<xla::PjRtBuffer> = Vec::new();
+        for a in extra {
+            if let ResidentArg::Host(t) = a {
+                upload += t.nbytes() as u64;
+                upload_calls += 1;
+                temps.push(t.to_buffer(&self.client)?);
+            }
+        }
+
+        let out = {
+            let meta = self.manifest.graphs.get(name).unwrap();
+            let pool_map = self
+                .pools
+                .get(&pool)
+                .with_context(|| format!("unknown state pool {pool}"))?;
+            Self::check_resident_args(meta, extra, pool_map)?;
+            if outs.len() != meta.results.len() {
+                bail!(
+                    "{name}: {} result specs for {} graph results",
+                    outs.len(),
+                    meta.results.len()
+                );
+            }
+            let param_bufs = self.params_dev.get(&key).unwrap();
+            let mut refs: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(param_bufs.len() + extra.len());
+            refs.extend(param_bufs.iter());
+            let mut next_temp = 0usize;
+            for a in extra {
+                match a {
+                    ResidentArg::Host(_) => {
+                        refs.push(&temps[next_temp]);
+                        next_temp += 1;
+                    }
+                    // presence/shape already validated above
+                    ResidentArg::Pooled(k) => refs.push(&pool_map.get(*k).unwrap().buf),
+                }
+            }
+            let exe = self.exes.get(name).unwrap();
+            exe.execute_b(&refs)
+                .with_context(|| format!("executing {name}"))?
+        };
+        // CPU PJRT runs one replica; flattening tolerates either
+        // [replica][output] or [output][replica] nesting.
+        let row: Vec<xla::PjRtBuffer> = out.into_iter().flatten().collect();
+        if row.is_empty() {
+            bail!("{name}: empty execution result");
+        }
+
+        let mut results: Vec<Option<HostTensor>> = Vec::with_capacity(outs.len());
+        if row.len() == outs.len() && outs.len() > 1 {
+            // Per-output device buffers: adopt rotates the buffer into the
+            // pool with ZERO host↔device traffic; only fetched results
+            // (logits) cross the boundary.
+            self.untupled_results = Some(true);
+            for (buf, spec) in row.into_iter().zip(outs) {
+                match spec {
+                    ResidentOut::Adopt(k) => {
+                        // Rotation keeps the entry's recorded shape/dtype:
+                        // an adopted result always has the same shape as
+                        // the buffer it replaces (graph outputs mirror the
+                        // state inputs); resizes go through pool_upload.
+                        let entry = self
+                            .pools
+                            .get_mut(&pool)
+                            .unwrap()
+                            .get_mut(*k)
+                            .with_context(|| {
+                                format!("adopt into unknown pool buffer {k:?}")
+                            })?;
+                        entry.buf = buf;
+                        results.push(None);
+                    }
+                    ResidentOut::Fetch => {
+                        let lit = buf.to_literal_sync()?;
+                        let t = HostTensor::from_literal(&lit)?;
+                        download += t.nbytes() as u64;
+                        download_calls += 1;
+                        results.push(Some(t));
+                    }
+                }
+            }
+        } else if row.len() == 1 {
+            // One packed tuple buffer: the whole result crosses to the
+            // host once; adopted keys are staged back up. Honest O(state)
+            // traffic — reported, not hidden (see DESIGN.md D5).
+            if outs.len() > 1 {
+                self.untupled_results = Some(false);
+            }
+            let lit = row[0].to_literal_sync()?;
+            let parts: Vec<HostTensor> = if outs.len() == 1 {
+                // A lone result may arrive as the bare array or a 1-tuple.
+                match HostTensor::from_literal(&lit) {
+                    Ok(t) => vec![t],
+                    Err(_) => {
+                        let ps = lit.to_tuple()?;
+                        if ps.len() != 1 {
+                            bail!("{name}: tuple of {} for 1 result", ps.len());
+                        }
+                        vec![HostTensor::from_literal(&ps[0])?]
+                    }
+                }
+            } else {
+                let ps = lit.to_tuple()?;
+                if ps.len() != outs.len() {
+                    bail!("{name}: tuple of {} for {} results", ps.len(), outs.len());
+                }
+                ps.iter().map(HostTensor::from_literal).collect::<Result<_>>()?
+            };
+            for (t, spec) in parts.into_iter().zip(outs) {
+                download += t.nbytes() as u64;
+                download_calls += 1;
+                match spec {
+                    ResidentOut::Adopt(k) => {
+                        upload += t.nbytes() as u64;
+                        upload_calls += 1;
+                        let entry = self
+                            .pools
+                            .get_mut(&pool)
+                            .unwrap()
+                            .get_mut(*k)
+                            .with_context(|| {
+                                format!("adopt into unknown pool buffer {k:?}")
+                            })?;
+                        if entry.shape != t.shape() || entry.dtype != t.dtype_str() {
+                            bail!(
+                                "adopt {k:?}: result {} {:?} does not match pool \
+                                 buffer {} {:?}; rotation cannot resize — use \
+                                 pool_upload",
+                                t.dtype_str(),
+                                t.shape(),
+                                entry.dtype,
+                                entry.shape
+                            );
+                        }
+                        entry.buf = t.to_buffer(&self.client)?;
+                        // hand the staged copy back so callers can refresh
+                        // a host mirror for free
+                        results.push(Some(t));
+                    }
+                    ResidentOut::Fetch => results.push(Some(t)),
+                }
+            }
+        } else {
+            bail!(
+                "{name}: {} output buffers for {} results",
+                row.len(),
+                outs.len()
+            );
+        }
+
+        let st = self.stats.entry(name.to_string()).or_default();
+        st.calls += 1;
+        st.total_ns += t0.elapsed().as_nanos() as u64;
+        st.upload_bytes += upload;
+        st.download_bytes += download;
+        self.transfers.upload_bytes += upload;
+        self.transfers.upload_calls += upload_calls;
+        self.transfers.download_bytes += download;
+        self.transfers.download_calls += download_calls;
+        Ok(results)
+    }
+
+    /// Shared per-arg validation for both execute paths.
+    fn check_arg(graph: &str, spec: &ArgSpec, shape: &[usize], dtype: &str) -> Result<()> {
+        if spec.shape != shape || spec.dtype != dtype {
+            bail!(
+                "{graph}: arg {:?} expects {} {:?}, got {dtype} {shape:?}",
+                spec.name,
+                spec.dtype,
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    fn check_resident_args(
+        meta: &GraphMeta,
+        extra: &[ResidentArg],
+        pool_map: &HashMap<String, DeviceTensor>,
+    ) -> Result<()> {
+        let expected = &meta.args[meta.n_param_args..];
+        if extra.len() != expected.len() {
+            bail!(
+                "{}: expected {} non-param args, got {}",
+                meta.name,
+                expected.len(),
+                extra.len()
+            );
+        }
+        for (spec, a) in expected.iter().zip(extra) {
+            let (shape, dtype): (&[usize], &str) = match a {
+                ResidentArg::Host(t) => (t.shape(), t.dtype_str()),
+                ResidentArg::Pooled(k) => {
+                    let dt = pool_map.get(*k).with_context(|| {
+                        format!("{}: pooled arg {k:?} not uploaded", meta.name)
+                    })?;
+                    (&dt.shape, dt.dtype)
+                }
+            };
+            Self::check_arg(&meta.name, spec, shape, dtype)?;
+        }
+        Ok(())
     }
 
     fn unpack(
@@ -247,17 +637,7 @@ impl Runtime {
             );
         }
         for (spec, t) in expected.iter().zip(extra) {
-            if spec.shape != t.shape() || spec.dtype != t.dtype_str() {
-                bail!(
-                    "{}: arg {:?} expects {} {:?}, got {} {:?}",
-                    meta.name,
-                    spec.name,
-                    spec.dtype,
-                    spec.shape,
-                    t.dtype_str(),
-                    t.shape()
-                );
-            }
+            Self::check_arg(&meta.name, spec, t.shape(), t.dtype_str())?;
         }
         Ok(())
     }
@@ -270,6 +650,17 @@ impl Runtime {
 
     pub fn reset_stats(&mut self) {
         self.stats.clear();
+    }
+
+    /// Cumulative host↔device traffic across all execute paths and pool
+    /// operations. Snapshot before/after a region and
+    /// [`TransferStats::delta_since`] to meter it.
+    pub fn transfer_stats(&self) -> TransferStats {
+        self.transfers
+    }
+
+    pub fn reset_transfer_stats(&mut self) {
+        self.transfers = TransferStats::default();
     }
 
     pub fn compiled_graphs(&self) -> Vec<String> {

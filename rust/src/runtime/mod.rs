@@ -2,19 +2,28 @@
 //! the serving hot path.
 //!
 //! Layering:
-//! * [`tensor`] — host-side tensors (`HostTensor`) and Literal conversion;
+//! * [`tensor`] — host-side tensors (`HostTensor`), Literal conversion, and
+//!   the [`tensor::DeviceTensor`] handle for state kept on device;
 //! * [`manifest`] — typed view of `artifacts/manifest.json`;
 //! * [`weights`] — the flat tensor-file format shared with
 //!   `python/compile/tensorio.py` (weights, golden vectors, checkpoints);
 //! * [`client`] — the [`client::Runtime`]: executable cache keyed by graph
 //!   name, per-(preset, arch) parameter buffers resident on device, and the
 //!   `execute` entry points the model drivers use.
+//!
+//! Serving **state** now joins the parameters as device-resident: the
+//! runtime hands out named state-buffer pools ([`client::Runtime::new_state_pool`])
+//! whose `PjRtBuffer`s persist across decode steps, and
+//! [`client::Runtime::execute_resident`] rotates a graph's state outputs
+//! back into the pool in place. Steady-state decode therefore uploads only
+//! the token/position vectors and downloads only logits — every byte that
+//! does cross the boundary is metered by [`client::TransferStats`].
 
 pub mod client;
 pub mod manifest;
 pub mod tensor;
 pub mod weights;
 
-pub use client::Runtime;
+pub use client::{ResidentArg, ResidentOut, Runtime, TransferStats};
 pub use manifest::{ArgSpec, GraphMeta, Manifest, ModelConfig};
-pub use tensor::HostTensor;
+pub use tensor::{DeviceTensor, HostTensor};

@@ -1,4 +1,6 @@
-//! Host-side tensors and conversions to/from XLA literals.
+//! Host-side tensors and conversions to/from XLA literals, plus the
+//! [`DeviceTensor`] handle the state-buffer pool uses to keep serving
+//! state resident on the device between decode steps.
 //!
 //! Only the two dtypes the artifact graphs use (f32, i32) are supported —
 //! deliberately, so every conversion is a straight memcpy.
@@ -156,6 +158,16 @@ impl HostTensor {
         Ok(buf)
     }
 
+    /// Upload to a [`DeviceTensor`] — one host→device transfer, after
+    /// which the tensor can be passed to executes without re-uploading.
+    pub fn to_device(&self, client: &xla::PjRtClient) -> Result<DeviceTensor> {
+        Ok(DeviceTensor {
+            buf: self.to_buffer(client)?,
+            shape: self.shape().to_vec(),
+            dtype: self.dtype_str(),
+        })
+    }
+
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape().context("literal array shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -168,6 +180,53 @@ impl HostTensor {
             }
             other => bail!("unsupported literal element type {other:?}"),
         }
+    }
+}
+
+/// A device-resident tensor: a PJRT buffer plus the host-side metadata
+/// (shape/dtype) needed to validate graph arguments and meter transfers
+/// without touching device memory. This is the unit the runtime's
+/// state-buffer pool stores: serving state uploaded once and then passed
+/// to every execute by handle, the way parameters already are.
+pub struct DeviceTensor {
+    pub buf: xla::PjRtBuffer,
+    pub shape: Vec<usize>,
+    pub dtype: &'static str,
+}
+
+impl DeviceTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Both supported dtypes are 4 bytes wide.
+    pub fn nbytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    /// Download back to host — one device→host transfer.
+    pub fn to_host(&self) -> Result<HostTensor> {
+        let lit = self.buf.to_literal_sync().context("downloading device tensor")?;
+        let t = HostTensor::from_literal(&lit)?;
+        if t.shape() != self.shape.as_slice() || t.dtype_str() != self.dtype {
+            bail!(
+                "device tensor downloaded as {} {:?}, expected {} {:?}",
+                t.dtype_str(),
+                t.shape(),
+                self.dtype,
+                self.shape
+            );
+        }
+        Ok(t)
+    }
+}
+
+impl std::fmt::Debug for DeviceTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceTensor")
+            .field("shape", &self.shape)
+            .field("dtype", &self.dtype)
+            .finish()
     }
 }
 

@@ -5,19 +5,23 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use tconstformer::coordinator::{Engine, EngineConfig, Request};
+use tconstformer::coordinator::{ArenaStaging, Engine, EngineConfig, Request};
 use tconstformer::model::{Arch, SyncMode};
 use tconstformer::server::http;
 use tconstformer::server::ServerConfig;
 use tconstformer::util::json::Json;
 
+fn artifacts_dir() -> String {
+    std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
+}
+
 fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
+    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
 }
 
 fn tiny_cfg(arch: Arch) -> EngineConfig {
     EngineConfig {
-        artifacts_dir: "artifacts".into(),
+        artifacts_dir: artifacts_dir(),
         preset: "tiny".into(),
         arch,
         sync_mode: SyncMode::Incremental,
@@ -25,6 +29,7 @@ fn tiny_cfg(arch: Arch) -> EngineConfig {
         sched: Default::default(),
         checkpoint: None,
         resident: true,
+        staging: ArenaStaging::DeviceArena,
     }
 }
 
@@ -175,6 +180,57 @@ fn resident_engine_matches_legacy_engine() {
             bytes_resident < bytes_legacy,
             "{arch:?}: resident {bytes_resident} B >= legacy {bytes_legacy} B"
         );
+    }
+}
+
+#[test]
+fn device_engine_matches_host_engine() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    for arch in [Arch::Base, Arch::TLin, Arch::TConst] {
+        let reqs = |n: u64| -> Vec<Request> {
+            (0..n)
+                .map(|i| Request::greedy(i, prompt(5 + 9 * i as usize, i as usize), 12))
+                .collect()
+        };
+        let mut device = Engine::new(&tiny_cfg(arch)).unwrap();
+        assert!(device.is_device_staged(), "{arch:?}: device staging not active");
+        let mut a = device.run_workload(reqs(4)).unwrap();
+        a.sort_by_key(|r| r.id);
+
+        let mut host = Engine::new(&EngineConfig {
+            staging: ArenaStaging::HostArena,
+            ..tiny_cfg(arch)
+        })
+        .unwrap();
+        assert!(!host.is_device_staged());
+        let mut b = host.run_workload(reqs(4)).unwrap();
+        b.sort_by_key(|r| r.id);
+
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens, "{arch:?}: device-staged engine diverged");
+            assert_eq!(
+                x.metrics.peak_kv_bytes, y.metrics.peak_kv_bytes,
+                "{arch:?}: staging must not change KV accounting"
+            );
+        }
+        // When the backend rotates output buffers, the device-staged engine
+        // must move strictly less host↔device traffic than host staging
+        // (which re-uploads the full slabs every decode step).
+        let ma = device.metrics_json();
+        let mb = host.metrics_json();
+        let up_device = ma.get("dev_upload_bytes").as_f64().unwrap();
+        let up_host = mb.get("dev_upload_bytes").as_f64().unwrap();
+        if device.rt.output_rotation_supported() == Some(true) {
+            assert!(
+                up_device < up_host,
+                "{arch:?}: device staging uploaded {up_device} B >= host staging {up_host} B"
+            );
+        } else {
+            eprintln!("{arch:?}: packed-tuple backend; upload comparison skipped");
+        }
     }
 }
 
