@@ -11,6 +11,10 @@
 //!   output buffers (the D5 device-residency meter). The figures are also
 //!   written as JSON to `$BENCH_JSON` (default `micro_metrics.json`) so CI
 //!   can publish them per PR;
+//! * session resume cost (DESIGN.md D6): resuming a parked conversation
+//!   with one new token must execute the same number of graph calls
+//!   whether the history is 40 or 320 tokens — O(new tokens), asserted,
+//!   and included in the JSON artifact;
 //! * tensor batching algebra (concat/split/insert) at decode shapes;
 //! * JSON parse of the real manifest;
 //! * sampler + rng throughput.
@@ -195,6 +199,49 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- session resume cost: O(new tokens), independent of history --------
+    // Two parked conversations, one ~8x longer than the other (the long
+    // one crosses many sync windows). Resuming each with ONE new token
+    // must execute the same number of graph calls: the D6 resume replays
+    // only the partial window (< W_og tokens) and the new tokens — never
+    // the conversation history.
+    let mk_parked = |rt: &mut Runtime, hist: usize| -> anyhow::Result<SeqState> {
+        let mut st = driver.new_state();
+        let prompt: Vec<i32> = (0..hist).map(|j| 1 + (j % 255) as i32).collect();
+        driver.prefill(rt, &mut st, &prompt)?;
+        // a few decode steps so the parked window is non-empty
+        for t in [65, 66, 67] {
+            driver.decode_batch(rt, &mut [&mut st], &[t])?;
+        }
+        Ok(st)
+    };
+    let exec_calls = |rt: &Runtime| -> u64 { rt.stats().values().map(|s| s.calls).sum() };
+    let short_hist = 40usize;
+    let long_hist = 320usize;
+    let mut short_st = mk_parked(&mut rt, short_hist)?;
+    let mut long_st = mk_parked(&mut rt, long_hist)?;
+
+    rt.reset_stats();
+    let t0 = std::time::Instant::now();
+    driver.resume(&mut rt, &mut short_st, &[65])?;
+    let short_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let short_calls = exec_calls(&rt);
+
+    rt.reset_stats();
+    let t0 = std::time::Instant::now();
+    driver.resume(&mut rt, &mut long_st, &[65])?;
+    let long_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let long_calls = exec_calls(&rt);
+
+    println!(
+        "resume turn (+1 token): history {short_hist:>4} -> {short_calls} graph calls / {short_ms:.3} ms | \
+         history {long_hist:>4} -> {long_calls} graph calls / {long_ms:.3} ms"
+    );
+    assert_eq!(
+        short_calls, long_calls,
+        "resume cost must not grow with conversation history"
+    );
+
     // Publish the meter as JSON for the CI bench artifact.
     let json_path =
         std::env::var("BENCH_JSON").unwrap_or_else(|_| "micro_metrics.json".into());
@@ -232,6 +279,17 @@ fn main() -> anyhow::Result<()> {
                         None => Json::str("unprobed"),
                     },
                 ),
+            ]),
+        ),
+        (
+            "resume_turn",
+            Json::obj(vec![
+                ("short_history_tokens", Json::num(short_hist as f64)),
+                ("short_graph_calls", Json::num(short_calls as f64)),
+                ("short_ms", Json::num(short_ms)),
+                ("long_history_tokens", Json::num(long_hist as f64)),
+                ("long_graph_calls", Json::num(long_calls as f64)),
+                ("long_ms", Json::num(long_ms)),
             ]),
         ),
     ]);

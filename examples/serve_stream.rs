@@ -1,10 +1,13 @@
 //! Streaming-serving demo: boot the engine + HTTP server, replay a Poisson
-//! workload over real HTTP connections, and report the serving metrics the
-//! paper's motivation section cares about (TTFT, per-token latency,
-//! sustained throughput, constant KV footprint).
+//! workload of **multi-turn conversations** over the session API
+//! (DESIGN.md D6), and report the serving metrics the paper's motivation
+//! section cares about — per-turn TTFT (cold first turns vs resumed
+//! follow-ups), sustained throughput, constant KV footprint, and the
+//! prefill tokens the session resume saved vs replaying each conversation
+//! cold.
 //!
-//! Run: `cargo run --release --example serve_stream -- [arch] [n_requests] [rate_per_s]`
-//! (defaults: tconst 24 8.0 — tiny preset for CPU speed).
+//! Run: `cargo run --release --example serve_stream -- [arch] [n_convs] [rate_per_s] [turns]`
+//! (defaults: tconst 16 8.0 3 — tiny preset for CPU speed).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -19,13 +22,105 @@ use tconstformer::server::ServerConfig;
 use tconstformer::util::json::Json;
 use tconstformer::util::stats::Percentiles;
 
+/// Per-turn result a replay thread reports back.
+struct TurnStat {
+    turn_index: usize,
+    ttft_ms: f64,
+    tokens: usize,
+    prefill_tokens: f64,
+    saved_prefill_tokens: f64,
+    ok: bool,
+}
+
+fn turn_body(tk: &ByteTokenizer, prompt: &[i32], max_new: usize) -> String {
+    Json::obj(vec![
+        ("prompt", Json::str(tk.decode(prompt))),
+        ("max_new_tokens", Json::num(max_new as f64)),
+    ])
+    .to_string()
+}
+
+/// Replay one conversation: open a session, run each turn over the SSE
+/// stream, close the session. Returns one stat per completed turn.
+fn replay_conversation(addr: &str, item: &workload::WorkItem) -> Vec<TurnStat> {
+    let tk = ByteTokenizer;
+    let mut stats = Vec::new();
+    let Ok((code, body)) = http::http_post(addr, "/v1/sessions", "{}") else {
+        return stats;
+    };
+    if code != 200 {
+        return stats;
+    }
+    let Some(sid) = Json::parse(&body)
+        .ok()
+        .and_then(|j| j.get("session_id").as_usize())
+    else {
+        return stats;
+    };
+    let path = format!("/v1/sessions/{sid}/turns");
+
+    let mut turns = vec![(item.prompt_tokens.clone(), item.max_new_tokens)];
+    turns.extend(
+        item.followups
+            .iter()
+            .map(|f| (f.prompt_tokens.clone(), f.max_new_tokens)),
+    );
+    for (i, (prompt, max_new)) in turns.iter().enumerate() {
+        let body = turn_body(&tk, prompt, *max_new);
+        match http::http_post_sse(addr, &path, &body) {
+            Ok((200, events, first_ms)) => {
+                let done = events.last().cloned().unwrap_or(Json::Null);
+                stats.push(TurnStat {
+                    turn_index: i,
+                    ttft_ms: first_ms,
+                    tokens: done.get("tokens").as_arr().map(|a| a.len()).unwrap_or(0),
+                    prefill_tokens: done
+                        .get("metrics")
+                        .get("prefill_tokens")
+                        .as_f64()
+                        .unwrap_or(0.0),
+                    saved_prefill_tokens: done
+                        .get("metrics")
+                        .get("saved_prefill_tokens")
+                        .as_f64()
+                        .unwrap_or(0.0),
+                    ok: done.get("done").as_bool().unwrap_or(false),
+                });
+            }
+            _ => {
+                stats.push(TurnStat {
+                    turn_index: i,
+                    ttft_ms: 0.0,
+                    tokens: 0,
+                    prefill_tokens: 0.0,
+                    saved_prefill_tokens: 0.0,
+                    ok: false,
+                });
+                break;
+            }
+        }
+    }
+    let _ = http::http_request_raw(
+        addr,
+        &format!("DELETE /v1/sessions/{sid} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"),
+    );
+    stats
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let arch = Arch::parse(args.first().map(String::as_str).unwrap_or("tconst"))?;
-    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+    let n_convs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
     let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8.0);
+    let turns: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(3);
 
-    println!("== serve_stream: arch={} requests={} rate={}/s ==", arch.as_str(), n_requests, rate);
+    println!(
+        "== serve_stream: arch={} conversations={} rate={}/s turns<={} ==",
+        arch.as_str(),
+        n_convs,
+        rate,
+        turns
+    );
 
     let engine = Engine::spawn(EngineConfig {
         preset: "tiny".into(),
@@ -36,7 +131,11 @@ fn main() -> anyhow::Result<()> {
     let stop = Arc::new(AtomicBool::new(false));
     let (h2, s2) = (engine.clone(), stop.clone());
     let server = std::thread::spawn(move || {
-        http::serve(&ServerConfig { addr: addr.to_string() }, h2, Some(s2))
+        http::serve(
+            &ServerConfig { addr: addr.to_string(), ..Default::default() },
+            h2,
+            Some(s2),
+        )
     });
     std::thread::sleep(std::time::Duration::from_millis(300));
 
@@ -44,19 +143,21 @@ fn main() -> anyhow::Result<()> {
     let corp = corpus::generate(&CorpusSpec { total_tokens: 1 << 16, ..Default::default() });
     let items = workload::generate(
         &WorkloadSpec {
-            n_requests,
+            n_requests: n_convs,
             rate_per_s: rate,
             prompt_len_min: 8,
             prompt_len_max: 96,
             new_tokens_min: 8,
             new_tokens_max: 48,
+            turns_min: 1,
+            turns_max: turns.max(1),
             ..Default::default()
         },
         &corp.train,
     );
 
-    // Replay with real timing: one OS thread per in-flight request.
-    let tk = ByteTokenizer;
+    // Replay with real timing: one OS thread per in-flight conversation;
+    // turns within a conversation run sequentially on its session.
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for item in items {
@@ -64,41 +165,55 @@ fn main() -> anyhow::Result<()> {
         if wait > 0.0 {
             std::thread::sleep(std::time::Duration::from_millis(wait as u64));
         }
-        let body = Json::obj(vec![
-            ("prompt", Json::str(tk.decode(&item.prompt_tokens))),
-            ("max_new_tokens", Json::num(item.max_new_tokens as f64)),
-        ])
-        .to_string();
-        handles.push(std::thread::spawn(move || {
-            let t = std::time::Instant::now();
-            let res = http::http_post(addr, "/generate", &body);
-            (res, t.elapsed().as_secs_f64() * 1000.0)
-        }));
+        handles.push(std::thread::spawn(move || replay_conversation(addr, &item)));
     }
 
-    let mut lat = Percentiles::default();
-    let mut ttft = Percentiles::default();
+    let mut ttft_cold = Percentiles::default();
+    let mut ttft_resume = Percentiles::default();
+    let mut prefill_cold = 0.0f64;
+    let mut prefill_resume = 0.0f64;
+    let mut saved = 0.0f64;
     let mut tokens = 0usize;
+    let mut turns_done = 0usize;
     let mut errors = 0usize;
     for h in handles {
-        match h.join().unwrap() {
-            (Ok((200, body)), client_ms) => {
-                let j = Json::parse(&body).unwrap();
-                tokens += j.get("tokens").as_arr().map(|a| a.len()).unwrap_or(0);
-                ttft.add(j.get("metrics").get("ttft_ms").as_f64().unwrap_or(0.0));
-                lat.add(client_ms);
+        for s in h.join().unwrap() {
+            if !s.ok {
+                errors += 1;
+                continue;
             }
-            _ => errors += 1,
+            turns_done += 1;
+            tokens += s.tokens;
+            if s.turn_index == 0 {
+                ttft_cold.add(s.ttft_ms);
+                prefill_cold += s.prefill_tokens;
+            } else {
+                ttft_resume.add(s.ttft_ms);
+                prefill_resume += s.prefill_tokens;
+            }
+            saved += s.saved_prefill_tokens;
         }
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    println!("\n-- workload results ({arch:?}) --", arch = arch.as_str());
-    println!("  completed        {:>8}  (errors {errors})", n_requests - errors);
+    println!("\n-- workload results ({}) --", arch.as_str());
+    println!("  turns completed  {turns_done:>8}  (errors {errors})");
     println!("  wall time        {wall:>8.2} s");
     println!("  goodput          {:>8.1} tok/s", tokens as f64 / wall);
-    println!("  client latency   p50 {:>8.1} ms   p95 {:>8.1} ms", lat.p50(), lat.p95());
-    println!("  ttft             p50 {:>8.1} ms   p95 {:>8.1} ms", ttft.p50(), ttft.p95());
+    println!(
+        "  ttft cold        p50 {:>8.1} ms   p95 {:>8.1} ms",
+        ttft_cold.p50(),
+        ttft_cold.p95()
+    );
+    println!(
+        "  ttft resumed     p50 {:>8.1} ms   p95 {:>8.1} ms",
+        ttft_resume.p50(),
+        ttft_resume.p95()
+    );
+    println!(
+        "  prefill tokens   cold {:>7.0}   resumed {:>7.0}   saved by sessions {:>7.0}",
+        prefill_cold, prefill_resume, saved
+    );
 
     let m = engine.metrics()?;
     println!("\n-- engine metrics --");
@@ -108,6 +223,15 @@ fn main() -> anyhow::Result<()> {
         m.get("sync_events"),
         m.get("kv_bytes_peak"),
         m.get("round_ms_mean").as_f64().unwrap_or(0.0),
+    );
+    println!(
+        "  sessions opened {} closed {} evicted {} spilled {}  resume turns {}  saved tokens {}",
+        m.get("sessions_opened"),
+        m.get("sessions_closed"),
+        m.get("sessions_evicted"),
+        m.get("sessions_spilled"),
+        m.get("resume_turns"),
+        m.get("resume_saved_tokens"),
     );
 
     stop.store(true, Ordering::Relaxed);

@@ -57,11 +57,22 @@ pub struct KvManager {
     slots: Vec<Slot>,
     resident: Option<Resident>,
     peak_bytes: u64,
+    /// Sequences whose turn finished but whose state stays in place for a
+    /// session resume (DESIGN.md D6). Parked lanes hold slots/bytes like
+    /// live ones — the split is what `/metrics` and the engine's spill
+    /// policy read.
+    parked: Vec<u64>,
 }
 
 impl KvManager {
     pub fn new(limits: KvLimits) -> Self {
-        KvManager { limits, slots: Vec::new(), resident: None, peak_bytes: 0 }
+        KvManager {
+            limits,
+            slots: Vec::new(),
+            resident: None,
+            peak_bytes: 0,
+            parked: Vec::new(),
+        }
     }
 
     /// Switch the pool to resident mode, backed by `arena`. Must be called
@@ -136,6 +147,7 @@ impl KvManager {
         let meta = r.arena.lanes[slot].clone();
         r.arena.free(slot)?;
         r.seqs[slot] = None;
+        self.parked.retain(|&id| id != seq_id);
         Ok(meta)
     }
 
@@ -155,6 +167,48 @@ impl KvManager {
             }
         }
         self.get(seq_id).map(|s| s.bytes()).unwrap_or(0)
+    }
+
+    // -- parked-vs-live accounting (DESIGN.md D6) ---------------------------
+
+    /// Mark a live sequence as parked (true) or back in a turn (false).
+    pub fn set_parked(&mut self, seq_id: u64, parked: bool) {
+        if parked {
+            if !self.parked.contains(&seq_id) {
+                self.parked.push(seq_id);
+            }
+        } else {
+            self.parked.retain(|&id| id != seq_id);
+        }
+    }
+
+    pub fn is_parked(&self, seq_id: u64) -> bool {
+        self.parked.contains(&seq_id)
+    }
+
+    pub fn n_parked(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// KV bytes pinned by parked sequences.
+    pub fn parked_bytes(&self) -> u64 {
+        self.parked.iter().map(|&id| self.seq_bytes(id)).sum()
+    }
+
+    /// KV bytes pinned by sequences currently in a turn.
+    pub fn live_bytes(&self) -> u64 {
+        self.total_bytes().saturating_sub(self.parked_bytes())
+    }
+
+    /// Total tokens a sequence's state has absorbed so far, in either
+    /// backing (the resume-saved-prefill baseline).
+    pub fn tokens_seen(&self, seq_id: u64) -> u64 {
+        if let Some(r) = &self.resident {
+            if let Some(slot) = r.seqs.iter().position(|&id| id == Some(seq_id)) {
+                return r.arena.lanes[slot].tokens_seen as u64;
+            }
+        }
+        self.get(seq_id).map(|s| s.tokens_seen() as u64).unwrap_or(0)
     }
 
     /// Admit a new sequence. Errors when the pool is exhausted (the engine
@@ -178,6 +232,7 @@ impl KvManager {
             .iter()
             .position(|s| s.seq_id == seq_id)
             .ok_or_else(|| anyhow::anyhow!("unknown seq id {seq_id}"))?;
+        self.parked.retain(|&id| id != seq_id);
         Ok(self.slots.swap_remove(idx).state)
     }
 
@@ -345,6 +400,36 @@ mod tests {
         assert_eq!(kv.lane_of(2), None);
         assert!(kv.free_lane(2).is_err());
         assert_eq!(kv.peak_bytes(), 3 * per, "peak is sticky");
+    }
+
+    #[test]
+    fn parked_accounting_splits_bytes() {
+        use crate::model::arena::LaneArena;
+        use crate::model::Arch;
+        let c = cfg();
+        let mut kv = KvManager::new(KvLimits { max_slots: 4, max_bytes: 0 });
+        kv.attach_arena(LaneArena::new(Arch::TConst, &c, 4));
+        kv.alloc_lane(1).unwrap();
+        kv.alloc_lane(2).unwrap();
+        let per = kv.arena().unwrap().bytes_per_slot();
+        assert_eq!(kv.parked_bytes(), 0);
+        assert_eq!(kv.live_bytes(), 2 * per);
+
+        kv.set_parked(1, true);
+        assert!(kv.is_parked(1));
+        assert_eq!(kv.n_parked(), 1);
+        assert_eq!(kv.parked_bytes(), per);
+        assert_eq!(kv.live_bytes(), per);
+        kv.set_parked(1, true); // idempotent
+        assert_eq!(kv.n_parked(), 1);
+
+        // resuming un-parks; freeing a parked lane drops it from the set
+        kv.set_parked(1, false);
+        assert_eq!(kv.parked_bytes(), 0);
+        kv.set_parked(2, true);
+        kv.free_lane(2).unwrap();
+        assert_eq!(kv.n_parked(), 0);
+        assert_eq!(kv.tokens_seen(1), 0);
     }
 
     #[test]

@@ -11,10 +11,32 @@ pub struct EngineMetrics {
     started: Instant,
     pub requests_completed: u64,
     pub requests_aborted: u64,
+    /// Turns ended by client disconnect or explicit session close.
+    pub requests_cancelled: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub decode_steps: u64,
     pub sync_events: u64,
+    /// Session lifecycle counters (DESIGN.md D6).
+    pub sessions_opened: u64,
+    pub sessions_closed: u64,
+    pub sessions_evicted: u64,
+    /// Parked sessions demoted from their arena lane to a host-mirror
+    /// state under capacity pressure.
+    pub sessions_spilled: u64,
+    /// Turns that resumed a parked session.
+    pub resume_turns: u64,
+    /// Tokens actually fed on resume paths (window replay + new tokens).
+    pub resume_fed_tokens: u64,
+    /// History tokens resumes did NOT re-prefill (vs a cold request with
+    /// the concatenated history) — the D6 payoff meter.
+    pub resume_saved_tokens: u64,
+    /// Session gauges, refreshed by the engine before each snapshot.
+    pub sessions_in_turn: u64,
+    pub sessions_parked_resident: u64,
+    pub sessions_parked_spilled: u64,
+    pub kv_bytes_parked: u64,
+    pub kv_bytes_live: u64,
     /// Per-request latency distributions (ms).
     pub ttft_ms: Percentiles,
     pub total_ms: Percentiles,
@@ -46,10 +68,23 @@ impl Default for EngineMetrics {
             started: Instant::now(),
             requests_completed: 0,
             requests_aborted: 0,
+            requests_cancelled: 0,
             tokens_generated: 0,
             prefill_tokens: 0,
             decode_steps: 0,
             sync_events: 0,
+            sessions_opened: 0,
+            sessions_closed: 0,
+            sessions_evicted: 0,
+            sessions_spilled: 0,
+            resume_turns: 0,
+            resume_fed_tokens: 0,
+            resume_saved_tokens: 0,
+            sessions_in_turn: 0,
+            sessions_parked_resident: 0,
+            sessions_parked_spilled: 0,
+            kv_bytes_parked: 0,
+            kv_bytes_live: 0,
             ttft_ms: Percentiles::default(),
             total_ms: Percentiles::default(),
             per_token_ms: Percentiles::default(),
@@ -86,6 +121,25 @@ impl EngineMetrics {
             ("uptime_s", Json::num(self.uptime_s())),
             ("requests_completed", Json::num(self.requests_completed as f64)),
             ("requests_aborted", Json::num(self.requests_aborted as f64)),
+            ("requests_cancelled", Json::num(self.requests_cancelled as f64)),
+            ("sessions_opened", Json::num(self.sessions_opened as f64)),
+            ("sessions_closed", Json::num(self.sessions_closed as f64)),
+            ("sessions_evicted", Json::num(self.sessions_evicted as f64)),
+            ("sessions_spilled", Json::num(self.sessions_spilled as f64)),
+            ("sessions_in_turn", Json::num(self.sessions_in_turn as f64)),
+            (
+                "sessions_parked_resident",
+                Json::num(self.sessions_parked_resident as f64),
+            ),
+            (
+                "sessions_parked_spilled",
+                Json::num(self.sessions_parked_spilled as f64),
+            ),
+            ("resume_turns", Json::num(self.resume_turns as f64)),
+            ("resume_fed_tokens", Json::num(self.resume_fed_tokens as f64)),
+            ("resume_saved_tokens", Json::num(self.resume_saved_tokens as f64)),
+            ("kv_bytes_parked", Json::num(self.kv_bytes_parked as f64)),
+            ("kv_bytes_live", Json::num(self.kv_bytes_live as f64)),
             ("tokens_generated", Json::num(self.tokens_generated as f64)),
             ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
             ("decode_steps", Json::num(self.decode_steps as f64)),

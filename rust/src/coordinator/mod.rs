@@ -1,6 +1,7 @@
-//! The serving coordinator (Layer 3 proper): request types, admission
-//! queue, continuous batcher/scheduler, KV slot manager, metrics, and the
-//! engine event loop that owns the PJRT runtime.
+//! The serving coordinator (Layer 3 proper): turn/stream request types,
+//! session lifecycle (park/resume/spill/evict, DESIGN.md D6), admission
+//! queues, continuous batcher/scheduler, KV slot manager, metrics, and
+//! the engine event loop that owns the PJRT runtime.
 //!
 //! Threading model: PJRT handles are not `Send`, so a single **engine
 //! thread** owns the [`crate::runtime::Runtime`] and all model state;
@@ -15,5 +16,5 @@ pub mod metrics;
 pub mod request;
 pub mod scheduler;
 
-pub use engine::{ArenaStaging, Engine, EngineConfig, EngineHandle};
-pub use request::{Request, RequestMetrics, Response};
+pub use engine::{ArenaStaging, Engine, EngineConfig, EngineHandle, SessionHandle};
+pub use request::{FinishReason, Request, RequestMetrics, Response, StreamEvent, TurnRequest};

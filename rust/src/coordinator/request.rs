@@ -1,13 +1,26 @@
-//! Request/response types crossing the client ↔ engine boundary.
+//! Request/response/stream types crossing the client ↔ engine boundary.
+//!
+//! The unit of work is a **turn**: one prompt continuation against either
+//! an ephemeral context (`session_id: None` — the one-shot `/generate`
+//! contract) or a persistent **session** whose KV state the engine parks
+//! between turns (DESIGN.md D6). Results stream back as [`StreamEvent`]s:
+//! one `Token` per sampled token, then a terminal `TurnDone` carrying the
+//! full [`Response`].
 
 use crate::model::sampler::SamplingParams;
 
-/// A generation request.
+/// One generation turn.
 #[derive(Debug, Clone)]
-pub struct Request {
+pub struct TurnRequest {
     /// Client-supplied id (echoed back; the engine also assigns lane ids).
     pub id: u64,
-    /// Prompt tokens. May be empty — the engine prepends BOS regardless.
+    /// Session to continue (`None` = ephemeral one-shot context). The
+    /// first turn of an opened session prefills `BOS ‖ prompt`; follow-up
+    /// turns resume the parked state and prefill only the new tokens.
+    pub session_id: Option<u64>,
+    /// Prompt tokens. May be empty — the engine prepends BOS on the first
+    /// turn regardless, and a resumed turn always absorbs at least the
+    /// previous turn's final sampled token.
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub sampling: SamplingParams,
@@ -15,16 +28,42 @@ pub struct Request {
     pub stop_token: Option<i32>,
 }
 
-impl Request {
+/// Compatibility alias for the pre-session API; `TurnRequest` with
+/// `session_id: None` behaves exactly like the old one-shot `Request`.
+pub type Request = TurnRequest;
+
+impl TurnRequest {
     pub fn greedy(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
-        Request {
+        TurnRequest {
             id,
+            session_id: None,
             prompt,
             max_new_tokens,
             sampling: SamplingParams::greedy(),
             stop_token: None,
         }
     }
+
+    /// Same, but continuing a session.
+    pub fn greedy_turn(id: u64, session_id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        TurnRequest { session_id: Some(session_id), ..TurnRequest::greedy(id, prompt, max_new_tokens) }
+    }
+}
+
+/// Incremental events a turn emits, in order: zero or more `Token`s, then
+/// exactly one terminal event (`TurnDone`, or `Error` if the turn never
+/// started). `Closed` follows `TurnDone` when the turn's session ceased to
+/// exist with it (ephemeral turns, or an explicit close racing the turn).
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// One sampled token; `index` is its position in this turn's output.
+    Token { token: i32, index: usize },
+    /// The turn finished; the response repeats all tokens plus metrics.
+    TurnDone(Response),
+    /// The turn's session no longer exists (terminal).
+    Closed { session_id: Option<u64> },
+    /// The turn could not run (unknown/busy session, engine error).
+    Error(String),
 }
 
 /// Per-request timing and accounting, filled by the engine.
@@ -38,6 +77,12 @@ pub struct RequestMetrics {
     pub total_ms: f64,
     pub n_prompt: usize,
     pub n_generated: usize,
+    /// Tokens actually fed through the prefill machinery for this turn
+    /// (cold: BOS + prompt; resumed: window replay + carry token + prompt).
+    pub prefill_tokens: usize,
+    /// History tokens a cold request would have re-prefilled but the
+    /// session resume did not (0 for cold turns) — the D6 payoff meter.
+    pub saved_prefill_tokens: u64,
     /// Periodic context synchronizations performed for this sequence
     /// (TConst/TLin; the paper's cache-miss events).
     pub syncs: u64,
@@ -55,10 +100,12 @@ impl RequestMetrics {
     }
 }
 
-/// Completed generation.
+/// Completed generation turn.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// Session the turn ran on (`None` = ephemeral one-shot).
+    pub session_id: Option<u64>,
     pub tokens: Vec<i32>,
     pub finish_reason: FinishReason,
     pub metrics: RequestMetrics,
@@ -70,6 +117,8 @@ pub enum FinishReason {
     Length,
     /// Produced the stop token.
     Stop,
+    /// Client disconnected or explicitly closed mid-decode.
+    Cancelled,
     /// Engine shutting down / error.
     Aborted,
 }
@@ -79,6 +128,7 @@ impl FinishReason {
         match self {
             FinishReason::Length => "length",
             FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
             FinishReason::Aborted => "aborted",
         }
     }
@@ -100,9 +150,18 @@ mod tests {
 
     #[test]
     fn greedy_ctor() {
-        let r = Request::greedy(7, vec![1, 2], 16);
+        let r = TurnRequest::greedy(7, vec![1, 2], 16);
         assert_eq!(r.id, 7);
         assert_eq!(r.sampling.temperature, 0.0);
         assert!(r.stop_token.is_none());
+        assert!(r.session_id.is_none());
+        let t = TurnRequest::greedy_turn(8, 3, vec![1], 4);
+        assert_eq!(t.session_id, Some(3));
+    }
+
+    #[test]
+    fn finish_reason_strings() {
+        assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+        assert_eq!(FinishReason::Length.as_str(), "length");
     }
 }

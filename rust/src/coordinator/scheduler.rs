@@ -2,10 +2,14 @@
 //! property-testable (see `rust/tests/proptests.rs`).
 //!
 //! Each engine round:
-//! 1. **admission** — FIFO from the waiting queue into free KV slots, at
-//!    most `prefill_per_round` (prefill is the expensive cache-miss path;
-//!    bounding it caps TTFT jitter for already-running sequences);
-//! 2. **decode grouping** — all running lanes are decoded every round,
+//! 1. **resume admission** — turns continuing a parked session (DESIGN.md
+//!    D6) are admitted first and do *not* consume the cold-prefill budget:
+//!    a resume absorbs only its new tokens, so queueing it behind cold
+//!    prefills would charge it a latency it does not cost;
+//! 2. **cold admission** — FIFO from the waiting queue into free KV slots,
+//!    at most `prefill_per_round` (prefill is the expensive cache-miss
+//!    path; bounding it caps TTFT jitter for already-running sequences);
+//! 3. **decode grouping** — all running lanes are decoded every round,
 //!    packed into groups no larger than the biggest batch bucket, with a
 //!    rotating offset so no lane is systematically last (fairness).
 //!
@@ -19,20 +23,26 @@
 pub struct SchedConfig {
     /// Largest decode batch (== largest exported batch bucket).
     pub max_batch: usize,
-    /// Max prefills admitted per round.
+    /// Max cold prefills admitted per round.
     pub prefill_per_round: usize,
+    /// Max session resumes admitted per round (cheap — only new tokens are
+    /// absorbed — but still bounded to cap round-time jitter).
+    pub resume_per_round: usize,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        SchedConfig { max_batch: 4, prefill_per_round: 1 }
+        SchedConfig { max_batch: 4, prefill_per_round: 1, resume_per_round: 4 }
     }
 }
 
 /// One round's plan.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Plan {
-    /// Waiting-queue ids to prefill this round (FIFO prefix).
+    /// Resume-queue ids to admit this round (FIFO prefix, ahead of and not
+    /// counted against the cold-prefill budget).
+    pub admit_resume: Vec<u64>,
+    /// Cold-waiting-queue ids to prefill this round (FIFO prefix).
     pub admit: Vec<u64>,
     /// Decode groups; every running lane appears in exactly one group.
     pub groups: Vec<Vec<u64>>,
@@ -49,6 +59,26 @@ impl Scheduler {
         Scheduler { cfg, rotate: 0 }
     }
 
+    fn admissions(
+        &self,
+        waiting_resume: &[u64],
+        waiting_cold: &[u64],
+        free_slots: usize,
+    ) -> (Vec<u64>, Vec<u64>) {
+        // Resumes are bounded only by their own budget: a parked-resident
+        // session already owns its lane, and a spilled one reclaims a slot
+        // by spilling another parked lane — the engine never needs a free
+        // slot held back for them.
+        let n_resume = waiting_resume.len().min(self.cfg.resume_per_round);
+        let admit_resume = waiting_resume[..n_resume].to_vec();
+        let n_cold = waiting_cold
+            .len()
+            .min(free_slots)
+            .min(self.cfg.prefill_per_round);
+        let admit = waiting_cold[..n_cold].to_vec();
+        (admit_resume, admit)
+    }
+
     /// Plan a round for a **resident arena**: all running lanes form ONE
     /// group, in arena-slot order. The arena executes its full-capacity
     /// graph per group regardless of group size (its capacity is already a
@@ -63,12 +93,18 @@ impl Scheduler {
         running: &[(u64, usize)],
         free_slots: usize,
     ) -> Plan {
-        let n_admit = waiting
-            .len()
-            .min(free_slots)
-            .min(self.cfg.prefill_per_round);
-        let admit = waiting[..n_admit].to_vec();
+        self.plan_round_resident_sessions(&[], waiting, running, free_slots)
+    }
 
+    /// Resident-arena plan with a session resume lane (DESIGN.md D6).
+    pub fn plan_round_resident_sessions(
+        &mut self,
+        waiting_resume: &[u64],
+        waiting_cold: &[u64],
+        running: &[(u64, usize)],
+        free_slots: usize,
+    ) -> Plan {
+        let (admit_resume, admit) = self.admissions(waiting_resume, waiting_cold, free_slots);
         let mut by_slot: Vec<(u64, usize)> = running.to_vec();
         by_slot.sort_by_key(|&(_, slot)| slot);
         let groups = if by_slot.is_empty() {
@@ -76,16 +112,22 @@ impl Scheduler {
         } else {
             vec![by_slot.iter().map(|&(id, _)| id).collect()]
         };
-        Plan { admit, groups }
+        Plan { admit_resume, admit, groups }
     }
 
     pub fn plan_round(&mut self, waiting: &[u64], running: &[u64], free_slots: usize) -> Plan {
-        let n_admit = waiting
-            .len()
-            .min(free_slots)
-            .min(self.cfg.prefill_per_round);
-        let admit = waiting[..n_admit].to_vec();
+        self.plan_round_sessions(&[], waiting, running, free_slots)
+    }
 
+    /// Legacy (gather/scatter) plan with a session resume lane.
+    pub fn plan_round_sessions(
+        &mut self,
+        waiting_resume: &[u64],
+        waiting_cold: &[u64],
+        running: &[u64],
+        free_slots: usize,
+    ) -> Plan {
+        let (admit_resume, admit) = self.admissions(waiting_resume, waiting_cold, free_slots);
         let mut groups = Vec::new();
         if !running.is_empty() {
             let n = running.len();
@@ -100,7 +142,7 @@ impl Scheduler {
             }
             self.rotate = self.rotate.wrapping_add(1);
         }
-        Plan { admit, groups }
+        Plan { admit_resume, admit, groups }
     }
 }
 
@@ -112,9 +154,13 @@ mod tests {
         (0..n).collect()
     }
 
+    fn cfg(max_batch: usize, prefill_per_round: usize) -> SchedConfig {
+        SchedConfig { max_batch, prefill_per_round, ..Default::default() }
+    }
+
     #[test]
     fn fifo_admission_bounded() {
-        let mut s = Scheduler::new(SchedConfig { max_batch: 4, prefill_per_round: 2 });
+        let mut s = Scheduler::new(cfg(4, 2));
         let p = s.plan_round(&ids(5), &[], 10);
         assert_eq!(p.admit, vec![0, 1]);
         let p = s.plan_round(&ids(5), &[], 1);
@@ -125,7 +171,7 @@ mod tests {
 
     #[test]
     fn all_running_covered_exactly_once() {
-        let mut s = Scheduler::new(SchedConfig { max_batch: 4, prefill_per_round: 1 });
+        let mut s = Scheduler::new(cfg(4, 1));
         let running = ids(10);
         let p = s.plan_round(&[], &running, 0);
         let mut seen: Vec<u64> = p.groups.concat();
@@ -136,7 +182,7 @@ mod tests {
 
     #[test]
     fn rotation_changes_group_leader() {
-        let mut s = Scheduler::new(SchedConfig { max_batch: 4, prefill_per_round: 1 });
+        let mut s = Scheduler::new(cfg(4, 1));
         let running = ids(8);
         let p1 = s.plan_round(&[], &running, 0);
         let p2 = s.plan_round(&[], &running, 0);
@@ -151,7 +197,7 @@ mod tests {
 
     #[test]
     fn resident_plan_is_one_group_in_slot_order() {
-        let mut s = Scheduler::new(SchedConfig { max_batch: 2, prefill_per_round: 1 });
+        let mut s = Scheduler::new(cfg(2, 1));
         // seq ids with scrambled slots; max_batch does not split the group
         let running = [(10u64, 3usize), (11, 0), (12, 2), (13, 1)];
         let p = s.plan_round_resident(&[7, 8], &running, 1);
@@ -161,5 +207,22 @@ mod tests {
         let p2 = s.plan_round_resident(&[], &running, 0);
         assert_eq!(p2.groups, p.groups);
         assert!(s.plan_round_resident(&[], &[], 0).groups.is_empty());
+    }
+
+    #[test]
+    fn resumes_admitted_ahead_of_and_beyond_cold_budget() {
+        let mut s = Scheduler::new(SchedConfig {
+            max_batch: 4,
+            prefill_per_round: 1,
+            resume_per_round: 2,
+        });
+        // Zero free slots: cold admission is blocked, resumes are not.
+        let p = s.plan_round_resident_sessions(&[40, 41, 42], &[7, 8], &[], 0);
+        assert_eq!(p.admit_resume, vec![40, 41], "resume budget respected");
+        assert!(p.admit.is_empty(), "no free slot, no cold admit");
+        // With slots free, resumes do not eat the cold-prefill budget.
+        let p = s.plan_round_sessions(&[40], &[7, 8], &[], 2);
+        assert_eq!(p.admit_resume, vec![40]);
+        assert_eq!(p.admit, vec![7]);
     }
 }

@@ -1,16 +1,38 @@
 //! Serving workload generator: Poisson arrivals with configurable prompt /
 //! output length distributions — the request streams behind the Fig. 8
 //! end-to-end comparisons and the `serve_stream` example.
+//!
+//! A work item is a **conversation**: its first turn plus zero or more
+//! follow-up turns replayed against the session API (DESIGN.md D6). The
+//! default spec keeps `turns_min == turns_max == 1`, which degenerates to
+//! the original one-shot stream.
 
 use crate::util::rng::Rng;
 
-/// One synthetic request to be issued `at_ms` after workload start.
+/// A follow-up turn of a multi-turn conversation.
+#[derive(Debug, Clone)]
+pub struct FollowupTurn {
+    pub prompt_tokens: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// One synthetic conversation to be issued `at_ms` after workload start.
+/// `prompt_tokens`/`max_new_tokens` describe the first turn; `followups`
+/// run sequentially on the same session as each prior turn completes.
 #[derive(Debug, Clone)]
 pub struct WorkItem {
     pub id: u64,
     pub at_ms: f64,
     pub prompt_tokens: Vec<i32>,
     pub max_new_tokens: usize,
+    pub followups: Vec<FollowupTurn>,
+}
+
+impl WorkItem {
+    /// Total turns in this conversation (first + follow-ups).
+    pub fn n_turns(&self) -> usize {
+        1 + self.followups.len()
+    }
 }
 
 /// Workload shape parameters.
@@ -24,6 +46,12 @@ pub struct WorkloadSpec {
     pub prompt_len_max: usize,
     pub new_tokens_min: usize,
     pub new_tokens_max: usize,
+    /// Turns per conversation (inclusive bounds; 1 = one-shot).
+    pub turns_min: usize,
+    pub turns_max: usize,
+    /// Prompt length bounds for follow-up turns.
+    pub followup_len_min: usize,
+    pub followup_len_max: usize,
 }
 
 impl Default for WorkloadSpec {
@@ -36,12 +64,27 @@ impl Default for WorkloadSpec {
             prompt_len_max: 128,
             new_tokens_min: 16,
             new_tokens_max: 64,
+            turns_min: 1,
+            turns_max: 1,
+            followup_len_min: 8,
+            followup_len_max: 32,
         }
     }
 }
 
-/// Generate the request schedule. Prompts are drawn from `corpus` at random
-/// offsets (falling back to synthetic bytes if the corpus is too small).
+/// Draw a prompt from `corpus` at a random offset (falling back to
+/// synthetic bytes if the corpus is too small).
+fn draw_prompt(rng: &mut Rng, corpus: &[i32], lo: usize, hi: usize) -> Vec<i32> {
+    let plen = rng.usize(lo, hi + 1);
+    if corpus.len() > plen + 1 {
+        let start = rng.usize(0, corpus.len() - plen);
+        corpus[start..start + plen].to_vec()
+    } else {
+        (0..plen).map(|_| rng.range(1, 256) as i32).collect()
+    }
+}
+
+/// Generate the conversation schedule.
 pub fn generate(spec: &WorkloadSpec, corpus: &[i32]) -> Vec<WorkItem> {
     let mut rng = Rng::new(spec.seed);
     let mut at = 0.0f64;
@@ -50,18 +93,25 @@ pub fn generate(spec: &WorkloadSpec, corpus: &[i32]) -> Vec<WorkItem> {
         if spec.rate_per_s > 0.0 {
             at += rng.exp(spec.rate_per_s) * 1000.0;
         }
-        let plen = rng.usize(spec.prompt_len_min, spec.prompt_len_max + 1);
-        let prompt = if corpus.len() > plen + 1 {
-            let start = rng.usize(0, corpus.len() - plen);
-            corpus[start..start + plen].to_vec()
-        } else {
-            (0..plen).map(|_| rng.range(1, 256) as i32).collect()
-        };
+        let prompt = draw_prompt(&mut rng, corpus, spec.prompt_len_min, spec.prompt_len_max);
+        let turns = rng.usize(spec.turns_min.max(1), spec.turns_max.max(1) + 1);
+        let followups = (1..turns)
+            .map(|_| FollowupTurn {
+                prompt_tokens: draw_prompt(
+                    &mut rng,
+                    corpus,
+                    spec.followup_len_min,
+                    spec.followup_len_max,
+                ),
+                max_new_tokens: rng.usize(spec.new_tokens_min, spec.new_tokens_max + 1),
+            })
+            .collect();
         out.push(WorkItem {
             id: id as u64,
             at_ms: at,
             prompt_tokens: prompt,
             max_new_tokens: rng.usize(spec.new_tokens_min, spec.new_tokens_max + 1),
+            followups,
         });
     }
     out
@@ -82,6 +132,7 @@ mod tests {
             assert!(item.prompt_tokens.len() <= spec.prompt_len_max);
             assert!(item.max_new_tokens >= spec.new_tokens_min);
             assert!(item.max_new_tokens <= spec.new_tokens_max);
+            assert!(item.followups.is_empty(), "one-shot spec has no followups");
         }
     }
 
@@ -109,5 +160,34 @@ mod tests {
         assert_eq!(a.len(), b.len());
         assert_eq!(a[0].prompt_tokens, b[0].prompt_tokens);
         assert_eq!(a.last().unwrap().at_ms, b.last().unwrap().at_ms);
+    }
+
+    #[test]
+    fn multi_turn_conversations_respect_bounds() {
+        let spec = WorkloadSpec {
+            n_requests: 40,
+            turns_min: 2,
+            turns_max: 4,
+            ..Default::default()
+        };
+        let w = generate(&spec, &[]);
+        let mut saw_multi = false;
+        for item in &w {
+            assert!(item.n_turns() >= 2 && item.n_turns() <= 4);
+            saw_multi |= item.n_turns() > 2;
+            for f in &item.followups {
+                assert!(f.prompt_tokens.len() >= spec.followup_len_min);
+                assert!(f.prompt_tokens.len() <= spec.followup_len_max);
+                assert!(f.max_new_tokens >= spec.new_tokens_min);
+                assert!(f.max_new_tokens <= spec.new_tokens_max);
+            }
+        }
+        assert!(saw_multi, "turn counts should spread over the range");
+        // determinism extends to the follow-up turns
+        let again = generate(&spec, &[]);
+        assert_eq!(w[0].followups.len(), again[0].followups.len());
+        if !w[0].followups.is_empty() {
+            assert_eq!(w[0].followups[0].prompt_tokens, again[0].followups[0].prompt_tokens);
+        }
     }
 }

@@ -82,6 +82,9 @@ fn engine_cfg_from(args: &tconstformer::util::cli::Args) -> Result<EngineConfig>
         } else {
             ArenaStaging::DeviceArena
         },
+        session_ttl: std::time::Duration::from_secs(
+            args.get_usize("session-ttl", 600)? as u64
+        ),
     })
 }
 
@@ -93,20 +96,26 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt_default("sync-mode", "tconst sync mode (incremental|full)", "incremental")
         .opt_default("max-lanes", "max concurrent sequences", "4")
         .opt_default("addr", "listen address", "127.0.0.1:8077")
+        .opt_default("session-ttl", "idle parked-session eviction TTL (seconds)", "600")
+        .opt_default("max-conns", "max concurrent HTTP connections", "64")
         .opt("checkpoint", "trained checkpoint stem to load")
         .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)")
         .flag("host-arena", "stage resident arena slabs on the host (disable device residency)");
     let args = cmd.parse(rest)?;
     let cfg = engine_cfg_from(&args)?;
     println!(
-        "[serve] preset={} arch={} sync={:?}",
+        "[serve] preset={} arch={} sync={:?} session_ttl={:?}",
         cfg.preset,
         cfg.arch.as_str(),
-        cfg.sync_mode
+        cfg.sync_mode,
+        cfg.session_ttl,
     );
     let handle = Engine::spawn(cfg)?;
     server::serve(
-        &ServerConfig { addr: args.get_or("addr", "127.0.0.1:8077").to_string() },
+        &ServerConfig {
+            addr: args.get_or("addr", "127.0.0.1:8077").to_string(),
+            max_conns: args.get_usize("max-conns", 64)?,
+        },
         handle,
         None,
     )

@@ -22,7 +22,7 @@ pub mod tlinformer;
 
 use std::cell::OnceCell;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::runtime::{ModelConfig, Runtime};
 use arena::LaneArena;
@@ -124,6 +124,43 @@ impl ModelDriver {
         }
     }
 
+    /// Continue an existing state with more tokens — the session-resume
+    /// path (DESIGN.md D6): only the new tokens are absorbed, never the
+    /// conversation history. For TConst/TLin the partial generation window
+    /// is replayed through the window graph, making the resumed state
+    /// bit-identical to a cold prefill of the concatenated history; the
+    /// baseline appends to its cache through the decode graph (numerically
+    /// ≈1e-7 from a cold re-prefill — the O(N) arch has no bit-exact
+    /// O(new-tokens) resume). Returns the logits predicting the next token.
+    pub fn resume(
+        &self,
+        rt: &mut Runtime,
+        st: &mut SeqState,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        if self.arch == Arch::Base {
+            if !matches!(st, SeqState::Base(_)) {
+                bail!("state/arch mismatch");
+            }
+            if tokens.is_empty() {
+                bail!("resume with no tokens");
+            }
+            let mut logits = Vec::new();
+            for &t in tokens {
+                logits = self
+                    .decode_batch(rt, &mut [&mut *st], &[t])?
+                    .pop()
+                    .context("resume decode returned no logits")?;
+            }
+            return Ok(logits);
+        }
+        match (self.arch, st) {
+            (Arch::TConst, SeqState::TConst(s)) => tconstformer::resume(self, rt, s, tokens),
+            (Arch::TLin, SeqState::TLin(s)) => tlinformer::resume(self, rt, s, tokens),
+            _ => bail!("state/arch mismatch"),
+        }
+    }
+
     /// One decode step for a batch of lanes (all same arch; the scheduler
     /// groups them). `tokens[i]` is the token to feed lane `i`. Any lane
     /// whose generation window is full is synchronized first (the periodic
@@ -177,6 +214,25 @@ impl ModelDriver {
         let mut st = self.new_state();
         let logits = self.prefill(rt, &mut st, tokens)?;
         arena.sync_host(rt)?;
+        arena.load_state(slot, &st)?;
+        Ok(logits)
+    }
+
+    /// Resume a parked arena lane with new tokens (DESIGN.md D6): the
+    /// lane's state runs the per-lane [`Self::resume`] continuation and is
+    /// written back in place. Like admission prefill, this is a slot
+    /// *boundary* path — its O(state) lane copy (and, under device
+    /// staging, the mirror download) is one-off per turn, never per token.
+    pub fn resume_resident(
+        &self,
+        rt: &mut Runtime,
+        arena: &mut LaneArena,
+        slot: usize,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        arena.sync_host(rt)?;
+        let mut st = arena.extract_state(slot)?;
+        let logits = self.resume(rt, &mut st, tokens)?;
         arena.load_state(slot, &st)?;
         Ok(logits)
     }

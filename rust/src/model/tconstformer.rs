@@ -163,6 +163,35 @@ pub fn prefill(
     Ok(last_logits)
 }
 
+/// Continue an existing state with `tokens` — the session-resume path
+/// (DESIGN.md D6). The partial generation window is replayed through the
+/// window graph so the chunk boundaries (and therefore every fold and
+/// every gen-cache row) land exactly where a cold prefill of the full
+/// concatenated history would put them: the resumed state is bit-identical
+/// to the cold one, at a cost of O(tokens + W_og) regardless of how long
+/// the conversation already is.
+pub fn resume(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    s: &mut TConstState,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    if tokens.is_empty() {
+        bail!("resume with no tokens (a turn always carries the last sampled token)");
+    }
+    let mut chunk = std::mem::take(&mut s.window_tokens);
+    let replay = chunk.len();
+    chunk.extend_from_slice(tokens);
+    // Rewind the clocks over the replayed window tokens; prefill re-counts
+    // them as it re-absorbs the window.
+    s.slot = 0;
+    s.tokens_seen -= replay;
+    if drv.sync_mode == SyncMode::Full {
+        s.history.truncate(s.history.len() - replay);
+    }
+    prefill(drv, rt, s, &chunk)
+}
+
 /// One batched cache-hit decode step (syncing any lane whose window is
 /// full first). `lanes` must all be `SeqState::TConst`.
 pub fn decode_batch(

@@ -130,6 +130,29 @@ pub fn prefill(
     Ok(last_logits)
 }
 
+/// Continue an existing state with `tokens` — the session-resume path
+/// (DESIGN.md D6). As for TConstFormer, the partial window is replayed
+/// through the window graph so folds (and the history rows they append)
+/// land on the same boundaries a cold prefill of the concatenated history
+/// would produce — bit-identical state, O(tokens + W_og) cost.
+pub fn resume(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    s: &mut TLinState,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    if tokens.is_empty() {
+        bail!("resume with no tokens (a turn always carries the last sampled token)");
+    }
+    let mut chunk = std::mem::take(&mut s.inner.window_tokens);
+    let replay = chunk.len();
+    chunk.extend_from_slice(tokens);
+    s.inner.slot = 0;
+    s.inner.tokens_seen -= replay;
+    s.tokens_seen -= replay;
+    prefill(drv, rt, s, &chunk)
+}
+
 /// Sync a lane whose generation window is full: re-run the window forward
 /// (cache miss) to fold it and extend the raw history.
 pub fn sync(drv: &ModelDriver, rt: &mut Runtime, s: &mut TLinState) -> Result<()> {

@@ -1,35 +1,62 @@
 //! Minimal HTTP/1.1 server (offline stand-in for a web framework).
 //!
-//! Endpoints:
-//! * `POST /generate` — body `{"prompt": "...", "max_new_tokens": 32,
+//! Endpoints (DESIGN.md D6 session API):
+//! * `POST /v1/sessions` — open a persistent session →
+//!   `{"session_id": N}`. Its KV state is parked between turns and
+//!   evicted after the engine's session TTL.
+//! * `POST /v1/sessions/{id}/turns` — run one turn, streamed as a chunked
+//!   `text/event-stream`: one `data: {"token": T, "index": I}` event per
+//!   sampled token as it is sampled, then a final
+//!   `data: {"done": true, "text", "tokens", "finish_reason",
+//!   "metrics": {...}}` event. Closing the connection mid-stream cancels
+//!   the turn (`finish_reason = "cancelled"`). Body: same JSON as
+//!   `/generate`. A follow-up turn prefills only its new tokens.
+//! * `DELETE /v1/sessions/{id}` — close the session, freeing its parked
+//!   state (cancels a turn in flight) → `{"closed": true}` or 404.
+//! * `POST /generate` — one-shot compatibility shim over an ephemeral
+//!   session; body `{"prompt": "...", "max_new_tokens": 32,
 //!   "temperature": 0.0, "top_k": 0, "stop_on_eos": false}` →
 //!   `{"id", "text", "tokens", "finish_reason", "metrics": {...}}`
-//! * `GET /metrics` — engine metrics snapshot (JSON)
+//! * `GET /metrics` — engine metrics snapshot (JSON), including the
+//!   session gauges (live/parked/evicted, resume tokens saved).
 //! * `GET /healthz` — liveness
+//!
+//! Request bodies are capped at [`MAX_BODY`] (1 MiB): larger
+//! `Content-Length`s are answered `413` without parsing a truncated body.
+//! Concurrent connections are capped by [`ServerConfig::max_conns`]
+//! (excess accepts are answered `503` immediately) so a client flood
+//! cannot exhaust server threads.
 //!
 //! One thread per connection; requests are forwarded to the engine thread
 //! through [`EngineHandle`], so HTTP concurrency never touches PJRT state.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{EngineHandle, Request};
+use crate::coordinator::{EngineHandle, Response, StreamEvent, TurnRequest};
 use crate::data::tokenizer::{ByteTokenizer, EOS};
 use crate::model::sampler::SamplingParams;
 use crate::util::json::Json;
 
+/// Largest accepted request body; bigger ones get `413` (never a
+/// silently-truncated JSON parse).
+pub const MAX_BODY: usize = 1 << 20;
+
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub addr: String,
+    /// Max concurrent connections; excess accepts are answered `503`.
+    pub max_conns: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:8077".into() }
+        ServerConfig { addr: "127.0.0.1:8077".into(), max_conns: 64 }
     }
 }
 
@@ -39,6 +66,10 @@ struct HttpRequest {
     method: String,
     path: String,
     body: Vec<u8>,
+    /// Declared Content-Length (also set when the body was not read).
+    content_length: usize,
+    /// Content-Length exceeded [`MAX_BODY`]; body was not read.
+    too_large: bool,
 }
 
 fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
@@ -63,11 +94,34 @@ fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
             }
         }
     }
-    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if content_length > MAX_BODY {
+        return Ok(HttpRequest {
+            method,
+            path,
+            body: Vec::new(),
+            content_length,
+            too_large: true,
+        });
+    }
+    let mut body = vec![0u8; content_length];
     if !body.is_empty() {
         reader.read_exact(&mut body)?;
     }
-    Ok(HttpRequest { method, path, body })
+    Ok(HttpRequest { method, path, body, content_length, too_large: false })
+}
+
+/// Read-and-discard up to `limit` bytes of an unread request body so a
+/// mid-upload client can still read our response instead of hitting a TCP
+/// reset; bounded, and the socket read timeout caps stalled senders.
+fn drain_body(stream: &mut TcpStream, declared: usize, limit: usize) {
+    let mut left = declared.min(limit);
+    let mut buf = [0u8; 8192];
+    while left > 0 {
+        match stream.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => left = left.saturating_sub(n),
+        }
+    }
 }
 
 fn respond(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
@@ -75,6 +129,10 @@ fn respond(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Error",
     };
     write!(
@@ -86,13 +144,24 @@ fn respond(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
     Ok(())
 }
 
-fn handle_generate(engine: &EngineHandle, body: &[u8], next_id: &AtomicU64) -> Result<Json> {
+/// Parse `/v1/sessions/{id}[/tail]` → (id, tail).
+fn session_route(path: &str) -> Option<(u64, Option<&str>)> {
+    let rest = path.strip_prefix("/v1/sessions/")?;
+    match rest.split_once('/') {
+        None => rest.parse().ok().map(|id| (id, None)),
+        Some((id, tail)) => id.parse().ok().map(|id| (id, Some(tail))),
+    }
+}
+
+/// Shared body → [`TurnRequest`] parsing for `/generate` and turn posts.
+fn parse_turn(body: &[u8], id: u64, session_id: Option<u64>) -> Result<TurnRequest> {
     let j = Json::parse(std::str::from_utf8(body).context("utf8 body")?)
         .map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
     let tk = ByteTokenizer;
     let prompt = tk.encode(j.get("prompt").as_str().unwrap_or(""));
-    let req = Request {
-        id: next_id.fetch_add(1, Ordering::Relaxed),
+    Ok(TurnRequest {
+        id,
+        session_id,
         prompt,
         max_new_tokens: j.get("max_new_tokens").as_usize().unwrap_or(32).min(4096),
         sampling: SamplingParams {
@@ -105,9 +174,14 @@ fn handle_generate(engine: &EngineHandle, body: &[u8], next_id: &AtomicU64) -> R
         } else {
             None
         },
-    };
-    let resp = engine.generate(req)?;
-    Ok(Json::obj(vec![
+    })
+}
+
+/// The completed-turn JSON shared by `/generate` and the final stream
+/// event (the pre-session `/generate` keys are kept verbatim).
+fn response_json(resp: &Response) -> Json {
+    let tk = ByteTokenizer;
+    let mut fields = vec![
         ("id", Json::num(resp.id as f64)),
         ("text", Json::str(tk.decode(&resp.tokens))),
         (
@@ -123,17 +197,128 @@ fn handle_generate(engine: &EngineHandle, body: &[u8], next_id: &AtomicU64) -> R
                 ("total_ms", Json::num(resp.metrics.total_ms)),
                 ("n_prompt", Json::num(resp.metrics.n_prompt as f64)),
                 ("n_generated", Json::num(resp.metrics.n_generated as f64)),
+                ("prefill_tokens", Json::num(resp.metrics.prefill_tokens as f64)),
+                (
+                    "saved_prefill_tokens",
+                    Json::num(resp.metrics.saved_prefill_tokens as f64),
+                ),
                 ("syncs", Json::num(resp.metrics.syncs as f64)),
                 ("peak_kv_bytes", Json::num(resp.metrics.peak_kv_bytes as f64)),
                 ("tokens_per_s", Json::num(resp.metrics.tokens_per_s())),
             ]),
         ),
-    ]))
+    ];
+    if let Some(sid) = resp.session_id {
+        fields.push(("session_id", Json::num(sid as f64)));
+    }
+    Json::obj(fields)
+}
+
+fn handle_generate(engine: &EngineHandle, body: &[u8], next_id: &AtomicU64) -> Result<Json> {
+    let req = parse_turn(body, next_id.fetch_add(1, Ordering::Relaxed), None)?;
+    let resp = engine.generate(req)?;
+    Ok(response_json(&resp))
+}
+
+/// One chunk of a chunked transfer (our SSE events are one chunk each, so
+/// every token reaches the client the moment it is sampled).
+fn write_chunk(stream: &mut TcpStream, payload: &str) -> std::io::Result<()> {
+    write!(stream, "{:X}\r\n{payload}\r\n", payload.len())
+}
+
+/// Stream one session turn as `text/event-stream`. A failed chunk write
+/// (client gone) drops the event receiver, which the engine observes as a
+/// cancellation at the next sampled token.
+fn handle_turn(
+    stream: &mut TcpStream,
+    engine: &EngineHandle,
+    session_id: u64,
+    body: &[u8],
+    next_id: &AtomicU64,
+) -> Result<()> {
+    let req = match parse_turn(body, next_id.fetch_add(1, Ordering::Relaxed), Some(session_id)) {
+        Ok(r) => r,
+        Err(e) => {
+            return respond(
+                stream,
+                400,
+                &Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string(),
+            )
+        }
+    };
+    let handle = engine.submit(req);
+    // Peek the first event before committing to a 200: an immediate Error
+    // (unknown/busy session) becomes a plain JSON error response.
+    let first = match handle.recv() {
+        Some(StreamEvent::Error(e)) => {
+            // Coarse mapping of the engine's rejection reasons; anything
+            // unrecognized is a server-side failure, not a client fault.
+            let status = if e.contains("unknown session") {
+                404
+            } else if e.contains("turn in flight") {
+                409
+            } else {
+                500
+            };
+            return respond(
+                stream,
+                status,
+                &Json::obj(vec![("error", Json::str(e))]).to_string(),
+            );
+        }
+        Some(ev) => ev,
+        None => return respond(stream, 503, r#"{"error":"engine unavailable"}"#),
+    };
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    let mut ev = Some(first);
+    while let Some(event) = ev {
+        let (payload, done) = match event {
+            StreamEvent::Token { token, index } => (
+                Json::obj(vec![
+                    ("token", Json::num(token as f64)),
+                    ("index", Json::num(index as f64)),
+                ]),
+                false,
+            ),
+            StreamEvent::TurnDone(resp) => {
+                let mut j = response_json(&resp);
+                if let Json::Obj(map) = &mut j {
+                    map.insert("done".into(), Json::Bool(true));
+                }
+                (j, true)
+            }
+            StreamEvent::Closed { .. } => (Json::obj(vec![("closed", Json::Bool(true))]), true),
+            StreamEvent::Error(e) => (Json::obj(vec![("error", Json::str(e))]), true),
+        };
+        if write_chunk(stream, &format!("data: {payload}\n\n")).is_err() {
+            // Client went away: dropping `handle` cancels the turn.
+            return Ok(());
+        }
+        if done {
+            break;
+        }
+        ev = handle.recv();
+    }
+    let _ = write!(stream, "0\r\n\r\n");
+    Ok(())
 }
 
 fn handle_conn(mut stream: TcpStream, engine: EngineHandle, next_id: Arc<AtomicU64>) {
     let result = (|| -> Result<()> {
         let req = read_request(&mut stream)?;
+        if req.too_large {
+            respond(
+                &mut stream,
+                413,
+                &format!(r#"{{"error":"body exceeds {MAX_BODY} bytes"}}"#),
+            )?;
+            drain_body(&mut stream, req.content_length, 8 << 20);
+            return Ok(());
+        }
         match (req.method.as_str(), req.path.as_str()) {
             ("POST", "/generate") => match handle_generate(&engine, &req.body, &next_id) {
                 Ok(j) => respond(&mut stream, 200, &j.to_string()),
@@ -142,6 +327,28 @@ fn handle_conn(mut stream: TcpStream, engine: EngineHandle, next_id: Arc<AtomicU
                     400,
                     &Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string(),
                 ),
+            },
+            ("POST", "/v1/sessions") => match engine.open_session() {
+                Ok(sid) => respond(
+                    &mut stream,
+                    200,
+                    &Json::obj(vec![("session_id", Json::num(sid as f64))]).to_string(),
+                ),
+                Err(_) => respond(&mut stream, 503, r#"{"error":"engine unavailable"}"#),
+            },
+            ("POST", p) => match session_route(p) {
+                Some((sid, Some("turns"))) => {
+                    handle_turn(&mut stream, &engine, sid, &req.body, &next_id)
+                }
+                _ => respond(&mut stream, 404, r#"{"error":"not found"}"#),
+            },
+            ("DELETE", p) => match session_route(p) {
+                Some((sid, None)) => match engine.close_session(sid) {
+                    Ok(true) => respond(&mut stream, 200, r#"{"closed":true}"#),
+                    Ok(false) => respond(&mut stream, 404, r#"{"error":"unknown session"}"#),
+                    Err(_) => respond(&mut stream, 503, r#"{"error":"engine unavailable"}"#),
+                },
+                _ => respond(&mut stream, 404, r#"{"error":"not found"}"#),
             },
             ("GET", "/metrics") => {
                 let m = engine.metrics()?;
@@ -156,6 +363,15 @@ fn handle_conn(mut stream: TcpStream, engine: EngineHandle, next_id: Arc<AtomicU
     }
 }
 
+/// Decrements the live-connection gauge when a connection thread exits.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// Serve until `stop` flips true (tests) or forever (stop = None).
 pub fn serve(cfg: &ServerConfig, engine: EngineHandle, stop: Option<Arc<AtomicBool>>) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)
@@ -163,6 +379,8 @@ pub fn serve(cfg: &ServerConfig, engine: EngineHandle, stop: Option<Arc<AtomicBo
     listener.set_nonblocking(true)?;
     println!("[http] serving on http://{}", cfg.addr);
     let next_id = Arc::new(AtomicU64::new(1));
+    let active = Arc::new(AtomicUsize::new(0));
+    let max_conns = cfg.max_conns.max(1);
     loop {
         if let Some(s) = &stop {
             if s.load(Ordering::Relaxed) {
@@ -170,10 +388,30 @@ pub fn serve(cfg: &ServerConfig, engine: EngineHandle, stop: Option<Arc<AtomicBo
             }
         }
         match listener.accept() {
-            Ok((stream, _)) => {
+            Ok((mut stream, _)) => {
+                // A stalled or idle client must not pin its connection slot
+                // forever (the cap below would otherwise turn `max_conns`
+                // dead sockets into a permanent 503).
+                let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(30)));
+                let _ = stream.set_write_timeout(Some(std::time::Duration::from_secs(30)));
+                if active.fetch_add(1, Ordering::Relaxed) >= max_conns {
+                    // Thread-spawn backpressure: refuse instead of queueing
+                    // unbounded connection threads.
+                    active.fetch_sub(1, Ordering::Relaxed);
+                    let _ = respond(
+                        &mut stream,
+                        503,
+                        r#"{"error":"connection limit reached"}"#,
+                    );
+                    continue;
+                }
+                let guard = ConnGuard(active.clone());
                 let engine = engine.clone();
                 let next_id = next_id.clone();
-                std::thread::spawn(move || handle_conn(stream, engine, next_id));
+                std::thread::spawn(move || {
+                    let _guard = guard;
+                    handle_conn(stream, engine, next_id)
+                });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(std::time::Duration::from_millis(10));
@@ -183,7 +421,10 @@ pub fn serve(cfg: &ServerConfig, engine: EngineHandle, stop: Option<Arc<AtomicBo
     }
 }
 
-/// Tiny blocking HTTP client for tests and the workload replayer.
+// ---------------------------------------------------------------------------
+// Tiny blocking HTTP client (tests and the workload replayer)
+// ---------------------------------------------------------------------------
+
 pub fn http_post(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr)?;
     write!(
@@ -204,6 +445,15 @@ pub fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
     read_response(&mut stream)
 }
 
+/// Send a raw, pre-formatted HTTP request (tests poking at edge cases the
+/// well-formed helpers cannot produce, e.g. an oversize Content-Length
+/// with no body).
+pub fn http_request_raw(addr: &str, raw: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(raw.as_bytes())?;
+    read_response(&mut stream)
+}
+
 fn read_response(stream: &mut TcpStream) -> Result<(u16, String)> {
     let mut buf = String::new();
     BufReader::new(stream).read_to_string(&mut buf)?;
@@ -217,4 +467,125 @@ fn read_response(stream: &mut TcpStream) -> Result<(u16, String)> {
         .map(|(_, b)| b.to_string())
         .unwrap_or_default();
     Ok((status, body))
+}
+
+/// Incremental reader for a chunked `text/event-stream` turn response.
+/// Dropping it mid-stream closes the connection, which the server
+/// propagates as a turn cancellation.
+pub struct SseStream {
+    reader: BufReader<TcpStream>,
+    buf: String,
+    done: bool,
+}
+
+/// POST a turn and read the response head. For a 200 the body streams via
+/// [`SseStream::next_event`]; for anything else the error body is in the
+/// returned string.
+pub fn sse_open(addr: &str, path: &str, body: &str) -> Result<(u16, String, Option<SseStream>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if h.to_ascii_lowercase().contains("transfer-encoding")
+            && h.to_ascii_lowercase().contains("chunked")
+        {
+            chunked = true;
+        }
+    }
+    if status == 200 && chunked {
+        Ok((status, String::new(), Some(SseStream { reader, buf: String::new(), done: false })))
+    } else {
+        let mut body = String::new();
+        reader.read_to_string(&mut body)?;
+        Ok((status, body, None))
+    }
+}
+
+impl SseStream {
+    /// Next `data:` payload, or `None` once the stream ends.
+    pub fn next_event(&mut self) -> Result<Option<String>> {
+        loop {
+            if let Some(pos) = self.buf.find("\n\n") {
+                let raw: String = self.buf.drain(..pos + 2).collect();
+                let data = raw
+                    .lines()
+                    .filter_map(|l| l.strip_prefix("data: "))
+                    .collect::<Vec<_>>()
+                    .join("\n");
+                if data.is_empty() {
+                    continue;
+                }
+                return Ok(Some(data));
+            }
+            if self.done {
+                return Ok(None);
+            }
+            // Pull the next transfer chunk into the event buffer.
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                self.done = true;
+                continue;
+            }
+            let n = usize::from_str_radix(line.trim(), 16)
+                .map_err(|_| anyhow::anyhow!("bad chunk header {line:?}"))?;
+            if n == 0 {
+                self.done = true;
+                let mut crlf = String::new();
+                let _ = self.reader.read_line(&mut crlf);
+                continue;
+            }
+            let mut data = vec![0u8; n];
+            self.reader.read_exact(&mut data)?;
+            let mut crlf = [0u8; 2];
+            self.reader.read_exact(&mut crlf)?;
+            self.buf.push_str(&String::from_utf8_lossy(&data));
+        }
+    }
+}
+
+/// POST a turn and collect the whole event stream: returns (status,
+/// parsed events, ms until the first event arrived). Non-200 returns the
+/// error body as a single parsed event when possible.
+pub fn http_post_sse(addr: &str, path: &str, body: &str) -> Result<(u16, Vec<Json>, f64)> {
+    let t0 = Instant::now();
+    let (status, err_body, stream) = sse_open(addr, path, body)?;
+    let Some(mut stream) = stream else {
+        let events = Json::parse(&err_body).map(|j| vec![j]).unwrap_or_default();
+        return Ok((status, events, 0.0));
+    };
+    let mut events = Vec::new();
+    let mut first_ms = 0.0;
+    while let Some(e) = stream.next_event()? {
+        if events.is_empty() {
+            first_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        }
+        events.push(
+            Json::parse(&e).map_err(|err| anyhow::anyhow!("bad event json {e:?}: {err}"))?,
+        );
+    }
+    if events.is_empty() {
+        bail!("empty event stream");
+    }
+    Ok((status, events, first_ms))
 }

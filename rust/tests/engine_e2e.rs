@@ -4,8 +4,11 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use tconstformer::coordinator::{ArenaStaging, Engine, EngineConfig, Request};
+use tconstformer::coordinator::{
+    ArenaStaging, Engine, EngineConfig, Request, StreamEvent, TurnRequest,
+};
 use tconstformer::model::{Arch, SyncMode};
 use tconstformer::server::http;
 use tconstformer::server::ServerConfig;
@@ -30,6 +33,7 @@ fn tiny_cfg(arch: Arch) -> EngineConfig {
         checkpoint: None,
         resident: true,
         staging: ArenaStaging::DeviceArena,
+        session_ttl: Duration::from_secs(600),
     }
 }
 
@@ -246,7 +250,12 @@ fn http_server_round_trip() {
     let stop2 = stop.clone();
     let h2 = handle.clone();
     let server = std::thread::spawn(move || {
-        http::serve(&ServerConfig { addr: addr.to_string() }, h2, Some(stop2)).unwrap();
+        http::serve(
+            &ServerConfig { addr: addr.to_string(), ..Default::default() },
+            h2,
+            Some(stop2),
+        )
+        .unwrap();
     });
     // wait for the listener
     std::thread::sleep(std::time::Duration::from_millis(200));
@@ -276,6 +285,394 @@ fn http_server_round_trip() {
 
     let (code, body) = http::http_post(addr, "/generate", "not json").unwrap();
     assert_eq!(code, 400, "{body}");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Session lifecycle (DESIGN.md D6)
+// ---------------------------------------------------------------------------
+
+/// A resumed turn must prefill only its new tokens (plus a ≤ W_og window
+/// replay) and produce exactly the tokens a cold request with the full
+/// concatenated history would — for all three archs under both stagings.
+#[test]
+fn session_resume_matches_cold_concatenated() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    for arch in [Arch::TConst, Arch::TLin, Arch::Base] {
+        for staging in [ArenaStaging::DeviceArena, ArenaStaging::HostArena] {
+            let cfg = EngineConfig { staging, ..tiny_cfg(arch) };
+            let mut engine = Engine::new(&cfg).unwrap();
+            let w = engine.driver.cfg.w_og;
+            let sid = engine.open_session();
+            let p1 = prompt(70, 3); // crosses W_og=32 window boundaries
+            engine.submit(TurnRequest::greedy_turn(1, sid, p1.clone(), 12));
+            engine.run_to_completion().unwrap();
+            let r1 = engine.completed.remove(0);
+            assert_eq!(r1.tokens.len(), 12, "{arch:?}/{staging:?}");
+            assert_eq!(r1.session_id, Some(sid));
+            assert_eq!(r1.metrics.saved_prefill_tokens, 0, "first turn is cold");
+
+            let p2 = prompt(9, 4);
+            engine.submit(TurnRequest::greedy_turn(2, sid, p2.clone(), 10));
+            engine.run_to_completion().unwrap();
+            let r2 = engine.completed.remove(0);
+            assert_eq!(r2.tokens.len(), 10, "{arch:?}/{staging:?}");
+            // Only the new tokens (plus the window replay) were prefilled —
+            // never the conversation history.
+            assert!(
+                r2.metrics.prefill_tokens <= w + 1 + p2.len(),
+                "{arch:?}/{staging:?}: resume prefilled {} tokens",
+                r2.metrics.prefill_tokens
+            );
+            assert!(
+                r2.metrics.saved_prefill_tokens > 0,
+                "{arch:?}/{staging:?}: resume saved nothing"
+            );
+            let m = engine.metrics_json();
+            assert_eq!(m.get("resume_turns").as_usize(), Some(1));
+            assert_eq!(
+                m.get("sessions_parked_resident").as_usize(),
+                Some(1),
+                "{arch:?}/{staging:?}: session must park again after turn 2"
+            );
+
+            // Cold engine over the concatenated history must match turn 2
+            // token-for-token (bit-identical state for TConst/TLin via the
+            // window-replay resume; the baseline's decode-append drifts
+            // ~1e-7 in logits, far below its greedy argmax margins).
+            let mut cold = Engine::new(&cfg).unwrap();
+            let mut full = p1.clone();
+            full.extend_from_slice(&r1.tokens);
+            full.extend_from_slice(&p2);
+            let out = cold
+                .run_workload(vec![TurnRequest::greedy(9, full, 10)])
+                .unwrap();
+            assert_eq!(
+                out[0].tokens, r2.tokens,
+                "{arch:?}/{staging:?}: resumed turn diverged from cold request"
+            );
+        }
+    }
+}
+
+/// Capacity pressure spills parked sessions to host states; resuming a
+/// spilled session must behave exactly like an unspilled one.
+#[test]
+fn session_resume_after_spill_matches_unspilled() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let run = |interlopers: bool| -> (Vec<i32>, Vec<i32>) {
+        let mut engine =
+            Engine::new(&EngineConfig { max_lanes: 2, ..tiny_cfg(Arch::TConst) }).unwrap();
+        let sa = engine.open_session();
+        let sb = engine.open_session();
+        engine.submit(TurnRequest::greedy_turn(1, sa, prompt(40, 1), 8));
+        engine.run_to_completion().unwrap();
+        engine.submit(TurnRequest::greedy_turn(2, sb, prompt(33, 2), 8));
+        engine.run_to_completion().unwrap();
+        engine.completed.clear();
+        if interlopers {
+            // Both lanes are parked; cold one-shots force LRU spills.
+            let reqs = (0..2)
+                .map(|i| TurnRequest::greedy(10 + i, prompt(20, 5 + i as usize), 6))
+                .collect();
+            engine.run_workload(reqs).unwrap();
+            let m = engine.metrics_json();
+            assert!(
+                m.get("sessions_spilled").as_usize().unwrap() >= 1,
+                "capacity pressure must spill a parked session"
+            );
+        }
+        engine.submit(TurnRequest::greedy_turn(3, sa, prompt(7, 3), 8));
+        engine.run_to_completion().unwrap();
+        let ra = engine.completed.remove(0);
+        engine.submit(TurnRequest::greedy_turn(4, sb, prompt(6, 4), 8));
+        engine.run_to_completion().unwrap();
+        let rb = engine.completed.remove(0);
+        (ra.tokens, rb.tokens)
+    };
+    let with_spill = run(true);
+    let without_spill = run(false);
+    assert_eq!(with_spill, without_spill, "spill/readmit changed a resumed turn");
+}
+
+/// Tokens stream as they are sampled: the first event arrives while the
+/// turn is still generating, and the stream ends TurnDone → Closed.
+#[test]
+fn stream_delivers_first_token_before_turn_done() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine = Engine::new(&tiny_cfg(Arch::TConst)).unwrap();
+    let rx = engine.submit_streaming(TurnRequest::greedy(1, prompt(6, 1), 5));
+    engine.step().unwrap(); // admission round: prefill + first sampled token
+    match rx.try_recv() {
+        Ok(StreamEvent::Token { index: 0, .. }) => {}
+        other => panic!("expected the first token event, got {other:?}"),
+    }
+    assert!(engine.has_work(), "turn must still be generating after the first event");
+    engine.run_to_completion().unwrap();
+    let events: Vec<StreamEvent> = rx.try_iter().collect();
+    let tokens: Vec<i32> = events
+        .iter()
+        .filter_map(|e| match e {
+            StreamEvent::Token { token, .. } => Some(*token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(tokens.len(), 4, "remaining tokens streamed one by one");
+    let done = events
+        .iter()
+        .find_map(|e| match e {
+            StreamEvent::TurnDone(r) => Some(r.clone()),
+            _ => None,
+        })
+        .expect("TurnDone event");
+    assert_eq!(done.tokens.len(), 5);
+    assert_eq!(done.finish_reason.as_str(), "length");
+    assert!(
+        matches!(events.last(), Some(StreamEvent::Closed { .. })),
+        "ephemeral turn ends with Closed"
+    );
+}
+
+/// Dropping the event stream mid-decode cancels the turn
+/// (FinishReason::Cancelled) and frees its lane for the next admission.
+#[test]
+fn dropped_stream_cancels_turn_and_frees_lane() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine =
+        Engine::new(&EngineConfig { max_lanes: 1, ..tiny_cfg(Arch::TConst) }).unwrap();
+    let rx = engine.submit_streaming(TurnRequest::greedy(1, prompt(5, 1), 400));
+    engine.step().unwrap(); // prefill + first token
+    engine.step().unwrap(); // one decode round
+    drop(rx);
+    while engine.has_work() {
+        engine.step().unwrap();
+    }
+    let m = engine.metrics_json();
+    assert_eq!(m.get("requests_cancelled").as_usize(), Some(1));
+    assert!(
+        m.get("tokens_generated").as_usize().unwrap() < 400,
+        "cancellation must abort mid-decode"
+    );
+    // The lane was freed: a fresh one-shot on the 1-lane engine completes.
+    let out = engine
+        .run_workload(vec![TurnRequest::greedy(2, prompt(4, 2), 4)])
+        .unwrap();
+    assert_eq!(out[0].tokens.len(), 4);
+    assert_eq!(out[0].finish_reason.as_str(), "length");
+}
+
+/// Idle parked sessions are evicted by TTL; later turns against the
+/// evicted session fail fast.
+#[test]
+fn parked_session_ttl_eviction_fires() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine = Engine::new(&EngineConfig {
+        session_ttl: Duration::from_millis(30),
+        ..tiny_cfg(Arch::TConst)
+    })
+    .unwrap();
+    let sid = engine.open_session();
+    engine.submit(TurnRequest::greedy_turn(1, sid, prompt(6, 1), 4));
+    engine.run_to_completion().unwrap();
+    engine.completed.clear();
+    let m = engine.metrics_json();
+    assert_eq!(m.get("sessions_parked_resident").as_usize(), Some(1));
+    assert!(m.get("kv_bytes_parked").as_f64().unwrap() > 0.0);
+
+    std::thread::sleep(Duration::from_millis(60));
+    let evicted = engine.sweep_sessions().unwrap();
+    assert_eq!(evicted, 1);
+    let m = engine.metrics_json();
+    assert_eq!(m.get("sessions_evicted").as_usize(), Some(1));
+    assert_eq!(m.get("sessions_parked_resident").as_usize(), Some(0));
+    assert_eq!(m.get("kv_bytes_parked").as_f64(), Some(0.0));
+
+    engine.submit(TurnRequest::greedy_turn(2, sid, prompt(3, 2), 4));
+    engine.run_to_completion().unwrap();
+    let r = engine.completed.remove(0);
+    assert_eq!(r.finish_reason.as_str(), "aborted");
+    assert!(r.tokens.is_empty());
+}
+
+#[test]
+fn http_session_api_round_trip() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let handle = Engine::spawn(tiny_cfg(Arch::TConst)).unwrap();
+    let addr = "127.0.0.1:8192";
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let h2 = handle.clone();
+    let server = std::thread::spawn(move || {
+        http::serve(
+            &ServerConfig { addr: addr.to_string(), ..Default::default() },
+            h2,
+            Some(stop2),
+        )
+        .unwrap();
+    });
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    // open a session
+    let (code, body) = http::http_post(addr, "/v1/sessions", "{}").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let sid = Json::parse(&body).unwrap().get("session_id").as_usize().unwrap();
+    let path = format!("/v1/sessions/{sid}/turns");
+
+    // turn 1: tokens stream incrementally, done event carries the response
+    // (prompt long enough to cross a sync window so turn 2 saves history)
+    let body1 = format!(
+        r#"{{"prompt": "{}", "max_new_tokens": 4}}"#,
+        "abcdefghij".repeat(7)
+    );
+    let (code, events, _) = http::http_post_sse(addr, &path, &body1).unwrap();
+    assert_eq!(code, 200);
+    let n_tokens = events.iter().filter(|e| !e.get("token").is_null()).count();
+    assert_eq!(n_tokens, 4, "one event per sampled token");
+    assert!(!events[0].get("token").is_null(), "token events precede done");
+    let done = events.last().unwrap();
+    assert_eq!(done.get("done").as_bool(), Some(true));
+    assert_eq!(done.get("finish_reason").as_str(), Some("length"));
+    assert_eq!(done.get("tokens").as_arr().unwrap().len(), 4);
+    assert_eq!(done.get("session_id").as_usize(), Some(sid));
+
+    // turn 2 resumes the parked state: history prefill is saved
+    let (code, events, _) =
+        http::http_post_sse(addr, &path, r#"{"prompt": " again", "max_new_tokens": 3}"#)
+            .unwrap();
+    assert_eq!(code, 200);
+    let done = events.last().unwrap();
+    assert!(
+        done.get("metrics").get("saved_prefill_tokens").as_f64().unwrap() > 0.0,
+        "resume saved no prefill: {done}"
+    );
+
+    // unknown session → 404
+    let (code, _, _) =
+        http::http_post_sse(addr, "/v1/sessions/99999/turns", r#"{"prompt":"x"}"#).unwrap();
+    assert_eq!(code, 404);
+
+    // the one-shot compat shim keeps its contract
+    let (code, body) =
+        http::http_post(addr, "/generate", r#"{"prompt": "hi", "max_new_tokens": 2}"#).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("tokens").as_arr().unwrap().len(), 2);
+    assert_eq!(j.get("finish_reason").as_str(), Some("length"));
+
+    // oversize body → 413, never a truncated JSON parse
+    let raw = format!(
+        "POST /generate HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 2097152\r\n\
+         Connection: close\r\n\r\n"
+    );
+    let (code, _) = http::http_request_raw(addr, &raw).unwrap();
+    assert_eq!(code, 413);
+
+    // session gauges on /metrics
+    let (code, body) = http::http_get(addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    let m = Json::parse(&body).unwrap();
+    assert!(m.get("sessions_opened").as_usize().unwrap() >= 1);
+    assert_eq!(m.get("resume_turns").as_usize(), Some(1));
+    assert!(m.get("resume_saved_tokens").as_f64().unwrap() > 0.0);
+
+    // close the session; a second delete 404s
+    let delete = |addr: &str| {
+        http::http_request_raw(
+            addr,
+            &format!(
+                "DELETE /v1/sessions/{sid} HTTP/1.1\r\nHost: {addr}\r\n\
+                 Connection: close\r\n\r\n"
+            ),
+        )
+        .unwrap()
+    };
+    let (code, body) = delete(addr);
+    assert_eq!(code, 200, "{body}");
+    let (code, _) = delete(addr);
+    assert_eq!(code, 404);
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+    handle.shutdown();
+}
+
+/// Closing the HTTP connection mid-stream cancels the turn with
+/// `FinishReason::Cancelled`, surfaced in `/metrics`.
+#[test]
+fn http_client_disconnect_cancels_turn() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let handle = Engine::spawn(tiny_cfg(Arch::TConst)).unwrap();
+    let addr = "127.0.0.1:8193";
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let h2 = handle.clone();
+    let server = std::thread::spawn(move || {
+        http::serve(
+            &ServerConfig { addr: addr.to_string(), ..Default::default() },
+            h2,
+            Some(stop2),
+        )
+        .unwrap();
+    });
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    let (code, body) = http::http_post(addr, "/v1/sessions", "{}").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let sid = Json::parse(&body).unwrap().get("session_id").as_usize().unwrap();
+
+    let (status, _, stream) = http::sse_open(
+        addr,
+        &format!("/v1/sessions/{sid}/turns"),
+        r#"{"prompt": "stream", "max_new_tokens": 512}"#,
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let mut stream = stream.expect("sse stream");
+    let first = stream.next_event().unwrap().expect("first token event");
+    assert!(
+        Json::parse(&first).unwrap().get("token").as_f64().is_some(),
+        "first event is a sampled token: {first}"
+    );
+    drop(stream); // client disconnect, mid-generation
+
+    let mut cancelled = false;
+    for _ in 0..200 {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let (_, m) = http::http_get(addr, "/metrics").unwrap();
+        let m = Json::parse(&m).unwrap();
+        if m.get("requests_cancelled").as_usize() == Some(1) {
+            cancelled = true;
+            break;
+        }
+        if m.get("requests_completed").as_usize().unwrap_or(0) > 0 {
+            break; // the turn outran the disconnect — fail below
+        }
+    }
+    assert!(cancelled, "client disconnect did not cancel the turn");
 
     stop.store(true, Ordering::Relaxed);
     server.join().unwrap();

@@ -233,6 +233,64 @@ fn sync_full_mode_runs_and_differs_only_numerically() {
 // Resident batch-major arena (DESIGN.md D5)
 // ---------------------------------------------------------------------------
 
+/// The session-resume continuation (DESIGN.md D6) must reproduce a cold
+/// prefill of the concatenated history: bit-identically for TConst/TLin
+/// (their window-replay resume re-runs the same graphs at the same chunk
+/// boundaries) and to tight numerical tolerance for the baseline (whose
+/// decode-graph cache append is ~1e-7 from the prefill graph's rows).
+#[test]
+fn resume_matches_cold_prefill_of_concatenated_history() {
+    require_artifacts!();
+    for arch in [Arch::TConst, Arch::TLin, Arch::Base] {
+        let mut rt = rt();
+        let driver = ModelDriver::new(&rt, "tiny", arch).unwrap();
+        let p1 = prompt(45); // crosses one W_og=32 window boundary
+        let mid: Vec<i32> = (0..9).map(|i| 70 + i as i32).collect(); // decode-fed
+        let p2 = prompt(23);
+
+        // Session path: prefill, decode a few tokens, park, resume with p2.
+        let mut st = driver.new_state();
+        driver.prefill(&mut rt, &mut st, &p1).unwrap();
+        for &t in &mid {
+            driver.decode_batch(&mut rt, &mut [&mut st], &[t]).unwrap();
+        }
+        let l_resume = driver.resume(&mut rt, &mut st, &p2).unwrap();
+
+        // Cold path: one prefill over the whole concatenated history.
+        let mut full = p1.clone();
+        full.extend_from_slice(&mid);
+        full.extend_from_slice(&p2);
+        let mut st_cold = driver.new_state();
+        let l_cold = driver.prefill(&mut rt, &mut st_cold, &full).unwrap();
+
+        if arch == Arch::Base {
+            for (a, b) in l_resume.iter().zip(&l_cold) {
+                assert!((a - b).abs() < 1e-4, "{arch:?}: {a} vs {b}");
+            }
+        } else {
+            assert_eq!(l_resume, l_cold, "{arch:?}: resume logits diverged");
+        }
+
+        // The states must stay in lockstep through further decode,
+        // including the next sync boundary after the resume.
+        let mut t_a = tconstformer::model::sampler::argmax(&l_resume);
+        let mut t_b = tconstformer::model::sampler::argmax(&l_cold);
+        assert_eq!(t_a, t_b, "{arch:?}: first post-resume token diverged");
+        for step in 0..40 {
+            let la = driver.decode_batch(&mut rt, &mut [&mut st], &[t_a]).unwrap();
+            let lb = driver
+                .decode_batch(&mut rt, &mut [&mut st_cold], &[t_b])
+                .unwrap();
+            if arch != Arch::Base {
+                assert_eq!(la[0], lb[0], "{arch:?} step {step}: logits diverged");
+            }
+            t_a = tconstformer::model::sampler::argmax(&la[0]);
+            t_b = tconstformer::model::sampler::argmax(&lb[0]);
+            assert_eq!(t_a, t_b, "{arch:?} step {step}: tokens diverged");
+        }
+    }
+}
+
 /// The arena-resident decode path must be *bit-identical* to the legacy
 /// gather/scatter path across prefill → decode → sync boundaries, and its
 /// per-lane state bytes must match exactly.

@@ -57,6 +57,7 @@ fn prop_scheduler_covers_every_running_lane_once() {
             let mut s = Scheduler::new(SchedConfig {
                 max_batch: *max_batch,
                 prefill_per_round: 2,
+                ..Default::default()
             });
             let plan = s.plan_round(waiting, running, *free);
             let mut seen: Vec<u64> = plan.groups.concat();
@@ -85,13 +86,70 @@ fn prop_scheduler_covers_every_running_lane_once() {
 fn prop_scheduler_rotation_is_fair() {
     // Over many rounds with max_batch=1, every lane must lead equally often.
     let running: Vec<u64> = (0..5).collect();
-    let mut s = Scheduler::new(SchedConfig { max_batch: 1, prefill_per_round: 1 });
+    let mut s = Scheduler::new(SchedConfig {
+        max_batch: 1,
+        prefill_per_round: 1,
+        ..Default::default()
+    });
     let mut lead_counts = [0usize; 5];
     for _ in 0..100 {
         let plan = s.plan_round(&[], &running, 0);
         lead_counts[plan.groups[0][0] as usize] += 1;
     }
     assert!(lead_counts.iter().all(|&c| c == 20), "{lead_counts:?}");
+}
+
+#[test]
+fn prop_scheduler_resume_lane_never_queues_behind_cold() {
+    // Session resumes (DESIGN.md D6) are admitted FIFO, bounded only by
+    // their own budget, and never consume the cold-prefill budget — for
+    // arbitrary queue shapes and free-slot counts, in both plan flavors.
+    check_no_shrink(
+        "scheduler_resume_lane",
+        300,
+        2,
+        |r| {
+            let resume: Vec<u64> = (100..100 + r.range(0, 10)).collect();
+            let cold: Vec<u64> = (0..r.range(0, 10)).collect();
+            let free = r.usize(0, 6);
+            let resume_budget = r.usize(1, 5);
+            (resume, cold, free, resume_budget)
+        },
+        |(resume, cold, free, resume_budget)| {
+            let cfg = SchedConfig {
+                max_batch: 4,
+                prefill_per_round: 2,
+                resume_per_round: *resume_budget,
+            };
+            let plans = [
+                Scheduler::new(cfg.clone()).plan_round_sessions(resume, cold, &[], *free),
+                Scheduler::new(cfg.clone()).plan_round_resident_sessions(
+                    resume,
+                    cold,
+                    &[],
+                    *free,
+                ),
+            ];
+            for plan in plans {
+                let n = resume.len().min(*resume_budget);
+                if plan.admit_resume != resume[..n] {
+                    return Err(format!(
+                        "resume admission not the FIFO prefix: {:?}",
+                        plan.admit_resume
+                    ));
+                }
+                // cold admission is what it would be with no resumes at all
+                let n_cold = cold.len().min(*free).min(2);
+                if plan.admit != cold[..n_cold] {
+                    return Err(format!(
+                        "cold admission affected by resume lane: {:?}",
+                        plan.admit
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 // ---------------------------------------------------------------------------
