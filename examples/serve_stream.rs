@@ -6,8 +6,13 @@
 //! prefill tokens the session resume saved vs replaying each conversation
 //! cold.
 //!
-//! Run: `cargo run --release --example serve_stream -- [arch] [n_convs] [rate_per_s] [turns]`
-//! (defaults: tconst 16 8.0 3 — tiny preset for CPU speed).
+//! Run: `cargo run --release --example serve_stream -- [arch] [n_convs] [rate_per_s] [turns] [workers]`
+//! (defaults: tconst 16 8.0 3 1 — tiny preset for CPU speed).
+//!
+//! Besides the stdout report, the per-turn cold-vs-resumed TTFT figures
+//! are written as JSON to `$REPLAY_JSON` (default `replay_metrics.json`)
+//! so CI can publish them per run alongside the micro bench's
+//! `micro_metrics.json`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -30,6 +35,10 @@ struct TurnStat {
     prefill_tokens: f64,
     saved_prefill_tokens: f64,
     ok: bool,
+}
+
+fn nan0(x: f64) -> f64 {
+    if x.is_finite() { x } else { 0.0 }
 }
 
 fn turn_body(tk: &ByteTokenizer, prompt: &[i32], max_new: usize) -> String {
@@ -113,18 +122,21 @@ fn main() -> anyhow::Result<()> {
     let n_convs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
     let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8.0);
     let turns: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let workers: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
 
     println!(
-        "== serve_stream: arch={} conversations={} rate={}/s turns<={} ==",
+        "== serve_stream: arch={} conversations={} rate={}/s turns<={} workers={} ==",
         arch.as_str(),
         n_convs,
         rate,
-        turns
+        turns,
+        workers
     );
 
     let engine = Engine::spawn(EngineConfig {
         preset: "tiny".into(),
         arch,
+        workers,
         ..Default::default()
     })?;
     let addr = "127.0.0.1:8099";
@@ -215,6 +227,29 @@ fn main() -> anyhow::Result<()> {
         prefill_cold, prefill_resume, saved
     );
 
+    // Publish the cold-vs-resumed TTFT split as a JSON artifact (the CI
+    // nightly uploads it next to the micro bench's metrics).
+    let json_path =
+        std::env::var("REPLAY_JSON").unwrap_or_else(|_| "replay_metrics.json".into());
+    let report = Json::obj(vec![
+        ("arch", Json::str(arch.as_str())),
+        ("workers", Json::num(workers as f64)),
+        ("conversations", Json::num(n_convs as f64)),
+        ("turns_completed", Json::num(turns_done as f64)),
+        ("errors", Json::num(errors as f64)),
+        ("wall_s", Json::num(wall)),
+        ("goodput_tok_s", Json::num(tokens as f64 / wall.max(1e-9))),
+        ("ttft_cold_p50_ms", Json::num(nan0(ttft_cold.p50()))),
+        ("ttft_cold_p95_ms", Json::num(nan0(ttft_cold.p95()))),
+        ("ttft_resumed_p50_ms", Json::num(nan0(ttft_resume.p50()))),
+        ("ttft_resumed_p95_ms", Json::num(nan0(ttft_resume.p95()))),
+        ("prefill_tokens_cold", Json::num(prefill_cold)),
+        ("prefill_tokens_resumed", Json::num(prefill_resume)),
+        ("prefill_tokens_saved", Json::num(saved)),
+    ]);
+    std::fs::write(&json_path, report.to_string())?;
+    println!("\nreplay metrics -> {json_path}");
+
     let m = engine.metrics()?;
     println!("\n-- engine metrics --");
     println!(
@@ -232,6 +267,12 @@ fn main() -> anyhow::Result<()> {
         m.get("sessions_spilled"),
         m.get("resume_turns"),
         m.get("resume_saved_tokens"),
+    );
+    println!(
+        "  workers {}  rebalances {}  rate-limited {}",
+        m.get("workers"),
+        m.get("router_rebalance_total"),
+        m.get("rate_limited_turns"),
     );
 
     stop.store(true, Ordering::Relaxed);

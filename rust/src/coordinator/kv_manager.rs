@@ -16,10 +16,88 @@
 //! sequence length. For the O(N) architectures slots grow by bucket
 //! migration and the pool enforces a total byte budget instead.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
 use anyhow::{bail, Context, Result};
 
 use crate::model::arena::{LaneArena, LaneMeta};
 use crate::model::state::SeqState;
+
+/// Lock-free per-worker load gauges, written by the worker thread (from
+/// its `KvManager` accounting plus its queues) and read by the Router —
+/// the "global view" the bucket-aware admission policy and the `/metrics`
+/// per-worker gauges are built on. One instance per worker, shared as an
+/// `Arc` between the worker and the router.
+#[derive(Debug, Default)]
+pub struct WorkerLoad {
+    /// Lanes currently running a turn.
+    pub live_lanes: AtomicUsize,
+    /// Lanes parked for a session resume (occupied but idle).
+    pub parked_lanes: AtomicUsize,
+    pub live_bytes: AtomicU64,
+    pub parked_bytes: AtomicU64,
+    /// Turns waiting in the worker's admission queues.
+    pub queue_depth: AtomicUsize,
+    /// Turns the router has dispatched that the worker has not yet pulled
+    /// off its channel (router-incremented, worker-decremented) — without
+    /// this a burst of routed turns would all land on the same "empty"
+    /// worker before its queues catch up.
+    pub inflight_msgs: AtomicUsize,
+    /// Decode rounds executed so far.
+    pub decode_rounds: AtomicU64,
+    /// The worker's lane capacity (static, set at startup).
+    pub max_lanes: AtomicUsize,
+}
+
+/// Plain-value snapshot of a [`WorkerLoad`], as consumed by the routing
+/// policy in [`super::scheduler`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerLoadSnapshot {
+    pub worker: usize,
+    pub live_lanes: usize,
+    pub parked_lanes: usize,
+    pub live_bytes: u64,
+    pub parked_bytes: u64,
+    pub queue_depth: usize,
+    pub inflight: usize,
+    pub max_lanes: usize,
+}
+
+impl WorkerLoad {
+    pub fn snapshot(&self, worker: usize) -> WorkerLoadSnapshot {
+        WorkerLoadSnapshot {
+            worker,
+            live_lanes: self.live_lanes.load(Ordering::Relaxed),
+            parked_lanes: self.parked_lanes.load(Ordering::Relaxed),
+            live_bytes: self.live_bytes.load(Ordering::Relaxed),
+            parked_bytes: self.parked_bytes.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            inflight: self.inflight_msgs.load(Ordering::Relaxed),
+            max_lanes: self.max_lanes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl WorkerLoadSnapshot {
+    /// Turns this worker is already committed to (running + queued +
+    /// dispatched) — the primary admission-balance key.
+    pub fn committed_turns(&self) -> usize {
+        self.live_lanes + self.queue_depth + self.inflight
+    }
+
+    /// KV bytes the worker's arena pins (live + parked lanes) — the
+    /// secondary balance key ("balance by live+parked lane bytes").
+    pub fn pinned_bytes(&self) -> u64 {
+        self.live_bytes + self.parked_bytes
+    }
+
+    /// Whether every lane is spoken for once queued/dispatched turns and
+    /// parked sessions are counted — admission here must spill or wait.
+    pub fn is_saturated(&self) -> bool {
+        self.live_lanes + self.parked_lanes + self.queue_depth + self.inflight
+            >= self.max_lanes.max(1)
+    }
+}
 
 /// A live sequence slot.
 #[derive(Debug)]
@@ -62,17 +140,43 @@ pub struct KvManager {
     /// live ones — the split is what `/metrics` and the engine's spill
     /// policy read.
     parked: Vec<u64>,
+    /// Which worker's arena this pool accounts for (0 in owned mode) —
+    /// surfaced in error messages so a sharded engine's failures name
+    /// their shard.
+    worker_id: usize,
 }
 
 impl KvManager {
     pub fn new(limits: KvLimits) -> Self {
+        Self::for_worker(limits, 0)
+    }
+
+    /// A pool bound to one worker of a sharded engine (DESIGN.md D7).
+    pub fn for_worker(limits: KvLimits, worker_id: usize) -> Self {
         KvManager {
             limits,
             slots: Vec::new(),
             resident: None,
             peak_bytes: 0,
             parked: Vec::new(),
+            worker_id,
         }
+    }
+
+    pub fn worker_id(&self) -> usize {
+        self.worker_id
+    }
+
+    /// Roll this pool's accounting up into the shared per-worker load
+    /// gauges the router reads (lanes and bytes; the worker adds its
+    /// queue depth and round counters itself).
+    pub fn publish(&self, load: &WorkerLoad) {
+        let parked = self.n_parked();
+        load.live_lanes
+            .store(self.len().saturating_sub(parked), Ordering::Relaxed);
+        load.parked_lanes.store(parked, Ordering::Relaxed);
+        load.live_bytes.store(self.live_bytes(), Ordering::Relaxed);
+        load.parked_bytes.store(self.parked_bytes(), Ordering::Relaxed);
     }
 
     /// Switch the pool to resident mode, backed by `arena`. Must be called
@@ -123,7 +227,11 @@ impl KvManager {
     /// Admit a sequence into an arena lane; returns its slot index.
     pub fn alloc_lane(&mut self, seq_id: u64) -> Result<usize> {
         if !self.has_capacity() {
-            bail!("kv pool exhausted ({} sequences)", self.len());
+            bail!(
+                "worker {}: kv pool exhausted ({} sequences)",
+                self.worker_id,
+                self.len()
+            );
         }
         let r = self.resident.as_mut().context("pool is not resident")?;
         if r.seqs.iter().flatten().any(|&id| id == seq_id) {
@@ -215,7 +323,11 @@ impl KvManager {
     /// keeps the request queued — backpressure, not failure).
     pub fn alloc(&mut self, seq_id: u64, state: SeqState) -> Result<()> {
         if !self.has_capacity() {
-            bail!("kv pool exhausted ({} slots)", self.slots.len());
+            bail!(
+                "worker {}: kv pool exhausted ({} slots)",
+                self.worker_id,
+                self.slots.len()
+            );
         }
         if self.slots.iter().any(|s| s.seq_id == seq_id) {
             bail!("duplicate seq id {seq_id}");
@@ -430,6 +542,35 @@ mod tests {
         kv.free_lane(2).unwrap();
         assert_eq!(kv.n_parked(), 0);
         assert_eq!(kv.tokens_seen(1), 0);
+    }
+
+    #[test]
+    fn publish_rolls_accounting_into_shared_load() {
+        use crate::model::arena::LaneArena;
+        use crate::model::Arch;
+        let c = cfg();
+        let mut kv = KvManager::for_worker(KvLimits { max_slots: 4, max_bytes: 0 }, 2);
+        assert_eq!(kv.worker_id(), 2);
+        kv.attach_arena(LaneArena::new(Arch::TConst, &c, 4));
+        kv.alloc_lane(1).unwrap();
+        kv.alloc_lane(2).unwrap();
+        kv.set_parked(2, true);
+        let load = WorkerLoad::default();
+        load.max_lanes.store(4, Ordering::Relaxed);
+        kv.publish(&load);
+        let snap = load.snapshot(2);
+        assert_eq!(snap.worker, 2);
+        assert_eq!(snap.live_lanes, 1);
+        assert_eq!(snap.parked_lanes, 1);
+        let per = kv.arena().unwrap().bytes_per_slot();
+        assert_eq!(snap.live_bytes, per);
+        assert_eq!(snap.parked_bytes, per);
+        assert_eq!(snap.committed_turns(), 1);
+        assert_eq!(snap.pinned_bytes(), 2 * per);
+        assert!(!snap.is_saturated());
+        load.queue_depth.store(2, Ordering::Relaxed);
+        kv.publish(&load);
+        assert!(load.snapshot(2).is_saturated(), "live+parked+queue fills 4 lanes");
     }
 
     #[test]

@@ -1,14 +1,25 @@
 //! Engine-level metrics: latency histograms, throughput counters, KV-cache
 //! byte gauges — snapshotted as JSON for `/metrics` and the bench reports.
+//!
+//! With the two-tier engine (DESIGN.md D7) each worker keeps its own
+//! [`EngineMetrics`]; the router merges the per-worker snapshots with its
+//! own counters ([`RouterStats`]) and the shared load gauges into one
+//! `/metrics` document via [`aggregate_metrics`] — summed counters at the
+//! top level (same keys as a single-worker engine), a `workers` array of
+//! per-worker gauges, and the router's placement/rate-limit counters.
 
 use std::time::Instant;
 
+use super::kv_manager::WorkerLoadSnapshot;
 use crate::util::json::Json;
 use crate::util::stats::{Percentiles, Summary};
 
 #[derive(Debug)]
 pub struct EngineMetrics {
     started: Instant,
+    /// Which worker of a sharded engine these metrics belong to (0 in
+    /// owned / single-worker mode).
+    pub worker_id: usize,
     pub requests_completed: u64,
     pub requests_aborted: u64,
     /// Turns ended by client disconnect or explicit session close.
@@ -66,6 +77,7 @@ impl Default for EngineMetrics {
     fn default() -> Self {
         EngineMetrics {
             started: Instant::now(),
+            worker_id: 0,
             requests_completed: 0,
             requests_aborted: 0,
             requests_cancelled: 0,
@@ -103,6 +115,11 @@ impl Default for EngineMetrics {
 }
 
 impl EngineMetrics {
+    /// Metrics for one worker of a sharded engine (DESIGN.md D7).
+    pub fn for_worker(worker_id: usize) -> Self {
+        EngineMetrics { worker_id, ..Default::default() }
+    }
+
     pub fn observe_kv(&mut self, current: u64) {
         self.kv_bytes_current = current;
         self.kv_bytes_peak = self.kv_bytes_peak.max(current);
@@ -118,6 +135,7 @@ impl EngineMetrics {
 
     pub fn snapshot(&self) -> Json {
         Json::obj(vec![
+            ("worker", Json::num(self.worker_id as f64)),
             ("uptime_s", Json::num(self.uptime_s())),
             ("requests_completed", Json::num(self.requests_completed as f64)),
             ("requests_aborted", Json::num(self.requests_aborted as f64)),
@@ -171,6 +189,155 @@ fn nan0(x: f64) -> f64 {
     if x.is_finite() { x } else { 0.0 }
 }
 
+// ---------------------------------------------------------------------------
+// Router-side aggregation (DESIGN.md D7)
+// ---------------------------------------------------------------------------
+
+/// The router's own counters, merged into the aggregate `/metrics`
+/// document alongside the per-worker snapshots.
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    pub workers: usize,
+    pub uptime_s: f64,
+    /// Sessions opened at the router (the authoritative count — a worker
+    /// only sees the sessions placed on it).
+    pub sessions_opened: u64,
+    /// Sessions closed before their first turn placed them on a worker.
+    pub sessions_closed_unplaced: u64,
+    /// Session mappings the router currently tracks.
+    pub sessions_tracked: u64,
+    /// Spilled sessions relocated to another worker on resume.
+    pub router_rebalance_total: u64,
+    /// Turns rejected by the per-session token bucket (HTTP 429).
+    pub rate_limited_turns: u64,
+}
+
+/// Counters that sum across workers (same keys as the single-worker
+/// snapshot, so the `/metrics` contract is unchanged by sharding).
+const SUM_KEYS: &[&str] = &[
+    "requests_completed",
+    "requests_aborted",
+    "requests_cancelled",
+    "sessions_evicted",
+    "sessions_spilled",
+    "sessions_in_turn",
+    "sessions_parked_resident",
+    "sessions_parked_spilled",
+    "resume_turns",
+    "resume_fed_tokens",
+    "resume_saved_tokens",
+    "kv_bytes_parked",
+    "kv_bytes_live",
+    "tokens_generated",
+    "prefill_tokens",
+    "decode_steps",
+    "sync_events",
+    "throughput_tok_s",
+    "kv_bytes_current",
+    "kv_bytes_peak",
+    "host_copy_bytes",
+    "host_tensor_allocs",
+    "host_gather_scatter_calls",
+    "dev_upload_bytes",
+    "dev_upload_calls",
+    "dev_download_bytes",
+    "dev_download_calls",
+];
+
+/// Latency digests cannot be merged exactly from snapshots; the aggregate
+/// reports the finished-turn-weighted average of the per-worker figures
+/// (exact for one worker; a documented approximation beyond).
+const AVG_KEYS: &[&str] = &[
+    "ttft_ms_p50",
+    "ttft_ms_p95",
+    "total_ms_p50",
+    "total_ms_p95",
+    "per_token_ms_p50",
+    "round_ms_mean",
+];
+
+fn finished_turns(snap: &Json) -> f64 {
+    snap.get("requests_completed").as_f64().unwrap_or(0.0)
+        + snap.get("requests_cancelled").as_f64().unwrap_or(0.0)
+        + snap.get("requests_aborted").as_f64().unwrap_or(0.0)
+}
+
+/// Merge per-worker metric snapshots, the shared per-worker load gauges,
+/// and the router's counters into the engine-wide `/metrics` document.
+pub fn aggregate_metrics(
+    stats: &RouterStats,
+    snaps: &[Json],
+    loads: &[WorkerLoadSnapshot],
+) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("uptime_s", Json::num(stats.uptime_s)),
+        ("workers", Json::num(stats.workers as f64)),
+        ("sessions_opened", Json::num(stats.sessions_opened as f64)),
+        (
+            "router_rebalance_total",
+            Json::num(stats.router_rebalance_total as f64),
+        ),
+        ("rate_limited_turns", Json::num(stats.rate_limited_turns as f64)),
+        ("router_sessions_tracked", Json::num(stats.sessions_tracked as f64)),
+    ];
+    for &key in SUM_KEYS {
+        let sum: f64 = snaps
+            .iter()
+            .map(|s| s.get(key).as_f64().unwrap_or(0.0))
+            .sum();
+        fields.push((key, Json::num(sum)));
+    }
+    // sessions_closed: worker-observed closes plus router-only closes of
+    // sessions that were never placed.
+    let closed: f64 = snaps
+        .iter()
+        .map(|s| s.get("sessions_closed").as_f64().unwrap_or(0.0))
+        .sum::<f64>()
+        + stats.sessions_closed_unplaced as f64;
+    fields.push(("sessions_closed", Json::num(closed)));
+    let total_weight: f64 = snaps.iter().map(finished_turns).sum();
+    for &key in AVG_KEYS {
+        let v = if total_weight > 0.0 {
+            snaps
+                .iter()
+                .map(|s| finished_turns(s) * s.get(key).as_f64().unwrap_or(0.0))
+                .sum::<f64>()
+                / total_weight
+        } else {
+            0.0
+        };
+        fields.push((key, Json::num(nan0(v))));
+    }
+    // Per-worker gauges (satellite: live/parked lanes & bytes, decode
+    // rounds, queue depth) with a few headline counters from each
+    // worker's own snapshot.
+    let workers: Vec<Json> = loads
+        .iter()
+        .map(|l| {
+            let snap = snaps
+                .iter()
+                .find(|s| s.get("worker").as_usize() == Some(l.worker));
+            let counter = |key: &str| -> f64 {
+                snap.map(|s| s.get(key).as_f64().unwrap_or(0.0)).unwrap_or(0.0)
+            };
+            Json::obj(vec![
+                ("worker", Json::num(l.worker as f64)),
+                ("live_lanes", Json::num(l.live_lanes as f64)),
+                ("parked_lanes", Json::num(l.parked_lanes as f64)),
+                ("live_bytes", Json::num(l.live_bytes as f64)),
+                ("parked_bytes", Json::num(l.parked_bytes as f64)),
+                ("queue_depth", Json::num(l.queue_depth as f64)),
+                ("max_lanes", Json::num(l.max_lanes as f64)),
+                ("decode_rounds", Json::num(counter("decode_steps"))),
+                ("requests_completed", Json::num(counter("requests_completed"))),
+                ("tokens_generated", Json::num(counter("tokens_generated"))),
+            ])
+        })
+        .collect();
+    fields.push(("workers_detail", Json::Arr(workers)));
+    Json::obj(fields)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,5 +355,48 @@ mod tests {
         // round-trips through the serializer
         let txt = j.to_string();
         assert!(Json::parse(&txt).is_ok());
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_reports_worker_gauges() {
+        let mut a = EngineMetrics::for_worker(0);
+        a.requests_completed = 3;
+        a.tokens_generated = 30;
+        a.ttft_ms.add(10.0);
+        let mut b = EngineMetrics::for_worker(1);
+        b.requests_completed = 1;
+        b.tokens_generated = 5;
+        b.ttft_ms.add(50.0);
+        let snaps = vec![a.snapshot(), b.snapshot()];
+        let loads = vec![
+            WorkerLoadSnapshot { worker: 0, live_lanes: 2, parked_lanes: 1, ..Default::default() },
+            WorkerLoadSnapshot { worker: 1, queue_depth: 4, ..Default::default() },
+        ];
+        let stats = RouterStats {
+            workers: 2,
+            uptime_s: 1.5,
+            sessions_opened: 7,
+            sessions_closed_unplaced: 1,
+            router_rebalance_total: 2,
+            rate_limited_turns: 3,
+            ..Default::default()
+        };
+        let j = aggregate_metrics(&stats, &snaps, &loads);
+        assert_eq!(j.get("requests_completed").as_usize(), Some(4));
+        assert_eq!(j.get("tokens_generated").as_usize(), Some(35));
+        assert_eq!(j.get("workers").as_usize(), Some(2));
+        assert_eq!(j.get("sessions_opened").as_usize(), Some(7));
+        assert_eq!(j.get("sessions_closed").as_usize(), Some(1));
+        assert_eq!(j.get("router_rebalance_total").as_usize(), Some(2));
+        assert_eq!(j.get("rate_limited_turns").as_usize(), Some(3));
+        // weighted average of p50s: (3*10 + 1*50) / 4 = 20
+        assert!((j.get("ttft_ms_p50").as_f64().unwrap() - 20.0).abs() < 1e-9);
+        let workers = j.get("workers_detail").as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[0].get("live_lanes").as_usize(), Some(2));
+        assert_eq!(workers[0].get("parked_lanes").as_usize(), Some(1));
+        assert_eq!(workers[0].get("requests_completed").as_usize(), Some(3));
+        assert_eq!(workers[1].get("queue_depth").as_usize(), Some(4));
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 }

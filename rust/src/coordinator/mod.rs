@@ -1,20 +1,28 @@
 //! The serving coordinator (Layer 3 proper): turn/stream request types,
 //! session lifecycle (park/resume/spill/evict, DESIGN.md D6), admission
 //! queues, continuous batcher/scheduler, KV slot manager, metrics, and
-//! the engine event loop that owns the PJRT runtime.
+//! the two-tier engine (DESIGN.md D7) that owns the PJRT runtimes.
 //!
-//! Threading model: PJRT handles are not `Send`, so a single **engine
-//! thread** owns the [`crate::runtime::Runtime`] and all model state;
-//! clients talk to it through an mpsc channel via [`engine::EngineHandle`]
-//! (which is `Send + Clone` and what the HTTP frontend holds). This mirrors
-//! the single-GPU worker loop of vLLM-style routers: admission →
-//! prefill → batched decode rounds → completion.
+//! Threading model: PJRT handles are not `Send`, so each **worker
+//! thread** owns one [`crate::runtime::Runtime`] and one arena's model
+//! state ([`worker::Worker`]). A front-end **router thread**
+//! ([`router`]) owns the session table, per-session rate limiting,
+//! bucket-aware admission (pack cold turns onto the emptiest worker) and
+//! session-affinity routing (a resumed turn goes to the worker holding
+//! its parked lane; a spilled session may migrate). Clients talk to the
+//! router through an mpsc channel via [`engine::EngineHandle`] (which is
+//! `Send + Clone` and what the HTTP frontend holds). With `workers = 1`
+//! this degenerates to the classic single-GPU vLLM-style loop: admission
+//! → prefill → batched decode rounds → completion.
 
 pub mod engine;
 pub mod kv_manager;
 pub mod metrics;
 pub mod request;
+pub mod router;
 pub mod scheduler;
+pub mod worker;
 
 pub use engine::{ArenaStaging, Engine, EngineConfig, EngineHandle, SessionHandle};
+pub use kv_manager::{WorkerLoad, WorkerLoadSnapshot};
 pub use request::{FinishReason, Request, RequestMetrics, Response, StreamEvent, TurnRequest};

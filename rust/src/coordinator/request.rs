@@ -88,6 +88,11 @@ pub struct RequestMetrics {
     pub syncs: u64,
     /// Peak KV-cache bytes held by this sequence.
     pub peak_kv_bytes: u64,
+    /// Which worker of the sharded engine served this turn (DESIGN.md D7;
+    /// 0 in owned / single-worker mode). Session affinity is observable
+    /// here: every turn of a session reports the same worker unless the
+    /// router migrated its spilled state.
+    pub worker: usize,
 }
 
 impl RequestMetrics {

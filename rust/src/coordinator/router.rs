@@ -1,0 +1,427 @@
+//! The **Router**: front tier of the two-tier engine (DESIGN.md D7).
+//!
+//! The router owns what must be global — the session table (id space,
+//! session → worker placement, per-session turn rate limiting) — and
+//! routes every client message to one of N [`super::worker`]s, each of
+//! which owns an arena and runs the decode loop on its own thread. The
+//! routing keys:
+//!
+//! * **ephemeral turn / first session turn** → bucket-aware placement
+//!   ([`super::scheduler::pick_worker`]): the emptiest worker by committed
+//!   turns (running + queued + dispatched), tie-broken by live+parked
+//!   lane bytes — read lock-free from each worker's shared
+//!   [`super::kv_manager::WorkerLoad`] gauges;
+//! * **resume of a parked session** → the owning worker (session
+//!   affinity: the parked lane never moves, so the resume costs O(new
+//!   tokens) wherever it is). When the owner is saturated and another
+//!   worker has room, the router asks the owner to **export** the session
+//!   ([`super::scheduler::should_migrate`]); only *spilled* sessions — a
+//!   host-mirror `SeqState`, cheap to relocate — accept, so affinity is
+//!   enforced by the owner, not trusted to the router's (racy) view.
+//!
+//! Per-session **rate limiting** is a token bucket refilled at
+//! `EngineConfig::session_rate` turns/sec (burst `session_burst`);
+//! over-rate turns are rejected *here*, before any queue, with a
+//! retry-after hint the HTTP layer maps to `429 Retry-After` — queues
+//! stay bounded by admission, not by hope.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::engine::EngineConfig;
+use super::kv_manager::WorkerLoadSnapshot;
+use super::metrics::{aggregate_metrics, RouterStats};
+use super::request::{StreamEvent, TurnRequest};
+use super::scheduler::{pick_worker, should_migrate};
+use super::worker::{spawn_worker, ThreadGuard, WorkerHandle, WorkerMsg};
+use crate::util::json::Json;
+
+/// How long the router waits on a synchronous worker reply (close /
+/// export / metrics). Workers answer within one idle tick (~20 ms) unless
+/// they are mid-decode-round.
+const WORKER_REPLY_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Per-session turn rate limit (token bucket). `rate <= 0` disables.
+#[derive(Debug, Clone, Copy)]
+pub struct RateCfg {
+    /// Tokens (turns) refilled per second.
+    pub rate: f64,
+    /// Bucket capacity (burst size); clamped to >= 1 when enabled.
+    pub burst: f64,
+}
+
+impl RateCfg {
+    fn cap(&self) -> f64 {
+        self.burst.max(1.0)
+    }
+}
+
+/// One session's bucket. Time is passed in explicitly so the refill math
+/// is unit-testable without sleeping.
+#[derive(Debug)]
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(cfg: &RateCfg, now: Instant) -> Self {
+        TokenBucket { tokens: cfg.cap(), last: now }
+    }
+
+    /// Take one token; `Some(retry_after_secs)` when the bucket is empty.
+    fn try_take(&mut self, cfg: &RateCfg, now: Instant) -> Option<f64> {
+        if cfg.rate <= 0.0 {
+            return None;
+        }
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * cfg.rate).min(cfg.cap());
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            None
+        } else {
+            Some((1.0 - self.tokens) / cfg.rate)
+        }
+    }
+}
+
+/// Client-facing control messages (what `EngineHandle` sends).
+pub(crate) enum RouterMsg {
+    Submit(TurnRequest, mpsc::Sender<StreamEvent>),
+    OpenSession(mpsc::Sender<u64>),
+    CloseSession(u64, mpsc::Sender<bool>),
+    Metrics(mpsc::Sender<Json>),
+    Shutdown,
+}
+
+struct RouterSession {
+    /// Worker holding the session's state; `None` until the first turn
+    /// places it (so placement can use first-turn load, not open-time).
+    owner: Option<usize>,
+    last_used: Instant,
+    bucket: TokenBucket,
+}
+
+struct Router {
+    workers: Vec<WorkerHandle>,
+    sessions: HashMap<u64, RouterSession>,
+    next_session: u64,
+    rate: RateCfg,
+    session_ttl: Duration,
+    started: Instant,
+    sessions_opened: u64,
+    /// Sessions closed before ever being placed on a worker.
+    sessions_closed_unplaced: u64,
+    rebalances: u64,
+    rate_limited: u64,
+    last_sweep: Instant,
+}
+
+impl Router {
+    fn new(workers: Vec<WorkerHandle>, rate: RateCfg, session_ttl: Duration) -> Self {
+        Router {
+            workers,
+            sessions: HashMap::new(),
+            next_session: 1,
+            rate,
+            session_ttl,
+            started: Instant::now(),
+            sessions_opened: 0,
+            sessions_closed_unplaced: 0,
+            rebalances: 0,
+            rate_limited: 0,
+            last_sweep: Instant::now(),
+        }
+    }
+
+    fn load_snapshots(&self) -> Vec<WorkerLoadSnapshot> {
+        self.workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| w.load.snapshot(i))
+            .collect()
+    }
+
+    /// Dispatch a turn to worker `w`, accounting it as in flight until
+    /// the worker pulls it off its channel.
+    fn send_turn(&self, w: usize, req: TurnRequest, tx: mpsc::Sender<StreamEvent>) {
+        use std::sync::atomic::Ordering;
+        self.workers[w].load.inflight_msgs.fetch_add(1, Ordering::Relaxed);
+        if self.workers[w].tx.send(WorkerMsg::Submit(req, tx)).is_err() {
+            // Worker gone: the dropped event sender surfaces as a closed
+            // stream to the client.
+            self.workers[w].load.inflight_msgs.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    fn handle(&mut self, msg: RouterMsg) {
+        match msg {
+            RouterMsg::Submit(req, tx) => self.route_turn(req, tx),
+            RouterMsg::OpenSession(reply) => {
+                let sid = self.next_session;
+                self.next_session += 1;
+                let now = Instant::now();
+                self.sessions.insert(
+                    sid,
+                    RouterSession {
+                        owner: None,
+                        last_used: now,
+                        bucket: TokenBucket::new(&self.rate, now),
+                    },
+                );
+                self.sessions_opened += 1;
+                let _ = reply.send(sid);
+            }
+            RouterMsg::CloseSession(sid, reply) => {
+                let Some(sess) = self.sessions.remove(&sid) else {
+                    let _ = reply.send(false);
+                    return;
+                };
+                match sess.owner {
+                    None => {
+                        self.sessions_closed_unplaced += 1;
+                        let _ = reply.send(true);
+                    }
+                    Some(w) => {
+                        let (tx, rx) = mpsc::channel();
+                        let ok = self.workers[w]
+                            .tx
+                            .send(WorkerMsg::CloseSession(sid, tx))
+                            .is_ok()
+                            && rx.recv_timeout(WORKER_REPLY_TIMEOUT).unwrap_or(false);
+                        let _ = reply.send(ok);
+                    }
+                }
+            }
+            RouterMsg::Metrics(reply) => {
+                let mut snaps = Vec::with_capacity(self.workers.len());
+                for w in &self.workers {
+                    let (tx, rx) = mpsc::channel();
+                    if w.tx.send(WorkerMsg::Metrics(tx)).is_ok() {
+                        if let Ok(j) = rx.recv_timeout(WORKER_REPLY_TIMEOUT) {
+                            snaps.push(j);
+                        }
+                    }
+                }
+                let stats = RouterStats {
+                    workers: self.workers.len(),
+                    uptime_s: self.started.elapsed().as_secs_f64(),
+                    sessions_opened: self.sessions_opened,
+                    sessions_closed_unplaced: self.sessions_closed_unplaced,
+                    sessions_tracked: self.sessions.len() as u64,
+                    router_rebalance_total: self.rebalances,
+                    rate_limited_turns: self.rate_limited,
+                };
+                let _ = reply.send(aggregate_metrics(&stats, &snaps, &self.load_snapshots()));
+            }
+            RouterMsg::Shutdown => unreachable!("handled by the router loop"),
+        }
+    }
+
+    fn route_turn(&mut self, req: TurnRequest, tx: mpsc::Sender<StreamEvent>) {
+        let Some(sid) = req.session_id else {
+            // Ephemeral one-shot: bucket-aware placement, no affinity.
+            let w = pick_worker(&self.load_snapshots());
+            self.send_turn(w, req, tx);
+            return;
+        };
+        let now = Instant::now();
+        let (owner, limited) = match self.sessions.get_mut(&sid) {
+            None => {
+                let _ = tx.send(StreamEvent::Error(format!("unknown session {sid}")));
+                return;
+            }
+            Some(sess) => {
+                let limited = sess.bucket.try_take(&self.rate, now);
+                if limited.is_none() {
+                    sess.last_used = now;
+                }
+                (sess.owner, limited)
+            }
+        };
+        if let Some(retry_s) = limited {
+            self.rate_limited += 1;
+            let _ = tx.send(StreamEvent::Error(format!(
+                "rate limited: session {sid} over {:.2} turns/s; retry after {retry_s:.2}s",
+                self.rate.rate
+            )));
+            return;
+        }
+        let target = match owner {
+            None => {
+                // First turn: place the session, then open it there ahead
+                // of the turn (same channel, so ordering holds).
+                let w = pick_worker(&self.load_snapshots());
+                if let Some(sess) = self.sessions.get_mut(&sid) {
+                    sess.owner = Some(w);
+                }
+                let _ = self.workers[w].tx.send(WorkerMsg::OpenSessionAs(sid));
+                w
+            }
+            Some(owner) => self.maybe_migrate(sid, owner),
+        };
+        self.send_turn(target, req, tx);
+    }
+
+    /// Resume routing: stay with the owner unless it is saturated while a
+    /// better worker has room — then try to migrate. The owner only
+    /// exports *spilled* (or fresh) sessions, so parked-resident affinity
+    /// is enforced at the source of truth and a racy load view can never
+    /// strand a lane.
+    fn maybe_migrate(&mut self, sid: u64, owner: usize) -> usize {
+        if self.workers.len() == 1 {
+            return owner;
+        }
+        let snaps = self.load_snapshots();
+        let best = pick_worker(&snaps);
+        if best == owner || !should_migrate(&snaps[owner], &snaps[best]) {
+            return owner;
+        }
+        let (tx, rx) = mpsc::channel();
+        if self.workers[owner]
+            .tx
+            .send(WorkerMsg::ExportSession(sid, tx))
+            .is_err()
+        {
+            return owner;
+        }
+        match rx.recv_timeout(WORKER_REPLY_TIMEOUT) {
+            Ok(Some(export)) => {
+                if let Err(mpsc::SendError(msg)) = self.workers[best]
+                    .tx
+                    .send(WorkerMsg::ImportSession(sid, export))
+                {
+                    // Target worker is gone: hand the exported state back
+                    // to its owner rather than dropping the session's KV.
+                    let _ = self.workers[owner].tx.send(msg);
+                    return owner;
+                }
+                if let Some(sess) = self.sessions.get_mut(&sid) {
+                    sess.owner = Some(best);
+                }
+                self.rebalances += 1;
+                best
+            }
+            // Not exportable (parked-resident / in-turn / queued turn) or
+            // no reply: affinity wins.
+            _ => owner,
+        }
+    }
+
+    /// Drop idle session mappings. Workers TTL-evict the actual state
+    /// themselves; the router keeps its entry twice as long so it never
+    /// forgets a session a worker still holds (the worker is the source
+    /// of truth — a turn routed to an evicted session fails there).
+    fn sweep(&mut self) {
+        if self.last_sweep.elapsed() < Duration::from_secs(1) {
+            return;
+        }
+        self.last_sweep = Instant::now();
+        let ttl = self.session_ttl * 2;
+        let mut swept_unplaced = 0u64;
+        self.sessions.retain(|_, s| {
+            let keep = s.last_used.elapsed() < ttl;
+            if !keep && s.owner.is_none() {
+                swept_unplaced += 1;
+            }
+            keep
+        });
+        // Never-placed sessions have no worker to count their eviction;
+        // fold them into the unplaced-close counter so opened vs
+        // closed+evicted stays conserved in /metrics.
+        self.sessions_closed_unplaced += swept_unplaced;
+    }
+
+    fn shutdown(&self) {
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerMsg::Shutdown);
+        }
+    }
+}
+
+/// Assemble the two-tier engine: spawn `cfg.workers` workers (each with
+/// its own runtime + arena on its own thread), then the router thread in
+/// front of them. Returns the router's control channel and a guard that
+/// joins the router (which in turn joins the workers) on drop.
+pub(crate) fn spawn_router(
+    cfg: EngineConfig,
+) -> Result<(mpsc::Sender<RouterMsg>, ThreadGuard)> {
+    let n = cfg.workers.max(1);
+    let rate = RateCfg { rate: cfg.session_rate, burst: cfg.session_burst };
+    let ttl = cfg.session_ttl;
+    let mut workers = Vec::with_capacity(n);
+    for i in 0..n {
+        workers.push(spawn_worker(cfg.clone(), i)?);
+    }
+    let (tx, rx) = mpsc::channel::<RouterMsg>();
+    let thread = std::thread::Builder::new()
+        .name("engine-router".into())
+        .spawn(move || {
+            let mut router = Router::new(workers, rate, ttl);
+            loop {
+                match rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(RouterMsg::Shutdown) => {
+                        router.shutdown();
+                        break;
+                    }
+                    Ok(msg) => router.handle(msg),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        // Every EngineHandle is gone: shut the tier down.
+                        router.shutdown();
+                        break;
+                    }
+                }
+                router.sweep();
+            }
+        })
+        .map_err(|e| anyhow::anyhow!("spawning router thread: {e}"))?;
+    Ok((tx, ThreadGuard(Some(thread))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_enforces_rate_and_burst() {
+        let cfg = RateCfg { rate: 2.0, burst: 2.0 };
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(&cfg, t0);
+        assert!(b.try_take(&cfg, t0).is_none(), "burst token 1");
+        assert!(b.try_take(&cfg, t0).is_none(), "burst token 2");
+        let wait = b.try_take(&cfg, t0).expect("bucket empty");
+        assert!(wait > 0.0 && wait <= 0.5 + 1e-9, "retry-after {wait}");
+        // After the advertised wait the bucket has exactly one token.
+        let t1 = t0 + Duration::from_secs_f64(wait);
+        assert!(b.try_take(&cfg, t1).is_none(), "refilled after retry-after");
+        assert!(b.try_take(&cfg, t1).is_some(), "only one token refilled");
+    }
+
+    #[test]
+    fn token_bucket_caps_at_burst() {
+        let cfg = RateCfg { rate: 100.0, burst: 3.0 };
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(&cfg, t0);
+        // A long idle period must not accumulate more than `burst` tokens.
+        let t1 = t0 + Duration::from_secs(60);
+        for i in 0..3 {
+            assert!(b.try_take(&cfg, t1).is_none(), "token {i} after idle");
+        }
+        assert!(b.try_take(&cfg, t1).is_some(), "burst cap enforced");
+    }
+
+    #[test]
+    fn disabled_rate_never_limits() {
+        let cfg = RateCfg { rate: 0.0, burst: 0.0 };
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(&cfg, t0);
+        for _ in 0..1000 {
+            assert!(b.try_take(&cfg, t0).is_none());
+        }
+    }
+}

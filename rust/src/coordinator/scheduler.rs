@@ -17,6 +17,42 @@
 //! is a per-lane state-machine event (window full ⇒ sync before next
 //! token, the paper's cache-miss cadence) handled inside the drivers; the
 //! scheduler only sees its cost as a slower round.
+//!
+//! With the two-tier engine (DESIGN.md D7) there is one `Scheduler`
+//! instance **per worker** — each plans rounds over its own arena only.
+//! The cross-worker half of scheduling, the Router's bucket-aware
+//! placement, lives here too as pure functions ([`pick_worker`],
+//! [`should_migrate`]) over [`WorkerLoadSnapshot`]s so it is
+//! property-testable alongside the round planner.
+
+use super::kv_manager::WorkerLoadSnapshot;
+
+/// Pick the worker for a cold turn (or a session's first placement):
+/// a non-saturated worker first (admitting on a saturated one forces a
+/// parked-session spill even when another worker has a free lane), then
+/// the emptiest bucket — fewest committed turns (running + queued +
+/// dispatched), then fewest live+parked lane bytes, then lowest index.
+/// Deterministic, so identical request streams place identically.
+pub fn pick_worker(loads: &[WorkerLoadSnapshot]) -> usize {
+    assert!(!loads.is_empty(), "pick_worker over zero workers");
+    loads
+        .iter()
+        .enumerate()
+        .min_by_key(|(i, l)| {
+            (l.is_saturated(), l.committed_turns(), l.pinned_bytes(), *i)
+        })
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Whether a **spilled** session resuming on `owner` should migrate to
+/// `candidate` instead: only when the owner is saturated (every lane
+/// spoken for) while the candidate has room. Parked-resident sessions
+/// never migrate — their lane IS the cheap resume (session affinity);
+/// the owner enforces that by refusing the export.
+pub fn should_migrate(owner: &WorkerLoadSnapshot, candidate: &WorkerLoadSnapshot) -> bool {
+    owner.worker != candidate.worker && owner.is_saturated() && !candidate.is_saturated()
+}
 
 /// Scheduler tunables.
 #[derive(Debug, Clone)]
@@ -207,6 +243,58 @@ mod tests {
         let p2 = s.plan_round_resident(&[], &running, 0);
         assert_eq!(p2.groups, p.groups);
         assert!(s.plan_round_resident(&[], &[], 0).groups.is_empty());
+    }
+
+    fn load(
+        worker: usize,
+        live: usize,
+        parked: usize,
+        bytes: u64,
+        queue: usize,
+        inflight: usize,
+        max_lanes: usize,
+    ) -> WorkerLoadSnapshot {
+        WorkerLoadSnapshot {
+            worker,
+            live_lanes: live,
+            parked_lanes: parked,
+            live_bytes: bytes / 2,
+            parked_bytes: bytes - bytes / 2,
+            queue_depth: queue,
+            inflight,
+            max_lanes,
+        }
+    }
+
+    #[test]
+    fn pick_worker_prefers_fewest_committed_then_bytes() {
+        // worker 1 has fewer committed turns despite more bytes
+        let loads = [load(0, 2, 0, 10, 0, 0, 4), load(1, 1, 0, 999, 0, 0, 4)];
+        assert_eq!(pick_worker(&loads), 1);
+        // committed ties: fewest pinned bytes wins
+        let loads = [load(0, 1, 1, 500, 0, 0, 4), load(1, 1, 0, 100, 0, 0, 4)];
+        assert_eq!(pick_worker(&loads), 1);
+        // full tie: lowest index (deterministic placement)
+        let loads = [load(0, 0, 0, 0, 0, 0, 4), load(1, 0, 0, 0, 0, 0, 4)];
+        assert_eq!(pick_worker(&loads), 0);
+        // queued + dispatched-but-unseen turns count as committed
+        let loads = [load(0, 0, 0, 0, 1, 1, 4), load(1, 1, 0, 0, 0, 0, 4)];
+        assert_eq!(pick_worker(&loads), 1);
+        // A saturated worker (all lanes parked — admission would force a
+        // spill) loses to one with a free lane, even at higher commitment.
+        let loads = [load(0, 0, 2, 10, 0, 0, 2), load(1, 1, 0, 999, 0, 0, 4)];
+        assert_eq!(pick_worker(&loads), 1);
+    }
+
+    #[test]
+    fn migrate_only_from_saturated_owner_to_free_candidate() {
+        let full = load(0, 0, 1, 100, 0, 0, 1); // parked lane fills max_lanes=1
+        let free = load(1, 0, 0, 0, 0, 0, 1);
+        assert!(should_migrate(&full, &free));
+        assert!(!should_migrate(&free, &full), "free owner stays put");
+        assert!(!should_migrate(&full, &full), "no self-migration");
+        let also_full = load(1, 1, 0, 0, 0, 0, 1);
+        assert!(!should_migrate(&full, &also_full), "no migration into a full worker");
     }
 
     #[test]

@@ -1,0 +1,1213 @@
+//! A **Worker**: one arena's serving state machine — the decode event
+//! loop that owns a PJRT runtime and turns session turns into token
+//! streams via its scheduler's rounds (DESIGN.md D6/D7).
+//!
+//! In the two-tier engine (DESIGN.md D7) N workers run behind a
+//! session-affine [`super::router`]; each worker owns its own
+//! [`crate::runtime::Runtime`], [`ModelDriver`], lane arena and runtime
+//! state pools (PJRT handles are not `Send`, so the runtime is *created
+//! on* the worker's thread). `workers = 1` is exactly the pre-split
+//! engine.
+//!
+//! Two ways to drive a worker:
+//! * **owned** — construct [`Worker`] (re-exported as
+//!   `coordinator::Engine`) and call [`Worker::run_workload`] /
+//!   [`Worker::step`] directly (benches, examples, tests);
+//! * **spawned** — [`spawn_worker`] moves it onto a dedicated thread and
+//!   returns a [`WorkerHandle`] the router drives through [`WorkerMsg`]s.
+//!
+//! Sessions: a [`TurnRequest`] with a `session_id` runs against persistent
+//! KV state. On `TurnDone` the lane's state is **parked** — kept resident
+//! in its arena slot while capacity allows, spilled to a host-mirror
+//! [`SeqState`] under pressure — and the next turn **resumes** it,
+//! prefilling only the new tokens. Idle parked sessions are evicted by
+//! TTL + LRU. A *spilled* session is relocatable: the router may
+//! [`Worker::export_session`] it off a saturated worker and import it
+//! elsewhere; parked-resident sessions refuse export (their lane IS the
+//! cheap resume — session affinity).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{ArenaStaging, EngineConfig};
+use super::kv_manager::{KvLimits, KvManager, WorkerLoad};
+use super::metrics::EngineMetrics;
+use super::request::{FinishReason, RequestMetrics, Response, StreamEvent, TurnRequest};
+use super::scheduler::Scheduler;
+use crate::data::tokenizer::BOS;
+use crate::model::batch::copy_metrics;
+use crate::model::state::SeqState;
+use crate::model::{sampler, ModelDriver};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub(crate) struct Pending {
+    pub req: TurnRequest,
+    pub submitted: Instant,
+    pub events: Option<mpsc::Sender<StreamEvent>>,
+}
+
+struct Live {
+    req: TurnRequest,
+    seq_id: u64,
+    /// Validated session this turn runs on (None = ephemeral one-shot).
+    session: Option<u64>,
+    submitted: Instant,
+    prefill_done: Instant,
+    queue_ms: f64,
+    generated: Vec<i32>,
+    last_token: i32,
+    rng: Rng,
+    events: Option<mpsc::Sender<StreamEvent>>,
+    peak_kv: u64,
+    /// Tokens fed through the prefill machinery for this turn.
+    prefill_fed: usize,
+    /// History tokens NOT re-prefilled thanks to the session resume.
+    saved_prefill: u64,
+    /// The event receiver went away mid-turn: cancel at the next settle.
+    disconnected: bool,
+}
+
+impl Live {
+    /// Stream one sampled token; a closed receiver marks the turn for
+    /// cancellation (client disconnect is observed here, not polled).
+    fn emit_token(&mut self, token: i32) {
+        if let Some(tx) = &self.events {
+            let index = self.generated.len() - 1;
+            if tx.send(StreamEvent::Token { token, index }).is_err() {
+                self.disconnected = true;
+            }
+        }
+    }
+}
+
+/// Where a session's KV state lives between turns.
+enum ParkedState {
+    /// Opened but no turn has run yet — no state to resume.
+    Fresh,
+    /// State stays in place under this seq id (arena lane / boxed slot).
+    Resident(u64),
+    /// Demoted to a host-mirror state under capacity pressure.
+    Spilled(Box<SeqState>),
+    /// A live turn currently owns the state (under its seq id).
+    InTurn(u64),
+}
+
+struct Session {
+    state: ParkedState,
+    /// Final sampled token of the previous turn — absorbed first on
+    /// resume (the model must see its own last output).
+    last_token: i32,
+    /// Tokens the state has absorbed (== a cold re-prefill's length).
+    tokens_absorbed: u64,
+    last_used: Instant,
+    turns: u64,
+}
+
+/// A session packed up for cross-worker migration (DESIGN.md D7): the
+/// host-mirror state (if any) plus the resume bookkeeping. `SeqState` is
+/// plain host tensors, so the export is `Send`.
+pub(crate) struct SessionExport {
+    state: Option<Box<SeqState>>,
+    last_token: i32,
+    tokens_absorbed: u64,
+    turns: u64,
+}
+
+pub struct Worker {
+    pub rt: Runtime,
+    pub driver: ModelDriver,
+    kv: KvManager,
+    sched: Scheduler,
+    max_lanes: usize,
+    /// Whether sequences live in a resident arena (set from the config,
+    /// falling back to legacy when no batch bucket covers `max_lanes`).
+    resident: bool,
+    session_ttl: Duration,
+    /// Which shard of the two-tier engine this is (0 in owned mode).
+    worker_id: usize,
+    /// Shared load gauges the router reads; `None` in owned mode.
+    load: Option<Arc<WorkerLoad>>,
+    pub metrics: EngineMetrics,
+    waiting_resume: VecDeque<Pending>,
+    waiting_cold: VecDeque<Pending>,
+    live: Vec<Live>,
+    sessions: HashMap<u64, Session>,
+    next_seq: u64,
+    next_session: u64,
+    /// Completed responses for owned-mode callers that did not attach a
+    /// channel.
+    pub completed: Vec<Response>,
+}
+
+impl Worker {
+    pub fn new(cfg: &EngineConfig) -> Result<Self> {
+        Self::for_worker(cfg, 0)
+    }
+
+    /// Construct one shard of a sharded engine (DESIGN.md D7).
+    pub fn for_worker(cfg: &EngineConfig, worker_id: usize) -> Result<Self> {
+        let mut rt = Runtime::load(&cfg.artifacts_dir)?;
+        let driver =
+            ModelDriver::new(&rt, &cfg.preset, cfg.arch)?.with_sync_mode(cfg.sync_mode);
+        if let Some(ck) = &cfg.checkpoint {
+            rt.load_checkpoint(&cfg.preset, cfg.arch.as_str(), ck)?;
+        }
+        let mut kv = KvManager::for_worker(
+            KvLimits { max_slots: cfg.max_lanes, max_bytes: 0 },
+            worker_id,
+        );
+        let mut resident = cfg.resident;
+        if resident {
+            match rt.manifest.batch_bucket_for(cfg.max_lanes) {
+                Some(cap) => {
+                    let mut arena = driver.new_arena(cap);
+                    if cfg.staging == ArenaStaging::DeviceArena {
+                        // Slabs join the parameters as device-resident:
+                        // decode uploads only tokens from here on.
+                        arena.enable_device(&mut rt);
+                    }
+                    kv.attach_arena(arena);
+                }
+                None => {
+                    // No exported batch bucket covers max_lanes: serve via
+                    // the legacy per-lane path rather than failing startup.
+                    eprintln!(
+                        "[worker {worker_id}] no batch bucket holds {} lanes; using \
+                         the gather/scatter decode path",
+                        cfg.max_lanes
+                    );
+                    resident = false;
+                }
+            }
+        }
+        Ok(Worker {
+            rt,
+            driver,
+            kv,
+            sched: Scheduler::new(cfg.sched.clone()),
+            max_lanes: cfg.max_lanes,
+            resident,
+            session_ttl: cfg.session_ttl,
+            worker_id,
+            load: None,
+            metrics: EngineMetrics::for_worker(worker_id),
+            waiting_resume: VecDeque::new(),
+            waiting_cold: VecDeque::new(),
+            live: Vec::new(),
+            sessions: HashMap::new(),
+            next_seq: 1,
+            next_session: 1,
+            completed: Vec::new(),
+        })
+    }
+
+    /// Whether this worker serves from the resident arena.
+    pub fn is_resident(&self) -> bool {
+        self.resident
+    }
+
+    /// Whether the resident arena's slabs are staged on device (the
+    /// decode-uploads-only-tokens path).
+    pub fn is_device_staged(&self) -> bool {
+        self.kv.is_device_staged()
+    }
+
+    pub fn worker_id(&self) -> usize {
+        self.worker_id
+    }
+
+    // -- shared load gauges (DESIGN.md D7) ----------------------------------
+
+    /// Attach the shared load gauges the router reads (spawned mode).
+    pub(crate) fn bind_load(&mut self, load: Arc<WorkerLoad>) {
+        load.max_lanes.store(self.max_lanes, Ordering::Relaxed);
+        self.load = Some(load);
+    }
+
+    /// Roll the worker's current state up into the shared gauges: the
+    /// KvManager publishes its lane/byte accounting, the worker adds its
+    /// queue depth and round counter.
+    pub(crate) fn publish_load(&self) {
+        let Some(load) = &self.load else { return };
+        self.kv.publish(load);
+        load.queue_depth.store(
+            self.waiting_resume.len() + self.waiting_cold.len(),
+            Ordering::Relaxed,
+        );
+        load.decode_rounds
+            .store(self.metrics.decode_steps, Ordering::Relaxed);
+    }
+
+    /// One router-dispatched turn arrived: it is no longer "in flight".
+    fn note_dispatch_arrived(&self) {
+        if let Some(load) = &self.load {
+            let _ = load.inflight_msgs.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |v| Some(v.saturating_sub(1)),
+            );
+        }
+    }
+
+    // -- session lifecycle (DESIGN.md D6) -----------------------------------
+
+    /// Create a persistent session; the first turn on it prefills
+    /// `BOS ‖ prompt`, later turns resume the parked state.
+    pub fn open_session(&mut self) -> u64 {
+        let id = self.next_session;
+        self.next_session += 1;
+        self.open_session_as(id);
+        id
+    }
+
+    /// Open a session under a router-assigned global id (DESIGN.md D7 —
+    /// the router owns the id space; idempotent on re-delivery).
+    pub(crate) fn open_session_as(&mut self, sid: u64) {
+        self.next_session = self.next_session.max(sid + 1);
+        if let std::collections::hash_map::Entry::Vacant(e) = self.sessions.entry(sid) {
+            e.insert(Session {
+                state: ParkedState::Fresh,
+                last_token: BOS,
+                tokens_absorbed: 0,
+                last_used: Instant::now(),
+                turns: 0,
+            });
+            self.metrics.sessions_opened += 1;
+        }
+    }
+
+    /// Hand a **relocatable** session over for migration: spilled (or
+    /// fresh) sessions move; parked-resident and in-turn sessions refuse —
+    /// their lane is the affinity the router must respect.
+    pub(crate) fn export_session(&mut self, sid: u64) -> Option<SessionExport> {
+        match self.sessions.get(&sid).map(|s| &s.state) {
+            Some(ParkedState::Spilled(_)) | Some(ParkedState::Fresh) => {}
+            _ => return None,
+        }
+        // A turn already queued here still references the session; taking
+        // the state out from under it would fail that turn. Refuse — the
+        // router then routes to us, where the turns serialize normally.
+        let queued = self
+            .waiting_resume
+            .iter()
+            .chain(self.waiting_cold.iter())
+            .any(|p| p.req.session_id == Some(sid));
+        if queued {
+            return None;
+        }
+        let sess = self.sessions.remove(&sid)?;
+        let state = match sess.state {
+            ParkedState::Spilled(b) => Some(b),
+            ParkedState::Fresh => None,
+            _ => unreachable!("export precondition checked above"),
+        };
+        Some(SessionExport {
+            state,
+            last_token: sess.last_token,
+            tokens_absorbed: sess.tokens_absorbed,
+            turns: sess.turns,
+        })
+    }
+
+    /// Adopt a session exported from another worker; its next turn resumes
+    /// here (re-admitted through the ordinary spilled-resume path).
+    pub(crate) fn import_session(&mut self, sid: u64, exp: SessionExport) {
+        self.next_session = self.next_session.max(sid + 1);
+        let state = match exp.state {
+            Some(b) => ParkedState::Spilled(b),
+            None => ParkedState::Fresh,
+        };
+        self.sessions.insert(
+            sid,
+            Session {
+                state,
+                last_token: exp.last_token,
+                tokens_absorbed: exp.tokens_absorbed,
+                last_used: Instant::now(),
+                turns: exp.turns,
+            },
+        );
+    }
+
+    /// Close a session, freeing its parked state. A turn in flight is
+    /// cancelled (`FinishReason::Cancelled`). Returns whether it existed.
+    pub fn close_session(&mut self, sid: u64) -> Result<bool> {
+        let Some(sess) = self.sessions.remove(&sid) else {
+            return Ok(false);
+        };
+        match sess.state {
+            ParkedState::InTurn(seq_id) => {
+                if let Some(idx) = self.live.iter().position(|l| l.seq_id == seq_id) {
+                    let live = self.live.swap_remove(idx);
+                    // The session is already gone from the table, so finish
+                    // frees the lane instead of re-parking it.
+                    self.finish(live, FinishReason::Cancelled)?;
+                }
+            }
+            ParkedState::Resident(seq_id) => self.free_seq(seq_id)?,
+            ParkedState::Spilled(_) | ParkedState::Fresh => {}
+        }
+        self.metrics.sessions_closed += 1;
+        Ok(true)
+    }
+
+    /// Evict idle parked sessions past the TTL (LRU order is implicit:
+    /// every expired session goes). Called once per engine round and on
+    /// the idle tick.
+    pub fn sweep_sessions(&mut self) -> Result<usize> {
+        let ttl = self.session_ttl;
+        let expired: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| {
+                !matches!(s.state, ParkedState::InTurn(_)) && s.last_used.elapsed() >= ttl
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        let n = expired.len();
+        for sid in expired {
+            if let Some(sess) = self.sessions.remove(&sid) {
+                if let ParkedState::Resident(seq_id) = sess.state {
+                    self.free_seq(seq_id)?;
+                }
+                self.metrics.sessions_evicted += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Release a parked sequence's lane/slot in either backing.
+    fn free_seq(&mut self, seq_id: u64) -> Result<()> {
+        if self.kv.is_resident() {
+            self.kv.free_lane(seq_id)?;
+        } else {
+            self.kv.free(seq_id)?;
+        }
+        Ok(())
+    }
+
+    /// Oldest parked-resident session — the spill victim under pressure.
+    fn lru_parked_resident(&self) -> Option<u64> {
+        self.sessions
+            .iter()
+            .filter(|(_, s)| matches!(s.state, ParkedState::Resident(_)))
+            .min_by_key(|(_, s)| s.last_used)
+            .map(|(&id, _)| id)
+    }
+
+    /// Demote a parked-resident session to a host-mirror state, freeing
+    /// its lane. O(state) once, off the decode hot path.
+    fn spill_session(&mut self, sid: u64) -> Result<()> {
+        let seq_id = match self.sessions.get(&sid).map(|s| &s.state) {
+            Some(&ParkedState::Resident(seq_id)) => seq_id,
+            _ => bail!("session {sid} is not parked resident"),
+        };
+        let st = if self.kv.is_resident() {
+            let slot = self
+                .kv
+                .lane_of(seq_id)
+                .context("parked session lost its lane")?;
+            let arena = self.kv.arena_mut().context("resident pool lost its arena")?;
+            arena.sync_host(&mut self.rt)?;
+            let st = arena.extract_state(slot)?;
+            self.kv.free_lane(seq_id)?;
+            st
+        } else {
+            self.kv.free(seq_id)?
+        };
+        let sess = self.sessions.get_mut(&sid).context("session vanished")?;
+        sess.state = ParkedState::Spilled(Box::new(st));
+        self.metrics.sessions_spilled += 1;
+        Ok(())
+    }
+
+    /// Make room for one more live lane, spilling LRU parked sessions.
+    fn ensure_capacity(&mut self) -> Result<()> {
+        while !self.kv.has_capacity() {
+            let Some(victim) = self.lru_parked_resident() else {
+                bail!(
+                    "worker {}: kv pool exhausted ({} sequences) with nothing to spill",
+                    self.worker_id,
+                    self.kv.len()
+                );
+            };
+            self.spill_session(victim)?;
+        }
+        Ok(())
+    }
+
+    // -- submission ---------------------------------------------------------
+
+    /// Enqueue a turn (owned mode: response lands in `self.completed`).
+    pub fn submit(&mut self, req: TurnRequest) {
+        self.route_pending(Pending { req, submitted: Instant::now(), events: None });
+    }
+
+    /// Enqueue a turn and stream its events (owned mode). Dropping the
+    /// receiver cancels the turn at the next sampled token.
+    pub fn submit_streaming(&mut self, req: TurnRequest) -> mpsc::Receiver<StreamEvent> {
+        let (tx, rx) = mpsc::channel();
+        self.route_pending(Pending { req, submitted: Instant::now(), events: Some(tx) });
+        rx
+    }
+
+    /// Route a pending turn to the resume or cold queue; turns against a
+    /// missing/busy session fail immediately.
+    pub(crate) fn route_pending(&mut self, pending: Pending) {
+        match pending.req.session_id {
+            None => self.waiting_cold.push_back(pending),
+            Some(sid) => match self.sessions.get_mut(&sid) {
+                None => fail_pending(pending, &format!("unknown session {sid}"), &mut self.completed),
+                Some(sess) => {
+                    sess.last_used = Instant::now();
+                    match &sess.state {
+                        ParkedState::InTurn(_) => fail_pending(
+                            pending,
+                            &format!("session {sid} already has a turn in flight"),
+                            &mut self.completed,
+                        ),
+                        ParkedState::Fresh => self.waiting_cold.push_back(pending),
+                        ParkedState::Resident(_) | ParkedState::Spilled(_) => {
+                            self.waiting_resume.push_back(pending)
+                        }
+                    }
+                }
+            },
+        }
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting_resume.is_empty() || !self.waiting_cold.is_empty() || !self.live.is_empty()
+    }
+
+    /// One scheduler round: admissions (resume first, then cold prefill) +
+    /// one decode step for every running lane. Returns tokens produced.
+    pub fn step(&mut self) -> Result<usize> {
+        let round_t0 = Instant::now();
+        let resume_ids: Vec<u64> = (0..self.waiting_resume.len() as u64).collect();
+        let cold_ids: Vec<u64> = (0..self.waiting_cold.len() as u64).collect();
+        let free = self.max_lanes.saturating_sub(self.live.len());
+        let plan = if self.resident {
+            // Group running lanes by their arena slot so decode groups are
+            // contiguous sub-batches of the resident slabs.
+            let running: Vec<(u64, usize)> = self
+                .live
+                .iter()
+                .map(|l| (l.seq_id, self.kv.lane_of(l.seq_id).unwrap_or(usize::MAX)))
+                .collect();
+            self.sched
+                .plan_round_resident_sessions(&resume_ids, &cold_ids, &running, free)
+        } else {
+            let running_ids: Vec<u64> = self.live.iter().map(|l| l.seq_id).collect();
+            self.sched
+                .plan_round_sessions(&resume_ids, &cold_ids, &running_ids, free)
+        };
+
+        let mut produced = 0;
+
+        // 1. admissions — resumed turns first (they absorb only their new
+        // tokens), then cold prefills (the expensive cache-miss path)
+        for _ in plan.admit_resume {
+            let pending = self
+                .waiting_resume
+                .pop_front()
+                .context("admit from empty resume queue")?;
+            if self.must_defer_resume(&pending) {
+                // A spilled session needs a lane but every slot is live and
+                // nothing is parked to spill: wait for a turn to finish.
+                self.waiting_resume.push_front(pending);
+                break;
+            }
+            produced += self.start_turn(pending)?;
+        }
+        for _ in plan.admit {
+            // The plan's free-slot count predates this round's resume
+            // admissions (which may have turned spillable parked lanes into
+            // live ones): re-check capacity and defer rather than erroring.
+            if !self.kv.has_capacity() && self.lru_parked_resident().is_none() {
+                break;
+            }
+            let pending = self
+                .waiting_cold
+                .pop_front()
+                .context("admit from empty queue")?;
+            produced += self.start_turn(pending)?;
+        }
+
+        // 2. batched decode rounds (the copy/transfer meters cover only
+        // this loop: admission prefill legitimately writes state into its
+        // slot and uploads it, and must not be mistaken for decode-path
+        // traffic)
+        let copy0 = copy_metrics::snapshot();
+        let xfer0 = self.rt.transfer_stats();
+        for group in plan.groups {
+            produced += self.decode_group(&group)?;
+        }
+
+        let copy1 = copy_metrics::snapshot();
+        self.metrics.host_copy_bytes +=
+            copy1.bytes_copied.saturating_sub(copy0.bytes_copied);
+        self.metrics.host_tensor_allocs +=
+            copy1.tensor_allocs.saturating_sub(copy0.tensor_allocs);
+        self.metrics.host_gather_scatter_calls += copy1
+            .gather_scatter_calls
+            .saturating_sub(copy0.gather_scatter_calls);
+        let xfer = self.rt.transfer_stats().delta_since(&xfer0);
+        self.metrics.dev_upload_bytes += xfer.upload_bytes;
+        self.metrics.dev_upload_calls += xfer.upload_calls;
+        self.metrics.dev_download_bytes += xfer.download_bytes;
+        self.metrics.dev_download_calls += xfer.download_calls;
+        let kv_now = self.kv.touch();
+        self.metrics.observe_kv(kv_now);
+        self.metrics
+            .round_ms
+            .add(round_t0.elapsed().as_secs_f64() * 1000.0);
+        self.sweep_sessions()?;
+        Ok(produced)
+    }
+
+    /// Whether a resume must wait for capacity: a spilled session needs a
+    /// lane, and none can be freed while every slot runs a live turn.
+    fn must_defer_resume(&self, pending: &Pending) -> bool {
+        let Some(sid) = pending.req.session_id else { return false };
+        match self.sessions.get(&sid).map(|s| &s.state) {
+            Some(ParkedState::Spilled(_)) => {
+                !self.kv.has_capacity() && self.lru_parked_resident().is_none()
+            }
+            _ => false,
+        }
+    }
+
+    /// Admit one turn: cold prefill (ephemeral or first session turn) or
+    /// session resume (park → absorb only the new tokens).
+    fn start_turn(&mut self, pending: Pending) -> Result<usize> {
+        let Pending { req, submitted, events } = pending;
+        let queue_ms = submitted.elapsed().as_secs_f64() * 1000.0;
+
+        // Re-validate the session at admission time: it may have been
+        // closed or evicted since routing.
+        let mut resume_sid = None;
+        if let Some(sid) = req.session_id {
+            match self.sessions.get(&sid).map(|s| &s.state) {
+                None => {
+                    fail_pending(
+                        Pending { req, submitted, events },
+                        &format!("unknown session {sid}"),
+                        &mut self.completed,
+                    );
+                    return Ok(0);
+                }
+                Some(ParkedState::InTurn(_)) => {
+                    fail_pending(
+                        Pending { req, submitted, events },
+                        &format!("session {sid} already has a turn in flight"),
+                        &mut self.completed,
+                    );
+                    return Ok(0);
+                }
+                Some(ParkedState::Fresh) => {}
+                Some(ParkedState::Resident(_)) | Some(ParkedState::Spilled(_)) => {
+                    resume_sid = Some(sid)
+                }
+            }
+        }
+
+        let (seq_id, logits, fed, saved) = match resume_sid {
+            Some(sid) => match self.resume_turn(sid, &req) {
+                Ok(t) => t,
+                Err(e) => {
+                    // resume_turn already released the lane and dropped the
+                    // session; fail this turn without killing the round
+                    // (a step() error would abort every live turn).
+                    fail_pending(
+                        Pending { req, submitted, events },
+                        &format!("session {sid} resume failed: {e:#}"),
+                        &mut self.completed,
+                    );
+                    return Ok(0);
+                }
+            },
+            None => {
+                // Cold prefill: BOS-prefixed prompt (never empty).
+                self.ensure_capacity()?;
+                let seq_id = self.next_seq;
+                self.next_seq += 1;
+                let mut prompt = Vec::with_capacity(req.prompt.len() + 1);
+                prompt.push(BOS);
+                prompt.extend_from_slice(&req.prompt);
+                let logits = if self.resident {
+                    // Admission in resident mode: claim an arena lane, then
+                    // prefill straight into its slot view (DESIGN.md D5 —
+                    // no per-lane state materialized). On error the lane is
+                    // returned to the pool.
+                    let slot = self.kv.alloc_lane(seq_id)?;
+                    let arena =
+                        self.kv.arena_mut().context("resident pool lost its arena")?;
+                    match self.driver.prefill_resident(&mut self.rt, arena, slot, &prompt)
+                    {
+                        Ok(l) => l,
+                        Err(e) => {
+                            let _ = self.kv.free_lane(seq_id);
+                            return Err(e);
+                        }
+                    }
+                } else {
+                    let mut state = self.driver.new_state();
+                    let logits = self.driver.prefill(&mut self.rt, &mut state, &prompt)?;
+                    self.kv.alloc(seq_id, state)?;
+                    logits
+                };
+                (seq_id, logits, prompt.len(), 0u64)
+            }
+        };
+        self.metrics.prefill_tokens += fed as u64;
+
+        // Bind the turn to its session (validated above).
+        if let Some(sid) = req.session_id {
+            if let Some(sess) = self.sessions.get_mut(&sid) {
+                sess.state = ParkedState::InTurn(seq_id);
+            }
+        }
+
+        // Seed salt: session turns mix session id and turn index so every
+        // turn gets a fresh stream and a spill/readmit (which changes
+        // seq_id) cannot change sampled output. Ephemeral turns use the
+        // client-supplied request id — NOT the worker-local seq id — so a
+        // sharded engine samples exactly like a single-worker one
+        // (DESIGN.md D7 parity).
+        let salt = match req.session_id {
+            Some(sid) => {
+                let turns = self.sessions.get(&sid).map(|s| s.turns).unwrap_or(0);
+                sid.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ turns
+            }
+            None => req.id,
+        };
+        let mut rng = Rng::new(req.sampling.seed ^ salt);
+        let first = sampler::sample(&logits, &req.sampling, &mut rng);
+        let prefill_done = Instant::now();
+
+        let peak_kv = self.kv.seq_bytes(seq_id);
+        let mut live = Live {
+            session: req.session_id,
+            req,
+            seq_id,
+            submitted,
+            prefill_done,
+            queue_ms,
+            generated: vec![first],
+            last_token: first,
+            rng,
+            events,
+            peak_kv,
+            prefill_fed: fed,
+            saved_prefill: saved,
+            disconnected: false,
+        };
+        live.emit_token(first);
+        self.settle(live)?;
+        Ok(1)
+    }
+
+    /// Resume a parked session with the new turn's tokens: the previous
+    /// turn's final sampled token plus the new prompt. Only these (plus a
+    /// ≤ W_og window replay for TConst/TLin) are absorbed — never the
+    /// conversation history. Returns (seq_id, logits, fed, saved).
+    fn resume_turn(&mut self, sid: u64, req: &TurnRequest) -> Result<(u64, Vec<f32>, usize, u64)> {
+        let (last_token, absorbed) = {
+            let sess = self.sessions.get(&sid).context("session vanished")?;
+            (sess.last_token, sess.tokens_absorbed)
+        };
+        let mut chunk = Vec::with_capacity(req.prompt.len() + 1);
+        chunk.push(last_token);
+        chunk.extend_from_slice(&req.prompt);
+
+        // Take the parked state out of the table; on success the session
+        // is re-bound as InTurn by the caller. On error the lane (if any)
+        // is released and the session dropped — never left half-taken.
+        let parked = {
+            let sess = self.sessions.get_mut(&sid).context("session vanished")?;
+            std::mem::replace(&mut sess.state, ParkedState::Fresh)
+        };
+        let resident_seq = match &parked {
+            ParkedState::Resident(seq_id) => Some(*seq_id),
+            _ => None,
+        };
+        let resumed = self.resume_parked(parked, &chunk);
+        let (seq_id, logits, replay) = match resumed {
+            Ok(t) => t,
+            Err(e) => {
+                if let Some(seq_id) = resident_seq {
+                    let _ = self.free_seq(seq_id);
+                }
+                if self.sessions.remove(&sid).is_some() {
+                    self.metrics.sessions_closed += 1;
+                }
+                return Err(e);
+            }
+        };
+        let fed = chunk.len();
+        let saved = absorbed.saturating_sub(replay as u64);
+        self.metrics.resume_turns += 1;
+        self.metrics.resume_fed_tokens += fed as u64;
+        self.metrics.resume_saved_tokens += saved;
+        Ok((seq_id, logits, fed, saved))
+    }
+
+    /// Run the driver continuation for a taken parked state; returns
+    /// (seq_id, logits, window-replay length).
+    fn resume_parked(
+        &mut self,
+        parked: ParkedState,
+        chunk: &[i32],
+    ) -> Result<(u64, Vec<f32>, usize)> {
+        match parked {
+            ParkedState::Resident(seq_id) => {
+                self.kv.set_parked(seq_id, false);
+                if self.kv.is_resident() {
+                    let slot = self
+                        .kv
+                        .lane_of(seq_id)
+                        .context("parked session lost its lane")?;
+                    let replay = self
+                        .kv
+                        .arena()
+                        .map(|a| a.lanes[slot].window_tokens.len())
+                        .unwrap_or(0);
+                    let arena =
+                        self.kv.arena_mut().context("resident pool lost its arena")?;
+                    let logits =
+                        self.driver.resume_resident(&mut self.rt, arena, slot, chunk)?;
+                    Ok((seq_id, logits, replay))
+                } else {
+                    let st = self.kv.get_mut(seq_id).context("parked state missing")?;
+                    let replay = window_fill(st);
+                    let logits = self.driver.resume(&mut self.rt, st, chunk)?;
+                    Ok((seq_id, logits, replay))
+                }
+            }
+            ParkedState::Spilled(boxed) => {
+                // Re-admit the spilled state into a lane (spilling someone
+                // else's LRU parked lane if the pool is full).
+                self.ensure_capacity()?;
+                let seq_id = self.next_seq;
+                self.next_seq += 1;
+                let mut st = *boxed;
+                let replay = window_fill(&st);
+                if self.kv.is_resident() {
+                    let slot = self.kv.alloc_lane(seq_id)?;
+                    let logits = match self.driver.resume(&mut self.rt, &mut st, chunk) {
+                        Ok(l) => l,
+                        Err(e) => {
+                            let _ = self.kv.free_lane(seq_id);
+                            return Err(e);
+                        }
+                    };
+                    let arena =
+                        self.kv.arena_mut().context("resident pool lost its arena")?;
+                    arena.sync_host(&mut self.rt)?;
+                    arena.load_state(slot, &st)?;
+                    Ok((seq_id, logits, replay))
+                } else {
+                    let logits = self.driver.resume(&mut self.rt, &mut st, chunk)?;
+                    self.kv.alloc(seq_id, st)?;
+                    Ok((seq_id, logits, replay))
+                }
+            }
+            ParkedState::Fresh | ParkedState::InTurn(_) => {
+                bail!("session has no parked state to resume")
+            }
+        }
+    }
+
+    fn decode_group(&mut self, group: &[u64]) -> Result<usize> {
+        // Collect lanes still needing tokens (others complete below).
+        let mut ids = Vec::new();
+        let mut tokens = Vec::new();
+        for &id in group {
+            if let Some(l) = self.live.iter().find(|l| l.seq_id == id) {
+                ids.push(id);
+                tokens.push(l.last_token);
+            }
+        }
+        if ids.is_empty() {
+            return Ok(0);
+        }
+        let t0 = Instant::now();
+        let all_logits = if self.resident {
+            let slots: Vec<usize> = ids
+                .iter()
+                .map(|&id| self.kv.lane_of(id).context("live lane has no arena slot"))
+                .collect::<Result<_>>()?;
+            let arena = self.kv.arena_mut().context("resident pool lost its arena")?;
+            self.driver
+                .decode_resident(&mut self.rt, arena, &slots, &tokens)?
+        } else {
+            let mut lanes = self.kv.get_many_mut(&ids)?;
+            self.driver
+                .decode_batch(&mut self.rt, lanes.as_mut_slice(), &tokens)?
+        };
+        let dt_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        self.metrics.decode_steps += 1;
+
+        let mut produced = 0;
+        for (i, id) in ids.iter().enumerate() {
+            let idx = self
+                .live
+                .iter()
+                .position(|l| l.seq_id == *id)
+                .context("live lane vanished")?;
+            let mut live = self.live.swap_remove(idx);
+            let next = sampler::sample(&all_logits[i], &live.req.sampling, &mut live.rng);
+            live.generated.push(next);
+            live.last_token = next;
+            live.peak_kv = live.peak_kv.max(self.kv.seq_bytes(*id));
+            live.emit_token(next);
+            self.metrics.per_token_ms.add(dt_ms);
+            produced += 1;
+            self.settle(live)?;
+        }
+        Ok(produced)
+    }
+
+    /// Decide whether a lane just produced its last token; finish it
+    /// (including disconnect-triggered cancellation) or return it to the
+    /// live set.
+    fn settle(&mut self, live: Live) -> Result<()> {
+        if live.disconnected {
+            return self.finish(live, FinishReason::Cancelled);
+        }
+        let hit_stop = live.req.stop_token == Some(live.last_token);
+        let hit_len = live.generated.len() >= live.req.max_new_tokens;
+        if hit_stop || hit_len {
+            self.finish(
+                live,
+                if hit_stop { FinishReason::Stop } else { FinishReason::Length },
+            )
+        } else {
+            self.live.push(live);
+            Ok(())
+        }
+    }
+
+    fn finish(&mut self, live: Live, reason: FinishReason) -> Result<()> {
+        // A turn on a still-open session parks its state for the next turn
+        // (also on cancellation — the conversation survives the client);
+        // ephemeral turns, closed sessions, and aborts free the lane.
+        let park = reason != FinishReason::Aborted
+            && live
+                .session
+                .map(|sid| self.sessions.contains_key(&sid))
+                .unwrap_or(false);
+
+        let (syncs, final_bytes) = if park {
+            let seq_id = live.seq_id;
+            let bytes = self.kv.seq_bytes(seq_id);
+            let tokens_absorbed = self.kv.tokens_seen(seq_id);
+            let syncs = if self.kv.is_resident() {
+                let slot = self.kv.lane_of(seq_id).context("live lane has no slot")?;
+                let arena = self.kv.arena().context("resident pool lost its arena")?;
+                arena.lanes[slot].syncs
+            } else {
+                match self.kv.get(seq_id).context("live state missing")? {
+                    SeqState::TConst(s) => s.syncs,
+                    SeqState::TLin(s) => s.inner.syncs,
+                    _ => 0,
+                }
+            };
+            self.kv.set_parked(seq_id, true);
+            let sid = live.session.unwrap();
+            let sess = self.sessions.get_mut(&sid).unwrap();
+            sess.state = ParkedState::Resident(seq_id);
+            sess.last_token = live.last_token;
+            sess.tokens_absorbed = tokens_absorbed;
+            sess.last_used = Instant::now();
+            sess.turns += 1;
+            (syncs, bytes)
+        } else if self.kv.is_resident() {
+            let bytes = self.kv.seq_bytes(live.seq_id);
+            let meta = self.kv.free_lane(live.seq_id)?;
+            (meta.syncs, bytes)
+        } else {
+            let state = self.kv.free(live.seq_id)?;
+            let syncs = match &state {
+                SeqState::TConst(s) => s.syncs,
+                SeqState::TLin(s) => s.inner.syncs,
+                _ => 0,
+            };
+            (syncs, state.bytes())
+        };
+        // An aborted turn orphans its session: drop the table entry.
+        if !park {
+            if let Some(sid) = live.session {
+                if self.sessions.remove(&sid).is_some() {
+                    self.metrics.sessions_closed += 1;
+                }
+            }
+        }
+
+        self.metrics.sync_events += syncs;
+        let total_ms = live.submitted.elapsed().as_secs_f64() * 1000.0;
+        let ttft_ms = live
+            .prefill_done
+            .duration_since(live.submitted)
+            .as_secs_f64()
+            * 1000.0;
+        let mut generated = live.generated;
+        if reason == FinishReason::Stop {
+            generated.pop(); // drop the stop token itself
+        }
+        let metrics = RequestMetrics {
+            queue_ms: live.queue_ms,
+            ttft_ms,
+            total_ms,
+            n_prompt: live.req.prompt.len(),
+            n_generated: generated.len(),
+            prefill_tokens: live.prefill_fed,
+            saved_prefill_tokens: live.saved_prefill,
+            syncs,
+            peak_kv_bytes: live.peak_kv.max(final_bytes),
+            worker: self.worker_id,
+        };
+        self.metrics.ttft_ms.add(ttft_ms);
+        self.metrics.total_ms.add(total_ms);
+        self.metrics.tokens_generated += generated.len() as u64;
+        match reason {
+            FinishReason::Length | FinishReason::Stop => self.metrics.requests_completed += 1,
+            FinishReason::Cancelled => self.metrics.requests_cancelled += 1,
+            FinishReason::Aborted => self.metrics.requests_aborted += 1,
+        }
+        let resp = Response {
+            id: live.req.id,
+            session_id: live.session,
+            tokens: generated,
+            finish_reason: reason,
+            metrics,
+        };
+        match live.events {
+            Some(tx) => {
+                let _ = tx.send(StreamEvent::TurnDone(resp));
+                let session_gone = live
+                    .session
+                    .map(|sid| !self.sessions.contains_key(&sid))
+                    .unwrap_or(true);
+                if session_gone {
+                    let _ = tx.send(StreamEvent::Closed { session_id: live.session });
+                }
+            }
+            None => self.completed.push(resp),
+        }
+        Ok(())
+    }
+
+    /// Drive until all submitted work completes; returns completed count.
+    pub fn run_to_completion(&mut self) -> Result<usize> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(self.completed.len())
+    }
+
+    /// Convenience: run a closed-loop workload (all requests queued up
+    /// front) and drain it.
+    pub fn run_workload(&mut self, reqs: Vec<TurnRequest>) -> Result<Vec<Response>> {
+        for r in reqs {
+            self.submit(r);
+        }
+        self.run_to_completion()?;
+        Ok(std::mem::take(&mut self.completed))
+    }
+
+    pub fn metrics_json(&mut self) -> Json {
+        // Refresh the session gauges from the live tables.
+        let mut in_turn = 0u64;
+        let mut parked_res = 0u64;
+        let mut parked_spill = 0u64;
+        for s in self.sessions.values() {
+            match s.state {
+                ParkedState::InTurn(_) => in_turn += 1,
+                ParkedState::Resident(_) => parked_res += 1,
+                ParkedState::Spilled(_) => parked_spill += 1,
+                ParkedState::Fresh => {}
+            }
+        }
+        self.metrics.sessions_in_turn = in_turn;
+        self.metrics.sessions_parked_resident = parked_res;
+        self.metrics.sessions_parked_spilled = parked_spill;
+        self.metrics.kv_bytes_parked = self.kv.parked_bytes();
+        self.metrics.kv_bytes_live = self.kv.live_bytes();
+        self.metrics.snapshot()
+    }
+}
+
+/// Reject a turn before it runs: stream an `Error` event, or (owned mode,
+/// no channel) record an aborted `Response` so the caller can observe it.
+pub(crate) fn fail_pending(pending: Pending, msg: &str, completed: &mut Vec<Response>) {
+    match pending.events {
+        Some(tx) => {
+            let _ = tx.send(StreamEvent::Error(msg.to_string()));
+        }
+        None => completed.push(Response {
+            id: pending.req.id,
+            session_id: pending.req.session_id,
+            tokens: Vec::new(),
+            finish_reason: FinishReason::Aborted,
+            metrics: RequestMetrics::default(),
+        }),
+    }
+}
+
+/// Tokens currently in a state's partial generation window — the replay
+/// length a TConst/TLin resume re-feeds (0 for the baseline).
+fn window_fill(st: &SeqState) -> usize {
+    match st {
+        SeqState::TConst(s) => s.window_tokens.len(),
+        SeqState::TLin(s) => s.inner.window_tokens.len(),
+        SeqState::Base(_) => 0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spawned mode: the worker thread the router drives
+// ---------------------------------------------------------------------------
+
+/// Control messages a spawned worker consumes (sent by the router).
+pub(crate) enum WorkerMsg {
+    Submit(TurnRequest, mpsc::Sender<StreamEvent>),
+    OpenSessionAs(u64),
+    CloseSession(u64, mpsc::Sender<bool>),
+    ExportSession(u64, mpsc::Sender<Option<SessionExport>>),
+    ImportSession(u64, SessionExport),
+    Metrics(mpsc::Sender<Json>),
+    Shutdown,
+}
+
+/// Joins a thread on drop (last handle wins).
+pub(crate) struct ThreadGuard(pub(crate) Option<std::thread::JoinHandle<()>>);
+
+impl Drop for ThreadGuard {
+    fn drop(&mut self) {
+        if let Some(h) = self.0.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The router's handle to one spawned worker: its control channel plus the
+/// shared load gauges the placement policy reads.
+pub(crate) struct WorkerHandle {
+    pub(crate) tx: mpsc::Sender<WorkerMsg>,
+    pub(crate) load: Arc<WorkerLoad>,
+    _thread: Arc<ThreadGuard>,
+}
+
+/// Create worker `worker_id` on a dedicated thread. The runtime (PJRT
+/// client) is constructed on that thread; the call blocks until the
+/// worker reports ready (or its startup error).
+pub(crate) fn spawn_worker(cfg: EngineConfig, worker_id: usize) -> Result<WorkerHandle> {
+    let (tx, rx) = mpsc::channel::<WorkerMsg>();
+    let load = Arc::new(WorkerLoad::default());
+    let load_thread = load.clone();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let thread = std::thread::Builder::new()
+        .name(format!("engine-worker-{worker_id}"))
+        .spawn(move || {
+            let mut worker = match Worker::for_worker(&cfg, worker_id) {
+                Ok(mut w) => {
+                    w.bind_load(load_thread);
+                    let _ = ready_tx.send(Ok(()));
+                    w
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            'run: loop {
+                // Drain control messages; block briefly when idle.
+                let mut msgs = Vec::new();
+                if worker.has_work() {
+                    while let Ok(m) = rx.try_recv() {
+                        msgs.push(m);
+                    }
+                } else {
+                    match rx.recv_timeout(Duration::from_millis(20)) {
+                        Ok(m) => {
+                            msgs.push(m);
+                            // Pull the rest of a burst (e.g. the Submit
+                            // right behind an OpenSessionAs) in one go.
+                            while let Ok(m) = rx.try_recv() {
+                                msgs.push(m);
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break 'run,
+                    }
+                }
+                for msg in msgs {
+                    match msg {
+                        WorkerMsg::Submit(req, tx) => {
+                            worker.note_dispatch_arrived();
+                            worker.route_pending(Pending {
+                                req,
+                                submitted: Instant::now(),
+                                events: Some(tx),
+                            });
+                        }
+                        WorkerMsg::OpenSessionAs(sid) => worker.open_session_as(sid),
+                        WorkerMsg::CloseSession(sid, tx) => {
+                            let ok = worker.close_session(sid).unwrap_or(false);
+                            let _ = tx.send(ok);
+                        }
+                        WorkerMsg::ExportSession(sid, tx) => {
+                            let _ = tx.send(worker.export_session(sid));
+                        }
+                        WorkerMsg::ImportSession(sid, exp) => {
+                            worker.import_session(sid, exp)
+                        }
+                        WorkerMsg::Metrics(tx) => {
+                            let _ = tx.send(worker.metrics_json());
+                        }
+                        WorkerMsg::Shutdown => break 'run,
+                    }
+                }
+                // Publish freshly-routed queue depth BEFORE the round: a
+                // long step() must not leave the router reading gauges
+                // from which drained dispatches have already vanished.
+                worker.publish_load();
+                if worker.has_work() {
+                    if let Err(e) = worker.step() {
+                        eprintln!("[worker {worker_id}] round error: {e:#}");
+                        // abort all live work
+                        let lanes: Vec<u64> =
+                            worker.live.iter().map(|l| l.seq_id).collect();
+                        for id in lanes {
+                            if let Some(idx) =
+                                worker.live.iter().position(|l| l.seq_id == id)
+                            {
+                                let live = worker.live.swap_remove(idx);
+                                let _ = worker.finish(live, FinishReason::Aborted);
+                            }
+                        }
+                    }
+                } else {
+                    let _ = worker.sweep_sessions();
+                }
+                worker.publish_load();
+            }
+        })
+        .context("spawning worker thread")?;
+    ready_rx
+        .recv()
+        .context("worker thread died during startup")??;
+    Ok(WorkerHandle {
+        tx,
+        load,
+        _thread: Arc::new(ThreadGuard(Some(thread))),
+    })
+}

@@ -85,6 +85,9 @@ fn engine_cfg_from(args: &tconstformer::util::cli::Args) -> Result<EngineConfig>
         session_ttl: std::time::Duration::from_secs(
             args.get_usize("session-ttl", 600)? as u64
         ),
+        workers: args.get_usize("workers", 1)?.max(1),
+        session_rate: args.get_f64("session-rate", 0.0)?,
+        session_burst: args.get_f64("session-burst", 4.0)?,
     })
 }
 
@@ -94,7 +97,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt_default("preset", "model preset (tiny|small)", "small")
         .opt_default("arch", "architecture (base|tlin|tconst)", "tconst")
         .opt_default("sync-mode", "tconst sync mode (incremental|full)", "incremental")
-        .opt_default("max-lanes", "max concurrent sequences", "4")
+        .opt_default("max-lanes", "max concurrent sequences per worker", "4")
+        .opt_default("workers", "parallel arena workers behind the session-affine router", "1")
+        .opt_default("session-rate", "per-session turn rate limit, turns/s (0 = off)", "0")
+        .opt_default("session-burst", "rate-limit burst capacity", "4")
         .opt_default("addr", "listen address", "127.0.0.1:8077")
         .opt_default("session-ttl", "idle parked-session eviction TTL (seconds)", "600")
         .opt_default("max-conns", "max concurrent HTTP connections", "64")
@@ -104,10 +110,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let args = cmd.parse(rest)?;
     let cfg = engine_cfg_from(&args)?;
     println!(
-        "[serve] preset={} arch={} sync={:?} session_ttl={:?}",
+        "[serve] preset={} arch={} sync={:?} workers={} lanes/worker={} session_ttl={:?}",
         cfg.preset,
         cfg.arch.as_str(),
         cfg.sync_mode,
+        cfg.workers,
+        cfg.max_lanes,
         cfg.session_ttl,
     );
     let handle = Engine::spawn(cfg)?;

@@ -40,7 +40,7 @@ use anyhow::{bail, Context, Result};
 use super::batch::{copy_block, grow_axis, insert_axis, read_block};
 use super::state::{BaseState, SeqState, TConstState, TLinState};
 use super::tconstformer::logits_row;
-use super::{tconstformer, tlinformer, Arch, ModelDriver, SyncMode};
+use super::{baseline, tconstformer, tlinformer, Arch, ModelDriver, SyncMode};
 use crate::runtime::{HostTensor, ModelConfig, ResidentArg, ResidentOut, Runtime};
 
 /// Host-mirror ↔ device-buffer synchronization flags, one pair per slab
@@ -617,6 +617,170 @@ impl LaneArena {
                 })
             }
         })
+    }
+
+    // -- direct-to-slot admission (DESIGN.md D5 "prefill into the slot view") --
+
+    /// Absorb a prompt straight into lane `slot`: the window graphs'
+    /// outputs are written **once** into the batch-major slabs. No
+    /// per-lane [`SeqState`] is materialized and the old second O(state)
+    /// copy (boxed state → slot) is gone from the admission miss path —
+    /// asserted via [`super::batch::copy_metrics`] in the integration
+    /// suite. The Full-sync TConst ablation keeps the boxed path (it
+    /// records raw history); the driver routes it around this method.
+    pub fn prefill_slot(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        slot: usize,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        if slot >= self.cap || !self.lanes[slot].occupied {
+            bail!("prefill into unoccupied arena slot {slot}");
+        }
+        if drv.arch != self.arch {
+            bail!("arena prefill arch mismatch");
+        }
+        match self.arch {
+            Arch::TConst => self.prefill_slot_tconst(drv, rt, slot, tokens),
+            Arch::TLin => self.prefill_slot_tlin(drv, rt, slot, tokens),
+            Arch::Base => self.prefill_slot_base(drv, rt, slot, tokens),
+        }
+    }
+
+    /// Write the constant-state half of a prefill into a lane: absent
+    /// parts (never-folded context, boundary-empty window) are zeroed from
+    /// the driver's shared pad state so the lane matches a cold boxed
+    /// state bit-for-bit.
+    fn write_const_lane(
+        &mut self,
+        drv: &ModelDriver,
+        slot: usize,
+        parts: &tconstformer::PrefillParts,
+    ) -> Result<()> {
+        let pad = drv.pad_state();
+        let (ck, cv, cs) = match &parts.ctx {
+            Some((k, v, s)) => (k, v, s),
+            None => (&pad.ctx_k, &pad.ctx_v, &pad.ctx_sum),
+        };
+        let (gk, gv) = match &parts.gen {
+            Some((k, v)) => (k, v),
+            None => (&pad.gen_k, &pad.gen_v),
+        };
+        let slabs = match &mut self.state {
+            ArenaState::TConst(s) => s,
+            ArenaState::TLin { inner, .. } => inner,
+            ArenaState::Base { .. } => bail!("const-lane write on a baseline arena"),
+        };
+        insert_axis(&mut slabs.ctx_k, ck, 2, slot)?;
+        insert_axis(&mut slabs.ctx_v, cv, 2, slot)?;
+        insert_axis(&mut slabs.ctx_sum, cs, 1, slot)?;
+        insert_axis(&mut slabs.gen_k, gk, 2, slot)?;
+        insert_axis(&mut slabs.gen_v, gv, 2, slot)?;
+        let m = &mut self.lanes[slot];
+        m.fill = parts.fill;
+        m.gate = parts.gate;
+        m.window_tokens = parts.window_tokens.clone();
+        m.history = Vec::new();
+        m.tokens_seen = parts.tokens_seen;
+        m.syncs = parts.syncs;
+        Ok(())
+    }
+
+    fn prefill_slot_tconst(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        slot: usize,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let parts = tconstformer::prefill_parts(drv, rt, tokens)?;
+        // Lane writes target the host mirror; bring it home first so the
+        // next decode's re-upload cannot clobber other lanes.
+        self.ensure_host(rt, TCONST_KEYS)?;
+        self.write_const_lane(drv, slot, &parts)?;
+        if let Some(dev) = self.device.as_mut() {
+            for k in TCONST_KEYS {
+                dev.flags.host_wrote(k);
+            }
+        }
+        Ok(parts.logits)
+    }
+
+    fn prefill_slot_tlin(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        slot: usize,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let p = tlinformer::prefill_parts(drv, rt, tokens)?;
+        self.ensure_host(rt, TLIN_KEYS)?;
+        self.write_const_lane(drv, slot, &p.inner)?;
+        if p.hist_bucket > 0 {
+            let (nb, d) = (self.cfg.n_block, self.cfg.d_model);
+            {
+                let ArenaState::TLin { hist_k, hist_v, hist_bucket, .. } = &mut self.state
+                else {
+                    bail!("tlin prefill on a non-tlin arena")
+                };
+                if *hist_bucket < p.hist_bucket {
+                    *hist_k = grow_axis(hist_k, 2, p.hist_bucket)?;
+                    *hist_v = grow_axis(hist_v, 2, p.hist_bucket)?;
+                    *hist_bucket = p.hist_bucket;
+                }
+                let size = [nb, 1, p.hist_bucket, d];
+                let dst_off = [0, slot, 0, 0];
+                let src_off = [0; 4];
+                let src_k = p.hist_k.as_ref().context("hist_k")?;
+                let src_v = p.hist_v.as_ref().context("hist_v")?;
+                copy_block(hist_k, &dst_off, src_k, &src_off, &size)?;
+                copy_block(hist_v, &dst_off, src_v, &src_off, &size)?;
+            }
+            self.lanes[slot].hist_len = p.hist_len;
+        }
+        if let Some(dev) = self.device.as_mut() {
+            for k in TLIN_KEYS {
+                dev.flags.host_wrote(k);
+            }
+        }
+        Ok(p.inner.logits)
+    }
+
+    fn prefill_slot_base(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        slot: usize,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let (logits, new_k, new_v, new_bucket) = baseline::prefill_exec(drv, rt, tokens)?;
+        self.ensure_host(rt, BASE_KEYS)?;
+        let (nl, d) = (self.cfg.n_layer, self.cfg.d_model);
+        {
+            let ArenaState::Base { cache_k, cache_v, bucket } = &mut self.state else {
+                bail!("base prefill on a non-base arena")
+            };
+            if *bucket < new_bucket {
+                *cache_k = grow_axis(cache_k, 2, new_bucket)?;
+                *cache_v = grow_axis(cache_v, 2, new_bucket)?;
+                *bucket = new_bucket;
+            }
+            let size = [nl, 1, new_bucket, d];
+            let dst_off = [0, slot, 0, 0];
+            let src_off = [0; 4];
+            copy_block(cache_k, &dst_off, &new_k, &src_off, &size)?;
+            copy_block(cache_v, &dst_off, &new_v, &src_off, &size)?;
+        }
+        let m = &mut self.lanes[slot];
+        m.pos = tokens.len();
+        m.tokens_seen = tokens.len();
+        if let Some(dev) = self.device.as_mut() {
+            for k in BASE_KEYS {
+                dev.flags.host_wrote(k);
+            }
+        }
+        Ok(logits)
     }
 
     // -- decode (the steady-state hot path) ---------------------------------

@@ -17,13 +17,15 @@ use super::tconstformer::logits_row;
 use super::ModelDriver;
 use crate::runtime::{HostTensor, Runtime};
 
-/// Absorb a prompt through the bucketed prefill graph.
-pub fn prefill(
+/// Run the bucketed prefill graph and move its outputs out:
+/// (logits, cache_k, cache_v, bucket). Shared by the boxed-state
+/// [`prefill`] and the arena's direct-to-slot admission, which writes the
+/// caches straight into its slab lane without a [`BaseState`] in between.
+pub(crate) fn prefill_exec(
     drv: &ModelDriver,
     rt: &mut Runtime,
-    s: &mut BaseState,
     tokens: &[i32],
-) -> Result<Vec<f32>> {
+) -> Result<(Vec<f32>, HostTensor, HostTensor, usize)> {
     if tokens.is_empty() {
         bail!("empty prompt (the engine prepends a BOS byte)");
     }
@@ -39,9 +41,24 @@ pub fn prefill(
     let a_toks = HostTensor::from_i32(&[1, bucket], padded)?;
     let a_len = HostTensor::scalar_i32(tokens.len() as i32);
     let out = rt.execute(&name, &[&a_toks, &a_len])?;
-    let logits = logits_row(&out[0], 0, drv.cfg.vocab)?;
-    s.cache_k = Some(out[1].clone());
-    s.cache_v = Some(out[2].clone());
+    let mut it = out.into_iter();
+    let logits_t = it.next().context("logits")?;
+    let cache_k = it.next().context("cache_k")?;
+    let cache_v = it.next().context("cache_v")?;
+    let logits = logits_row(&logits_t, 0, drv.cfg.vocab)?;
+    Ok((logits, cache_k, cache_v, bucket))
+}
+
+/// Absorb a prompt through the bucketed prefill graph.
+pub fn prefill(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    s: &mut BaseState,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    let (logits, cache_k, cache_v, bucket) = prefill_exec(drv, rt, tokens)?;
+    s.cache_k = Some(cache_k);
+    s.cache_v = Some(cache_v);
     s.bucket = bucket;
     s.pos = tokens.len();
     Ok(logits)

@@ -37,7 +37,11 @@ pub mod copy_metrics {
         pub bytes_copied: u64,
     }
 
-    pub(super) fn record(calls: u64, allocs: u64, bytes: u64) {
+    /// Crate-visible so per-lane state *materialization* (the zeroed
+    /// tensors a [`crate::model::state`] constructor allocates) is
+    /// counted too: the direct-to-slot admission path asserts it
+    /// allocates none (DESIGN.md D5 "prefill into the slot view").
+    pub(crate) fn record(calls: u64, allocs: u64, bytes: u64) {
         CALLS.with(|c| c.set(c.get() + calls));
         ALLOCS.with(|c| c.set(c.get() + allocs));
         BYTES.with(|c| c.set(c.get() + bytes));

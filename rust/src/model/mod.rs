@@ -198,12 +198,17 @@ impl ModelDriver {
         LaneArena::new(self.arch, &self.cfg, cap)
     }
 
-    /// Absorb a prompt directly into an arena slot (admission path: runs
-    /// the ordinary per-lane prefill, then writes the resulting state into
-    /// the slot's lane of the batch-major slabs). Under device staging the
-    /// lane write targets the host mirror, so any device-ahead slabs are
-    /// brought home first — one amortized download per admission, off the
-    /// decode hot path.
+    /// Absorb a prompt directly into an arena slot — the admission miss
+    /// path. The default route is the **direct slot view**
+    /// ([`LaneArena::prefill_slot`]): window-graph outputs are moved
+    /// straight into the slot's lane of the batch-major slabs, with no
+    /// per-lane state materialized and no second O(state) copy (the old
+    /// admission built a boxed state, then copied it in). The Full-sync
+    /// TConst ablation still takes the boxed route — it must record raw
+    /// token history, which only [`SeqState`] carries. Under device
+    /// staging the lane write targets the host mirror, so any
+    /// device-ahead slabs are brought home first — one amortized download
+    /// per admission, off the decode hot path.
     pub fn prefill_resident(
         &self,
         rt: &mut Runtime,
@@ -211,11 +216,14 @@ impl ModelDriver {
         slot: usize,
         tokens: &[i32],
     ) -> Result<Vec<f32>> {
-        let mut st = self.new_state();
-        let logits = self.prefill(rt, &mut st, tokens)?;
-        arena.sync_host(rt)?;
-        arena.load_state(slot, &st)?;
-        Ok(logits)
+        if self.arch == Arch::TConst && self.sync_mode == SyncMode::Full {
+            let mut st = self.new_state();
+            let logits = self.prefill(rt, &mut st, tokens)?;
+            arena.sync_host(rt)?;
+            arena.load_state(slot, &st)?;
+            return Ok(logits);
+        }
+        arena.prefill_slot(self, rt, slot, tokens)
     }
 
     /// Resume a parked arena lane with new tokens (DESIGN.md D6): the

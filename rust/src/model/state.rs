@@ -108,6 +108,9 @@ impl TConstState {
     pub fn new(cfg: &ModelConfig) -> Self {
         let (nb, h1, h2) = (cfg.n_block, cfg.h_inner + 1, cfg.h_inner + 2);
         let (woh, wog, d) = (cfg.w_oh, cfg.w_og, cfg.d_model);
+        // A materialized per-lane state is 5 fresh tensors; metered so the
+        // direct-to-slot admission can assert it allocates none.
+        crate::model::batch::copy_metrics::record(0, 5, 0);
         TConstState {
             ctx_k: HostTensor::zeros_f32(&[nb, h1, 1, woh, d]),
             ctx_v: HostTensor::zeros_f32(&[nb, h1, 1, woh, d]),

@@ -35,11 +35,32 @@ pub(crate) fn window_tokens_tensor(chunk: &[i32], w: usize) -> Result<HostTensor
     HostTensor::from_i32(&[1, w], data)
 }
 
-/// Run one window pass (forward + fold) and return
-/// (logits tensor, gen_k, gen_v, new_ctx_k, new_ctx_v, new_ctx_sum).
-/// `chunk = None` folds the state's own `window_tokens` (the sync path) —
-/// taking the chunk through the state avoids cloning it just to appease
-/// the borrow checker.
+/// Run one window pass (forward + fold) from explicit context tensors;
+/// returns (logits tensor, gen_k, gen_v, new_ctx_k, new_ctx_v,
+/// new_ctx_sum). Taking the context by reference (rather than a state)
+/// lets the direct-to-slot admission path run without materializing a
+/// per-lane [`TConstState`].
+pub(crate) fn run_window_raw(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    chunk: &[i32],
+    ctx_k: &HostTensor,
+    ctx_v: &HostTensor,
+    ctx_sum: &HostTensor,
+    ctx_gate: f32,
+) -> Result<Vec<HostTensor>> {
+    let w = drv.cfg.w_og;
+    assert!(!chunk.is_empty() && chunk.len() <= w);
+    let name = rt.manifest.name_tconst_window(&drv.preset);
+    let toks = window_tokens_tensor(chunk, w)?;
+    let nv = HostTensor::from_i32(&[1], vec![chunk.len() as i32])?;
+    let gate = HostTensor::from_f32(&[1], vec![ctx_gate])?;
+    rt.execute(&name, &[&toks, &nv, ctx_k, ctx_v, ctx_sum, &gate])
+}
+
+/// [`run_window_raw`] against a state. `chunk = None` folds the state's
+/// own `window_tokens` (the sync path) — taking the chunk through the
+/// state avoids cloning it just to appease the borrow checker.
 fn run_window(
     drv: &ModelDriver,
     rt: &mut Runtime,
@@ -47,16 +68,7 @@ fn run_window(
     chunk: Option<&[i32]>,
 ) -> Result<Vec<HostTensor>> {
     let chunk = chunk.unwrap_or(&s.window_tokens);
-    let w = drv.cfg.w_og;
-    assert!(!chunk.is_empty() && chunk.len() <= w);
-    let name = rt.manifest.name_tconst_window(&drv.preset);
-    let toks = window_tokens_tensor(chunk, w)?;
-    let nv = HostTensor::from_i32(&[1], vec![chunk.len() as i32])?;
-    let gate = HostTensor::from_f32(&[1], vec![s.ctx_gate])?;
-    rt.execute(
-        &name,
-        &[&toks, &nv, &s.ctx_k, &s.ctx_v, &s.ctx_sum, &gate],
-    )
+    run_window_raw(drv, rt, chunk, &s.ctx_k, &s.ctx_v, &s.ctx_sum, s.ctx_gate)
 }
 
 /// Synchronize a lane whose generation window is full (cache miss).
@@ -161,6 +173,96 @@ pub fn prefill(
         }
     }
     Ok(last_logits)
+}
+
+/// Final tensors of a from-scratch prompt absorption with **no per-lane
+/// state materialized**: every tensor is moved out of a graph result
+/// (never cloned) and the zero inputs of the first window are borrowed
+/// from the driver's shared pad state. The direct-to-slot admission path
+/// (DESIGN.md D5 "prefill into the slot view") writes these once into an
+/// arena lane — the old admission built a boxed [`TConstState`] and then
+/// copied it into the slot, a second O(state) copy on the miss path.
+///
+/// `ctx` is `None` until a window has folded (the gate stays 0); `gen` is
+/// `None` when the prompt ended exactly on a window boundary (the window
+/// is empty, so the lane's generation cache is all-masked zeros).
+pub struct PrefillParts {
+    pub ctx: Option<(HostTensor, HostTensor, HostTensor)>,
+    pub gen: Option<(HostTensor, HostTensor)>,
+    pub gate: f32,
+    pub fill: usize,
+    pub window_tokens: Vec<i32>,
+    pub tokens_seen: usize,
+    pub syncs: u64,
+    pub logits: Vec<f32>,
+}
+
+impl PrefillParts {
+    pub(crate) fn empty() -> Self {
+        PrefillParts {
+            ctx: None,
+            gen: None,
+            gate: 0.0,
+            fill: 0,
+            window_tokens: Vec::new(),
+            tokens_seen: 0,
+            syncs: 0,
+            logits: Vec::new(),
+        }
+    }
+}
+
+/// Absorb a prompt from scratch, returning moved [`PrefillParts`] instead
+/// of populating a state. Incremental sync only: the Full ablation needs
+/// the raw token history recorded in a boxed state and keeps the
+/// materialize+copy admission.
+pub fn prefill_parts(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    tokens: &[i32],
+) -> Result<PrefillParts> {
+    if tokens.is_empty() {
+        bail!("empty prompt (the engine prepends a BOS byte)");
+    }
+    if drv.sync_mode != SyncMode::Incremental {
+        bail!("direct slot prefill requires SyncMode::Incremental");
+    }
+    let w = drv.cfg.w_og;
+    let mut parts = PrefillParts::empty();
+    for chunk in tokens.chunks(w) {
+        let out = {
+            let pad = drv.pad_state();
+            let (ck, cv, cs) = match &parts.ctx {
+                Some((k, v, s)) => (k, v, s),
+                None => (&pad.ctx_k, &pad.ctx_v, &pad.ctx_sum),
+            };
+            run_window_raw(drv, rt, chunk, ck, cv, cs, parts.gate)?
+        };
+        let mut it = out.into_iter();
+        let logits_t = it.next().context("logits")?;
+        let gen_k = it.next().context("gen_k")?;
+        let gen_v = it.next().context("gen_v")?;
+        let ctx_k = it.next().context("ctx_k")?;
+        let ctx_v = it.next().context("ctx_v")?;
+        let ctx_sum = it.next().context("ctx_sum")?;
+        parts.logits = logits_row(&logits_t, chunk.len() - 1, drv.cfg.vocab)?;
+        parts.tokens_seen += chunk.len();
+        if chunk.len() == w {
+            // Full window: fold it into the context (periodic sync). The
+            // generation window empties, exactly as in `prefill`.
+            parts.ctx = Some((ctx_k, ctx_v, ctx_sum));
+            parts.gate = 1.0;
+            parts.fill = 0;
+            parts.window_tokens.clear();
+            parts.syncs += 1;
+        } else {
+            // Partial (final) window: keep its KV caches for decode.
+            parts.gen = Some((gen_k, gen_v));
+            parts.fill = chunk.len();
+            parts.window_tokens = chunk.to_vec();
+        }
+    }
+    Ok(parts)
 }
 
 /// Continue an existing state with `tokens` — the session-resume path

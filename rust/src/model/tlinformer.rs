@@ -16,7 +16,7 @@ use anyhow::{bail, Context, Result};
 
 use super::batch::{concat_axis, grow_axis, insert_axis, split_axis};
 use super::state::{SeqState, TLinState};
-use super::tconstformer::{logits_row, window_tokens_tensor};
+use super::tconstformer::{logits_row, window_tokens_tensor, PrefillParts};
 use super::ModelDriver;
 use crate::runtime::{HostTensor, Runtime};
 
@@ -51,9 +51,38 @@ fn ensure_capacity(
     Ok(())
 }
 
-/// One window pass at the lane's current bucket. Returns the full result
-/// vector of the `tlin_window` graph. `chunk = None` folds the state's own
-/// `window_tokens` (the sync path) without cloning them.
+/// One window pass from explicit context/history tensors. Returns the
+/// full result vector of the `tlin_window` graph. Taking the tensors by
+/// reference lets the direct-to-slot admission path run without
+/// materializing a per-lane [`TLinState`].
+#[allow(clippy::too_many_arguments)]
+fn run_window_raw(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    chunk: &[i32],
+    ctx_k: &HostTensor,
+    ctx_v: &HostTensor,
+    ctx_sum: &HostTensor,
+    ctx_gate: f32,
+    hist_k: &HostTensor,
+    hist_v: &HostTensor,
+    hist_bucket: usize,
+    hist_len: usize,
+) -> Result<Vec<HostTensor>> {
+    let w = drv.cfg.w_og;
+    let name = rt.manifest.name_tlin_window(&drv.preset, hist_bucket);
+    let toks = window_tokens_tensor(chunk, w)?;
+    let nv = HostTensor::from_i32(&[1], vec![chunk.len() as i32])?;
+    let gate = HostTensor::from_f32(&[1], vec![ctx_gate])?;
+    let hlen = HostTensor::from_i32(&[1], vec![hist_len as i32])?;
+    rt.execute(
+        &name,
+        &[&toks, &nv, ctx_k, ctx_v, ctx_sum, &gate, hist_k, hist_v, &hlen],
+    )
+}
+
+/// [`run_window_raw`] against a state. `chunk = None` folds the state's
+/// own `window_tokens` (the sync path) without cloning them.
 fn run_window(
     drv: &ModelDriver,
     rt: &mut Runtime,
@@ -61,25 +90,18 @@ fn run_window(
     chunk: Option<&[i32]>,
 ) -> Result<Vec<HostTensor>> {
     let chunk = chunk.unwrap_or(&s.inner.window_tokens);
-    let w = drv.cfg.w_og;
-    let name = rt.manifest.name_tlin_window(&drv.preset, s.hist_bucket);
-    let toks = window_tokens_tensor(chunk, w)?;
-    let nv = HostTensor::from_i32(&[1], vec![chunk.len() as i32])?;
-    let gate = HostTensor::from_f32(&[1], vec![s.inner.ctx_gate])?;
-    let hlen = HostTensor::from_i32(&[1], vec![s.hist_len as i32])?;
-    rt.execute(
-        &name,
-        &[
-            &toks,
-            &nv,
-            &s.inner.ctx_k,
-            &s.inner.ctx_v,
-            &s.inner.ctx_sum,
-            &gate,
-            s.hist_k.as_ref().context("hist_k unset")?,
-            s.hist_v.as_ref().context("hist_v unset")?,
-            &hlen,
-        ],
+    run_window_raw(
+        drv,
+        rt,
+        chunk,
+        &s.inner.ctx_k,
+        &s.inner.ctx_v,
+        &s.inner.ctx_sum,
+        s.inner.ctx_gate,
+        s.hist_k.as_ref().context("hist_k unset")?,
+        s.hist_v.as_ref().context("hist_v unset")?,
+        s.hist_bucket,
+        s.hist_len,
     )
 }
 
@@ -128,6 +150,110 @@ pub fn prefill(
         }
     }
     Ok(last_logits)
+}
+
+/// Final tensors of a from-scratch TLin prompt absorption — the constant
+/// context/window half as moved [`PrefillParts`] plus the bucketed raw
+/// history slabs built up window by window (the history *is* a graph
+/// input every window, so a growing local pair is unavoidable; what the
+/// direct path drops is the boxed [`TLinState`] and its second copy into
+/// the arena slot).
+pub struct TLinPrefill {
+    pub inner: PrefillParts,
+    /// (nb, 1, hist_bucket, D), zero-padded past `hist_len`; `None` when
+    /// the prompt never completed a window.
+    pub hist_k: Option<HostTensor>,
+    pub hist_v: Option<HostTensor>,
+    pub hist_bucket: usize,
+    pub hist_len: usize,
+}
+
+/// Absorb a prompt from scratch without materializing a per-lane state
+/// (the direct-to-slot admission path, DESIGN.md D5/D7).
+pub fn prefill_parts(
+    drv: &ModelDriver,
+    rt: &mut Runtime,
+    tokens: &[i32],
+) -> Result<TLinPrefill> {
+    if tokens.is_empty() {
+        bail!("empty prompt (the engine prepends a BOS byte)");
+    }
+    let w = drv.cfg.w_og;
+    let (nb, d) = (drv.cfg.n_block, drv.cfg.d_model);
+    let mut p = TLinPrefill {
+        inner: PrefillParts::empty(),
+        hist_k: None,
+        hist_v: None,
+        hist_bucket: 0,
+        hist_len: 0,
+    };
+    for chunk in tokens.chunks(w) {
+        // Make room for one more window in the local history slabs.
+        let need = p.hist_len + w;
+        if p.hist_bucket < need || p.hist_k.is_none() {
+            let bucket = rt
+                .manifest
+                .bucket_for(&drv.preset, need.max(1))
+                .with_context(|| format!("history {need} exceeds largest bucket"))?;
+            match (&p.hist_k, &p.hist_v) {
+                (Some(k), Some(v)) => {
+                    p.hist_k = Some(grow_axis(k, 2, bucket)?);
+                    p.hist_v = Some(grow_axis(v, 2, bucket)?);
+                }
+                _ => {
+                    p.hist_k = Some(HostTensor::zeros_f32(&[nb, 1, bucket, d]));
+                    p.hist_v = Some(HostTensor::zeros_f32(&[nb, 1, bucket, d]));
+                }
+            }
+            p.hist_bucket = bucket;
+        }
+        let out = {
+            let pad = drv.pad_state();
+            let (ck, cv, cs) = match &p.inner.ctx {
+                Some((k, v, s)) => (k, v, s),
+                None => (&pad.ctx_k, &pad.ctx_v, &pad.ctx_sum),
+            };
+            run_window_raw(
+                drv,
+                rt,
+                chunk,
+                ck,
+                cv,
+                cs,
+                p.inner.gate,
+                p.hist_k.as_ref().unwrap(),
+                p.hist_v.as_ref().unwrap(),
+                p.hist_bucket,
+                p.hist_len,
+            )?
+        };
+        let mut it = out.into_iter();
+        let logits_t = it.next().context("logits")?;
+        let gen_k = it.next().context("gen_k")?;
+        let gen_v = it.next().context("gen_v")?;
+        let ctx_k = it.next().context("ctx_k")?;
+        let ctx_v = it.next().context("ctx_v")?;
+        let ctx_sum = it.next().context("ctx_sum")?;
+        let app_k = it.next().context("append_k")?;
+        let app_v = it.next().context("append_v")?;
+        p.inner.logits = logits_row(&logits_t, chunk.len() - 1, drv.cfg.vocab)?;
+        p.inner.tokens_seen += chunk.len();
+        if chunk.len() == w {
+            p.inner.ctx = Some((ctx_k, ctx_v, ctx_sum));
+            p.inner.gate = 1.0;
+            p.inner.fill = 0;
+            p.inner.window_tokens.clear();
+            p.inner.syncs += 1;
+            insert_axis(p.hist_k.as_mut().unwrap(), &app_k, 2, p.hist_len)?;
+            insert_axis(p.hist_v.as_mut().unwrap(), &app_v, 2, p.hist_len)?;
+            p.hist_len += w;
+        } else {
+            p.inner.gen = Some((gen_k, gen_v));
+            p.inner.fill = chunk.len();
+            p.inner.window_tokens = chunk.to_vec();
+        }
+    }
+    Ok(p)
 }
 
 /// Continue an existing state with `tokens` — the session-resume path

@@ -25,7 +25,10 @@
 //! `Content-Length`s are answered `413` without parsing a truncated body.
 //! Concurrent connections are capped by [`ServerConfig::max_conns`]
 //! (excess accepts are answered `503` immediately) so a client flood
-//! cannot exhaust server threads.
+//! cannot exhaust server threads. When the engine's per-session rate
+//! limit is enabled (`--session-rate`), over-rate turns are answered
+//! `429 Too Many Requests` with a `Retry-After` header instead of
+//! queuing unboundedly (DESIGN.md D7).
 //!
 //! One thread per connection; requests are forwarded to the engine thread
 //! through [`EngineHandle`], so HTTP concurrency never touches PJRT state.
@@ -125,23 +128,50 @@ fn drain_body(stream: &mut TcpStream, declared: usize, limit: usize) {
 }
 
 fn respond(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    respond_with(stream, status, &[], body)
+}
+
+/// Like [`respond`], with extra response headers (e.g. `Retry-After` on a
+/// 429 from the router's per-session rate limiter).
+fn respond_with(
+    stream: &mut TcpStream,
+    status: u16,
+    extra_headers: &[(&str, String)],
+    body: &str,
+) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
         409 => "Conflict",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Error",
     };
+    let mut headers = String::new();
+    for (k, v) in extra_headers {
+        headers.push_str(&format!("{k}: {v}\r\n"));
+    }
     write!(
         stream,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+         Content-Length: {}\r\n{headers}Connection: close\r\n\r\n{body}",
         body.len()
     )?;
     Ok(())
+}
+
+/// Whole seconds to advertise in `Retry-After`, parsed from the router's
+/// "… retry after 1.23s" rejection message (ceiling, min 1).
+fn retry_after_secs(msg: &str) -> u64 {
+    msg.rsplit("retry after")
+        .next()
+        .and_then(|tail| tail.trim().trim_end_matches('s').parse::<f64>().ok())
+        .map(|s| s.max(0.0).ceil() as u64)
+        .unwrap_or(1)
+        .max(1)
 }
 
 /// Parse `/v1/sessions/{id}[/tail]` → (id, tail).
@@ -205,6 +235,7 @@ fn response_json(resp: &Response) -> Json {
                 ("syncs", Json::num(resp.metrics.syncs as f64)),
                 ("peak_kv_bytes", Json::num(resp.metrics.peak_kv_bytes as f64)),
                 ("tokens_per_s", Json::num(resp.metrics.tokens_per_s())),
+                ("worker", Json::num(resp.metrics.worker as f64)),
             ]),
         ),
     ];
@@ -253,6 +284,18 @@ fn handle_turn(
         Some(StreamEvent::Error(e)) => {
             // Coarse mapping of the engine's rejection reasons; anything
             // unrecognized is a server-side failure, not a client fault.
+            let body = Json::obj(vec![("error", Json::str(e.clone()))]).to_string();
+            if e.contains("rate limited") {
+                // The router's token bucket rejected the turn before it
+                // queued; tell the client when to come back instead of
+                // holding the connection.
+                return respond_with(
+                    stream,
+                    429,
+                    &[("Retry-After", retry_after_secs(&e).to_string())],
+                    &body,
+                );
+            }
             let status = if e.contains("unknown session") {
                 404
             } else if e.contains("turn in flight") {
@@ -260,11 +303,7 @@ fn handle_turn(
             } else {
                 500
             };
-            return respond(
-                stream,
-                status,
-                &Json::obj(vec![("error", Json::str(e))]).to_string(),
-            );
+            return respond(stream, status, &body);
         }
         Some(ev) => ev,
         None => return respond(stream, 503, r#"{"error":"engine unavailable"}"#),
@@ -449,9 +488,28 @@ pub fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
 /// well-formed helpers cannot produce, e.g. an oversize Content-Length
 /// with no body).
 pub fn http_request_raw(addr: &str, raw: &str) -> Result<(u16, String)> {
+    let (status, full) = http_request_raw_headers(addr, raw)?;
+    let body = full
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
+}
+
+/// Like [`http_request_raw`], but returns the whole raw response —
+/// status line and headers included — for tests asserting on headers
+/// (e.g. `Retry-After` on a 429).
+pub fn http_request_raw_headers(addr: &str, raw: &str) -> Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr)?;
     stream.write_all(raw.as_bytes())?;
-    read_response(&mut stream)
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    Ok((status, buf))
 }
 
 fn read_response(stream: &mut TcpStream) -> Result<(u16, String)> {
@@ -561,6 +619,20 @@ impl SseStream {
             self.reader.read_exact(&mut crlf)?;
             self.buf.push_str(&String::from_utf8_lossy(&data));
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_after_parses_router_hint() {
+        let hint = "rate limited: session 3 over 1.00 turns/s; retry after 0.37s";
+        assert_eq!(retry_after_secs(hint), 1);
+        assert_eq!(retry_after_secs("retry after 2.10s"), 3);
+        assert_eq!(retry_after_secs("retry after 5s"), 5);
+        assert_eq!(retry_after_secs("no hint at all"), 1);
     }
 }
 

@@ -29,11 +29,9 @@ fn tiny_cfg(arch: Arch) -> EngineConfig {
         arch,
         sync_mode: SyncMode::Incremental,
         max_lanes: 4,
-        sched: Default::default(),
-        checkpoint: None,
-        resident: true,
         staging: ArenaStaging::DeviceArena,
         session_ttl: Duration::from_secs(600),
+        ..Default::default()
     }
 }
 

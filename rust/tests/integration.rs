@@ -424,6 +424,76 @@ fn arena_steady_state_decode_is_copy_free() {
     }
 }
 
+/// Admission prefills **directly into the arena slot view** (DESIGN.md
+/// D5 / ROADMAP): no per-lane state tensors are materialized (state
+/// constructors are metered through `copy_metrics`) and the slabs are
+/// written exactly once — the old materialize+copy admission paid an
+/// extra O(state) on every miss. The resulting lane must still be
+/// bit-identical to a legacy boxed-state prefill.
+#[test]
+fn admission_prefill_writes_slot_view_directly() {
+    require_artifacts!();
+    let mut rt = rt();
+
+    // TConst: the constant-size state makes the bound exact — five slab
+    // writes totalling exactly one lane.
+    let driver = ModelDriver::new(&rt, "tiny", Arch::TConst).unwrap();
+    let cap = rt.manifest.batch_bucket_for(3).unwrap();
+    let mut arena = driver.new_arena(cap);
+    let p = prompt(40); // crosses W_og=32: folded context AND a partial window
+    // Warm admission: compiles the graphs and materializes the driver's
+    // shared pad state outside the metered section.
+    let s0 = arena.alloc().unwrap();
+    driver.prefill_resident(&mut rt, &mut arena, s0, &p).unwrap();
+
+    let s1 = arena.alloc().unwrap();
+    copy_metrics::reset();
+    let logits = driver.prefill_resident(&mut rt, &mut arena, s1, &p).unwrap();
+    let m = copy_metrics::snapshot();
+    assert_eq!(m.tensor_allocs, 0, "admission materialized per-lane state tensors");
+    assert_eq!(m.gather_scatter_calls, 5, "admission must write each slab once");
+    assert_eq!(
+        m.bytes_copied,
+        arena.bytes_per_slot(),
+        "admission must copy exactly one lane of the slabs"
+    );
+
+    // Bit-identical to the boxed-state prefill it replaced.
+    let mut st = driver.new_state();
+    let l_legacy = driver.prefill(&mut rt, &mut st, &p).unwrap();
+    assert_eq!(logits, l_legacy, "direct slot prefill changed the logits");
+    assert_states_identical(Arch::TConst, &arena.extract_state(s1).unwrap(), &st);
+
+    // A window-boundary prompt (empty generation window) matches too.
+    let s2 = arena.alloc().unwrap();
+    let lb = driver.prefill_resident(&mut rt, &mut arena, s2, &prompt(32)).unwrap();
+    let mut st_b = driver.new_state();
+    let lb_legacy = driver.prefill(&mut rt, &mut st_b, &prompt(32)).unwrap();
+    assert_eq!(lb, lb_legacy);
+    assert_states_identical(Arch::TConst, &arena.extract_state(s2).unwrap(), &st_b);
+
+    // TLin / Base: growing-cache archs also admit without materializing a
+    // state (their lane's history/cache rows are written as lane data).
+    for arch in [Arch::TLin, Arch::Base] {
+        let driver = ModelDriver::new(&rt, "tiny", arch).unwrap();
+        let mut arena = driver.new_arena(cap);
+        let s0 = arena.alloc().unwrap();
+        driver.prefill_resident(&mut rt, &mut arena, s0, &p).unwrap();
+        let s1 = arena.alloc().unwrap();
+        copy_metrics::reset();
+        let logits = driver.prefill_resident(&mut rt, &mut arena, s1, &p).unwrap();
+        let m = copy_metrics::snapshot();
+        assert_eq!(
+            m.tensor_allocs, 0,
+            "{arch:?}: admission materialized per-lane state tensors"
+        );
+        let mut st = driver.new_state();
+        let l_legacy = driver.prefill(&mut rt, &mut st, &p).unwrap();
+        assert_eq!(logits, l_legacy, "{arch:?}: direct slot prefill changed logits");
+        assert_states_identical(arch, &arena.extract_state(s1).unwrap(), &st);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Device-resident arena staging (DESIGN.md D5 device residency)
 // ---------------------------------------------------------------------------

@@ -3,8 +3,10 @@
 //! PJRT needed — these run everywhere, fast.
 
 use tconstformer::analytic::{cost, memory};
-use tconstformer::coordinator::kv_manager::{KvLimits, KvManager};
-use tconstformer::coordinator::scheduler::{SchedConfig, Scheduler};
+use tconstformer::coordinator::kv_manager::{KvLimits, KvManager, WorkerLoadSnapshot};
+use tconstformer::coordinator::scheduler::{
+    pick_worker, should_migrate, SchedConfig, Scheduler,
+};
 use tconstformer::model::arena::LaneArena;
 use tconstformer::model::batch::{
     concat_axis, copy_block, grow_axis, insert_axis, read_block, split_axis,
@@ -146,6 +148,85 @@ fn prop_scheduler_resume_lane_never_queues_behind_cold() {
                         plan.admit
                     ));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Router placement invariants (DESIGN.md D7)
+// ---------------------------------------------------------------------------
+
+fn arb_load(r: &mut Rng, worker: usize) -> WorkerLoadSnapshot {
+    WorkerLoadSnapshot {
+        worker,
+        live_lanes: r.usize(0, 5),
+        parked_lanes: r.usize(0, 5),
+        live_bytes: r.range(0, 1 << 20),
+        parked_bytes: r.range(0, 1 << 20),
+        queue_depth: r.usize(0, 4),
+        inflight: r.usize(0, 4),
+        max_lanes: r.usize(1, 8),
+    }
+}
+
+#[test]
+fn prop_pick_worker_is_minimal_and_in_range() {
+    check_no_shrink(
+        "pick_worker_minimal",
+        400,
+        3,
+        |r| {
+            let n = r.usize(1, 8);
+            (0..n).map(|i| arb_load(r, i)).collect::<Vec<_>>()
+        },
+        |loads| {
+            let w = pick_worker(loads);
+            if w >= loads.len() {
+                return Err(format!("picked {w} of {}", loads.len()));
+            }
+            let key = |l: &WorkerLoadSnapshot| {
+                (l.is_saturated(), l.committed_turns(), l.pinned_bytes())
+            };
+            // No worker is strictly better than the pick (free lanes beat
+            // saturation, then emptiest bucket); ties break to the lowest
+            // index (deterministic placement — identical request streams
+            // place identically).
+            for (i, l) in loads.iter().enumerate() {
+                if key(l) < key(&loads[w]) {
+                    return Err(format!("worker {i} beats pick {w}"));
+                }
+                if key(l) == key(&loads[w]) && i < w {
+                    return Err(format!("tie not broken to lowest index: {i} vs {w}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_should_migrate_requires_saturated_owner_and_free_candidate() {
+    check_no_shrink(
+        "should_migrate_guard",
+        400,
+        4,
+        |r| (arb_load(r, 0), arb_load(r, 1)),
+        |(owner, cand)| {
+            let m = should_migrate(owner, cand);
+            if m && !owner.is_saturated() {
+                return Err("migrated off a worker with room".into());
+            }
+            if m && cand.is_saturated() {
+                return Err("migrated into a saturated worker".into());
+            }
+            if should_migrate(owner, owner) {
+                return Err("self-migration".into());
+            }
+            // The decision is exactly its spec (no hidden conditions).
+            if m != (owner.is_saturated() && !cand.is_saturated()) {
+                return Err("decision diverges from spec".into());
             }
             Ok(())
         },
