@@ -199,6 +199,87 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- park-aware grouping: full-group rounds vs parked-lane fraction -----
+    // DESIGN.md D8: rounds with parked-resident lanes used to drop to the
+    // partial lane-copy path. Masked grouping keeps the full-slab adoption
+    // path; meter 0/25/50% parked lanes, masked vs the pre-D8 partial
+    // behavior — rounds on the full-group path and host copy B per
+    // steady-state step, both in the JSON artifact.
+    let park_steps = 24usize;
+    let mut park_rows: Vec<Json> = Vec::new();
+    for &n_parked in &[0usize, 1, 2] {
+        let run = |rt: &mut Runtime, mask: bool| -> anyhow::Result<(f64, f64)> {
+            let mut arena = driver.new_arena(cap);
+            let mut slots = Vec::new();
+            for st in &states {
+                let slot = arena.alloc()?;
+                arena.load_state(slot, st)?;
+                slots.push(slot);
+            }
+            for &s in &slots[..n_parked] {
+                driver.park_resident(rt, &mut arena, s)?;
+            }
+            let live: Vec<usize> = slots[n_parked..].to_vec();
+            let mut toks = vec![65i32; live.len()];
+            driver.decode_resident_grouped(rt, &mut arena, &live, &toks, mask)?; // warm
+            let g0 = arena.group_stats;
+            let mut measured = 0usize;
+            let mut bytes = 0u64;
+            for _ in 0..park_steps {
+                let boundary =
+                    live.iter().any(|&s| arena.lanes[s].fill >= driver.cfg.w_og);
+                let c0 = copy_metrics::snapshot();
+                let l = driver.decode_resident_grouped(rt, &mut arena, &live, &toks, mask)?;
+                if !boundary {
+                    let c1 = copy_metrics::snapshot();
+                    bytes += c1.bytes_copied - c0.bytes_copied;
+                    measured += 1;
+                }
+                toks = l
+                    .iter()
+                    .map(|x| tconstformer::model::sampler::argmax(x))
+                    .collect();
+            }
+            let g = arena.group_stats;
+            let full = g.full_group_rounds - g0.full_group_rounds;
+            let partial = g.partial_group_rounds - g0.partial_group_rounds;
+            let full_frac = full as f64 / (full + partial).max(1) as f64;
+            Ok((full_frac, bytes as f64 / measured.max(1) as f64))
+        };
+        let (full_m, bytes_m) = run(&mut rt, true)?;
+        let (full_p, bytes_p) = run(&mut rt, false)?;
+        println!(
+            "park {n_parked}/4 lanes: masked  {:>5.0}% full-group rounds, {:>10.1} B/step | \
+             partial-path {:>5.0}% full-group rounds, {:>10.1} B/step",
+            100.0 * full_m,
+            bytes_m,
+            100.0 * full_p,
+            bytes_p
+        );
+        // With parked lanes present, masked grouping must keep every round
+        // on the full path at zero steady-state copies; the pre-D8 path
+        // loses the full path entirely.
+        assert!(
+            (full_m - 1.0).abs() < 1e-9,
+            "masked rounds fell off the full-group path ({full_m})"
+        );
+        assert_eq!(bytes_m, 0.0, "masked steady state copied {bytes_m} B/step");
+        if n_parked > 0 {
+            assert!(
+                full_p < 1e-9,
+                "partial-path arm unexpectedly took the full path ({full_p})"
+            );
+        }
+        park_rows.push(Json::obj(vec![
+            ("parked_lanes", Json::num(n_parked as f64)),
+            ("total_lanes", Json::num(lanes as f64)),
+            ("masked_full_group_frac", Json::num(full_m)),
+            ("masked_copy_bytes_per_step", Json::num(bytes_m)),
+            ("partial_full_group_frac", Json::num(full_p)),
+            ("partial_copy_bytes_per_step", Json::num(bytes_p)),
+        ]));
+    }
+
     // --- session resume cost: O(new tokens), independent of history --------
     // Two parked conversations, one ~8x longer than the other (the long
     // one crosses many sync windows). Resuming each with ONE new token
@@ -281,6 +362,7 @@ fn main() -> anyhow::Result<()> {
                 ),
             ]),
         ),
+        ("park_grouping", Json::Arr(park_rows)),
         (
             "resume_turn",
             Json::obj(vec![

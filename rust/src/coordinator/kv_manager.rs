@@ -280,6 +280,9 @@ impl KvManager {
     // -- parked-vs-live accounting (DESIGN.md D6) ---------------------------
 
     /// Mark a live sequence as parked (true) or back in a turn (false).
+    /// In resident mode the flag is mirrored onto the arena lane
+    /// ([`crate::model::arena::LaneMeta::parked`]) so decode-group
+    /// formation can carry the lane as a masked row (DESIGN.md D8).
     pub fn set_parked(&mut self, seq_id: u64, parked: bool) {
         if parked {
             if !self.parked.contains(&seq_id) {
@@ -287,6 +290,16 @@ impl KvManager {
             }
         } else {
             self.parked.retain(|&id| id != seq_id);
+        }
+        if let Some(slot) = self.lane_of(seq_id) {
+            if let Some(r) = &mut self.resident {
+                // Route through the arena's validated entry point: a slot
+                // lane_of just resolved must be occupied, so a failure here
+                // is a lane-table/arena desync worth crashing on.
+                r.arena
+                    .set_parked(slot, parked)
+                    .expect("kv lane table desynced from arena occupancy");
+            }
         }
     }
 
@@ -534,6 +547,14 @@ mod tests {
         assert_eq!(kv.live_bytes(), per);
         kv.set_parked(1, true); // idempotent
         assert_eq!(kv.n_parked(), 1);
+
+        // the flag is mirrored onto the arena lane (DESIGN.md D8)
+        let slot1 = kv.lane_of(1).unwrap();
+        assert!(kv.arena().unwrap().lanes[slot1].parked);
+        assert_eq!(kv.arena().unwrap().parked_slots(), vec![slot1]);
+        kv.set_parked(1, false);
+        assert!(!kv.arena().unwrap().lanes[slot1].parked);
+        kv.set_parked(1, true);
 
         // resuming un-parks; freeing a parked lane drops it from the set
         kv.set_parked(1, false);

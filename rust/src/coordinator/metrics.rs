@@ -28,6 +28,15 @@ pub struct EngineMetrics {
     pub prefill_tokens: u64,
     pub decode_steps: u64,
     pub sync_events: u64,
+    /// Decode-group formation (DESIGN.md D8), mirrored from the arena's
+    /// [`crate::model::arena::GroupStats`]: rounds that took the zero-copy
+    /// full-slab adoption path vs the partial lane-copy fallback, parked
+    /// rows carried masked (summed over rounds), and park-boundary window
+    /// folds. All zero on the legacy (non-resident) path.
+    pub decode_full_group_rounds: u64,
+    pub decode_partial_group_rounds: u64,
+    pub decode_masked_lane_steps: u64,
+    pub park_compactions: u64,
     /// Session lifecycle counters (DESIGN.md D6).
     pub sessions_opened: u64,
     pub sessions_closed: u64,
@@ -85,6 +94,10 @@ impl Default for EngineMetrics {
             prefill_tokens: 0,
             decode_steps: 0,
             sync_events: 0,
+            decode_full_group_rounds: 0,
+            decode_partial_group_rounds: 0,
+            decode_masked_lane_steps: 0,
+            park_compactions: 0,
             sessions_opened: 0,
             sessions_closed: 0,
             sessions_evicted: 0,
@@ -162,6 +175,19 @@ impl EngineMetrics {
             ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
             ("decode_steps", Json::num(self.decode_steps as f64)),
             ("sync_events", Json::num(self.sync_events as f64)),
+            (
+                "decode_full_group_rounds",
+                Json::num(self.decode_full_group_rounds as f64),
+            ),
+            (
+                "decode_partial_group_rounds",
+                Json::num(self.decode_partial_group_rounds as f64),
+            ),
+            (
+                "decode_masked_lane_steps",
+                Json::num(self.decode_masked_lane_steps as f64),
+            ),
+            ("park_compactions", Json::num(self.park_compactions as f64)),
             ("throughput_tok_s", Json::num(self.throughput_tok_s())),
             ("ttft_ms_p50", Json::num(nan0(self.ttft_ms.p50()))),
             ("ttft_ms_p95", Json::num(nan0(self.ttft_ms.p95()))),
@@ -232,6 +258,10 @@ const SUM_KEYS: &[&str] = &[
     "prefill_tokens",
     "decode_steps",
     "sync_events",
+    "decode_full_group_rounds",
+    "decode_partial_group_rounds",
+    "decode_masked_lane_steps",
+    "park_compactions",
     "throughput_tok_s",
     "kv_bytes_current",
     "kv_bytes_peak",

@@ -14,6 +14,19 @@
 //! `Send + Clone` and what the HTTP frontend holds). With `workers = 1`
 //! this degenerates to the classic single-GPU vLLM-style loop: admission
 //! → prefill → batched decode rounds → completion.
+//!
+//! Invariants this layer guarantees (each pinned by a named test; see
+//! ARCHITECTURE.md for the full map):
+//! * steady-state decode rounds take the resident arena's zero-copy
+//!   full-slab path, **including with parked sessions present**
+//!   (DESIGN.md D5/D8; `parked_sessions_keep_full_group_zero_copy_decode`);
+//! * a resumed turn's stream is bit-identical to a cold request over the
+//!   concatenated history for TConst/TLin (DESIGN.md D6);
+//! * a `workers = N` engine serves bit-identical streams to
+//!   `workers = 1` for the same workload (DESIGN.md D7);
+//! * KV byte accounting is exact (Eq. 6/7 via
+//!   [`crate::analytic::memory`]) and admission is backpressure, not
+//!   failure.
 
 pub mod engine;
 pub mod kv_manager;

@@ -64,11 +64,67 @@ pub struct SchedConfig {
     /// Max session resumes admitted per round (cheap — only new tokens are
     /// absorbed — but still bounded to cap round-time jitter).
     pub resume_per_round: usize,
+    /// Park-aware decode grouping (DESIGN.md D8): carry parked-resident
+    /// lanes through decode as masked rows so rounds keep the full-slab
+    /// adoption path. `false` forces the pre-D8 partial-group behavior
+    /// (the A/B arm of the parity tests and benches).
+    pub park_masking: bool,
+    /// Hysteresis depth of [`GroupPolicy`]: consecutive maskable rounds
+    /// required to re-enter masking after a round where it was not viable.
+    /// 0 disables the hysteresis (re-enter immediately).
+    pub mask_reentry_rounds: u32,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        SchedConfig { max_batch: 4, prefill_per_round: 1, resume_per_round: 4 }
+        SchedConfig {
+            max_batch: 4,
+            prefill_per_round: 1,
+            resume_per_round: 4,
+            park_masking: true,
+            mask_reentry_rounds: 2,
+        }
+    }
+}
+
+/// Per-round decision: do parked lanes ride this decode group as masked
+/// rows (DESIGN.md D8)? Pure hysteresis over the arena's per-round
+/// viability signal (`LaneArena::park_mask_viable`), so mode flips are
+/// damped: every masked↔partial transition re-stages the `gen_*`/`cache_*`
+/// slabs across the host↔device boundary under device staging, and a
+/// viability signal flickering at a bucket edge would otherwise thrash
+/// those transfers every round. One blocked round drops to the partial
+/// path immediately (correctness gate); re-entering the masked path then
+/// requires `reentry_rounds` consecutive viable rounds.
+#[derive(Debug, Clone)]
+pub struct GroupPolicy {
+    reentry_rounds: u32,
+    streak: u32,
+    masking: bool,
+}
+
+impl GroupPolicy {
+    pub fn new(reentry_rounds: u32) -> Self {
+        GroupPolicy { reentry_rounds, streak: 0, masking: true }
+    }
+
+    /// Decide whether this round's decode group masks parked rows, given
+    /// whether masking is viable this round. Never returns `true` on a
+    /// non-viable round.
+    pub fn decide(&mut self, viable: bool) -> bool {
+        if !viable {
+            self.masking = false;
+            self.streak = 0;
+            return false;
+        }
+        if !self.masking {
+            self.streak += 1;
+            if self.streak >= self.reentry_rounds {
+                self.masking = true;
+                self.streak = 0;
+            }
+        }
+        self.masking
     }
 }
 
@@ -84,15 +140,33 @@ pub struct Plan {
     pub groups: Vec<Vec<u64>>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Scheduler {
     cfg: SchedConfig,
     rotate: usize,
+    group_policy: GroupPolicy,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Scheduler::new(SchedConfig::default())
+    }
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedConfig) -> Self {
-        Scheduler { cfg, rotate: 0 }
+        let group_policy = GroupPolicy::new(cfg.mask_reentry_rounds);
+        Scheduler { cfg, rotate: 0, group_policy }
+    }
+
+    /// Per-round park-masking decision (DESIGN.md D8): feeds the arena's
+    /// viability signal through the [`GroupPolicy`] hysteresis. Always
+    /// `false` when `SchedConfig::park_masking` is off.
+    pub fn decide_group_mask(&mut self, viable: bool) -> bool {
+        if !self.cfg.park_masking {
+            return false;
+        }
+        self.group_policy.decide(viable)
     }
 
     fn admissions(
@@ -295,6 +369,45 @@ mod tests {
         assert!(!should_migrate(&full, &full), "no self-migration");
         let also_full = load(1, 1, 0, 0, 0, 0, 1);
         assert!(!should_migrate(&full, &also_full), "no migration into a full worker");
+    }
+
+    #[test]
+    fn group_policy_masks_until_blocked_then_requires_a_streak() {
+        let mut p = GroupPolicy::new(2);
+        // steady viable rounds keep masking on (incl. the vacuous
+        // no-parked-lanes case, which reports viable)
+        assert!(p.decide(true));
+        assert!(p.decide(true));
+        // a blocked round drops to partial immediately
+        assert!(!p.decide(false));
+        // one viable round is not enough to re-enter...
+        assert!(!p.decide(true));
+        // ...two consecutive are
+        assert!(p.decide(true));
+        assert!(p.decide(true));
+        // a block mid-streak resets the streak
+        let mut p = GroupPolicy::new(2);
+        assert!(!p.decide(false));
+        assert!(!p.decide(true));
+        assert!(!p.decide(false));
+        assert!(!p.decide(true));
+        assert!(p.decide(true));
+    }
+
+    #[test]
+    fn group_policy_zero_reentry_recovers_immediately() {
+        let mut p = GroupPolicy::new(0);
+        assert!(!p.decide(false));
+        assert!(p.decide(true), "reentry_rounds = 0 disables the hysteresis");
+    }
+
+    #[test]
+    fn scheduler_group_mask_respects_config_kill_switch() {
+        let mut s = Scheduler::new(SchedConfig { park_masking: false, ..Default::default() });
+        assert!(!s.decide_group_mask(true), "masking disabled by config");
+        let mut s = Scheduler::new(SchedConfig::default());
+        assert!(s.decide_group_mask(true));
+        assert!(!s.decide_group_mask(false));
     }
 
     #[test]

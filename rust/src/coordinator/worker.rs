@@ -13,18 +13,31 @@
 //! * **owned** — construct [`Worker`] (re-exported as
 //!   `coordinator::Engine`) and call [`Worker::run_workload`] /
 //!   [`Worker::step`] directly (benches, examples, tests);
-//! * **spawned** — [`spawn_worker`] moves it onto a dedicated thread and
-//!   returns a [`WorkerHandle`] the router drives through [`WorkerMsg`]s.
+//! * **spawned** — `spawn_worker` (crate-internal) moves it onto a
+//!   dedicated thread and returns a `WorkerHandle` the router drives
+//!   through `WorkerMsg`s.
 //!
 //! Sessions: a [`TurnRequest`] with a `session_id` runs against persistent
 //! KV state. On `TurnDone` the lane's state is **parked** — kept resident
 //! in its arena slot while capacity allows, spilled to a host-mirror
 //! [`SeqState`] under pressure — and the next turn **resumes** it,
 //! prefilling only the new tokens. Idle parked sessions are evicted by
-//! TTL + LRU. A *spilled* session is relocatable: the router may
-//! [`Worker::export_session`] it off a saturated worker and import it
-//! elsewhere; parked-resident sessions refuse export (their lane IS the
-//! cheap resume — session affinity).
+//! TTL + LRU. A *spilled* session is relocatable: the router may ask the
+//! worker to export it (`Worker::export_session`, crate-internal) off a
+//! saturated worker and import it elsewhere; parked-resident sessions
+//! refuse export (their lane IS the cheap resume — session affinity).
+//!
+//! Parked lanes do **not** demote decode rounds: park-aware grouping
+//! (DESIGN.md D8) carries them through each round as masked rows, so the
+//! group still covers every occupied slot and the zero-copy full-slab
+//! adoption path applies. The per-round decision flows arena
+//! (`park_mask_viable`) → scheduler hysteresis
+//! ([`super::scheduler::Scheduler::decide_group_mask`]) → driver
+//! (`decode_resident_grouped`); turn finish runs the park-boundary
+//! compaction (`ModelDriver::park_resident`) that keeps parked windows
+//! maskable. `/metrics` exposes the formation counters
+//! (`decode_full_group_rounds` / `decode_partial_group_rounds` /
+//! `decode_masked_lane_steps` / `park_compactions`).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
@@ -563,6 +576,15 @@ impl Worker {
         self.metrics.dev_upload_calls += xfer.upload_calls;
         self.metrics.dev_download_bytes += xfer.download_bytes;
         self.metrics.dev_download_calls += xfer.download_calls;
+        // Decode-group formation counters (DESIGN.md D8): the arena is the
+        // source of truth, the metrics snapshot mirrors its totals.
+        if let Some(arena) = self.kv.arena() {
+            let g = arena.group_stats;
+            self.metrics.decode_full_group_rounds = g.full_group_rounds;
+            self.metrics.decode_partial_group_rounds = g.partial_group_rounds;
+            self.metrics.decode_masked_lane_steps = g.masked_lane_steps;
+            self.metrics.park_compactions = g.park_compactions;
+        }
         let kv_now = self.kv.touch();
         self.metrics.observe_kv(kv_now);
         self.metrics
@@ -844,9 +866,22 @@ impl Worker {
                 .iter()
                 .map(|&id| self.kv.lane_of(id).context("live lane has no arena slot"))
                 .collect::<Result<_>>()?;
+            // Park-aware grouping (DESIGN.md D8): carry parked lanes as
+            // masked rows whenever the arena reports it viable, damped by
+            // the scheduler's hysteresis so the mode doesn't thrash at a
+            // viability edge. A masked round keeps the full-slab adoption
+            // path — zero copies — even with parked sessions present.
+            // (Resident plans produce exactly one group per round, so the
+            // hysteresis consumes one decision per round as its doc says.)
+            let viable = self
+                .kv
+                .arena()
+                .map(|a| a.park_mask_viable(&slots))
+                .unwrap_or(false);
+            let mask = self.sched.decide_group_mask(viable);
             let arena = self.kv.arena_mut().context("resident pool lost its arena")?;
             self.driver
-                .decode_resident(&mut self.rt, arena, &slots, &tokens)?
+                .decode_resident_grouped(&mut self.rt, arena, &slots, &tokens, mask)?
         } else {
             let mut lanes = self.kv.get_many_mut(&ids)?;
             self.driver
@@ -909,18 +944,32 @@ impl Worker {
             let seq_id = live.seq_id;
             let bytes = self.kv.seq_bytes(seq_id);
             let tokens_absorbed = self.kv.tokens_seen(seq_id);
-            let syncs = if self.kv.is_resident() {
-                let slot = self.kv.lane_of(seq_id).context("live lane has no slot")?;
-                let arena = self.kv.arena().context("resident pool lost its arena")?;
-                arena.lanes[slot].syncs
+            let resident_slot = if self.kv.is_resident() {
+                Some(self.kv.lane_of(seq_id).context("live lane has no slot")?)
             } else {
-                match self.kv.get(seq_id).context("live state missing")? {
+                None
+            };
+            let syncs = match resident_slot {
+                Some(slot) => {
+                    let arena = self.kv.arena().context("resident pool lost its arena")?;
+                    arena.lanes[slot].syncs
+                }
+                None => match self.kv.get(seq_id).context("live state missing")? {
                     SeqState::TConst(s) => s.syncs,
                     SeqState::TLin(s) => s.inner.syncs,
                     _ => 0,
-                }
+                },
             };
             self.kv.set_parked(seq_id, true);
+            // Park-boundary compaction (DESIGN.md D8): fold an exactly-full
+            // generation window now so the parked lane stays maskable and
+            // the decode group keeps the full-slab adoption path while it
+            // sits out. Same fold the resume replay would run — resumed
+            // streams are bit-identical either way.
+            if let Some(slot) = resident_slot {
+                let arena = self.kv.arena_mut().context("resident pool lost its arena")?;
+                self.driver.park_resident(&mut self.rt, arena, slot)?;
+            }
             let sid = live.session.unwrap();
             let sess = self.sessions.get_mut(&sid).unwrap();
             sess.state = ParkedState::Resident(seq_id);

@@ -34,6 +34,36 @@
 //! at the events that already touch per-lane tensors: admission, the
 //! periodic sync cache miss, partial-group lane-copy, bucket migration,
 //! and explicit [`LaneArena::sync_host`] (eviction inspection / tests).
+//!
+//! **Park-aware decode grouping** (DESIGN.md D8): a parked-resident lane
+//! ([`LaneMeta::parked`], set by the session layer between turns) has no
+//! live turn, so it is never *in* the decode group — but it still
+//! occupies its slot. Instead of demoting every round with parked lanes
+//! to the partial-group lane-copy path, [`LaneArena::decode`] rides the
+//! parked slots along as **masked rows**: each is fed token 0 at its own
+//! append position (`fill`/`pos`), its logits row is discarded, and its
+//! lane clocks never advance. Because the decode graphs treat batch rows
+//! independently and mask positions `>= fill/pos` on read, the masked
+//! row's single garbage write lands exactly where the lane's next real
+//! token will be written — dead bytes until they are overwritten. The
+//! group (live ∪ masked) then covers every occupied slot again and the
+//! full-slab adoption path applies: **zero** host copies and zero
+//! O(state) host↔device traffic per steady-state round, parked lanes or
+//! not. Invariants asserted by the test suite:
+//!
+//! * masked rows never change a live row's logits — streams are
+//!   bit-identical to the partial-group path
+//!   (`parked_lanes_ride_masked_bit_identically`, both stagings);
+//! * steady-state rounds with parked lanes present report zero
+//!   gather/scatter through [`super::batch::copy_metrics`]
+//!   (`parked_sessions_keep_full_group_zero_copy_decode`);
+//! * a parked TConst/TLin lane always has `fill < W_og` — a full window
+//!   is folded at park time ([`LaneArena::park_compact`]) so the masked
+//!   write can never clamp onto a real window position;
+//! * a masked baseline row requires `pos < bucket` (the append slot must
+//!   exist); when violated the round falls back to the partial path —
+//!   [`LaneArena::park_mask_viable`] is the per-round gate the
+//!   scheduler's hysteresis policy consumes.
 
 use anyhow::{bail, Context, Result};
 
@@ -113,6 +143,10 @@ const BASE_KEYS: &[&str] = &["cache_k", "cache_v"];
 #[derive(Debug, Clone, Default)]
 pub struct LaneMeta {
     pub occupied: bool,
+    /// Parked between session turns (DESIGN.md D6/D8): the slot stays
+    /// occupied but has no live turn, so decode rides it along as a
+    /// masked row instead of dropping to the partial-group path.
+    pub parked: bool,
     /// Generation-window fill (TConst/TLin: the old `TConstState::slot`).
     pub fill: usize,
     /// Context gate (0 until the first sync folds a window).
@@ -133,6 +167,30 @@ impl LaneMeta {
     fn reset(&mut self) {
         *self = LaneMeta::default();
     }
+}
+
+/// Running counters of decode-group formation (DESIGN.md D8) — how often
+/// decode took the full-slab adoption path vs the partial lane-copy path,
+/// how many parked rows rode along masked, and how many park-boundary
+/// window folds kept parked lanes maskable. Monotone; the engine surfaces
+/// them in `/metrics` as `decode_full_group_rounds` /
+/// `decode_partial_group_rounds` / `decode_masked_lane_steps` /
+/// `park_compactions`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GroupStats {
+    /// Decode rounds whose group (live ∪ masked) covered every occupied
+    /// slot — the zero-copy full-slab adoption path.
+    pub full_group_rounds: u64,
+    /// Decode rounds that fell back to fetching outputs and lane-copying
+    /// only the stepped rows.
+    pub partial_group_rounds: u64,
+    /// Parked rows carried through decode as masked rows, summed over
+    /// rounds (k parked lanes for r rounds count k·r).
+    pub masked_lane_steps: u64,
+    /// Park-boundary compactions: full generation windows folded at park
+    /// time ([`LaneArena::park_compact`]) so the parked lane stays
+    /// maskable (`fill < W_og`).
+    pub park_compactions: u64,
 }
 
 /// One lane's constant-state tensors in slab order:
@@ -221,6 +279,8 @@ pub struct LaneArena {
     pub cap: usize,
     pub lanes: Vec<LaneMeta>,
     pub state: ArenaState,
+    /// Decode-group formation counters (DESIGN.md D8).
+    pub group_stats: GroupStats,
     free: Vec<usize>,
     // Reusable per-step input vectors, written in place — the decode loop
     // never allocates these.
@@ -256,6 +316,7 @@ impl LaneArena {
             cap,
             lanes: vec![LaneMeta::default(); cap],
             state,
+            group_stats: GroupStats::default(),
             free: (0..cap).rev().collect(),
             scr_tok: HostTensor::zeros_i32(&[cap]),
             scr_slot: HostTensor::zeros_i32(&[cap]),
@@ -437,6 +498,100 @@ impl LaneArena {
 
     pub fn occupied_slots(&self) -> Vec<usize> {
         (0..self.cap).filter(|&s| self.lanes[s].occupied).collect()
+    }
+
+    // -- park-aware decode grouping (DESIGN.md D8) ---------------------------
+
+    /// Mark a lane parked (between session turns) or live again. Parked
+    /// lanes keep their slot and bytes but ride decode rounds as masked
+    /// rows; [`Self::free`] clears the flag with the rest of the lane.
+    pub fn set_parked(&mut self, slot: usize, parked: bool) -> Result<()> {
+        if slot >= self.cap || !self.lanes[slot].occupied {
+            bail!("set_parked on unoccupied arena slot {slot}");
+        }
+        self.lanes[slot].parked = parked;
+        Ok(())
+    }
+
+    /// Occupied slots currently parked.
+    pub fn parked_slots(&self) -> Vec<usize> {
+        (0..self.cap)
+            .filter(|&s| self.lanes[s].occupied && self.lanes[s].parked)
+            .collect()
+    }
+
+    /// Park-boundary compaction: mark the lane parked and, for TConst/TLin
+    /// lanes whose generation window is exactly full, fold the window into
+    /// the context state *now* (the sync that would otherwise run at the
+    /// resume replay — same fold, same resulting state, bit-identical
+    /// resumed streams). This restores the D8 masking invariant
+    /// `fill < W_og`, so the parked row's masked write can never clamp
+    /// onto a real window position. O(state) once per park, off the decode
+    /// hot path; counted in [`GroupStats::park_compactions`]. Returns
+    /// whether a fold ran (always `false` for the baseline, which has no
+    /// sync — its maskability is the `pos < bucket` check instead).
+    pub fn park_compact(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        slot: usize,
+    ) -> Result<bool> {
+        self.set_parked(slot, true)?;
+        if self.arch == Arch::Base || self.lanes[slot].fill < drv.cfg.w_og {
+            return Ok(false);
+        }
+        self.sync_slot(drv, rt, slot)?;
+        self.group_stats.park_compactions += 1;
+        Ok(true)
+    }
+
+    /// Parked occupied slots outside the decode group — the masked-row
+    /// candidates for one round. Allocates only when parked lanes exist
+    /// (decode groups are small, so the linear `contains` beats building
+    /// a membership table).
+    fn masked_parked_rows(&self, slots: &[usize]) -> Vec<usize> {
+        (0..self.cap)
+            .filter(|&s| {
+                self.lanes[s].occupied && self.lanes[s].parked && !slots.contains(&s)
+            })
+            .collect()
+    }
+
+    /// Whether this round's decode group can carry every parked lane as a
+    /// masked row (DESIGN.md D8) — the per-round gate the scheduler's
+    /// hysteresis policy consumes. Vacuously true with no parked lanes
+    /// (the group already covers every occupied slot). A masked row's
+    /// write must land at its own masked append position, so:
+    /// TConst/TLin require `fill < W_og` (guaranteed after
+    /// [`Self::park_compact`]); the baseline requires `pos < bucket`
+    /// (there is an append slot inside the current bucket — violated only
+    /// when a lane parked exactly at a bucket boundary, until live lanes
+    /// migrate the bucket up or the session resumes).
+    pub fn park_mask_viable(&self, slots: &[usize]) -> bool {
+        // Allocation-free: this runs (twice — scheduler decision + decode
+        // safety recheck) on every round of the decode hot loop.
+        let base_bucket = match &self.state {
+            ArenaState::Base { bucket, .. } => Some(*bucket),
+            _ => None,
+        };
+        (0..self.cap)
+            .filter(|&s| {
+                self.lanes[s].occupied && self.lanes[s].parked && !slots.contains(&s)
+            })
+            .all(|s| match base_bucket {
+                Some(bucket) => self.lanes[s].pos < bucket,
+                None => self.lanes[s].fill < self.cfg.w_og,
+            })
+    }
+
+    /// Record one round's group formation in [`GroupStats`].
+    fn note_group(&mut self, full: bool, masked_rows: usize) {
+        if full {
+            self.group_stats.full_group_rounds += 1;
+            self.group_stats.masked_lane_steps += masked_rows as u64;
+        } else {
+            self.group_stats.partial_group_rounds += 1;
+        }
     }
 
     /// Exact KV bytes attributable to one slot — the slabs are uniform
@@ -788,13 +943,31 @@ impl LaneArena {
     /// One batched decode step for `slots` (parallel to `tokens`). Lanes
     /// whose generation window is full are synchronized first (the paper's
     /// periodic cache miss — the only part of the loop that touches
-    /// per-lane tensors). Returns one logits vector per requested slot.
+    /// per-lane tensors). Parked lanes are carried as masked rows whenever
+    /// viable (DESIGN.md D8). Returns one logits vector per requested slot.
     pub fn decode(
         &mut self,
         drv: &ModelDriver,
         rt: &mut Runtime,
         slots: &[usize],
         tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.decode_grouped(drv, rt, slots, tokens, true)
+    }
+
+    /// [`Self::decode`] with explicit park-masking control. `mask_parked =
+    /// false` forces the pre-D8 behavior (parked lanes excluded, rounds
+    /// with parked lanes take the partial lane-copy path) — the A/B arm
+    /// of the parity tests and the scheduler's hysteresis fallback.
+    /// Masking is also skipped for the round when
+    /// [`Self::park_mask_viable`] fails, so the call is always safe.
+    pub fn decode_grouped(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        slots: &[usize],
+        tokens: &[i32],
+        mask_parked: bool,
     ) -> Result<Vec<Vec<f32>>> {
         if slots.is_empty() || slots.len() != tokens.len() {
             bail!("arena decode: {} slots vs {} tokens", slots.len(), tokens.len());
@@ -807,15 +980,33 @@ impl LaneArena {
             if s >= self.cap || !self.lanes[s].occupied {
                 bail!("decode of unoccupied arena slot {s}");
             }
+            if self.lanes[s].parked {
+                bail!("decode of parked arena slot {s} (resume it first)");
+            }
             if seen[s] {
                 bail!("duplicate arena slot {s} in decode group");
             }
             seen[s] = true;
         }
+        // Mask parked rows only when riding them makes the group cover
+        // every occupied slot (full-slab adoption): a group that misses a
+        // *live* lane stays partial regardless, and feeding parked rows
+        // through it would be garbage writes for zero benefit — and would
+        // make the masked_lane_steps counter lie.
+        let masked = if mask_parked && self.park_mask_viable(slots) {
+            let m = self.masked_parked_rows(slots);
+            if slots.len() + m.len() == self.n_occupied() {
+                m
+            } else {
+                Vec::new()
+            }
+        } else {
+            Vec::new()
+        };
         match self.arch {
-            Arch::TConst => self.decode_tconst(drv, rt, slots, tokens),
-            Arch::TLin => self.decode_tlin(drv, rt, slots, tokens),
-            Arch::Base => self.decode_base(drv, rt, slots, tokens),
+            Arch::TConst => self.decode_tconst(drv, rt, slots, tokens, &masked),
+            Arch::TLin => self.decode_tlin(drv, rt, slots, tokens, &masked),
+            Arch::Base => self.decode_base(drv, rt, slots, tokens, &masked),
         }
     }
 
@@ -834,8 +1025,12 @@ impl LaneArena {
         self.load_state(slot, &st)
     }
 
-    /// Zero + fill the reusable input vectors in place.
-    fn fill_scratch(&mut self, slots: &[usize], tokens: &[i32]) -> Result<()> {
+    /// Zero + fill the reusable input vectors in place. `masked` rows
+    /// (parked lanes riding the round, DESIGN.md D8) get token 0 at their
+    /// own append position and gate 0: the graph's write for such a row
+    /// lands exactly where the lane's next real token will land — masked
+    /// on read, overwritten before it is ever read.
+    fn fill_scratch(&mut self, slots: &[usize], tokens: &[i32], masked: &[usize]) -> Result<()> {
         let tok = self.scr_tok.as_i32_mut()?;
         tok.fill(0);
         for (i, &s) in slots.iter().enumerate() {
@@ -844,6 +1039,9 @@ impl LaneArena {
         let fill = self.scr_slot.as_i32_mut()?;
         fill.fill(0);
         for &s in slots {
+            fill[s] = self.lanes[s].fill as i32;
+        }
+        for &s in masked {
             fill[s] = self.lanes[s].fill as i32;
         }
         let gate = self.scr_gate.as_f32_mut()?;
@@ -887,6 +1085,7 @@ impl LaneArena {
         rt: &mut Runtime,
         slots: &[usize],
         tokens: &[i32],
+        masked: &[usize],
     ) -> Result<Vec<Vec<f32>>> {
         let w = drv.cfg.w_og;
         for &s in slots {
@@ -894,9 +1093,10 @@ impl LaneArena {
                 self.sync_slot(drv, rt, s)?;
             }
         }
-        self.fill_scratch(slots, tokens)?;
+        self.fill_scratch(slots, tokens, masked)?;
         let name = rt.manifest.name_tconst_decode(&drv.preset, self.cap);
-        let full = slots.len() == self.n_occupied();
+        let full = slots.len() + masked.len() == self.n_occupied();
+        self.note_group(full, masked.len());
         if self.device.is_some() {
             let logits_t = self.execute_gen_device(
                 rt,
@@ -931,8 +1131,9 @@ impl LaneArena {
         {
             let ArenaState::TConst(slabs) = &mut self.state else { unreachable!() };
             if full {
-                // The group covers every occupied lane: adopt the whole
-                // output slab — zero host copies.
+                // The group (live ∪ masked) covers every occupied lane:
+                // adopt the whole output slab — zero host copies. Masked
+                // rows' writes are dead bytes at their append positions.
                 slabs.gen_k = new_gen_k;
                 slabs.gen_v = new_gen_v;
             } else {
@@ -1037,6 +1238,7 @@ impl LaneArena {
         rt: &mut Runtime,
         slots: &[usize],
         tokens: &[i32],
+        masked: &[usize],
     ) -> Result<Vec<Vec<f32>>> {
         let w = drv.cfg.w_og;
         for &s in slots {
@@ -1077,15 +1279,19 @@ impl LaneArena {
                 dev.flags.host_wrote("hist_v");
             }
         }
-        self.fill_scratch(slots, tokens)?;
+        self.fill_scratch(slots, tokens, masked)?;
         {
+            // Masked rows keep hist_len 0: their raw-history attention is
+            // gated off entirely (their output is discarded anyway), so
+            // parked lanes never constrain the shared history bucket.
             let hlen = self.scr_aux.as_i32_mut()?;
             hlen.fill(0);
             for &s in slots {
                 hlen[s] = self.lanes[s].hist_len as i32;
             }
         }
-        let full = slots.len() == self.n_occupied();
+        let full = slots.len() + masked.len() == self.n_occupied();
+        self.note_group(full, masked.len());
         if self.device.is_some() {
             let name = {
                 let ArenaState::TLin { hist_bucket, .. } = &self.state else { unreachable!() };
@@ -1148,6 +1354,7 @@ impl LaneArena {
         rt: &mut Runtime,
         slots: &[usize],
         tokens: &[i32],
+        masked: &[usize],
     ) -> Result<Vec<Vec<f32>>> {
         // Bucket migration: grow the arena cache when any stepped lane is
         // about to write past the current bucket. Growth is a host-mirror
@@ -1183,13 +1390,21 @@ impl LaneArena {
             for (i, &s) in slots.iter().enumerate() {
                 tok[s] = tokens[i];
             }
+            // Masked rows must carry their true pos: the graph writes the
+            // fed token's K/V at pos, and only the row's own append slot
+            // is dead bytes — position 0 would clobber real history.
+            // `park_mask_viable` guarantees pos < bucket for them.
             let pos = self.scr_aux.as_i32_mut()?;
             pos.fill(0);
             for &s in slots {
                 pos[s] = self.lanes[s].pos as i32;
             }
+            for &s in masked {
+                pos[s] = self.lanes[s].pos as i32;
+            }
         }
-        let full = slots.len() == self.n_occupied();
+        let full = slots.len() + masked.len() == self.n_occupied();
+        self.note_group(full, masked.len());
         let logits_t = if self.device.is_some() {
             self.execute_base_device(rt, drv, full, slots)?
         } else {
@@ -1422,6 +1637,70 @@ mod tests {
         assert_eq!(base.bytes_per_slot(), 0);
         let tlin = LaneArena::new(Arch::TLin, &c, 2);
         assert_eq!(tlin.bytes_per_slot(), memory::tlin_bytes(&c, 1, 0));
+    }
+
+    // -- park-aware grouping (pure logic; the masked decode itself is
+    // exercised by the artifact-gated parity suite, DESIGN.md D8) ---------
+
+    #[test]
+    fn parked_flag_lifecycle_and_viability() {
+        let c = cfg();
+        let mut arena = LaneArena::new(Arch::TConst, &c, 4);
+        let a = arena.alloc().unwrap();
+        let b = arena.alloc().unwrap();
+        assert!(arena.set_parked(3, true).is_err(), "unoccupied slot rejected");
+        assert!(arena.parked_slots().is_empty());
+
+        // no parked lanes: masking is vacuously viable
+        assert!(arena.park_mask_viable(&[a, b]));
+
+        arena.set_parked(a, true).unwrap();
+        assert_eq!(arena.parked_slots(), vec![a]);
+        // parked lane with a non-full window is maskable
+        arena.lanes[a].fill = c.w_og - 1;
+        assert!(arena.park_mask_viable(&[b]));
+        // a full window is not (its masked write would clamp onto a real
+        // window position) — park_compact folds it away in real use
+        arena.lanes[a].fill = c.w_og;
+        assert!(!arena.park_mask_viable(&[b]));
+
+        // unpark / free both clear the flag
+        arena.set_parked(a, false).unwrap();
+        assert!(arena.parked_slots().is_empty());
+        arena.set_parked(a, true).unwrap();
+        arena.free(a).unwrap();
+        assert!(arena.parked_slots().is_empty());
+        let a2 = arena.alloc().unwrap();
+        assert_eq!(a2, a, "slot reuse");
+        assert!(!arena.lanes[a2].parked, "reused slot starts unparked");
+    }
+
+    #[test]
+    fn base_park_viability_requires_append_room() {
+        let c = cfg();
+        let mut arena = LaneArena::new(Arch::Base, &c, 2);
+        let a = arena.alloc().unwrap();
+        let b = arena.alloc().unwrap();
+        arena.set_parked(a, true).unwrap();
+        // bucket 0 (nothing admitted yet): no append slot exists
+        arena.lanes[a].pos = 0;
+        assert!(!arena.park_mask_viable(&[b]));
+        // grow the shared bucket, parked pos inside it: maskable
+        let ArenaState::Base { bucket, .. } = &mut arena.state else { unreachable!() };
+        *bucket = 128;
+        arena.lanes[a].pos = 100;
+        assert!(arena.park_mask_viable(&[b]));
+        // parked exactly at the bucket boundary: not maskable until the
+        // bucket migrates past it
+        arena.lanes[a].pos = 128;
+        assert!(!arena.park_mask_viable(&[b]));
+    }
+
+    #[test]
+    fn group_stats_start_zero() {
+        let c = cfg();
+        let arena = LaneArena::new(Arch::TConst, &c, 2);
+        assert_eq!(arena.group_stats, GroupStats::default());
     }
 
     // -- device-staging mirror flags (pure logic; the transfer behavior

@@ -8,6 +8,15 @@
 //! device and the arena rotates the output caches in as the next step's
 //! inputs, so the O(N) slabs stop crossing the host↔device boundary per
 //! token; only prefill (here) and bucket migration still move them.
+//!
+//! Park-aware grouping note (DESIGN.md D8): unlike TConst/TLin, the
+//! baseline's cache rows ARE the lane's whole history, and nothing
+//! rebuilds them on resume — so a parked lane riding a decode round as a
+//! masked row must be fed its true `pos` (the graph's write then lands in
+//! the masked append slot, overwritten by the lane's next real token) and
+//! is only maskable while `pos < bucket`. The arena's
+//! `park_mask_viable` check enforces that; a violating round falls back
+//! to the partial-group path until live lanes migrate the bucket up.
 
 use anyhow::{bail, Context, Result};
 

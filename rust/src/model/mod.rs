@@ -247,6 +247,8 @@ impl ModelDriver {
 
     /// One decode step for `slots` of a resident arena — the steady-state
     /// hot path: no gather, no scatter, no state-tensor allocation.
+    /// Parked lanes ride along as masked rows whenever viable
+    /// (DESIGN.md D8), keeping the full-slab adoption path.
     pub fn decode_resident(
         &self,
         rt: &mut Runtime,
@@ -255,5 +257,34 @@ impl ModelDriver {
         tokens: &[i32],
     ) -> Result<Vec<Vec<f32>>> {
         arena.decode(self, rt, slots, tokens)
+    }
+
+    /// [`Self::decode_resident`] with explicit park-masking control
+    /// (DESIGN.md D8): the engine's scheduler decides per round whether
+    /// parked lanes ride the group as masked rows (`mask_parked`), falling
+    /// back to the partial lane-copy path under its hysteresis policy.
+    pub fn decode_resident_grouped(
+        &self,
+        rt: &mut Runtime,
+        arena: &mut LaneArena,
+        slots: &[usize],
+        tokens: &[i32],
+        mask_parked: bool,
+    ) -> Result<Vec<Vec<f32>>> {
+        arena.decode_grouped(self, rt, slots, tokens, mask_parked)
+    }
+
+    /// Park a resident lane at a turn boundary (DESIGN.md D6/D8): marks it
+    /// parked and folds an exactly-full TConst/TLin generation window so
+    /// the lane stays maskable (`fill < W_og`) for the rounds it sits out.
+    /// The fold is the same sync the resume replay would have run — the
+    /// resumed stream is bit-identical either way.
+    pub fn park_resident(
+        &self,
+        rt: &mut Runtime,
+        arena: &mut LaneArena,
+        slot: usize,
+    ) -> Result<bool> {
+        arena.park_compact(self, rt, slot)
     }
 }

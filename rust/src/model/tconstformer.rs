@@ -10,6 +10,14 @@
 //!   mode folds `[ctx_sum ‖ window]` (O(1), DESIGN.md D1); Full mode
 //!   recompresses the raw history through `tconst_sync_full_L*` (O(N),
 //!   the paper's literal Eq. (1) cost), as an ablation.
+//!
+//! Decode-graph row semantics the arena's park-aware grouping (DESIGN.md
+//! D8) relies on: batch rows are computed independently, the graph's only
+//! state write for a row is the fed token's K/V at that row's `slot`
+//! (window) position, and attention masks positions `>= slot`. A parked
+//! lane can therefore ride a decode round as a masked row — its write is
+//! dead bytes at its own append position, never read before [`resume`]
+//! rebuilds the window caches from the replay.
 
 use anyhow::{bail, Context, Result};
 

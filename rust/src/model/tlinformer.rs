@@ -11,6 +11,13 @@
 //! writing the arena's *host mirror*; the arena re-uploads the touched
 //! slabs on the next decode. The steady-state decode itself never routes
 //! through this module's gather/scatter path.
+//!
+//! Park-aware grouping note (DESIGN.md D8): the decode graph only *reads*
+//! `hist_k/hist_v` (appends happen at fold time, here on the host), so a
+//! parked lane riding a round as a masked row — token 0 at its own window
+//! append position, `hist_len` 0 so its raw-history attention gates off —
+//! cannot disturb its history rows, and its window-cache garbage is
+//! rebuilt by the [`resume`] replay before it could ever be read.
 
 use anyhow::{bail, Context, Result};
 

@@ -402,6 +402,119 @@ fn session_resume_after_spill_matches_unspilled() {
     assert_eq!(with_spill, without_spill, "spill/readmit changed a resumed turn");
 }
 
+/// Tentpole regression for park-aware decode grouping (DESIGN.md D8):
+/// with k parked-resident sessions present, steady-state decode rounds
+/// must still take the zero-copy full-slab adoption path — zero
+/// gather/scatter via `copy_metrics` (surfaced as `host_copy_bytes`),
+/// every round counted in `decode_full_group_rounds`, none in
+/// `decode_partial_group_rounds` — and the served token streams must be
+/// bit-identical to the pre-D8 partial-group path (`park_masking: false`),
+/// for all three archs under both stagings.
+#[test]
+fn parked_sessions_keep_full_group_zero_copy_decode() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let delta = |a: &Json, b: &Json, k: &str| -> f64 {
+        b.get(k).as_f64().unwrap() - a.get(k).as_f64().unwrap()
+    };
+    for arch in [Arch::TConst, Arch::TLin, Arch::Base] {
+        for staging in [ArenaStaging::DeviceArena, ArenaStaging::HostArena] {
+            let tag = format!("{arch:?}/{staging:?}");
+            // Returns (phase-2 token streams, metrics before phase 2,
+            // metrics after phase 2).
+            let run = |park_masking: bool| -> (Vec<Vec<i32>>, Json, Json) {
+                let mut cfg = EngineConfig { max_lanes: 4, staging, ..tiny_cfg(arch) };
+                cfg.sched.park_masking = park_masking;
+                // Admit both phase-2 turns in one round: a lane admitted
+                // while another decodes legitimately makes that one round
+                // partial (it joins the group next round), which is not
+                // what this test is about.
+                cfg.sched.prefill_per_round = 2;
+                let mut engine = Engine::new(&cfg).unwrap();
+                // Phase 1: park two sessions. The first turn is sized so
+                // its lane parks with an exactly-full generation window
+                // (prefill 29 + 3 decode steps = W_og = 32), exercising
+                // the park-boundary compaction for TConst/TLin.
+                let s1 = engine.open_session();
+                engine.submit(TurnRequest::greedy_turn(1, s1, prompt(28, 1), 4));
+                engine.run_to_completion().unwrap();
+                let s2 = engine.open_session();
+                engine.submit(TurnRequest::greedy_turn(2, s2, prompt(9, 2), 4));
+                engine.run_to_completion().unwrap();
+                engine.completed.clear();
+                let m0 = engine.metrics_json();
+                assert_eq!(
+                    m0.get("sessions_parked_resident").as_usize(),
+                    Some(2),
+                    "{arch:?}/{staging:?}: both sessions must park resident"
+                );
+
+                // Phase 2: two live ephemeral turns decode among the
+                // parked lanes. Prompts and budgets small enough that no
+                // sync or bucket-migration boundary fires in this phase —
+                // every decode round is pure steady state.
+                engine.submit(TurnRequest::greedy(10, prompt(4, 8), 8));
+                engine.submit(TurnRequest::greedy(11, prompt(5, 9), 8));
+                engine.run_to_completion().unwrap();
+                let mut out = std::mem::take(&mut engine.completed);
+                out.sort_by_key(|r| r.id);
+                let m1 = engine.metrics_json();
+                (out.into_iter().map(|r| r.tokens).collect(), m0, m1)
+            };
+
+            let (streams, m0, m1) = run(true);
+            let (streams_ctl, c0, c1) = run(false);
+            assert_eq!(
+                streams, streams_ctl,
+                "{tag}: park masking changed the served streams"
+            );
+
+            // Masked engine: every phase-2 round took the full-group
+            // path with the parked lanes riding masked, and the decode
+            // loop moved zero host state bytes.
+            assert_eq!(
+                delta(&m0, &m1, "decode_partial_group_rounds"),
+                0.0,
+                "{tag}: a parked lane demoted a round to the partial path"
+            );
+            assert!(
+                delta(&m0, &m1, "decode_full_group_rounds") > 0.0,
+                "{tag}: no full-group rounds recorded"
+            );
+            assert!(
+                delta(&m0, &m1, "decode_masked_lane_steps") > 0.0,
+                "{tag}: parked lanes never rode a round masked"
+            );
+            assert_eq!(
+                delta(&m0, &m1, "host_copy_bytes"),
+                0.0,
+                "{tag}: steady-state rounds with parked lanes copied state"
+            );
+            if arch != Arch::Base {
+                assert!(
+                    m1.get("park_compactions").as_f64().unwrap() >= 1.0,
+                    "{tag}: the window-boundary park must fold (compact)"
+                );
+            } else {
+                assert_eq!(m1.get("park_compactions").as_f64(), Some(0.0), "{tag}");
+            }
+
+            // Control engine (pre-D8 behavior): the same rounds fall to
+            // the partial path and pay per-round state copies.
+            assert!(
+                delta(&c0, &c1, "decode_partial_group_rounds") > 0.0,
+                "{tag}: control engine should take the partial path"
+            );
+            assert!(
+                delta(&c0, &c1, "host_copy_bytes") > 0.0,
+                "{tag}: control engine should pay per-round copies"
+            );
+        }
+    }
+}
+
 /// Tokens stream as they are sampled: the first event arrives while the
 /// turn is still generating, and the stream ends TurnDone → Closed.
 #[test]

@@ -424,6 +424,208 @@ fn arena_steady_state_decode_is_copy_free() {
     }
 }
 
+/// Park-aware decode grouping (DESIGN.md D8): parked lanes ride decode
+/// rounds as masked rows, keeping the full-slab adoption path — and the
+/// live lanes' logits must be *bit-identical* to the pre-D8 partial-group
+/// path, for all three archs under both stagings. Also asserts the
+/// park-boundary compaction (full window folded at park) leaves the
+/// resumed stream bit-identical to a resume that replays the window.
+fn assert_park_masking_parity(arch: Arch, device: bool) {
+    let mut rt = rt();
+    let driver = ModelDriver::new(&rt, "tiny", arch).unwrap();
+    let w = driver.cfg.w_og;
+    // lane 0 is the one we park; for TConst/TLin its prompt is sized so
+    // one warm decode step leaves the window exactly full (fill == W_og),
+    // exercising the park-time fold. Base uses long prompts so the 40
+    // steps below cross a bucket migration with a parked lane present.
+    let prompt_lens: [usize; 3] = match arch {
+        Arch::Base => [100, 101, 33],
+        _ => [w - 1, 7, 33],
+    };
+    let cap = rt.manifest.batch_bucket_for(3).unwrap();
+    let mk = |rt: &mut Runtime| {
+        let mut arena = driver.new_arena(cap);
+        if device {
+            arena.enable_device(rt);
+        }
+        let mut slots = Vec::new();
+        let mut toks = Vec::new();
+        for &len in &prompt_lens {
+            let slot = arena.alloc().unwrap();
+            let l = driver.prefill_resident(rt, &mut arena, slot, &prompt(len)).unwrap();
+            toks.push(tconstformer::model::sampler::argmax(&l));
+            slots.push(slot);
+        }
+        // one warm all-lane step (for TConst/TLin it fills lane 0's window)
+        let l = driver.decode_resident(rt, &mut arena, &slots, &toks).unwrap();
+        let toks: Vec<i32> =
+            l.iter().map(|x| tconstformer::model::sampler::argmax(x)).collect();
+        (arena, slots, toks)
+    };
+    let (mut masked, slots, toks0) = mk(&mut rt);
+    let (mut control, slots_c, toks0_c) = mk(&mut rt);
+    assert_eq!(slots, slots_c);
+    assert_eq!(toks0, toks0_c);
+
+    // Park lane 0: the masked arena takes the real park path (flag +
+    // boundary compaction); the control arena parks the pre-D8 way (flag
+    // only) and will decode with masking disabled.
+    let folded = driver.park_resident(&mut rt, &mut masked, slots[0]).unwrap();
+    assert_eq!(folded, arch != Arch::Base, "{arch:?}: park-time fold expectation");
+    assert_eq!(
+        masked.group_stats.park_compactions,
+        if arch == Arch::Base { 0 } else { 1 }
+    );
+    control.set_parked(slots_c[0], true).unwrap();
+
+    let live = &slots[1..];
+    let mut toks = toks0[1..].to_vec();
+    let mut toks_c = toks.clone();
+    let g0 = masked.group_stats;
+    for step in 0..40 {
+        let lm = driver.decode_resident(&mut rt, &mut masked, live, &toks).unwrap();
+        let lc = driver
+            .decode_resident_grouped(&mut rt, &mut control, live, &toks_c, false)
+            .unwrap();
+        assert_eq!(
+            lm, lc,
+            "{arch:?} device={device} step {step}: masked round diverged from partial path"
+        );
+        toks = lm.iter().map(|x| tconstformer::model::sampler::argmax(x)).collect();
+        toks_c = toks.clone();
+    }
+    assert_eq!(masked.group_stats.full_group_rounds - g0.full_group_rounds, 40);
+    assert_eq!(masked.group_stats.masked_lane_steps - g0.masked_lane_steps, 40);
+    assert_eq!(control.group_stats.partial_group_rounds, 40);
+    assert_eq!(control.group_stats.masked_lane_steps, 0);
+
+    // Resume the parked lane identically on both arenas: the compacted
+    // (masked-ridden) lane must continue bit-identically to the control
+    // lane, whose resume replays the intact window.
+    let chunk: Vec<i32> = (0..5).map(|i| 80 + i).collect();
+    let lm = driver.resume_resident(&mut rt, &mut masked, slots[0], &chunk).unwrap();
+    let lc = driver.resume_resident(&mut rt, &mut control, slots_c[0], &chunk).unwrap();
+    assert_eq!(lm, lc, "{arch:?} device={device}: resumed logits diverged");
+
+    // and the whole batch stays in lockstep after the resume
+    masked.set_parked(slots[0], false).unwrap();
+    control.set_parked(slots_c[0], false).unwrap();
+    let mut all_toks: Vec<i32> = toks.clone();
+    all_toks.insert(0, tconstformer::model::sampler::argmax(&lm));
+    let mut all_toks_c = all_toks.clone();
+    for step in 0..10 {
+        let lm = driver.decode_resident(&mut rt, &mut masked, &slots, &all_toks).unwrap();
+        let lc = driver.decode_resident(&mut rt, &mut control, &slots_c, &all_toks_c).unwrap();
+        assert_eq!(lm, lc, "{arch:?} device={device} post-resume step {step} diverged");
+        all_toks = lm.iter().map(|x| tconstformer::model::sampler::argmax(x)).collect();
+        all_toks_c = all_toks.clone();
+    }
+}
+
+#[test]
+fn parked_lanes_ride_masked_bit_identically_host() {
+    require_artifacts!();
+    for arch in [Arch::TConst, Arch::TLin, Arch::Base] {
+        assert_park_masking_parity(arch, false);
+    }
+}
+
+#[test]
+fn parked_lanes_ride_masked_bit_identically_device() {
+    require_artifacts!();
+    for arch in [Arch::TConst, Arch::TLin, Arch::Base] {
+        assert_park_masking_parity(arch, true);
+    }
+}
+
+/// The D8 payoff: with a parked lane present, steady-state decode rounds
+/// still take the full-slab adoption path — zero gather/scatter, zero
+/// state-tensor allocation — under both stagings. Under device staging
+/// with a rotating backend, uploads additionally stay token-sized.
+#[test]
+fn parked_lanes_keep_steady_state_decode_copy_free() {
+    require_artifacts!();
+    use tconstformer::model::arena::ArenaState;
+    let mut rt = rt();
+    for arch in [Arch::TConst, Arch::TLin, Arch::Base] {
+        for device in [false, true] {
+            let driver = ModelDriver::new(&rt, "tiny", arch).unwrap();
+            let w = driver.cfg.w_og;
+            let cap = rt.manifest.batch_bucket_for(3).unwrap();
+            let mut arena = driver.new_arena(cap);
+            if device {
+                arena.enable_device(&mut rt);
+            }
+            let mut slots = Vec::new();
+            let mut toks = Vec::new();
+            for i in 0..3 {
+                let slot = arena.alloc().unwrap();
+                let l = driver
+                    .prefill_resident(&mut rt, &mut arena, slot, &prompt(5 + i))
+                    .unwrap();
+                toks.push(tconstformer::model::sampler::argmax(&l));
+                slots.push(slot);
+            }
+            driver.park_resident(&mut rt, &mut arena, slots[0]).unwrap();
+            let live = slots[1..].to_vec();
+            let mut toks = toks[1..].to_vec();
+            // warm (compiles the decode graph, uploads the admitted state)
+            driver.decode_resident(&mut rt, &mut arena, &live, &toks).unwrap();
+
+            let rotation = rt.output_rotation_supported() == Some(true);
+            let n_scratch = match arch {
+                Arch::TConst => 3u64,
+                Arch::TLin => 4,
+                Arch::Base => 2,
+            };
+            let mut asserted = 0;
+            let g0 = arena.group_stats;
+            for _ in 0..(w + 5) {
+                let boundary = match &arena.state {
+                    ArenaState::Base { bucket, .. } => {
+                        let need =
+                            live.iter().map(|&s| arena.lanes[s].pos + 1).max().unwrap();
+                        need > *bucket
+                    }
+                    _ => live.iter().any(|&s| arena.lanes[s].fill >= w),
+                };
+                copy_metrics::reset();
+                let x0 = rt.transfer_stats();
+                let l = driver.decode_resident(&mut rt, &mut arena, &live, &toks).unwrap();
+                if !boundary {
+                    let m = copy_metrics::snapshot();
+                    assert_eq!(
+                        m.gather_scatter_calls, 0,
+                        "{arch:?} device={device}: parked lane demoted steady state to gather/scatter"
+                    );
+                    assert_eq!(m.tensor_allocs, 0, "{arch:?} device={device}: allocated");
+                    assert_eq!(m.bytes_copied, 0, "{arch:?} device={device}: memcpyed");
+                    if device && rotation {
+                        let d = rt.transfer_stats().delta_since(&x0);
+                        assert_eq!(
+                            d.upload_bytes,
+                            n_scratch * cap as u64 * 4,
+                            "{arch:?}: upload must stay token-sized with a parked lane"
+                        );
+                    }
+                    asserted += 1;
+                }
+                toks = l.iter().map(|x| tconstformer::model::sampler::argmax(x)).collect();
+            }
+            assert!(asserted >= w, "{arch:?} device={device}: steady state must dominate");
+            let g = arena.group_stats;
+            assert!(
+                g.full_group_rounds - g0.full_group_rounds >= asserted as u64,
+                "{arch:?} device={device}: rounds did not take the full-group path"
+            );
+            assert_eq!(
+                g.partial_group_rounds, g0.partial_group_rounds,
+                "{arch:?} device={device}: no round may fall back to the partial path"
+            );
+        }
+    }
+}
+
 /// Admission prefills **directly into the arena slot view** (DESIGN.md
 /// D5 / ROADMAP): no per-lane state tensors are materialized (state
 /// constructors are metered through `copy_metrics`) and the slabs are

@@ -5,7 +5,7 @@
 use tconstformer::analytic::{cost, memory};
 use tconstformer::coordinator::kv_manager::{KvLimits, KvManager, WorkerLoadSnapshot};
 use tconstformer::coordinator::scheduler::{
-    pick_worker, should_migrate, SchedConfig, Scheduler,
+    pick_worker, should_migrate, GroupPolicy, SchedConfig, Scheduler,
 };
 use tconstformer::model::arena::LaneArena;
 use tconstformer::model::batch::{
@@ -122,6 +122,7 @@ fn prop_scheduler_resume_lane_never_queues_behind_cold() {
                 max_batch: 4,
                 prefill_per_round: 2,
                 resume_per_round: *resume_budget,
+                ..Default::default()
             };
             let plans = [
                 Scheduler::new(cfg.clone()).plan_round_sessions(resume, cold, &[], *free),
@@ -146,6 +147,40 @@ fn prop_scheduler_resume_lane_never_queues_behind_cold() {
                     return Err(format!(
                         "cold admission affected by resume lane: {:?}",
                         plan.admit
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_group_policy_never_masks_a_nonviable_round() {
+    // For arbitrary viability sequences and hysteresis depths (DESIGN.md
+    // D8): a non-viable round is never masked, and after `depth`
+    // consecutive viable rounds the policy is always masking again.
+    check_no_shrink(
+        "group_policy_safety",
+        300,
+        5,
+        |r| {
+            let depth = r.usize(0, 4) as u32;
+            let seq: Vec<bool> = (0..r.usize(1, 40)).map(|_| r.range(0, 2) == 1).collect();
+            (depth, seq)
+        },
+        |(depth, seq)| {
+            let mut p = GroupPolicy::new(*depth);
+            let mut viable_streak = 0u32;
+            for &viable in seq {
+                let mask = p.decide(viable);
+                if mask && !viable {
+                    return Err("masked a non-viable round".into());
+                }
+                viable_streak = if viable { viable_streak + 1 } else { 0 };
+                if viable_streak > *depth && !mask {
+                    return Err(format!(
+                        "still partial after {viable_streak} viable rounds (depth {depth})"
                     ));
                 }
             }
