@@ -23,10 +23,109 @@ use tconstformer::model::arena::LaneArena;
 use tconstformer::model::batch::{concat_axis, copy_metrics, split_axis};
 use tconstformer::model::state::SeqState;
 use tconstformer::model::{Arch, ModelDriver};
-use tconstformer::runtime::{HostTensor, Runtime};
+use tconstformer::runtime::{HostTensor, Runtime, SyncExecutor};
 use tconstformer::util::bench::Bench;
 use tconstformer::util::json::Json;
 use tconstformer::util::rng::Rng;
+use tconstformer::util::stats::Percentiles;
+
+/// Per-token latency of decode rounds split by step kind — steady rounds
+/// vs rounds that hit a lane's window-full fold — for one sync arm
+/// (DESIGN.md D9). The synchronous arm folds in-line inside the decode
+/// call (the every-W_og-th-step spike); the overlapped arm submits the
+/// fold to a background [`SyncExecutor`] and the lane rides the gap as a
+/// masked row, mirroring the worker's round-boundary pass. Returns
+/// (steady, sync-step, tokens/s).
+fn latency_by_step_kind(
+    rt: &mut Runtime,
+    driver: &ModelDriver,
+    artifacts: &str,
+    preset: &str,
+    states: &[SeqState],
+    cap: usize,
+    overlapped: bool,
+    rounds: usize,
+) -> anyhow::Result<(Percentiles, Percentiles, f64)> {
+    let w = driver.cfg.w_og;
+    let mut arena = driver.new_arena(cap);
+    let mut slots = Vec::new();
+    for st in states {
+        let slot = arena.alloc()?;
+        arena.load_state(slot, st)?;
+        slots.push(slot);
+    }
+    let mut ex = if overlapped {
+        let ex = SyncExecutor::spawn(artifacts, None)?;
+        ex.warmup(&rt.manifest.name_tconst_window(preset));
+        Some(ex)
+    } else {
+        None
+    };
+    let mut last: Vec<i32> = vec![65; slots.len()];
+    driver.decode_resident(rt, &mut arena, &slots, &last)?; // warm + compile
+    let mut steady = Percentiles::default();
+    let mut sync = Percentiles::default();
+    let mut tokens = 0usize;
+    let t_all = std::time::Instant::now();
+    for _ in 0..rounds {
+        let t0 = std::time::Instant::now();
+        let mut round_is_sync = false;
+        let live: Vec<usize> = if let Some(ex) = ex.as_mut() {
+            // The worker's boundary pass: land finished folds, submit
+            // folds for full windows, decode only non-pending lanes.
+            for &s in &slots {
+                if let Some(t) = arena.sync_ticket(s) {
+                    if ex.is_done(t) {
+                        driver.commit_sync_resident(rt, &mut arena, ex, s)?;
+                    }
+                }
+            }
+            for &s in &slots {
+                if !arena.sync_pending(s) && arena.lanes[s].fill >= w {
+                    driver.begin_sync_resident(rt, &mut arena, ex, s)?;
+                    round_is_sync = true;
+                }
+            }
+            let mut live: Vec<usize> = (0..slots.len())
+                .filter(|&i| !arena.sync_pending(slots[i]))
+                .collect();
+            if live.is_empty() {
+                // Progress guarantee: everyone pending — block-commit.
+                for &s in &slots {
+                    driver.commit_sync_resident(rt, &mut arena, ex, s)?;
+                }
+                live = (0..slots.len()).collect();
+            }
+            live
+        } else {
+            round_is_sync = slots.iter().any(|&s| arena.lanes[s].fill >= w);
+            (0..slots.len()).collect()
+        };
+        let lv_slots: Vec<usize> = live.iter().map(|&i| slots[i]).collect();
+        let lv_toks: Vec<i32> = live.iter().map(|&i| last[i]).collect();
+        let logits = driver.decode_resident(rt, &mut arena, &lv_slots, &lv_toks)?;
+        for (j, &i) in live.iter().enumerate() {
+            last[i] = tconstformer::model::sampler::argmax(&logits[j]);
+        }
+        tokens += live.len();
+        let dt = t0.elapsed().as_secs_f64() * 1000.0 / live.len().max(1) as f64;
+        if round_is_sync {
+            sync.add(dt);
+        } else {
+            steady.add(dt);
+        }
+    }
+    // Land anything still in flight before the arena drops.
+    if let Some(ex) = ex.as_mut() {
+        for &s in &slots {
+            if arena.sync_pending(s) {
+                driver.commit_sync_resident(rt, &mut arena, ex, s)?;
+            }
+        }
+    }
+    let tok_s = tokens as f64 / t_all.elapsed().as_secs_f64();
+    Ok((steady, sync, tok_s))
+}
 
 /// Per-step host↔device traffic of a resident arena's decode, averaged
 /// over steady-state (non-boundary) steps only — boundary steps are the
@@ -280,6 +379,93 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // --- per-token latency by step kind: overlapped vs synchronous sync ----
+    // DESIGN.md D9: the every-W_og-th-token fold used to stall the whole
+    // round (the k-th-step spike). Run the same staggered 4-lane workload
+    // through both arms and split per-token latency by step kind; with
+    // overlap the sync-step tail must sit within 2x the steady-step tail.
+    let lat_rounds = 3 * driver.cfg.w_og + 16;
+    let (s_steady, s_sync, s_toks) = latency_by_step_kind(
+        &mut rt, &driver, &artifacts, &preset, &states, cap, false, lat_rounds,
+    )?;
+    let (o_steady, o_sync, o_toks) = latency_by_step_kind(
+        &mut rt, &driver, &artifacts, &preset, &states, cap, true, lat_rounds,
+    )?;
+    let fmt = |p: &Percentiles| {
+        format!(
+            "p50 {:>7.3} p99 {:>7.3} max {:>7.3} ms/tok (n={})",
+            p.p50(),
+            p.p99(),
+            p.percentile(100.0),
+            p.len()
+        )
+    };
+    println!("latency synchronous steady: {}", fmt(&s_steady));
+    println!("latency synchronous sync:   {}", fmt(&s_sync));
+    println!("latency overlapped  steady: {}", fmt(&o_steady));
+    println!("latency overlapped  sync:   {}", fmt(&o_sync));
+    println!(
+        "tokens/s: synchronous {:.1} | overlapped {:.1}",
+        s_toks, o_toks
+    );
+    assert!(
+        !s_sync.is_empty() && !o_sync.is_empty(),
+        "latency meter crossed no sync steps — raise lat_rounds"
+    );
+    // The D9 acceptance gate: overlap flattens the k-th-step spike. A
+    // small floor keeps the ratio robust to timer noise on near-zero
+    // steady steps.
+    let floor = 0.02;
+    assert!(
+        o_sync.p99() <= 2.0 * o_steady.p99().max(floor),
+        "overlapped sync-step p99 {:.3} ms exceeds 2x steady p99 {:.3} ms",
+        o_sync.p99(),
+        o_steady.p99()
+    );
+    assert!(
+        s_sync.p50() > s_steady.p50(),
+        "synchronous control shows no in-line fold cost (sync p50 {:.3} <= steady p50 {:.3})",
+        s_sync.p50(),
+        s_steady.p50()
+    );
+    let lat_row = |arm: &str, steady: &Percentiles, sync: &Percentiles, toks: f64| {
+        Json::obj(vec![
+            ("arm", Json::str(arm)),
+            ("steady_p50_ms", Json::num(steady.p50())),
+            ("steady_p99_ms", Json::num(steady.p99())),
+            ("steady_max_ms", Json::num(steady.percentile(100.0))),
+            ("steady_steps", Json::num(steady.len() as f64)),
+            ("sync_p50_ms", Json::num(sync.p50())),
+            ("sync_p99_ms", Json::num(sync.p99())),
+            ("sync_max_ms", Json::num(sync.percentile(100.0))),
+            ("sync_steps", Json::num(sync.len() as f64)),
+            ("tokens_per_s", Json::num(toks)),
+        ])
+    };
+    let latency_hist = Json::Arr(vec![
+        lat_row("synchronous", &s_steady, &s_sync, s_toks),
+        lat_row("overlapped", &o_steady, &o_sync, o_toks),
+    ]);
+    let hist_path = std::env::var("BENCH_HIST_JSON")
+        .unwrap_or_else(|_| "latency_histogram.json".into());
+    std::fs::write(
+        &hist_path,
+        Json::obj(vec![
+            ("preset", Json::str(preset.clone())),
+            ("w_og", Json::num(driver.cfg.w_og as f64)),
+            ("per_token_latency", latency_hist.clone()),
+        ])
+        .to_string(),
+    )?;
+    println!("latency histogram -> {hist_path}");
+
+    // --- TTFT: cold prefill vs session resume (DESIGN.md D6) ---------------
+    let ttft_prompt: Vec<i32> = (0..64).map(|j| 1 + (j % 255) as i32).collect();
+    let mut cold_st = driver.new_state();
+    let t0 = std::time::Instant::now();
+    driver.prefill(&mut rt, &mut cold_st, &ttft_prompt)?;
+    let ttft_cold_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
     // --- session resume cost: O(new tokens), independent of history --------
     // Two parked conversations, one ~8x longer than the other (the long
     // one crosses many sync windows). Resuming each with ONE new token
@@ -363,6 +549,23 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         ("park_grouping", Json::Arr(park_rows)),
+        ("per_token_latency", latency_hist),
+        (
+            "ttft",
+            Json::obj(vec![
+                ("cold_prompt_tokens", Json::num(ttft_prompt.len() as f64)),
+                ("cold_ms", Json::num(ttft_cold_ms)),
+                ("resumed_history_tokens", Json::num(short_hist as f64)),
+                ("resumed_ms", Json::num(short_ms)),
+            ]),
+        ),
+        (
+            "throughput",
+            Json::obj(vec![
+                ("synchronous_tokens_per_s", Json::num(s_toks)),
+                ("overlapped_tokens_per_s", Json::num(o_toks)),
+            ]),
+        ),
         (
             "resume_turn",
             Json::obj(vec![

@@ -61,6 +61,12 @@ class GraphDef:
     args: List[Tuple[str, jax.ShapeDtypeStruct]]
     results: List[str]
     n_param_args: int
+    # Input/output donation pairs [{"arg": i, "result": r}]: the arg's
+    # buffer may be reused in place for the result (XLA input_output_alias).
+    # Populated for decode graphs whose state args round-trip unchanged in
+    # shape — the serving side's per-step buffer rotation then becomes
+    # in-place donation instead of allocate+copy.
+    donated: List[Dict] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +104,25 @@ def _hist_specs(cfg: ModelConfig, b: int, bucket: int):
     ]
 
 
+def _donation_pairs(kind, args, results):
+    """Input/output donation pairs for the per-token decode graphs: every
+    state tensor that rides the step unchanged in shape — ``gen_k``/``gen_v``
+    for TConst/TLin, ``cache_k``/``cache_v`` for the baseline — is matched
+    to its same-named result so XLA may write the new state into the old
+    state's buffer. Only decode is donated: it is the only hot path that
+    executes once per token, and its state args are dead the moment the
+    step's outputs exist (the serving side rotates them out unconditionally).
+    """
+    if kind != "decode":
+        return []
+    by_name = {n: i for i, (n, _) in enumerate(args)}
+    # Shape/dtype identity holds by construction (state passthrough); jax
+    # rejects the donation at lowering time if it ever stops holding, and
+    # lower_graph cross-checks the alias actually landed in the HLO.
+    return [{"arg": by_name[rname], "result": r}
+            for r, rname in enumerate(results) if rname in by_name]
+
+
 def build_graphs(preset: str, include_train: bool) -> List[GraphDef]:
     cfg = PRESETS[preset]
     graphs: List[GraphDef] = []
@@ -111,10 +136,12 @@ def build_graphs(preset: str, include_train: bool) -> List[GraphDef]:
             params = P.unflatten(cfg, arch, list(flat[:np_args]))
             return fn(params, *flat[np_args:])
 
+        all_args = pargs + extra_args
         graphs.append(GraphDef(
             name=name, preset=preset, arch=arch, kind=kind, batch=batch,
-            bucket=bucket, fn=flat_fn, args=pargs + extra_args,
+            bucket=bucket, fn=flat_fn, args=all_args,
             results=results, n_param_args=np_args,
+            donated=_donation_pairs(kind, all_args, results),
         ))
 
     # ---- baseline -------------------------------------------------------
@@ -274,13 +301,28 @@ def lower_graph(g: GraphDef, out_dir: str) -> Dict:
     # keep_unused=True: the Rust side passes every manifest arg positionally,
     # so parameters that a particular graph does not touch (e.g. the restore
     # layer in incremental-sync graphs) must stay in the HLO signature.
-    lowered = jax.jit(g.fn, keep_unused=True).lower(*specs)
+    # donate_argnums: decode-state args alias their same-named results
+    # (input_output_alias in the HLO header), so PJRT backends that honor
+    # donation rotate state in place instead of allocating a fresh output.
+    donate = tuple(sorted(d["arg"] for d in g.donated))
+    jitted = jax.jit(g.fn, keep_unused=True, donate_argnums=donate or ())
+    lowered = jitted.lower(*specs)
     text = to_hlo_text(lowered)
+    donated = list(g.donated)
+    if donated and "input_output_alias" not in text.split("\n", 1)[0]:
+        # The alias metadata did not survive the MLIR -> HLO-text round
+        # trip: ship the graph undonated rather than advertise an alias the
+        # compiled executable will not have (the Rust side trusts the
+        # manifest's `donated` list for its accounting).
+        print(f"  {g.name}: WARNING donation dropped in lowering", flush=True)
+        donated = []
     fname = f"{g.name}.hlo.txt"
     with open(os.path.join(out_dir, fname), "w") as f:
         f.write(text)
     dt = time.time() - t0
-    print(f"  {g.name}: {len(text) / 1e6:.2f} MB HLO in {dt:.1f}s", flush=True)
+    note = f" (donated {len(donated)} args)" if donated else ""
+    print(f"  {g.name}: {len(text) / 1e6:.2f} MB HLO in {dt:.1f}s{note}",
+          flush=True)
     return {
         "name": g.name,
         "file": fname,
@@ -296,6 +338,7 @@ def lower_graph(g: GraphDef, out_dir: str) -> Dict:
             for n, s in g.args
         ],
         "results": g.results,
+        "donated": donated,
     }
 
 

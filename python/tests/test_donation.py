@@ -1,0 +1,85 @@
+"""Input/output donation contracts (DESIGN.md D9).
+
+The decode graphs advertise donation pairs — state args whose buffers XLA
+may reuse in place for the same-named results. The Rust serving side
+trusts the manifest's ``donated`` list for its rotation accounting, so
+these tests pin both halves of the contract: the registry metadata (cheap,
+always run) and the lowered HLO actually carrying ``input_output_alias``
+(one real lowering, the expensive end-to-end check).
+"""
+
+import os
+import tempfile
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.configs import PRESETS
+
+
+@pytest.fixture(scope="module")
+def tiny_graphs():
+    return aot.build_graphs("tiny", include_train=True)
+
+
+def test_only_decode_graphs_donate(tiny_graphs):
+    for g in tiny_graphs:
+        if g.kind != "decode":
+            assert g.donated == [], g.name
+
+
+def test_decode_donations_cover_state_args(tiny_graphs):
+    """Every decode graph donates exactly its rotating state tensors:
+    gen_k/gen_v for TConst/TLin, cache_k/cache_v for the baseline — each
+    aliased to the same-named result with identical shape and dtype."""
+    want = {
+        "base": {"cache_k", "cache_v"},
+        "tconst": {"gen_k", "gen_v"},
+        "tlin": {"gen_k", "gen_v"},
+    }
+    seen_arch = set()
+    for g in tiny_graphs:
+        if g.kind != "decode":
+            continue
+        seen_arch.add(g.arch)
+        names = set()
+        for d in g.donated:
+            aname, aspec = g.args[d["arg"]]
+            rname = g.results[d["result"]]
+            assert aname == rname, g.name
+            assert d["arg"] >= g.n_param_args, "never donate params"
+            names.add(aname)
+        assert names == want[g.arch], g.name
+    assert seen_arch == {"base", "tconst", "tlin"}
+
+
+def test_lowered_hlo_carries_input_output_alias(tiny_graphs):
+    """One real lowering per architecture: the HLO module header must carry
+    ``input_output_alias`` entries matching the manifest's donated pairs —
+    otherwise the Rust side would account donations the executable does
+    not perform."""
+    picks = {}
+    for g in tiny_graphs:
+        if g.kind == "decode" and g.batch == 1 and g.arch not in picks:
+            picks[g.arch] = g
+    with tempfile.TemporaryDirectory() as td:
+        for arch, g in picks.items():
+            entry = aot.lower_graph(g, td)
+            assert entry["donated"] == g.donated, g.name
+            with open(os.path.join(td, entry["file"])) as f:
+                head = f.readline()
+            assert "input_output_alias" in head, g.name
+            for d in entry["donated"]:
+                pair = "{%d}: (%d" % (d["result"], d["arg"])
+                assert pair in head, (g.name, pair)
+
+
+def test_donated_pairs_shapes_match(tiny_graphs):
+    """Donation is only valid between identically-shaped buffers; the
+    result shape is pinned via the arg spec of the same-named input."""
+    for g in tiny_graphs:
+        for d in g.donated:
+            aname, aspec = g.args[d["arg"]]
+            assert aspec.dtype == jnp.float32
+            assert len(aspec.shape) >= 3, (g.name, aname)

@@ -64,6 +64,15 @@ pub struct EngineConfig {
     /// Host-arena vs device-arena staging of the resident slabs (ignored
     /// when `resident` is false).
     pub staging: ArenaStaging,
+    /// Run the TConst periodic window fold on a background execution
+    /// stream (DESIGN.md D9): the syncing lane rides decode rounds as a
+    /// masked row while its fold executes concurrently, turning the
+    /// every-W_og-th-token latency spike into overlap. Applies only where
+    /// supported (resident TConst arenas in Incremental sync mode); other
+    /// configurations sync in-line regardless. `false` forces the
+    /// synchronous control arm (the A/B baseline for bit-identity tests
+    /// and the bench's spike measurement).
+    pub overlap_sync: bool,
     /// Idle parked sessions older than this are evicted (DESIGN.md D6).
     pub session_ttl: Duration,
     /// Parallel arena workers behind the session-affine router
@@ -90,6 +99,7 @@ impl Default for EngineConfig {
             checkpoint: None,
             resident: true,
             staging: ArenaStaging::DeviceArena,
+            overlap_sync: true,
             session_ttl: Duration::from_secs(600),
             workers: 1,
             session_rate: 0.0,

@@ -295,12 +295,28 @@ impl KvManager {
             if let Some(r) = &mut self.resident {
                 // Route through the arena's validated entry point: a slot
                 // lane_of just resolved must be occupied, so a failure here
-                // is a lane-table/arena desync worth crashing on.
+                // is a lane-table/arena desync worth crashing on. The arena
+                // also refuses to park a lane with an in-flight overlapped
+                // sync (DESIGN.md D9) — the worker commits any pending fold
+                // before every park/free boundary, so tripping that here is
+                // equally a lifecycle bug worth crashing on.
                 r.arena
                     .set_parked(slot, parked)
                     .expect("kv lane table desynced from arena occupancy");
             }
         }
+    }
+
+    /// Occupied lanes with an overlapped window fold in flight
+    /// (DESIGN.md D9) — a load gauge for the background sync stream; 0 on
+    /// the boxed backing and the synchronous control arm.
+    pub fn sync_pending_lanes(&self) -> usize {
+        self.resident
+            .as_ref()
+            .map(|r| {
+                (0..r.arena.lanes.len()).filter(|&s| r.arena.sync_pending(s)).count()
+            })
+            .unwrap_or(0)
     }
 
     pub fn is_parked(&self, seq_id: u64) -> bool {

@@ -37,6 +37,19 @@ pub struct EngineMetrics {
     pub decode_partial_group_rounds: u64,
     pub decode_masked_lane_steps: u64,
     pub park_compactions: u64,
+    /// Overlapped sync (DESIGN.md D9): window folds submitted to the
+    /// background execution stream (counted at submit; every submit is
+    /// eventually committed).
+    pub sync_overlapped_total: u64,
+    /// Decode rounds elapsed between an overlapped fold's submit and its
+    /// commit, summed over folds. The minimum per fold is 1 (committed at
+    /// the next round boundary); a rising mean signals the background
+    /// stream falling behind decode.
+    pub sync_commit_wait_rounds: u64,
+    /// Executions that ran with at least one donated (input/output
+    /// aliased) buffer, mirrored from the worker's own runtime. Folds
+    /// executed on the background stream's runtime are not included.
+    pub donated_executions: u64,
     /// Session lifecycle counters (DESIGN.md D6).
     pub sessions_opened: u64,
     pub sessions_closed: u64,
@@ -98,6 +111,9 @@ impl Default for EngineMetrics {
             decode_partial_group_rounds: 0,
             decode_masked_lane_steps: 0,
             park_compactions: 0,
+            sync_overlapped_total: 0,
+            sync_commit_wait_rounds: 0,
+            donated_executions: 0,
             sessions_opened: 0,
             sessions_closed: 0,
             sessions_evicted: 0,
@@ -188,6 +204,15 @@ impl EngineMetrics {
                 Json::num(self.decode_masked_lane_steps as f64),
             ),
             ("park_compactions", Json::num(self.park_compactions as f64)),
+            (
+                "sync_overlapped_total",
+                Json::num(self.sync_overlapped_total as f64),
+            ),
+            (
+                "sync_commit_wait_rounds",
+                Json::num(self.sync_commit_wait_rounds as f64),
+            ),
+            ("donated_executions", Json::num(self.donated_executions as f64)),
             ("throughput_tok_s", Json::num(self.throughput_tok_s())),
             ("ttft_ms_p50", Json::num(nan0(self.ttft_ms.p50()))),
             ("ttft_ms_p95", Json::num(nan0(self.ttft_ms.p95()))),
@@ -262,6 +287,9 @@ const SUM_KEYS: &[&str] = &[
     "decode_partial_group_rounds",
     "decode_masked_lane_steps",
     "park_compactions",
+    "sync_overlapped_total",
+    "sync_commit_wait_rounds",
+    "donated_executions",
     "throughput_tok_s",
     "kv_bytes_current",
     "kv_bytes_peak",

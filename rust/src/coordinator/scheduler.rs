@@ -16,7 +16,12 @@
 //! TConstFormer's periodic sync is intentionally *not* scheduled here: it
 //! is a per-lane state-machine event (window full ⇒ sync before next
 //! token, the paper's cache-miss cadence) handled inside the drivers; the
-//! scheduler only sees its cost as a slower round.
+//! scheduler only sees its cost as a slower round. With overlapped sync
+//! (DESIGN.md D9) it does not even see that: the worker submits the fold
+//! to the background stream at the round boundary and the lane rides as a
+//! masked row — through the same [`GroupPolicy`] masking decision parked
+//! lanes use — until the commit lands, so the round never stalls on one
+//! lane's fold.
 //!
 //! With the two-tier engine (DESIGN.md D7) there is one `Scheduler`
 //! instance **per worker** — each plans rounds over its own arena only.
@@ -416,6 +421,7 @@ mod tests {
             max_batch: 4,
             prefill_per_round: 1,
             resume_per_round: 2,
+            ..Default::default()
         });
         // Zero free slots: cold admission is blocked, resumes are not.
         let p = s.plan_round_resident_sessions(&[40, 41, 42], &[7, 8], &[], 0);

@@ -38,6 +38,21 @@
 //! maskable. `/metrics` exposes the formation counters
 //! (`decode_full_group_rounds` / `decode_partial_group_rounds` /
 //! `decode_masked_lane_steps` / `park_compactions`).
+//!
+//! **Overlapped sync (DESIGN.md D9):** where supported (resident TConst
+//! arenas in Incremental mode) the worker owns a
+//! [`crate::runtime::SyncExecutor`] and the every-`W_og`-th-token window
+//! fold runs on that background stream instead of stalling the decode
+//! round. At each round boundary `overlap_boundary` lands finished folds
+//! (re-opening their lanes), submits folds for lanes whose window just
+//! filled, and lets still-pending lanes ride the round as masked rows —
+//! the same D8 machinery parked lanes use, so the full-slab adoption
+//! path survives. The only blocking wait is the progress guarantee
+//! (every lane of the round pending, none landed). Per-lane token and
+//! graph-input sequences are unchanged by deferral, so overlapped
+//! streams are bit-identical to the `--sync-blocking` control arm.
+//! `/metrics` exposes `sync_overlapped_total`, `sync_commit_wait_rounds`
+//! and `donated_executions`.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
@@ -55,7 +70,7 @@ use crate::data::tokenizer::BOS;
 use crate::model::batch::copy_metrics;
 use crate::model::state::SeqState;
 use crate::model::{sampler, ModelDriver};
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, SyncExecutor};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -141,6 +156,15 @@ pub struct Worker {
     /// Whether sequences live in a resident arena (set from the config,
     /// falling back to legacy when no batch bucket covers `max_lanes`).
     resident: bool,
+    /// Background sync stream (DESIGN.md D9): `Some` only for resident
+    /// workers whose driver supports the overlapped fold (TConst,
+    /// Incremental) with `overlap_sync` on. `None` syncs in-line.
+    overlap: Option<SyncExecutor>,
+    /// Arena slot → round its in-flight fold was submitted (feeds the
+    /// `sync_commit_wait_rounds` metric at commit).
+    pending_syncs: HashMap<usize, u64>,
+    /// Monotone round counter ([`Self::step`] calls).
+    round: u64,
     session_ttl: Duration,
     /// Which shard of the two-tier engine this is (0 in owned mode).
     worker_id: usize,
@@ -199,6 +223,22 @@ impl Worker {
                 }
             }
         }
+        // Background sync stream (DESIGN.md D9): a second runtime on its
+        // own thread, loading the same artifacts + checkpoint so its folds
+        // are bit-identical to in-line ones. The window graph is warmed
+        // eagerly so the first fold never pays compile latency mid-stream.
+        let overlap = if resident && cfg.overlap_sync && driver.overlap_sync_supported() {
+            let ex = SyncExecutor::spawn(
+                &cfg.artifacts_dir,
+                cfg.checkpoint.as_ref().map(|ck| {
+                    (cfg.preset.clone(), cfg.arch.as_str().to_string(), ck.clone())
+                }),
+            )?;
+            ex.warmup(&rt.manifest.name_tconst_window(&cfg.preset));
+            Some(ex)
+        } else {
+            None
+        };
         Ok(Worker {
             rt,
             driver,
@@ -206,6 +246,9 @@ impl Worker {
             sched: Scheduler::new(cfg.sched.clone()),
             max_lanes: cfg.max_lanes,
             resident,
+            overlap,
+            pending_syncs: HashMap::new(),
+            round: 0,
             session_ttl: cfg.session_ttl,
             worker_id,
             load: None,
@@ -223,6 +266,12 @@ impl Worker {
     /// Whether this worker serves from the resident arena.
     pub fn is_resident(&self) -> bool {
         self.resident
+    }
+
+    /// Whether TConst window folds run on the background sync stream
+    /// (DESIGN.md D9) rather than in-line.
+    pub fn is_overlap(&self) -> bool {
+        self.overlap.is_some()
     }
 
     /// Whether the resident arena's slabs are staged on device (the
@@ -503,6 +552,7 @@ impl Worker {
     /// one decode step for every running lane. Returns tokens produced.
     pub fn step(&mut self) -> Result<usize> {
         let round_t0 = Instant::now();
+        self.round += 1;
         let resume_ids: Vec<u64> = (0..self.waiting_resume.len() as u64).collect();
         let cold_ids: Vec<u64> = (0..self.waiting_cold.len() as u64).collect();
         let free = self.max_lanes.saturating_sub(self.live.len());
@@ -576,6 +626,10 @@ impl Worker {
         self.metrics.dev_upload_calls += xfer.upload_calls;
         self.metrics.dev_download_bytes += xfer.download_bytes;
         self.metrics.dev_download_calls += xfer.download_calls;
+        // Donation gauge: executions of graphs whose HLO carries
+        // input/output aliasing (the worker's own runtime; the background
+        // sync stream's executions are off the decode path and uncounted).
+        self.metrics.donated_executions = self.rt.donated_executions();
         // Decode-group formation counters (DESIGN.md D8): the arena is the
         // source of truth, the metrics snapshot mirrors its totals.
         if let Some(arena) = self.kv.arena() {
@@ -862,10 +916,19 @@ impl Worker {
         }
         let t0 = Instant::now();
         let all_logits = if self.resident {
-            let slots: Vec<usize> = ids
+            let mut slots: Vec<usize> = ids
                 .iter()
                 .map(|&id| self.kv.lane_of(id).context("live lane has no arena slot"))
                 .collect::<Result<_>>()?;
+            if self.overlap.is_some() {
+                self.overlap_boundary(&mut ids, &mut tokens, &mut slots)?;
+                if ids.is_empty() {
+                    // Every lane of the round just submitted (or is still
+                    // waiting out) a background fold; they ride this gap as
+                    // masked rows and rejoin when their commits land.
+                    return Ok(0);
+                }
+            }
             // Park-aware grouping (DESIGN.md D8): carry parked lanes as
             // masked rows whenever the arena reports it viable, damped by
             // the scheduler's hysteresis so the mode doesn't thrash at a
@@ -910,6 +973,106 @@ impl Worker {
         Ok(produced)
     }
 
+    /// The D9 boundary pass over one resident decode round: land finished
+    /// background folds so their lanes rejoin the round, submit folds for
+    /// lanes whose generation window just filled (they sit this round out
+    /// as masked rows), and drop still-pending lanes from the group. The
+    /// round never stalls on one lane's in-flight fold — the only
+    /// blocking wait is the progress guarantee when *every* lane of the
+    /// round is pending and none has landed (overlap then degrades to the
+    /// synchronous cost instead of spinning).
+    fn overlap_boundary(
+        &mut self,
+        ids: &mut Vec<u64>,
+        tokens: &mut Vec<i32>,
+        slots: &mut Vec<usize>,
+    ) -> Result<()> {
+        let round = self.round;
+
+        // -- commit phase: which in-flight folds have landed? ---------------
+        let pending_idx: Vec<usize> = {
+            let arena = self.kv.arena().context("resident pool lost its arena")?;
+            (0..slots.len()).filter(|&i| arena.sync_pending(slots[i])).collect()
+        };
+        if !pending_idx.is_empty() {
+            let mut ready: Vec<usize> = Vec::new();
+            {
+                let ex = self.overlap.as_mut().context("overlap executor vanished")?;
+                let arena = self.kv.arena().context("resident pool lost its arena")?;
+                for &i in &pending_idx {
+                    let ticket = arena
+                        .sync_ticket(slots[i])
+                        .context("pending lane lost its ticket")?;
+                    if ex.is_done(ticket) {
+                        ready.push(i);
+                    }
+                }
+            }
+            if ready.is_empty() && pending_idx.len() == ids.len() {
+                ready = pending_idx.clone();
+            }
+            let mut drop_idx: Vec<usize> = Vec::new();
+            for &i in &pending_idx {
+                if ready.contains(&i) {
+                    let ex = self.overlap.as_mut().context("overlap executor vanished")?;
+                    let arena =
+                        self.kv.arena_mut().context("resident pool lost its arena")?;
+                    self.driver
+                        .commit_sync_resident(&mut self.rt, arena, ex, slots[i])?;
+                    let submitted = self.pending_syncs.remove(&slots[i]).unwrap_or(round);
+                    self.metrics.sync_commit_wait_rounds +=
+                        round.saturating_sub(submitted);
+                } else {
+                    drop_idx.push(i);
+                }
+            }
+            remove_indices(ids, &drop_idx);
+            remove_indices(tokens, &drop_idx);
+            remove_indices(slots, &drop_idx);
+        }
+
+        // -- submit phase: full windows go to the background stream ---------
+        let w = self.driver.cfg.w_og;
+        let full_idx: Vec<usize> = {
+            let arena = self.kv.arena().context("resident pool lost its arena")?;
+            (0..slots.len()).filter(|&i| arena.lanes[slots[i]].fill >= w).collect()
+        };
+        if !full_idx.is_empty() {
+            for &i in &full_idx {
+                let ex = self.overlap.as_mut().context("overlap executor vanished")?;
+                let arena = self.kv.arena_mut().context("resident pool lost its arena")?;
+                self.driver.begin_sync_resident(&mut self.rt, arena, ex, slots[i])?;
+                self.pending_syncs.insert(slots[i], round);
+                self.metrics.sync_overlapped_total += 1;
+            }
+            remove_indices(ids, &full_idx);
+            remove_indices(tokens, &full_idx);
+            remove_indices(slots, &full_idx);
+        }
+        Ok(())
+    }
+
+    /// Land any in-flight background fold on a sequence's lane (blocking).
+    /// Boundary operations — park, free, spill, extract — require the lane
+    /// committed (the arena refuses them mid-fold), so every finish path
+    /// funnels through here first. No-op without overlap or a pending
+    /// ticket.
+    fn commit_pending_sync(&mut self, seq_id: u64) -> Result<()> {
+        if self.overlap.is_none() || !self.kv.is_resident() {
+            return Ok(());
+        }
+        let Some(slot) = self.kv.lane_of(seq_id) else { return Ok(()) };
+        let arena = self.kv.arena_mut().context("resident pool lost its arena")?;
+        if !arena.sync_pending(slot) {
+            return Ok(());
+        }
+        let ex = self.overlap.as_mut().context("overlap executor vanished")?;
+        self.driver.commit_sync_resident(&mut self.rt, arena, ex, slot)?;
+        let submitted = self.pending_syncs.remove(&slot).unwrap_or(self.round);
+        self.metrics.sync_commit_wait_rounds += self.round.saturating_sub(submitted);
+        Ok(())
+    }
+
     /// Decide whether a lane just produced its last token; finish it
     /// (including disconnect-triggered cancellation) or return it to the
     /// live set.
@@ -931,6 +1094,9 @@ impl Worker {
     }
 
     fn finish(&mut self, live: Live, reason: FinishReason) -> Result<()> {
+        // An overlapped fold still in flight on this lane must land before
+        // any park/free boundary op (the arena refuses them mid-fold).
+        self.commit_pending_sync(live.seq_id)?;
         // A turn on a still-open session parks its state for the next turn
         // (also on cancellation — the conversation survives the client);
         // ephemeral turns, closed sessions, and aborts free the lane.
@@ -1109,6 +1275,25 @@ pub(crate) fn fail_pending(pending: Pending, msg: &str, completed: &mut Vec<Resp
             metrics: RequestMetrics::default(),
         }),
     }
+}
+
+/// Remove the elements at (sorted, ascending, unique) positions `idx`
+/// in place — the round-boundary helper that drops sync-pending lanes
+/// from the parallel `ids`/`tokens`/`slots` vectors.
+fn remove_indices<T>(v: &mut Vec<T>, idx: &[usize]) {
+    if idx.is_empty() {
+        return;
+    }
+    let mut it = idx.iter().peekable();
+    let mut i = 0;
+    v.retain(|_| {
+        let drop = it.peek() == Some(&&i);
+        if drop {
+            it.next();
+        }
+        i += 1;
+        !drop
+    });
 }
 
 /// Tokens currently in a state's partial generation window — the replay

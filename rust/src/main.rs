@@ -82,6 +82,7 @@ fn engine_cfg_from(args: &tconstformer::util::cli::Args) -> Result<EngineConfig>
         } else {
             ArenaStaging::DeviceArena
         },
+        overlap_sync: !args.flag("sync-blocking"),
         session_ttl: std::time::Duration::from_secs(
             args.get_usize("session-ttl", 600)? as u64
         ),
@@ -106,7 +107,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt_default("max-conns", "max concurrent HTTP connections", "64")
         .opt("checkpoint", "trained checkpoint stem to load")
         .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)")
-        .flag("host-arena", "stage resident arena slabs on the host (disable device residency)");
+        .flag("host-arena", "stage resident arena slabs on the host (disable device residency)")
+        .flag("sync-blocking", "fold TConst windows in-line instead of on the background sync stream (D9 control arm)");
     let args = cmd.parse(rest)?;
     let cfg = engine_cfg_from(&args)?;
     println!(
@@ -141,7 +143,8 @@ fn cmd_gen(rest: &[String]) -> Result<()> {
         .opt_default("temperature", "sampling temperature (0=greedy)", "0")
         .opt("checkpoint", "trained checkpoint stem to load")
         .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)")
-        .flag("host-arena", "stage resident arena slabs on the host (disable device residency)");
+        .flag("host-arena", "stage resident arena slabs on the host (disable device residency)")
+        .flag("sync-blocking", "fold TConst windows in-line instead of on the background sync stream (D9 control arm)");
     let args = cmd.parse(rest)?;
     let cfg = engine_cfg_from(&args)?;
     let mut engine = Engine::new(&cfg)?;

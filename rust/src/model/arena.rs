@@ -161,6 +161,13 @@ pub struct LaneMeta {
     pub pos: usize,
     pub tokens_seen: usize,
     pub syncs: u64,
+    /// Ticket of an in-flight overlapped window fold (DESIGN.md D9). While
+    /// `Some`, the lane's context is being recomputed on the background
+    /// sync stream: the lane rides decode rounds as a masked row (its
+    /// window emptied at submit, so the D8 `fill < W_og` invariant holds)
+    /// and every boundary operation (extract / load / park / free) is
+    /// refused until [`LaneArena::commit_sync_overlap`] lands the fold.
+    pub sync_ticket: Option<u64>,
 }
 
 impl LaneMeta {
@@ -487,6 +494,9 @@ impl LaneArena {
         if slot >= self.cap || !self.lanes[slot].occupied {
             bail!("free of unoccupied arena slot {slot}");
         }
+        if self.lanes[slot].sync_ticket.is_some() {
+            bail!("free of arena slot {slot} with an in-flight sync (commit it first)");
+        }
         self.lanes[slot].reset();
         self.free.push(slot);
         Ok(())
@@ -508,6 +518,9 @@ impl LaneArena {
     pub fn set_parked(&mut self, slot: usize, parked: bool) -> Result<()> {
         if slot >= self.cap || !self.lanes[slot].occupied {
             bail!("set_parked on unoccupied arena slot {slot}");
+        }
+        if self.lanes[slot].sync_ticket.is_some() {
+            bail!("set_parked on arena slot {slot} with an in-flight sync (commit it first)");
         }
         self.lanes[slot].parked = parked;
         Ok(())
@@ -545,28 +558,37 @@ impl LaneArena {
         Ok(true)
     }
 
-    /// Parked occupied slots outside the decode group — the masked-row
-    /// candidates for one round. Allocates only when parked lanes exist
-    /// (decode groups are small, so the linear `contains` beats building
-    /// a membership table).
+    /// Whether a lane must ride decode rounds as a masked row: parked
+    /// between turns (D8) or live with an in-flight overlapped sync (D9 —
+    /// its context is being recomputed on the background stream, so it
+    /// cannot step, but excluding it would demote the round to the
+    /// partial lane-copy path).
+    fn is_masked_candidate(&self, slot: usize) -> bool {
+        let m = &self.lanes[slot];
+        m.occupied && (m.parked || m.sync_ticket.is_some())
+    }
+
+    /// Parked or sync-pending occupied slots outside the decode group —
+    /// the masked-row candidates for one round. Allocates only when such
+    /// lanes exist (decode groups are small, so the linear `contains`
+    /// beats building a membership table).
     fn masked_parked_rows(&self, slots: &[usize]) -> Vec<usize> {
         (0..self.cap)
-            .filter(|&s| {
-                self.lanes[s].occupied && self.lanes[s].parked && !slots.contains(&s)
-            })
+            .filter(|&s| self.is_masked_candidate(s) && !slots.contains(&s))
             .collect()
     }
 
-    /// Whether this round's decode group can carry every parked lane as a
-    /// masked row (DESIGN.md D8) — the per-round gate the scheduler's
-    /// hysteresis policy consumes. Vacuously true with no parked lanes
-    /// (the group already covers every occupied slot). A masked row's
-    /// write must land at its own masked append position, so:
-    /// TConst/TLin require `fill < W_og` (guaranteed after
-    /// [`Self::park_compact`]); the baseline requires `pos < bucket`
-    /// (there is an append slot inside the current bucket — violated only
-    /// when a lane parked exactly at a bucket boundary, until live lanes
-    /// migrate the bucket up or the session resumes).
+    /// Whether this round's decode group can carry every parked or
+    /// sync-pending lane as a masked row (DESIGN.md D8/D9) — the
+    /// per-round gate the scheduler's hysteresis policy consumes.
+    /// Vacuously true with no such lanes (the group already covers every
+    /// occupied slot). A masked row's write must land at its own masked
+    /// append position, so: TConst/TLin require `fill < W_og` (guaranteed
+    /// after [`Self::park_compact`], and trivially for sync-pending lanes
+    /// whose window emptied at submit); the baseline requires
+    /// `pos < bucket` (there is an append slot inside the current bucket
+    /// — violated only when a lane parked exactly at a bucket boundary,
+    /// until live lanes migrate the bucket up or the session resumes).
     pub fn park_mask_viable(&self, slots: &[usize]) -> bool {
         // Allocation-free: this runs (twice — scheduler decision + decode
         // safety recheck) on every round of the decode hot loop.
@@ -575,9 +597,7 @@ impl LaneArena {
             _ => None,
         };
         (0..self.cap)
-            .filter(|&s| {
-                self.lanes[s].occupied && self.lanes[s].parked && !slots.contains(&s)
-            })
+            .filter(|&s| self.is_masked_candidate(s) && !slots.contains(&s))
             .all(|s| match base_bucket {
                 Some(bucket) => self.lanes[s].pos < bucket,
                 None => self.lanes[s].fill < self.cfg.w_og,
@@ -618,6 +638,9 @@ impl LaneArena {
     pub fn load_state(&mut self, slot: usize, st: &SeqState) -> Result<()> {
         if slot >= self.cap || !self.lanes[slot].occupied {
             bail!("load_state into unoccupied slot {slot}");
+        }
+        if self.lanes[slot].sync_ticket.is_some() {
+            bail!("load_state into arena slot {slot} with an in-flight sync (commit it first)");
         }
         self.require_host(self.slab_keys())?;
         match (&mut self.state, st) {
@@ -698,6 +721,9 @@ impl LaneArena {
     pub fn extract_state(&self, slot: usize) -> Result<SeqState> {
         if slot >= self.cap || !self.lanes[slot].occupied {
             bail!("extract_state of unoccupied slot {slot}");
+        }
+        if self.lanes[slot].sync_ticket.is_some() {
+            bail!("extract_state of arena slot {slot} with an in-flight sync (commit it first)");
         }
         self.require_host(self.slab_keys())?;
         let m = &self.lanes[slot];
@@ -983,6 +1009,9 @@ impl LaneArena {
             if self.lanes[s].parked {
                 bail!("decode of parked arena slot {s} (resume it first)");
             }
+            if self.lanes[s].sync_ticket.is_some() {
+                bail!("decode of arena slot {s} with an in-flight sync (commit it first)");
+            }
             if seen[s] {
                 bail!("duplicate arena slot {s} in decode group");
             }
@@ -1023,6 +1052,123 @@ impl LaneArena {
             SeqState::Base(_) => bail!("baseline lanes do not sync"),
         }
         self.load_state(slot, &st)
+    }
+
+    // -- overlapped sync (DESIGN.md D9) --------------------------------------
+
+    /// Whether lane `slot` has an overlapped window fold in flight.
+    pub fn sync_pending(&self, slot: usize) -> bool {
+        slot < self.cap && self.lanes[slot].sync_ticket.is_some()
+    }
+
+    /// The in-flight fold's executor ticket (poll it with
+    /// [`crate::runtime::SyncExecutor::is_done`]).
+    pub fn sync_ticket(&self, slot: usize) -> Option<u64> {
+        self.lanes.get(slot).and_then(|m| m.sync_ticket)
+    }
+
+    /// Submit lane `slot`'s full generation window to the background sync
+    /// stream instead of folding it in-line (DESIGN.md D9). The window
+    /// empties immediately (`fill = 0` — the same post-sync lane clock an
+    /// in-line [`Self::sync_slot`] would leave), so the lane satisfies the
+    /// D8 masking invariant and rides subsequent decode rounds as a masked
+    /// row until [`Self::commit_sync_overlap`]. Incremental-mode TConst
+    /// only: the Full ablation's O(N) recompression stays synchronous.
+    pub fn begin_sync_overlap(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        ex: &mut crate::runtime::SyncExecutor,
+        slot: usize,
+    ) -> Result<()> {
+        if self.arch != Arch::TConst || drv.sync_mode != SyncMode::Incremental {
+            bail!("overlapped sync requires a TConst arena in Incremental sync mode");
+        }
+        if slot >= self.cap || !self.lanes[slot].occupied {
+            bail!("begin_sync_overlap on unoccupied arena slot {slot}");
+        }
+        let m = &self.lanes[slot];
+        if m.parked {
+            bail!("begin_sync_overlap on parked arena slot {slot}");
+        }
+        if m.sync_ticket.is_some() {
+            bail!("begin_sync_overlap on arena slot {slot} with a sync already in flight");
+        }
+        if m.fill != self.cfg.w_og {
+            bail!(
+                "begin_sync_overlap with {}/{} window tokens",
+                m.fill,
+                self.cfg.w_og
+            );
+        }
+        // The fold reads only the context slabs; steady-state decode never
+        // adopts those on device (only gen_k/gen_v rotate), so this
+        // download is a no-op outside the boundary step itself.
+        self.ensure_host(rt, &["ctx_k", "ctx_v", "ctx_sum"])?;
+        let (nb, h1) = (self.cfg.n_block, self.cfg.h_inner + 1);
+        let (woh, d) = (self.cfg.w_oh, self.cfg.d_model);
+        let ArenaState::TConst(slabs) = &self.state else { unreachable!() };
+        let ctx_k = read_block(&slabs.ctx_k, &[0, 0, slot, 0, 0], &[nb, h1, 1, woh, d])?;
+        let ctx_v = read_block(&slabs.ctx_v, &[0, 0, slot, 0, 0], &[nb, h1, 1, woh, d])?;
+        let ctx_sum = read_block(&slabs.ctx_sum, &[0, slot, 0, 0], &[nb, 1, woh, d])?;
+        let m = &mut self.lanes[slot];
+        let chunk = std::mem::take(&mut m.window_tokens);
+        let gate = m.gate;
+        let (name, args) =
+            tconstformer::fold_args(drv, rt, &chunk, ctx_k, ctx_v, ctx_sum, gate)?;
+        let ticket = ex.submit(&name, args)?;
+        let m = &mut self.lanes[slot];
+        m.fill = 0;
+        m.sync_ticket = Some(ticket);
+        Ok(())
+    }
+
+    /// Land an overlapped window fold: blocks until the background result
+    /// arrives (a no-op when it already did — poll [`Self::sync_ticket`]
+    /// with `is_done` to avoid the wait), writes the folded context into
+    /// the lane's slab rows, and re-opens the lane for decode. Commits
+    /// touch **only** the three context slabs — the fold does not produce
+    /// a generation window (its stale bytes are masked by `fill = 0`,
+    /// exactly as after an in-line sync), so the steady-state gen_k/gen_v
+    /// rotation and its zero-transfer property are untouched.
+    pub fn commit_sync_overlap(
+        &mut self,
+        rt: &mut Runtime,
+        ex: &mut crate::runtime::SyncExecutor,
+        slot: usize,
+    ) -> Result<()> {
+        if slot >= self.cap || !self.lanes[slot].occupied {
+            bail!("commit_sync_overlap on unoccupied arena slot {slot}");
+        }
+        let Some(ticket) = self.lanes[slot].sync_ticket.take() else {
+            bail!("commit_sync_overlap on arena slot {slot} with no sync in flight");
+        };
+        let mut out = ex.wait(ticket)?;
+        // results: logits, gen_k, gen_v, new_ctx_k, new_ctx_v, new_ctx_sum
+        if out.len() != 6 {
+            bail!("window fold returned {} results, expected 6", out.len());
+        }
+        let ctx_sum = out.pop().context("ctx_sum")?;
+        let ctx_v = out.pop().context("ctx_v")?;
+        let ctx_k = out.pop().context("ctx_k")?;
+        self.ensure_host(rt, &["ctx_k", "ctx_v", "ctx_sum"])?;
+        {
+            let ArenaState::TConst(slabs) = &mut self.state else {
+                bail!("commit_sync_overlap on a non-tconst arena")
+            };
+            insert_axis(&mut slabs.ctx_k, &ctx_k, 2, slot)?;
+            insert_axis(&mut slabs.ctx_v, &ctx_v, 2, slot)?;
+            insert_axis(&mut slabs.ctx_sum, &ctx_sum, 1, slot)?;
+        }
+        let m = &mut self.lanes[slot];
+        m.gate = 1.0;
+        m.syncs += 1;
+        if let Some(dev) = self.device.as_mut() {
+            for k in ["ctx_k", "ctx_v", "ctx_sum"] {
+                dev.flags.host_wrote(k);
+            }
+        }
+        Ok(())
     }
 
     /// Zero + fill the reusable input vectors in place. `masked` rows

@@ -274,6 +274,41 @@ impl ModelDriver {
         arena.decode_grouped(self, rt, slots, tokens, mask_parked)
     }
 
+    /// Whether this driver's periodic sync can run on the background
+    /// stream (DESIGN.md D9): TConst in Incremental mode — the O(1) fold
+    /// the paper's schedule amortizes. The Full ablation's O(N)
+    /// recompression and TLin/Base (which have no window fold) stay
+    /// synchronous.
+    pub fn overlap_sync_supported(&self) -> bool {
+        self.arch == Arch::TConst && self.sync_mode == SyncMode::Incremental
+    }
+
+    /// Submit a resident lane's full generation window to the background
+    /// sync stream (DESIGN.md D9). The lane rides subsequent rounds as a
+    /// masked row until [`Self::commit_sync_resident`].
+    pub fn begin_sync_resident(
+        &self,
+        rt: &mut Runtime,
+        arena: &mut LaneArena,
+        ex: &mut crate::runtime::SyncExecutor,
+        slot: usize,
+    ) -> Result<()> {
+        arena.begin_sync_overlap(self, rt, ex, slot)
+    }
+
+    /// Land a lane's overlapped window fold, committing the folded context
+    /// and re-opening the lane for decode (blocks if the fold is still in
+    /// flight — poll [`LaneArena::sync_ticket`] to avoid the wait).
+    pub fn commit_sync_resident(
+        &self,
+        rt: &mut Runtime,
+        arena: &mut LaneArena,
+        ex: &mut crate::runtime::SyncExecutor,
+        slot: usize,
+    ) -> Result<()> {
+        arena.commit_sync_overlap(rt, ex, slot)
+    }
+
     /// Park a resident lane at a turn boundary (DESIGN.md D6/D8): marks it
     /// parked and folds an exactly-full TConst/TLin generation window so
     /// the lane stays maskable (`fill < W_og`) for the rounds it sits out.

@@ -81,6 +81,13 @@ impl BaseState {
 // TConstFormer
 // ---------------------------------------------------------------------------
 
+/// The context tensors (`ctx_*`) and the generation window (`gen_*`,
+/// `window_tokens`) are deliberately **disjoint halves** of the state: the
+/// periodic sync reads only the context + the finished window's tokens and
+/// writes only the context. That separation is what lets the resident
+/// arena double-buffer the fold (DESIGN.md D9) — window *n* is folded on
+/// the background stream while decode proceeds against window *n+1*'s
+/// prefix, and the commit touches nothing the in-flight rounds read.
 #[derive(Debug, Clone)]
 pub struct TConstState {
     pub ctx_k: HostTensor,   // (nb, H+1, 1, W_oh, D)

@@ -69,6 +69,35 @@ impl TransferStats {
     }
 }
 
+/// Structured error for a failed in-place adoption on the staged
+/// (packed-tuple) fallback path: a result's shape/dtype does not match the
+/// pool buffer it would replace. Carries the offending buffer key so
+/// callers can react programmatically
+/// (`err.downcast_ref::<AdoptShapeMismatch>()`) instead of parsing the
+/// message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdoptShapeMismatch {
+    /// Pool-buffer key the adoption targeted.
+    pub buffer: String,
+    pub got_dtype: String,
+    pub got_shape: Vec<usize>,
+    pub want_dtype: String,
+    pub want_shape: Vec<usize>,
+}
+
+impl std::fmt::Display for AdoptShapeMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "adopt {:?}: result {} {:?} does not match pool buffer {} {:?}; \
+             rotation cannot resize — use pool_upload",
+            self.buffer, self.got_dtype, self.got_shape, self.want_dtype, self.want_shape
+        )
+    }
+}
+
+impl std::error::Error for AdoptShapeMismatch {}
+
 /// One non-parameter argument of [`Runtime::execute_resident`].
 pub enum ResidentArg<'a> {
     /// A small per-call tensor (tokens, positions, gates) — uploaded for
@@ -108,9 +137,16 @@ pub struct Runtime {
     transfers: TransferStats,
     /// Whether `execute_b` returns one device buffer per result (true:
     /// adopt is free rotation) or a single packed tuple buffer (false:
-    /// adopt stages through the host). Probed on the first resident
-    /// execute; `None` until then.
+    /// adopt stages through the host). Probed on the first multi-output
+    /// resident execute and **cached per client** — later calls branch on
+    /// the cached value instead of re-deriving the path from the result
+    /// row shape. `None` until probed.
     untupled_results: Option<bool>,
+    /// Executions of graphs lowered with input/output donation metadata
+    /// (`GraphMeta::donated`): on those calls the backend may alias the
+    /// donated state inputs to their outputs, making buffer rotation a
+    /// true in-place update.
+    donated_execs: u64,
 }
 
 impl Runtime {
@@ -129,6 +165,7 @@ impl Runtime {
             next_pool: 1,
             transfers: TransferStats::default(),
             untupled_results: None,
+            donated_execs: 0,
         })
     }
 
@@ -161,6 +198,19 @@ impl Runtime {
         let dt = t0.elapsed().as_secs_f64();
         self.exes.insert(name.to_string(), exe);
         Ok(Some(dt))
+    }
+
+    /// Pre-compile a graph and upload its (preset, arch) parameters, so a
+    /// later first `execute` pays neither compile nor param-upload latency.
+    /// Used to warm the overlapped-sync executor's background runtime
+    /// (DESIGN.md D9) off the decode path.
+    pub fn warm(&mut self, name: &str) -> Result<()> {
+        let key = {
+            let meta = self.manifest.graph(name)?;
+            (meta.preset.clone(), meta.arch.clone())
+        };
+        self.ensure_compiled(name)?;
+        self.ensure_params_dev(&key.0, &key.1)
     }
 
     // -- parameters ---------------------------------------------------------
@@ -233,6 +283,7 @@ impl Runtime {
         self.ensure_params_dev(&key.0, &key.1)?;
 
         let meta = self.manifest.graphs.get(name).unwrap();
+        let donated = !meta.donated.is_empty();
         Self::check_extra_args_impl(meta, extra)?;
 
         let t0 = Instant::now();
@@ -266,6 +317,9 @@ impl Runtime {
         self.transfers.upload_calls += extra.len() as u64;
         self.transfers.download_bytes += download;
         self.transfers.download_calls += results.len() as u64;
+        if donated {
+            self.donated_execs += 1;
+        }
         Ok(results)
     }
 
@@ -365,9 +419,16 @@ impl Runtime {
 
     /// Whether adopted results rotate on device for free (`Some(true)`),
     /// stage through the host (`Some(false)`), or have not been probed yet
-    /// (`None` — no resident execute has run).
+    /// (`None` — no multi-output resident execute has run). The probe is
+    /// cached per client: execute-path decisions branch on this value.
     pub fn output_rotation_supported(&self) -> Option<bool> {
         self.untupled_results
+    }
+
+    /// Executions so far of graphs carrying input/output donation metadata
+    /// (`GraphMeta::donated`) — the `/metrics` `donated_executions` source.
+    pub fn donated_executions(&self) -> u64 {
+        self.donated_execs
     }
 
     /// Execute a graph against a state pool: parameter buffers and
@@ -409,6 +470,7 @@ impl Runtime {
             }
         }
 
+        let donated = !self.manifest.graphs.get(name).unwrap().donated.is_empty();
         let out = {
             let meta = self.manifest.graphs.get(name).unwrap();
             let pool_map = self
@@ -450,11 +512,29 @@ impl Runtime {
         }
 
         let mut results: Vec<Option<HostTensor>> = Vec::with_capacity(outs.len());
-        if row.len() == outs.len() && outs.len() > 1 {
+        // Path decision: per-output buffers (free rotation) vs one packed
+        // tuple (staged fallback). Probed once per client from the first
+        // multi-output result row, then branched on the cached value —
+        // not re-derived per call.
+        let untupled = match self.untupled_results {
+            Some(u) if outs.len() > 1 => u,
+            _ => row.len() == outs.len() && outs.len() > 1,
+        };
+        if outs.len() > 1 {
+            self.untupled_results = Some(untupled);
+        }
+        if untupled {
             // Per-output device buffers: adopt rotates the buffer into the
             // pool with ZERO host↔device traffic; only fetched results
             // (logits) cross the boundary.
-            self.untupled_results = Some(true);
+            if row.len() != outs.len() {
+                bail!(
+                    "{name}: {} output buffers for {} results on the \
+                     per-output path",
+                    row.len(),
+                    outs.len()
+                );
+            }
             for (buf, spec) in row.into_iter().zip(outs) {
                 match spec {
                     ResidentOut::Adopt(k) => {
@@ -486,9 +566,6 @@ impl Runtime {
             // One packed tuple buffer: the whole result crosses to the
             // host once; adopted keys are staged back up. Honest O(state)
             // traffic — reported, not hidden (see DESIGN.md D5).
-            if outs.len() > 1 {
-                self.untupled_results = Some(false);
-            }
             let lit = row[0].to_literal_sync()?;
             let parts: Vec<HostTensor> = if outs.len() == 1 {
                 // A lone result may arrive as the bare array or a 1-tuple.
@@ -525,15 +602,13 @@ impl Runtime {
                                 format!("adopt into unknown pool buffer {k:?}")
                             })?;
                         if entry.shape != t.shape() || entry.dtype != t.dtype_str() {
-                            bail!(
-                                "adopt {k:?}: result {} {:?} does not match pool \
-                                 buffer {} {:?}; rotation cannot resize — use \
-                                 pool_upload",
-                                t.dtype_str(),
-                                t.shape(),
-                                entry.dtype,
-                                entry.shape
-                            );
+                            return Err(anyhow::Error::new(AdoptShapeMismatch {
+                                buffer: (*k).to_string(),
+                                got_dtype: t.dtype_str().to_string(),
+                                got_shape: t.shape().to_vec(),
+                                want_dtype: entry.dtype.to_string(),
+                                want_shape: entry.shape.clone(),
+                            }));
                         }
                         entry.buf = t.to_buffer(&self.client)?;
                         // hand the staged copy back so callers can refresh
@@ -560,6 +635,9 @@ impl Runtime {
         self.transfers.upload_calls += upload_calls;
         self.transfers.download_bytes += download;
         self.transfers.download_calls += download_calls;
+        if donated {
+            self.donated_execs += 1;
+        }
         Ok(results)
     }
 
@@ -667,5 +745,28 @@ impl Runtime {
         let mut v: Vec<String> = self.exes.keys().cloned().collect();
         v.sort();
         v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adopt_shape_mismatch_is_downcastable_and_names_the_buffer() {
+        let err = anyhow::Error::new(AdoptShapeMismatch {
+            buffer: "gen_k".into(),
+            got_dtype: "f32".into(),
+            got_shape: vec![1, 2],
+            want_dtype: "f32".into(),
+            want_shape: vec![1, 4],
+        });
+        assert!(err.to_string().contains("gen_k"));
+        assert!(err.to_string().contains("pool_upload"));
+        let m = err
+            .downcast_ref::<AdoptShapeMismatch>()
+            .expect("typed adopt error");
+        assert_eq!(m.buffer, "gen_k");
+        assert_eq!(m.want_shape, vec![1, 4]);
     }
 }

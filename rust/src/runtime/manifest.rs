@@ -80,6 +80,17 @@ impl ArgSpec {
     }
 }
 
+/// One input/output donation pair of a graph lowered with
+/// `donate_argnums`: executing the graph consumes arg `arg` and the
+/// backend may alias its memory to result `result` (true in-place buffer
+/// rotation). Indices are absolute (parameters included) for `arg` and
+/// positional in `results` for `result`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DonationSpec {
+    pub arg: usize,
+    pub result: usize,
+}
+
 /// One exported graph.
 #[derive(Debug, Clone)]
 pub struct GraphMeta {
@@ -93,6 +104,10 @@ pub struct GraphMeta {
     pub n_param_args: usize,
     pub args: Vec<ArgSpec>,
     pub results: Vec<String>,
+    /// Input/output donation pairs baked into the HLO (empty for graphs
+    /// lowered without donation and for pre-donation manifests — the field
+    /// is parsed leniently so old artifacts keep loading).
+    pub donated: Vec<DonationSpec>,
 }
 
 /// Weight-file entry per (preset, arch).
@@ -203,6 +218,18 @@ impl Manifest {
                     .iter()
                     .filter_map(|x| x.as_str().map(str::to_string))
                     .collect(),
+                donated: gj
+                    .get("donated")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|dj| {
+                        Some(DonationSpec {
+                            arg: dj.get("arg").as_usize()?,
+                            result: dj.get("result").as_usize()?,
+                        })
+                    })
+                    .collect(),
             };
             graphs.insert(g.name.clone(), g);
         }
@@ -307,6 +334,18 @@ impl Manifest {
             }
             if !self.configs.contains_key(&g.preset) {
                 bail!("graph {name}: unknown preset {}", g.preset);
+            }
+            for d in &g.donated {
+                if d.arg >= g.args.len() || d.result >= g.results.len() {
+                    bail!(
+                        "graph {name}: donation ({} -> {}) out of range",
+                        d.arg,
+                        d.result
+                    );
+                }
+                if d.arg < g.n_param_args {
+                    bail!("graph {name}: donation of a parameter arg {}", d.arg);
+                }
             }
         }
         for ((preset, arch), w) in &self.weights {

@@ -11,6 +11,9 @@
 //!   name, per-(preset, arch) parameter buffers resident on device, and the
 //!   `execute` entry points the model drivers use.
 //!
+//! * [`overlap`] — the background [`overlap::SyncExecutor`] stream that
+//!   runs TConst window folds concurrently with decode (DESIGN.md D9);
+//!
 //! Serving **state** now joins the parameters as device-resident: the
 //! runtime hands out named state-buffer pools ([`client::Runtime::new_state_pool`])
 //! whose `PjRtBuffer`s persist across decode steps, and
@@ -21,9 +24,11 @@
 
 pub mod client;
 pub mod manifest;
+pub mod overlap;
 pub mod tensor;
 pub mod weights;
 
-pub use client::{ResidentArg, ResidentOut, Runtime, TransferStats};
-pub use manifest::{ArgSpec, GraphMeta, Manifest, ModelConfig};
+pub use client::{AdoptShapeMismatch, ResidentArg, ResidentOut, Runtime, TransferStats};
+pub use manifest::{ArgSpec, DonationSpec, GraphMeta, Manifest, ModelConfig};
+pub use overlap::SyncExecutor;
 pub use tensor::{DeviceTensor, HostTensor};

@@ -1,0 +1,197 @@
+//! Overlapped global sync (DESIGN.md D9): a background execution stream
+//! for TConst/TLin window folds.
+//!
+//! TConstFormer's O(1) claim is *amortized* — every `W_og`-th token pays a
+//! window fold (the periodic cache miss). The [`SyncExecutor`] turns that
+//! spike into overlap: it owns a **second runtime** (its own PJRT client,
+//! compiling the same artifact graphs and loading the same weights) on a
+//! dedicated thread, so a fold submitted for window *n* executes
+//! concurrently with the main runtime's constant-time decode rounds
+//! against window *n+1*'s prefix. The arena commits the folded context
+//! when the result lands (see `LaneArena::begin_sync_overlap` /
+//! `commit_sync_overlap`).
+//!
+//! Why a second runtime rather than an async submit on the main client:
+//! the `xla-rs` binding exposes only a blocking `execute_b`, and the
+//! coordinator's runtime is deliberately single-threaded (`&mut self`).
+//! A separate client on its own thread guarantees true wall-clock overlap
+//! on every backend, at the cost of one extra param upload per executor
+//! (one-time, off the decode path — see [`SyncExecutor::warmup`]).
+//!
+//! Bit-identity: the fold runs the *same HLO* with the *same parameters*
+//! on the *same deterministic CPU backend* as the synchronous path, over
+//! inputs extracted at the same schedule point — its outputs are
+//! bit-identical to what `tconstformer::sync` would have produced
+//! in-line. The overlapped stream therefore equals the synchronous stream
+//! bit-for-bit (asserted by `rust/tests/overlap.rs`).
+//!
+//! Requests and replies carry plain [`HostTensor`]s (owned `Vec` data, so
+//! `Send`); the fold's host↔device traffic happens on the executor's own
+//! runtime and equals what the synchronous in-line fold would have paid.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::Runtime;
+use super::tensor::HostTensor;
+
+enum Req {
+    /// Compile a graph and upload its params ahead of the first fold.
+    Warmup { graph: String },
+    Execute { ticket: u64, graph: String, args: Vec<HostTensor> },
+    Shutdown,
+}
+
+struct Reply {
+    ticket: u64,
+    /// Errors cross the thread as strings (`anyhow::Error` is not `Sync`
+    /// by construction here and the caller only reports them).
+    result: Result<Vec<HostTensor>, String>,
+}
+
+/// Handle to the background sync stream: submit a window fold, keep
+/// decoding, collect the result when committing. One per worker (the
+/// executor's runtime, like the worker's, is single-threaded).
+pub struct SyncExecutor {
+    tx: mpsc::Sender<Req>,
+    rx: mpsc::Receiver<Reply>,
+    /// Results that arrived while waiting for a different ticket.
+    ready: HashMap<u64, Result<Vec<HostTensor>, String>>,
+    next_ticket: u64,
+    submitted: u64,
+    collected: u64,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl SyncExecutor {
+    /// Spawn the executor thread: it creates its own [`Runtime`] over the
+    /// same artifact directory (PJRT handles are not `Send`, so the client
+    /// is constructed on the thread) and, when the serving runtime loaded
+    /// a checkpoint, loads the same one — the two runtimes must hold
+    /// identical parameters for the fold to be bit-identical. Blocks until
+    /// the runtime is up (or its startup error).
+    pub fn spawn(
+        artifacts_dir: &str,
+        checkpoint: Option<(String, String, String)>, // (preset, arch, stem)
+    ) -> Result<Self> {
+        let dir = artifacts_dir.to_string();
+        let (req_tx, req_rx) = mpsc::channel::<Req>();
+        let (rep_tx, rep_rx) = mpsc::channel::<Reply>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("sync-executor".into())
+            .spawn(move || {
+                let mut rt = match Runtime::load(&dir).and_then(|mut rt| {
+                    if let Some((preset, arch, stem)) = &checkpoint {
+                        rt.load_checkpoint(preset, arch, stem)?;
+                    }
+                    Ok(rt)
+                }) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for req in req_rx {
+                    match req {
+                        Req::Warmup { graph } => {
+                            // Best-effort: a warmup failure surfaces as the
+                            // first fold's error, with full context.
+                            let _ = rt.warm(&graph);
+                        }
+                        Req::Execute { ticket, graph, args } => {
+                            let refs: Vec<&HostTensor> = args.iter().collect();
+                            let result =
+                                rt.execute(&graph, &refs).map_err(|e| format!("{e:#}"));
+                            if rep_tx.send(Reply { ticket, result }).is_err() {
+                                return; // handle dropped
+                            }
+                        }
+                        Req::Shutdown => return,
+                    }
+                }
+            })
+            .context("spawning sync-executor thread")?;
+        ready_rx
+            .recv()
+            .context("sync-executor thread died during startup")??;
+        Ok(SyncExecutor {
+            tx: req_tx,
+            rx: rep_rx,
+            ready: HashMap::new(),
+            next_ticket: 1,
+            submitted: 0,
+            collected: 0,
+            thread: Some(thread),
+        })
+    }
+
+    /// Pre-compile `graph` (and upload params) on the executor's runtime,
+    /// so the first real fold doesn't pay compile latency mid-stream.
+    /// Fire-and-forget.
+    pub fn warmup(&self, graph: &str) {
+        let _ = self.tx.send(Req::Warmup { graph: graph.to_string() });
+    }
+
+    /// Submit a fold for background execution; returns the ticket to
+    /// [`Self::wait`] on. The inputs are moved to the executor thread —
+    /// extract them before mutating the lane they came from.
+    pub fn submit(&mut self, graph: &str, args: Vec<HostTensor>) -> Result<u64> {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.tx
+            .send(Req::Execute { ticket, graph: graph.to_string(), args })
+            .ok()
+            .context("sync-executor thread gone")?;
+        self.submitted += 1;
+        Ok(ticket)
+    }
+
+    /// Collect a submitted fold's results, blocking until they land.
+    /// Results for *other* tickets arriving meanwhile are stashed, so
+    /// tickets may be waited on in any order.
+    pub fn wait(&mut self, ticket: u64) -> Result<Vec<HostTensor>> {
+        loop {
+            if let Some(result) = self.ready.remove(&ticket) {
+                self.collected += 1;
+                return result.map_err(|e| anyhow::anyhow!("background sync failed: {e}"));
+            }
+            match self.rx.recv() {
+                Ok(rep) => {
+                    self.ready.insert(rep.ticket, rep.result);
+                }
+                Err(_) => bail!("sync-executor thread died with ticket {ticket} in flight"),
+            }
+        }
+    }
+
+    /// Whether a submitted fold's result has already landed (a `wait` on
+    /// it would not block).
+    pub fn is_done(&mut self, ticket: u64) -> bool {
+        while let Ok(rep) = self.rx.try_recv() {
+            self.ready.insert(rep.ticket, rep.result);
+        }
+        self.ready.contains_key(&ticket)
+    }
+
+    /// Folds submitted but not yet collected.
+    pub fn in_flight(&self) -> u64 {
+        self.submitted - self.collected
+    }
+}
+
+impl Drop for SyncExecutor {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}

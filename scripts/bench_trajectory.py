@@ -1,0 +1,194 @@
+#!/usr/bin/env python3
+"""Committed perf trajectory: append bench results per PR, gate regressions.
+
+The micro bench (``cargo bench --bench micro``) writes ``micro_metrics.json``.
+This script maintains two committed trajectory files at the repo root —
+
+* ``BENCH_micro.json`` — one entry per PR: tokens/s (overlapped arm), host
+  copy B/step, device upload B/step, full-group round fraction, and the
+  sync-vs-steady p99 latency split;
+* ``BENCH_ttft.json``  — one entry per PR: cold-prefill vs resumed TTFT.
+
+Modes:
+
+    append  — extract a trajectory point from micro_metrics.json and append
+              it to both files (run locally; commit the result with the PR):
+                  python3 scripts/bench_trajectory.py append \
+                      --micro micro_metrics.json [--label my-pr]
+    gate    — compare micro_metrics.json against the committed baseline and
+              exit non-zero on regression beyond the noise band (run in CI):
+                  python3 scripts/bench_trajectory.py gate \
+                      --micro micro_metrics.json
+
+The gate's baseline is the median of the last up-to-5 committed entries for
+the same preset; an empty trajectory (or no entries for this preset) passes
+with a note, so seeding the files as ``[]`` is safe. Noise bands default to
+30% on timing-derived figures (CI runners jitter) and 5% + 64 B on the
+byte/fraction meters (near-deterministic). stdlib only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MICRO_TRAJ = os.path.join(REPO, "BENCH_micro.json")
+TTFT_TRAJ = os.path.join(REPO, "BENCH_ttft.json")
+
+# (key, kind): kind governs the gate direction and band.
+#   rate  — higher is better; fail below (1 - band) * baseline
+#   time  — lower is better; fail above (1 + band) * baseline
+#   bytes — lower is better; fail above baseline * 1.05 + 64
+#   frac  — higher is better; fail below baseline - 0.05
+MICRO_KEYS = [
+    ("tokens_per_s", "rate"),
+    ("copy_bytes_per_step", "bytes"),
+    ("upload_bytes_per_step", "bytes"),
+    ("full_group_round_frac", "frac"),
+    ("sync_p99_ms", "time"),
+    ("steady_p99_ms", "time"),
+]
+TTFT_KEYS = [("cold_ms", "time"), ("resumed_ms", "time")]
+TIMING_BAND = 0.30
+
+
+def load_json(path, default=None):
+    if not os.path.exists(path):
+        return default
+    with open(path) as f:
+        return json.load(f)
+
+
+def overlapped_row(micro):
+    for row in micro.get("per_token_latency", []):
+        if row.get("arm") == "overlapped":
+            return row
+    raise SystemExit("micro_metrics.json has no overlapped per_token_latency row")
+
+
+def extract_micro_point(micro):
+    """The trajectory point for BENCH_micro.json."""
+    lat = overlapped_row(micro)
+    park = micro.get("park_grouping", [])
+    # Full-group fraction under load: the masked arm with parked lanes
+    # present (falls back to the no-parked row on older artifacts).
+    withparked = [r for r in park if r.get("parked_lanes", 0) > 0] or park
+    frac = min((r["masked_full_group_frac"] for r in withparked), default=0.0)
+    return {
+        "tokens_per_s": lat["tokens_per_s"],
+        "copy_bytes_per_step": micro["host_copy_per_step"]["arena_bytes"],
+        "upload_bytes_per_step": micro["device_transfer_per_step"][
+            "device_arena_upload_bytes"
+        ],
+        "full_group_round_frac": frac,
+        "sync_p99_ms": lat["sync_p99_ms"],
+        "steady_p99_ms": lat["steady_p99_ms"],
+    }
+
+
+def extract_ttft_point(micro):
+    t = micro.get("ttft")
+    if not t:
+        raise SystemExit("micro_metrics.json has no ttft section")
+    return {"cold_ms": t["cold_ms"], "resumed_ms": t["resumed_ms"]}
+
+
+def stamp(point, micro, label):
+    return {
+        "preset": micro.get("preset", "unknown"),
+        "label": label,
+        "unix_time": int(time.time()),
+        **point,
+    }
+
+
+def append(args):
+    micro = load_json(args.micro)
+    if micro is None:
+        raise SystemExit(f"{args.micro} not found — run `cargo bench --bench micro` first")
+    label = args.label or os.environ.get("GITHUB_SHA", "local")[:12]
+    for path, point in [
+        (MICRO_TRAJ, extract_micro_point(micro)),
+        (TTFT_TRAJ, extract_ttft_point(micro)),
+    ]:
+        traj = load_json(path, default=[])
+        traj.append(stamp(point, micro, label))
+        with open(path, "w") as f:
+            json.dump(traj, f, indent=1)
+            f.write("\n")
+        print(f"appended {os.path.basename(path)} entry #{len(traj)} ({label})")
+
+
+def baseline(traj, preset, key):
+    vals = [e[key] for e in traj if e.get("preset") == preset and key in e]
+    if not vals:
+        return None
+    return statistics.median(vals[-5:])
+
+
+def check(key, kind, current, base):
+    """Returns (ok, detail)."""
+    if kind == "rate":
+        limit = (1.0 - TIMING_BAND) * base
+        return current >= limit, f"{current:.2f} vs baseline {base:.2f} (floor {limit:.2f})"
+    if kind == "time":
+        limit = (1.0 + TIMING_BAND) * base
+        return current <= limit, f"{current:.3f} ms vs baseline {base:.3f} (ceil {limit:.3f})"
+    if kind == "bytes":
+        limit = base * 1.05 + 64.0
+        return current <= limit, f"{current:.1f} B vs baseline {base:.1f} (ceil {limit:.1f})"
+    if kind == "frac":
+        limit = base - 0.05
+        return current >= limit, f"{current:.3f} vs baseline {base:.3f} (floor {limit:.3f})"
+    raise AssertionError(kind)
+
+
+def gate(args):
+    micro = load_json(args.micro)
+    if micro is None:
+        raise SystemExit(f"{args.micro} not found — run `cargo bench --bench micro` first")
+    preset = micro.get("preset", "unknown")
+    points = {
+        MICRO_TRAJ: (extract_micro_point(micro), MICRO_KEYS),
+        TTFT_TRAJ: (extract_ttft_point(micro), TTFT_KEYS),
+    }
+    failures = []
+    for path, (point, keys) in points.items():
+        traj = load_json(path, default=[])
+        name = os.path.basename(path)
+        for key, kind in keys:
+            base = baseline(traj, preset, key)
+            if base is None:
+                print(f"{name}/{key}: no committed baseline for preset {preset!r} — pass")
+                continue
+            ok, detail = check(key, kind, point[key], base)
+            verdict = "ok" if ok else "REGRESSION"
+            print(f"{name}/{key}: {detail} — {verdict}")
+            if not ok:
+                failures.append(f"{name}/{key}: {detail}")
+    if failures:
+        print(f"\nbench gate FAILED ({len(failures)} regression(s) beyond the noise band)")
+        sys.exit(1)
+    print("\nbench gate passed")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="mode", required=True)
+    for mode, fn in [("append", append), ("gate", gate)]:
+        p = sub.add_parser(mode)
+        p.add_argument("--micro", default="micro_metrics.json")
+        if mode == "append":
+            p.add_argument("--label", default=None)
+        p.set_defaults(fn=fn)
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()
