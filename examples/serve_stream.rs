@@ -6,8 +6,18 @@
 //! prefill tokens the session resume saved vs replaying each conversation
 //! cold.
 //!
-//! Run: `cargo run --release --example serve_stream -- [arch] [n_convs] [rate_per_s] [turns] [workers]`
+//! Run: `cargo run --release --example serve_stream -- [arch] [n_convs] [rate_per_s] [turns] [workers] [mode]`
 //! (defaults: tconst 16 8.0 3 1 — tiny preset for CPU speed).
+//!
+//! `mode = soak` turns the replay into the D10 SLO soak scenario:
+//! conversations are spread round-robin over the three SLO classes
+//! (`interactive`/`standard`/`batch`), chunked prefill is enabled
+//! (`$PREFILL_CHUNK`, default 64 tokens), and **one long cold prompt**
+//! (`$SOAK_LONG_PROMPT` tokens, default 1024) is injected halfway through
+//! the arrival process — the head-of-line-blocking probe. The replay JSON
+//! gains per-class TTFT percentiles (`ttft_slo_p99_<class>`, plus
+//! resumed-only variants) and the router's `worker_reply_timeouts_total`,
+//! which must stay 0 in the happy path.
 //!
 //! Besides the stdout report, the per-turn cold-vs-resumed TTFT figures
 //! are written as JSON to `$REPLAY_JSON` (default `replay_metrics.json`)
@@ -17,6 +27,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use tconstformer::coordinator::scheduler::SchedConfig;
 use tconstformer::coordinator::{Engine, EngineConfig};
 use tconstformer::data::corpus::{self, CorpusSpec};
 use tconstformer::data::tokenizer::ByteTokenizer;
@@ -41,17 +52,18 @@ fn nan0(x: f64) -> f64 {
     if x.is_finite() { x } else { 0.0 }
 }
 
-fn turn_body(tk: &ByteTokenizer, prompt: &[i32], max_new: usize) -> String {
+fn turn_body(tk: &ByteTokenizer, prompt: &[i32], max_new: usize, slo: &str) -> String {
     Json::obj(vec![
         ("prompt", Json::str(tk.decode(prompt))),
         ("max_new_tokens", Json::num(max_new as f64)),
+        ("slo", Json::str(slo)),
     ])
     .to_string()
 }
 
 /// Replay one conversation: open a session, run each turn over the SSE
 /// stream, close the session. Returns one stat per completed turn.
-fn replay_conversation(addr: &str, item: &workload::WorkItem) -> Vec<TurnStat> {
+fn replay_conversation(addr: &str, item: &workload::WorkItem, slo: &str) -> Vec<TurnStat> {
     let tk = ByteTokenizer;
     let mut stats = Vec::new();
     let Ok((code, body)) = http::http_post(addr, "/v1/sessions", "{}") else {
@@ -75,7 +87,7 @@ fn replay_conversation(addr: &str, item: &workload::WorkItem) -> Vec<TurnStat> {
             .map(|f| (f.prompt_tokens.clone(), f.max_new_tokens)),
     );
     for (i, (prompt, max_new)) in turns.iter().enumerate() {
-        let body = turn_body(&tk, prompt, *max_new);
+        let body = turn_body(&tk, prompt, *max_new, slo);
         match http::http_post_sse(addr, &path, &body) {
             Ok((200, events, first_ms)) => {
                 let done = events.last().cloned().unwrap_or(Json::Null);
@@ -123,20 +135,37 @@ fn main() -> anyhow::Result<()> {
     let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8.0);
     let turns: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(3);
     let workers: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
+    let soak = args.get(5).map(String::as_str) == Some("soak");
+    // Soak runs exercise chunked prefill (the anti-head-of-line path);
+    // plain runs keep the historical whole-prompt admission.
+    let prefill_chunk: usize = if soak {
+        std::env::var("PREFILL_CHUNK")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64)
+    } else {
+        0
+    };
 
     println!(
-        "== serve_stream: arch={} conversations={} rate={}/s turns<={} workers={} ==",
+        "== serve_stream: arch={} conversations={} rate={}/s turns<={} workers={}{} ==",
         arch.as_str(),
         n_convs,
         rate,
         turns,
-        workers
+        workers,
+        if soak {
+            format!(" soak (prefill_chunk={prefill_chunk})")
+        } else {
+            String::new()
+        }
     );
 
     let engine = Engine::spawn(EngineConfig {
         preset: "tiny".into(),
         arch,
         workers,
+        sched: SchedConfig { prefill_chunk, ..Default::default() },
         ..Default::default()
     })?;
     let addr = "127.0.0.1:8099";
@@ -169,26 +198,56 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Replay with real timing: one OS thread per in-flight conversation;
-    // turns within a conversation run sequentially on its session.
+    // turns within a conversation run sequentially on its session. In
+    // soak mode each conversation carries an SLO class (round-robin over
+    // the three), and one long cold prompt is injected halfway through
+    // the arrivals to probe head-of-line blocking.
+    const SLO_CLASSES: [&str; 3] = ["interactive", "standard", "batch"];
+    let n_items = items.len();
     let t0 = std::time::Instant::now();
-    let mut handles = Vec::new();
-    for item in items {
+    let mut handles: Vec<(usize, std::thread::JoinHandle<Vec<TurnStat>>)> = Vec::new();
+    let mut long_probe = None;
+    for (idx, item) in items.into_iter().enumerate() {
         let wait = item.at_ms - t0.elapsed().as_secs_f64() * 1000.0;
         if wait > 0.0 {
             std::thread::sleep(std::time::Duration::from_millis(wait as u64));
         }
-        handles.push(std::thread::spawn(move || replay_conversation(addr, &item)));
+        if soak && idx == n_items / 2 && long_probe.is_none() {
+            let long_len: usize = std::env::var("SOAK_LONG_PROMPT")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1024);
+            let long_item = workload::WorkItem {
+                id: u64::MAX,
+                at_ms: item.at_ms,
+                prompt_tokens: corp.train.iter().cycle().take(long_len).copied().collect(),
+                max_new_tokens: 8,
+                followups: Vec::new(),
+            };
+            long_probe = Some(std::thread::spawn(move || {
+                replay_conversation(addr, &long_item, "standard")
+            }));
+        }
+        let class = if soak { idx % SLO_CLASSES.len() } else { 1 };
+        handles.push((
+            class,
+            std::thread::spawn(move || replay_conversation(addr, &item, SLO_CLASSES[class])),
+        ));
     }
 
     let mut ttft_cold = Percentiles::default();
     let mut ttft_resume = Percentiles::default();
+    let mut ttft_class: [Percentiles; 3] = std::array::from_fn(|_| Percentiles::default());
+    let mut ttft_class_resumed: [Percentiles; 3] =
+        std::array::from_fn(|_| Percentiles::default());
     let mut prefill_cold = 0.0f64;
     let mut prefill_resume = 0.0f64;
     let mut saved = 0.0f64;
     let mut tokens = 0usize;
     let mut turns_done = 0usize;
     let mut errors = 0usize;
-    for h in handles {
+    let mut long_probe_ttft_ms = f64::NAN;
+    for (class, h) in handles {
         for s in h.join().unwrap() {
             if !s.ok {
                 errors += 1;
@@ -196,14 +255,27 @@ fn main() -> anyhow::Result<()> {
             }
             turns_done += 1;
             tokens += s.tokens;
+            ttft_class[class].add(s.ttft_ms);
             if s.turn_index == 0 {
                 ttft_cold.add(s.ttft_ms);
                 prefill_cold += s.prefill_tokens;
             } else {
                 ttft_resume.add(s.ttft_ms);
+                ttft_class_resumed[class].add(s.ttft_ms);
                 prefill_resume += s.prefill_tokens;
             }
             saved += s.saved_prefill_tokens;
+        }
+    }
+    if let Some(h) = long_probe {
+        // Counted apart from the classes: this turn exists to perturb the
+        // others, not to be measured with them.
+        for s in h.join().unwrap() {
+            if s.ok {
+                long_probe_ttft_ms = s.ttft_ms;
+            } else {
+                errors += 1;
+            }
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -227,11 +299,29 @@ fn main() -> anyhow::Result<()> {
         prefill_cold, prefill_resume, saved
     );
 
+    if soak {
+        println!("\n-- SLO classes (soak) --");
+        for (i, name) in SLO_CLASSES.iter().enumerate() {
+            println!(
+                "  {name:<12} p50 {:>8.1} ms   p99 {:>8.1} ms   resumed p99 {:>8.1} ms  ({} turns)",
+                nan0(ttft_class[i].p50()),
+                nan0(ttft_class[i].p99()),
+                nan0(ttft_class_resumed[i].p99()),
+                ttft_class[i].len(),
+            );
+        }
+        println!("  long cold probe ttft {:>8.1} ms", nan0(long_probe_ttft_ms));
+    }
+
+    let m = engine.metrics()?;
+
     // Publish the cold-vs-resumed TTFT split as a JSON artifact (the CI
-    // nightly uploads it next to the micro bench's metrics).
+    // nightly uploads it next to the micro bench's metrics). Soak runs
+    // add the per-SLO-class percentiles and the envelope-protocol timeout
+    // counter (0 in any healthy run).
     let json_path =
         std::env::var("REPLAY_JSON").unwrap_or_else(|_| "replay_metrics.json".into());
-    let report = Json::obj(vec![
+    let mut fields = vec![
         ("arch", Json::str(arch.as_str())),
         ("workers", Json::num(workers as f64)),
         ("conversations", Json::num(n_convs as f64)),
@@ -243,14 +333,32 @@ fn main() -> anyhow::Result<()> {
         ("ttft_cold_p95_ms", Json::num(nan0(ttft_cold.p95()))),
         ("ttft_resumed_p50_ms", Json::num(nan0(ttft_resume.p50()))),
         ("ttft_resumed_p95_ms", Json::num(nan0(ttft_resume.p95()))),
+        ("ttft_resumed_p99_ms", Json::num(nan0(ttft_resume.p99()))),
         ("prefill_tokens_cold", Json::num(prefill_cold)),
         ("prefill_tokens_resumed", Json::num(prefill_resume)),
         ("prefill_tokens_saved", Json::num(saved)),
-    ]);
+        (
+            "worker_reply_timeouts_total",
+            Json::num(m.get("worker_reply_timeouts_total").as_f64().unwrap_or(0.0)),
+        ),
+    ];
+    if soak {
+        fields.push(("soak", Json::Bool(true)));
+        fields.push(("prefill_chunk", Json::num(prefill_chunk as f64)));
+        fields.push(("long_probe_ttft_ms", Json::num(nan0(long_probe_ttft_ms))));
+        let class_keys = [
+            ("ttft_slo_p99_interactive", "ttft_slo_resumed_p99_interactive"),
+            ("ttft_slo_p99_standard", "ttft_slo_resumed_p99_standard"),
+            ("ttft_slo_p99_batch", "ttft_slo_resumed_p99_batch"),
+        ];
+        for (i, (all_key, resumed_key)) in class_keys.into_iter().enumerate() {
+            fields.push((all_key, Json::num(nan0(ttft_class[i].p99()))));
+            fields.push((resumed_key, Json::num(nan0(ttft_class_resumed[i].p99()))));
+        }
+    }
+    let report = Json::obj(fields);
     std::fs::write(&json_path, report.to_string())?;
     println!("\nreplay metrics -> {json_path}");
-
-    let m = engine.metrics()?;
     println!("\n-- engine metrics --");
     println!(
         "  decode rounds {}  syncs {}  kv peak {} B  round mean {:.2} ms",
@@ -269,10 +377,12 @@ fn main() -> anyhow::Result<()> {
         m.get("resume_saved_tokens"),
     );
     println!(
-        "  workers {}  rebalances {}  rate-limited {}",
+        "  workers {}  rebalances {}  rate-limited {}  reply timeouts {}  chunked rounds {}",
         m.get("workers"),
         m.get("router_rebalance_total"),
         m.get("rate_limited_turns"),
+        m.get("worker_reply_timeouts_total"),
+        m.get("chunked_prefill_rounds"),
     );
 
     stop.store(true, Ordering::Relaxed);

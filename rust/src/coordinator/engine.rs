@@ -22,6 +22,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use super::protocol::RouterEvent;
 use super::request::{Response, StreamEvent, TurnRequest};
 use super::router::{spawn_router, RouterMsg};
 use super::scheduler::SchedConfig;
@@ -121,31 +122,34 @@ impl Engine {
 /// thread, which fans out to the workers).
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: mpsc::Sender<RouterMsg>,
+    tx: mpsc::Sender<RouterEvent>,
     _router: std::sync::Arc<ThreadGuard>,
 }
 
 impl EngineHandle {
+    fn send(&self, msg: RouterMsg) -> Result<()> {
+        self.tx
+            .send(RouterEvent::Client(msg))
+            .ok()
+            .context("engine gone")
+    }
+
     /// Open a persistent session; turns carrying its id resume its state.
     /// The session is placed on a worker at its first turn, not here.
     pub fn open_session(&self) -> Result<u64> {
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(RouterMsg::OpenSession(tx))
-            .ok()
-            .context("engine gone")?;
+        self.send(RouterMsg::OpenSession(tx))?;
         rx.recv_timeout(Duration::from_secs(5))
             .context("open_session timeout")
     }
 
     /// Close a session, cancelling any in-flight turn and freeing its
-    /// parked state. Returns whether the session existed.
+    /// parked state. Returns whether the session existed. The router
+    /// answers from its continuation table — a wedged worker fails the
+    /// close at the envelope deadline instead of stalling other clients.
     pub fn close_session(&self, session_id: u64) -> Result<bool> {
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(RouterMsg::CloseSession(session_id, tx))
-            .ok()
-            .context("engine gone")?;
+        self.send(RouterMsg::CloseSession(session_id, tx))?;
         rx.recv_timeout(Duration::from_secs(10))
             .context("close_session timeout")
     }
@@ -154,7 +158,7 @@ impl EngineHandle {
     /// the handle mid-turn cancels generation.
     pub fn submit(&self, req: TurnRequest) -> SessionHandle {
         let (tx, rx) = mpsc::channel();
-        let _ = self.tx.send(RouterMsg::Submit(req, tx));
+        let _ = self.tx.send(RouterEvent::Client(RouterMsg::Submit(req, tx)));
         SessionHandle { rx }
     }
 
@@ -165,18 +169,18 @@ impl EngineHandle {
     }
 
     /// Aggregated metrics snapshot: engine-wide counters plus per-worker
-    /// gauges and router counters (DESIGN.md D7).
+    /// gauges and router counters (DESIGN.md D7). Collected async: the
+    /// router fans one correlation id out to every worker and aggregates
+    /// replies as they land, so a slow worker degrades this call to a
+    /// partial aggregate, never to a routing stall.
     pub fn metrics(&self) -> Result<Json> {
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(RouterMsg::Metrics(tx))
-            .ok()
-            .context("engine gone")?;
+        self.send(RouterMsg::Metrics(tx))?;
         rx.recv_timeout(Duration::from_secs(10)).context("metrics timeout")
     }
 
     pub fn shutdown(&self) {
-        let _ = self.tx.send(RouterMsg::Shutdown);
+        let _ = self.tx.send(RouterEvent::Client(RouterMsg::Shutdown));
     }
 }
 

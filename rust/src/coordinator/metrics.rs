@@ -50,6 +50,16 @@ pub struct EngineMetrics {
     /// aliased) buffer, mirrored from the worker's own runtime. Folds
     /// executed on the background stream's runtime are not included.
     pub donated_executions: u64,
+    /// Chunked-prefill rounds (DESIGN.md D10): scheduler rounds that
+    /// advanced at least one cold prompt by one chunk between decode
+    /// rounds. 0 with `--prefill-chunk 0` (whole-prompt admission).
+    pub chunked_prefill_rounds: u64,
+    /// Worker loop wakeups caused by a message arriving (D10 satellite:
+    /// the idle loop blocks on its channel instead of polling).
+    pub idle_wakeups_message: u64,
+    /// Worker loop wakeups caused by the computed deadline (next
+    /// scheduled round / session TTL sweep) expiring with no message.
+    pub idle_wakeups_deadline: u64,
     /// Session lifecycle counters (DESIGN.md D6).
     pub sessions_opened: u64,
     pub sessions_closed: u64,
@@ -114,6 +124,9 @@ impl Default for EngineMetrics {
             sync_overlapped_total: 0,
             sync_commit_wait_rounds: 0,
             donated_executions: 0,
+            chunked_prefill_rounds: 0,
+            idle_wakeups_message: 0,
+            idle_wakeups_deadline: 0,
             sessions_opened: 0,
             sessions_closed: 0,
             sessions_evicted: 0,
@@ -213,6 +226,18 @@ impl EngineMetrics {
                 Json::num(self.sync_commit_wait_rounds as f64),
             ),
             ("donated_executions", Json::num(self.donated_executions as f64)),
+            (
+                "chunked_prefill_rounds",
+                Json::num(self.chunked_prefill_rounds as f64),
+            ),
+            (
+                "idle_wakeups_message",
+                Json::num(self.idle_wakeups_message as f64),
+            ),
+            (
+                "idle_wakeups_deadline",
+                Json::num(self.idle_wakeups_deadline as f64),
+            ),
             ("throughput_tok_s", Json::num(self.throughput_tok_s())),
             ("ttft_ms_p50", Json::num(nan0(self.ttft_ms.p50()))),
             ("ttft_ms_p95", Json::num(nan0(self.ttft_ms.p95()))),
@@ -261,6 +286,10 @@ pub struct RouterStats {
     pub router_rebalance_total: u64,
     /// Turns rejected by the per-session token bucket (HTTP 429).
     pub rate_limited_turns: u64,
+    /// Enveloped worker requests (close / export / metrics) whose reply
+    /// missed the deadline (DESIGN.md D10). 0 in the happy path — any
+    /// nonzero value means a worker wedged while the router kept routing.
+    pub worker_reply_timeouts: u64,
 }
 
 /// Counters that sum across workers (same keys as the single-worker
@@ -290,6 +319,9 @@ const SUM_KEYS: &[&str] = &[
     "sync_overlapped_total",
     "sync_commit_wait_rounds",
     "donated_executions",
+    "chunked_prefill_rounds",
+    "idle_wakeups_message",
+    "idle_wakeups_deadline",
     "throughput_tok_s",
     "kv_bytes_current",
     "kv_bytes_peak",
@@ -336,6 +368,10 @@ pub fn aggregate_metrics(
             Json::num(stats.router_rebalance_total as f64),
         ),
         ("rate_limited_turns", Json::num(stats.rate_limited_turns as f64)),
+        (
+            "worker_reply_timeouts_total",
+            Json::num(stats.worker_reply_timeouts as f64),
+        ),
         ("router_sessions_tracked", Json::num(stats.sessions_tracked as f64)),
     ];
     for &key in SUM_KEYS {
@@ -437,6 +473,7 @@ mod tests {
             sessions_closed_unplaced: 1,
             router_rebalance_total: 2,
             rate_limited_turns: 3,
+            worker_reply_timeouts: 5,
             ..Default::default()
         };
         let j = aggregate_metrics(&stats, &snaps, &loads);
@@ -447,6 +484,7 @@ mod tests {
         assert_eq!(j.get("sessions_closed").as_usize(), Some(1));
         assert_eq!(j.get("router_rebalance_total").as_usize(), Some(2));
         assert_eq!(j.get("rate_limited_turns").as_usize(), Some(3));
+        assert_eq!(j.get("worker_reply_timeouts_total").as_usize(), Some(5));
         // weighted average of p50s: (3*10 + 1*50) / 4 = 20
         assert!((j.get("ttft_ms_p50").as_f64().unwrap() - 20.0).abs() < 1e-9);
         let workers = j.get("workers_detail").as_arr().unwrap();

@@ -31,6 +31,7 @@
 pub mod engine;
 pub mod kv_manager;
 pub mod metrics;
+pub mod protocol;
 pub mod request;
 pub mod router;
 pub mod scheduler;
@@ -38,4 +39,7 @@ pub mod worker;
 
 pub use engine::{ArenaStaging, Engine, EngineConfig, EngineHandle, SessionHandle};
 pub use kv_manager::{WorkerLoad, WorkerLoadSnapshot};
-pub use request::{FinishReason, Request, RequestMetrics, Response, StreamEvent, TurnRequest};
+pub use protocol::{ErrorCode, TurnError, WorkerError};
+pub use request::{
+    FinishReason, Request, RequestMetrics, Response, SloClass, StreamEvent, TurnRequest,
+};

@@ -1,0 +1,266 @@
+//! The typed router ↔ worker protocol (DESIGN.md D10).
+//!
+//! Before this module, every control round-trip (close / export /
+//! metrics) carried an ad-hoc `mpsc::Sender` reply slot and the router
+//! **blocked** up to 5 s per worker waiting on it — a worker mid-decode
+//! round stalled *all* routing. The redesign makes every round-trip a
+//! correlation-id exchange:
+//!
+//! * the router wraps a [`WorkerReq`] in an [`Envelope`] (correlation id
+//!   + deadline) and keeps a continuation keyed by the id;
+//! * the worker answers on the router's own event channel with a
+//!   [`WorkerReply`] carrying the id back;
+//! * the router event loop (`RouterEvent::Client | RouterEvent::Worker`
+//!   over one channel) resumes the continuation when the reply arrives —
+//!   or fails it with [`WorkerError::Deadline`] when the deadline passes
+//!   first, counted in `/metrics` as `worker_reply_timeouts_total`.
+//!
+//! Turn routing therefore never parks: a `Submit` observed while ten
+//! metric replies are in flight routes immediately. The envelope is also
+//! the seam for cross-host sharding — `Envelope`/`WorkerReply` are what
+//! later go over TCP.
+//!
+//! Client-visible failures use the structured [`TurnError`] (`{code,
+//! message, retryable}` — the exact JSON body and SSE error schema the
+//! HTTP layer emits), replacing stringly-typed `StreamEvent::Error`
+//! payloads that HTTP had to sniff with `contains("rate limited")`.
+
+use std::time::Instant;
+
+use super::worker::SessionExport;
+use crate::util::json::Json;
+
+/// Machine-readable failure class, shared by the engine boundary and the
+/// HTTP layer (each code maps to exactly one HTTP status).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The session id is not known to the router (never opened, closed,
+    /// or TTL-swept).
+    UnknownSession,
+    /// The session already has a turn in flight (or is mid-migration).
+    SessionBusy,
+    /// The per-session token bucket is empty; retry after the hint.
+    RateLimited,
+    /// A worker did not answer within the envelope deadline.
+    Deadline,
+    /// The request body / parameters were malformed.
+    BadRequest,
+    /// Engine-internal failure (admission, prefill, device error).
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::UnknownSession => "unknown_session",
+            ErrorCode::SessionBusy => "session_busy",
+            ErrorCode::RateLimited => "rate_limited",
+            ErrorCode::Deadline => "deadline",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// The HTTP status this code maps to.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ErrorCode::UnknownSession => 404,
+            ErrorCode::SessionBusy => 409,
+            ErrorCode::RateLimited => 429,
+            ErrorCode::Deadline => 504,
+            ErrorCode::BadRequest => 400,
+            ErrorCode::Internal => 500,
+        }
+    }
+}
+
+/// A structured turn/stream failure: the engine-boundary error type and,
+/// verbatim, the HTTP error body `{code, message, retryable}` (plus
+/// `retry_after_s` when rate limited).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TurnError {
+    pub code: ErrorCode,
+    pub message: String,
+    /// Whether the identical request may succeed if retried (after
+    /// `retry_after_s`, when present).
+    pub retryable: bool,
+    /// Retry hint in seconds (rate limiting; mapped to `Retry-After`).
+    pub retry_after_s: Option<f64>,
+}
+
+impl TurnError {
+    pub fn unknown_session(sid: u64) -> Self {
+        TurnError {
+            code: ErrorCode::UnknownSession,
+            message: format!("unknown session {sid}"),
+            retryable: false,
+            retry_after_s: None,
+        }
+    }
+
+    pub fn busy(msg: impl Into<String>) -> Self {
+        TurnError {
+            code: ErrorCode::SessionBusy,
+            message: msg.into(),
+            retryable: true,
+            retry_after_s: None,
+        }
+    }
+
+    pub fn rate_limited(sid: u64, rate: f64, retry_after_s: f64) -> Self {
+        TurnError {
+            code: ErrorCode::RateLimited,
+            message: format!(
+                "rate limited: session {sid} over {rate:.2} turns/s; \
+                 retry after {retry_after_s:.2}s"
+            ),
+            retryable: true,
+            retry_after_s: Some(retry_after_s),
+        }
+    }
+
+    pub fn deadline(msg: impl Into<String>) -> Self {
+        TurnError {
+            code: ErrorCode::Deadline,
+            message: msg.into(),
+            retryable: true,
+            retry_after_s: None,
+        }
+    }
+
+    pub fn bad_request(msg: impl Into<String>) -> Self {
+        TurnError {
+            code: ErrorCode::BadRequest,
+            message: msg.into(),
+            retryable: false,
+            retry_after_s: None,
+        }
+    }
+
+    pub fn internal(msg: impl Into<String>) -> Self {
+        TurnError {
+            code: ErrorCode::Internal,
+            message: msg.into(),
+            retryable: false,
+            retry_after_s: None,
+        }
+    }
+
+    /// The wire shape: `{code, message, retryable[, retry_after_s]}`.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("code", Json::str(self.code.as_str())),
+            ("message", Json::str(&self.message)),
+            ("retryable", Json::Bool(self.retryable)),
+        ];
+        if let Some(s) = self.retry_after_s {
+            fields.push(("retry_after_s", Json::Num(s)));
+        }
+        Json::obj(fields)
+    }
+}
+
+impl std::fmt::Display for TurnError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for TurnError {}
+
+/// A correlated request wrapper: every router→worker round-trip carries
+/// one. The worker echoes `corr` back in its [`WorkerReply`]; the router
+/// fails the continuation with [`WorkerError::Deadline`] if `deadline`
+/// passes first.
+#[derive(Debug)]
+pub struct Envelope<Req> {
+    pub corr: u64,
+    pub deadline: Instant,
+    pub req: Req,
+}
+
+/// Control requests the router sends inside an [`Envelope`] (turns keep
+/// their own dedicated `Submit` path — they already stream replies via
+/// the event sender and never block the router).
+#[derive(Debug, Clone, Copy)]
+pub enum WorkerReq {
+    /// Free the session's parked state; cancel a turn in flight.
+    CloseSession(u64),
+    /// Export the session for migration (only spilled/fresh sessions
+    /// accept; `Exported { export: None }` means affinity wins).
+    ExportSession(u64),
+    /// Snapshot the worker's metrics.
+    Metrics,
+}
+
+/// Reply payloads, one per [`WorkerReq`] variant.
+#[derive(Debug)]
+pub enum WorkerReplyBody {
+    Closed(bool),
+    Exported { sid: u64, export: Option<SessionExport> },
+    Metrics(Json),
+}
+
+/// A worker's answer to an enveloped request, delivered on the router's
+/// own event channel (never a dedicated blocking reply slot).
+#[derive(Debug)]
+pub struct WorkerReply {
+    pub corr: u64,
+    pub worker: usize,
+    pub body: WorkerReplyBody,
+}
+
+/// Why an enveloped request failed without a usable reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerError {
+    /// No reply before the envelope deadline (counted in
+    /// `worker_reply_timeouts_total`).
+    Deadline,
+    /// The worker's channel is gone (thread exited).
+    Disconnected,
+}
+
+/// Everything the router's single event loop receives: client control
+/// messages and worker replies share one channel, so the loop never has
+/// to park on a second receiver.
+pub(crate) enum RouterEvent {
+    Client(super::router::RouterMsg),
+    Worker(WorkerReply),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_map_to_statuses() {
+        assert_eq!(ErrorCode::UnknownSession.http_status(), 404);
+        assert_eq!(ErrorCode::SessionBusy.http_status(), 409);
+        assert_eq!(ErrorCode::RateLimited.http_status(), 429);
+        assert_eq!(ErrorCode::Deadline.http_status(), 504);
+        assert_eq!(ErrorCode::BadRequest.http_status(), 400);
+        assert_eq!(ErrorCode::Internal.http_status(), 500);
+    }
+
+    #[test]
+    fn error_json_shape() {
+        let e = TurnError::rate_limited(7, 2.0, 0.43);
+        let j = e.to_json();
+        assert_eq!(j.get("code").as_str(), Some("rate_limited"));
+        assert_eq!(j.get("retryable").as_bool(), Some(true));
+        assert!((j.get("retry_after_s").as_f64().unwrap() - 0.43).abs() < 1e-9);
+        assert!(j.get("message").as_str().unwrap().contains("rate limited"));
+        let e = TurnError::unknown_session(3);
+        let j = e.to_json();
+        assert_eq!(j.get("code").as_str(), Some("unknown_session"));
+        assert_eq!(j.get("retryable").as_bool(), Some(false));
+        assert!(j.get("retry_after_s").is_null());
+    }
+
+    #[test]
+    fn display_includes_code_and_message() {
+        let e = TurnError::unknown_session(9);
+        let s = e.to_string();
+        assert!(s.contains("unknown_session") && s.contains("unknown session 9"));
+    }
+}

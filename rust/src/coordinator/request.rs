@@ -7,7 +7,53 @@
 //! one `Token` per sampled token, then a terminal `TurnDone` carrying the
 //! full [`Response`].
 
+use super::protocol::TurnError;
 use crate::model::sampler::SamplingParams;
+
+/// TTFT service-level class for a turn (DESIGN.md D10). The scheduler
+/// spends its admission slots and masked-row slack on whichever waiting
+/// turn is *closest to breaching* its class budget (least slack first);
+/// with every turn in the same class this degenerates to FIFO, so
+/// deterministic-stream tests are unaffected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SloClass {
+    /// Human-in-the-loop chat: tight TTFT budget.
+    Interactive,
+    /// The default for API traffic.
+    #[default]
+    Standard,
+    /// Offline / bulk work: generous budget, yields to the other classes.
+    Batch,
+}
+
+impl SloClass {
+    /// The class's TTFT budget in milliseconds — the deadline slack is
+    /// measured against this from the moment the turn is submitted.
+    pub fn ttft_budget_ms(&self) -> f64 {
+        match self {
+            SloClass::Interactive => 300.0,
+            SloClass::Standard => 2_000.0,
+            SloClass::Batch => 30_000.0,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "standard" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+}
 
 /// One generation turn.
 #[derive(Debug, Clone)]
@@ -26,6 +72,8 @@ pub struct TurnRequest {
     pub sampling: SamplingParams,
     /// Stop generation when this token is produced (None = run to budget).
     pub stop_token: Option<i32>,
+    /// TTFT SLO class; the scheduler prioritizes by remaining slack.
+    pub slo: SloClass,
 }
 
 /// Compatibility alias for the pre-session API; `TurnRequest` with
@@ -41,6 +89,7 @@ impl TurnRequest {
             max_new_tokens,
             sampling: SamplingParams::greedy(),
             stop_token: None,
+            slo: SloClass::default(),
         }
     }
 
@@ -62,8 +111,10 @@ pub enum StreamEvent {
     TurnDone(Response),
     /// The turn's session no longer exists (terminal).
     Closed { session_id: Option<u64> },
-    /// The turn could not run (unknown/busy session, engine error).
-    Error(String),
+    /// The turn could not run (unknown/busy session, rate limit, engine
+    /// error) — structured so HTTP maps it to a status + JSON body
+    /// without sniffing message text.
+    Error(TurnError),
 }
 
 /// Per-request timing and accounting, filled by the engine.
@@ -93,6 +144,9 @@ pub struct RequestMetrics {
     /// here: every turn of a session reports the same worker unless the
     /// router migrated its spilled state.
     pub worker: usize,
+    /// The turn's TTFT SLO class (echoed so replay artifacts can bucket
+    /// TTFT percentiles per class).
+    pub slo: SloClass,
 }
 
 impl RequestMetrics {
@@ -162,6 +216,19 @@ mod tests {
         assert!(r.session_id.is_none());
         let t = TurnRequest::greedy_turn(8, 3, vec![1], 4);
         assert_eq!(t.session_id, Some(3));
+    }
+
+    #[test]
+    fn slo_class_roundtrip_and_budget_order() {
+        for c in [SloClass::Interactive, SloClass::Standard, SloClass::Batch] {
+            assert_eq!(SloClass::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(SloClass::parse("bogus"), None);
+        assert_eq!(SloClass::default(), SloClass::Standard);
+        assert!(
+            SloClass::Interactive.ttft_budget_ms() < SloClass::Standard.ttft_budget_ms()
+        );
+        assert!(SloClass::Standard.ttft_budget_ms() < SloClass::Batch.ttft_budget_ms());
     }
 
     #[test]

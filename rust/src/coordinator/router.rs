@@ -1,4 +1,5 @@
-//! The **Router**: front tier of the two-tier engine (DESIGN.md D7).
+//! The **Router**: front tier of the two-tier engine (DESIGN.md D7),
+//! driven as a single non-blocking event loop (DESIGN.md D10).
 //!
 //! The router owns what must be global — the session table (id space,
 //! session → worker placement, per-session turn rate limiting) — and
@@ -19,13 +20,23 @@
 //!   host-mirror `SeqState`, cheap to relocate — accept, so affinity is
 //!   enforced by the owner, not trusted to the router's (racy) view.
 //!
+//! **The router never blocks on a worker.** Close / export / metrics
+//! round-trips are correlation-id [`Envelope`]s; the worker answers on
+//! the router's own event channel ([`RouterEvent::Worker`]) and the
+//! router resumes the matching [`Continuation`] when the reply lands —
+//! turn routing proceeds while any number of replies are in flight. A
+//! reply missing its deadline surfaces as `WorkerError::Deadline`
+//! semantics (the waiting client gets a retryable structured error, a
+//! partial metrics aggregate, or a failed close) and increments
+//! `worker_reply_timeouts_total`; in the happy path that counter is 0.
+//!
 //! Per-session **rate limiting** is a token bucket refilled at
 //! `EngineConfig::session_rate` turns/sec (burst `session_burst`);
 //! over-rate turns are rejected *here*, before any queue, with a
-//! retry-after hint the HTTP layer maps to `429 Retry-After` — queues
-//! stay bounded by admission, not by hope.
+//! structured retry-after hint the HTTP layer maps to `429 Retry-After`
+//! — queues stay bounded by admission, not by hope.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -34,14 +45,18 @@ use anyhow::Result;
 use super::engine::EngineConfig;
 use super::kv_manager::WorkerLoadSnapshot;
 use super::metrics::{aggregate_metrics, RouterStats};
+use super::protocol::{
+    Envelope, RouterEvent, TurnError, WorkerReply, WorkerReplyBody, WorkerReq,
+};
 use super::request::{StreamEvent, TurnRequest};
 use super::scheduler::{pick_worker, should_migrate};
 use super::worker::{spawn_worker, ThreadGuard, WorkerHandle, WorkerMsg};
 use crate::util::json::Json;
 
-/// How long the router waits on a synchronous worker reply (close /
-/// export / metrics). Workers answer within one idle tick (~20 ms) unless
-/// they are mid-decode-round.
+/// Envelope deadline for worker replies (close / export / metrics).
+/// Workers answer between rounds, so this only trips when a worker is
+/// wedged — the continuation then fails with deadline semantics instead
+/// of stalling the router.
 const WORKER_REPLY_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Per-session turn rate limit (token bucket). `rate <= 0` disables.
@@ -89,13 +104,44 @@ impl TokenBucket {
     }
 }
 
-/// Client-facing control messages (what `EngineHandle` sends).
+/// Client-facing control messages (what `EngineHandle` sends, wrapped in
+/// [`RouterEvent::Client`]).
 pub(crate) enum RouterMsg {
     Submit(TurnRequest, mpsc::Sender<StreamEvent>),
     OpenSession(mpsc::Sender<u64>),
     CloseSession(u64, mpsc::Sender<bool>),
     Metrics(mpsc::Sender<Json>),
     Shutdown,
+}
+
+/// What the router does when the reply for a correlation id arrives (or
+/// its deadline passes). Held in `Router::pending`; the event loop keeps
+/// routing turns while these are outstanding.
+enum Continuation {
+    /// Forward the worker's close verdict to the waiting client.
+    Close { reply: mpsc::Sender<bool> },
+    /// Collect one metrics snapshot per worker (single correlation id
+    /// fanned out to all of them), aggregate when the last arrives.
+    Metrics {
+        remaining: usize,
+        snaps: Vec<Json>,
+        reply: mpsc::Sender<Json>,
+    },
+    /// A resume turn held while its session's export is in flight;
+    /// dispatched to the migration target (or back to the owner) when
+    /// the owner answers.
+    Migrate {
+        sid: u64,
+        owner: usize,
+        best: usize,
+        req: TurnRequest,
+        events: mpsc::Sender<StreamEvent>,
+    },
+}
+
+struct PendingOp {
+    deadline: Instant,
+    cont: Continuation,
 }
 
 struct RouterSession {
@@ -118,6 +164,14 @@ struct Router {
     sessions_closed_unplaced: u64,
     rebalances: u64,
     rate_limited: u64,
+    /// Worker replies that missed their envelope deadline
+    /// (`worker_reply_timeouts_total`; 0 in the happy path).
+    reply_timeouts: u64,
+    next_corr: u64,
+    pending: HashMap<u64, PendingOp>,
+    /// Sessions with an export in flight; their turns bounce with a
+    /// retryable busy error until the migration resolves.
+    migrating: HashSet<u64>,
     last_sweep: Instant,
 }
 
@@ -134,6 +188,10 @@ impl Router {
             sessions_closed_unplaced: 0,
             rebalances: 0,
             rate_limited: 0,
+            reply_timeouts: 0,
+            next_corr: 1,
+            pending: HashMap::new(),
+            migrating: HashSet::new(),
             last_sweep: Instant::now(),
         }
     }
@@ -156,6 +214,29 @@ impl Router {
             // stream to the client.
             self.workers[w].load.inflight_msgs.fetch_sub(1, Ordering::Relaxed);
         }
+    }
+
+    /// Send one enveloped control request to worker `w` and register its
+    /// continuation. When the worker's channel is gone the continuation
+    /// is handed back so the caller can fail it.
+    fn send_request(
+        &mut self,
+        w: usize,
+        req: WorkerReq,
+        cont: Continuation,
+    ) -> Result<(), Continuation> {
+        let corr = self.next_corr;
+        self.next_corr += 1;
+        let deadline = Instant::now() + WORKER_REPLY_TIMEOUT;
+        if self.workers[w]
+            .tx
+            .send(WorkerMsg::Request(Envelope { corr, deadline, req }))
+            .is_err()
+        {
+            return Err(cont);
+        }
+        self.pending.insert(corr, PendingOp { deadline, cont });
+        Ok(())
     }
 
     fn handle(&mut self, msg: RouterMsg) {
@@ -187,39 +268,64 @@ impl Router {
                         let _ = reply.send(true);
                     }
                     Some(w) => {
-                        let (tx, rx) = mpsc::channel();
-                        let ok = self.workers[w]
-                            .tx
-                            .send(WorkerMsg::CloseSession(sid, tx))
-                            .is_ok()
-                            && rx.recv_timeout(WORKER_REPLY_TIMEOUT).unwrap_or(false);
-                        let _ = reply.send(ok);
+                        if let Err(Continuation::Close { reply }) = self.send_request(
+                            w,
+                            WorkerReq::CloseSession(sid),
+                            Continuation::Close { reply },
+                        ) {
+                            let _ = reply.send(false);
+                        }
                     }
                 }
             }
             RouterMsg::Metrics(reply) => {
-                let mut snaps = Vec::with_capacity(self.workers.len());
+                // One correlation id fanned out to every worker; the
+                // continuation aggregates as replies land — the router
+                // keeps routing turns meanwhile.
+                let corr = self.next_corr;
+                self.next_corr += 1;
+                let deadline = Instant::now() + WORKER_REPLY_TIMEOUT;
+                let mut remaining = 0;
                 for w in &self.workers {
-                    let (tx, rx) = mpsc::channel();
-                    if w.tx.send(WorkerMsg::Metrics(tx)).is_ok() {
-                        if let Ok(j) = rx.recv_timeout(WORKER_REPLY_TIMEOUT) {
-                            snaps.push(j);
-                        }
+                    if w.tx
+                        .send(WorkerMsg::Request(Envelope {
+                            corr,
+                            deadline,
+                            req: WorkerReq::Metrics,
+                        }))
+                        .is_ok()
+                    {
+                        remaining += 1;
                     }
                 }
-                let stats = RouterStats {
-                    workers: self.workers.len(),
-                    uptime_s: self.started.elapsed().as_secs_f64(),
-                    sessions_opened: self.sessions_opened,
-                    sessions_closed_unplaced: self.sessions_closed_unplaced,
-                    sessions_tracked: self.sessions.len() as u64,
-                    router_rebalance_total: self.rebalances,
-                    rate_limited_turns: self.rate_limited,
-                };
-                let _ = reply.send(aggregate_metrics(&stats, &snaps, &self.load_snapshots()));
+                if remaining == 0 {
+                    let _ = reply.send(self.aggregate(&[]));
+                    return;
+                }
+                self.pending.insert(
+                    corr,
+                    PendingOp {
+                        deadline,
+                        cont: Continuation::Metrics { remaining, snaps: Vec::new(), reply },
+                    },
+                );
             }
             RouterMsg::Shutdown => unreachable!("handled by the router loop"),
         }
+    }
+
+    fn aggregate(&self, snaps: &[Json]) -> Json {
+        let stats = RouterStats {
+            workers: self.workers.len(),
+            uptime_s: self.started.elapsed().as_secs_f64(),
+            sessions_opened: self.sessions_opened,
+            sessions_closed_unplaced: self.sessions_closed_unplaced,
+            sessions_tracked: self.sessions.len() as u64,
+            router_rebalance_total: self.rebalances,
+            rate_limited_turns: self.rate_limited,
+            worker_reply_timeouts: self.reply_timeouts,
+        };
+        aggregate_metrics(&stats, snaps, &self.load_snapshots())
     }
 
     fn route_turn(&mut self, req: TurnRequest, tx: mpsc::Sender<StreamEvent>) {
@@ -229,10 +335,16 @@ impl Router {
             self.send_turn(w, req, tx);
             return;
         };
+        if self.migrating.contains(&sid) {
+            let _ = tx.send(StreamEvent::Error(TurnError::busy(format!(
+                "session {sid} is migrating; retry"
+            ))));
+            return;
+        }
         let now = Instant::now();
         let (owner, limited) = match self.sessions.get_mut(&sid) {
             None => {
-                let _ = tx.send(StreamEvent::Error(format!("unknown session {sid}")));
+                let _ = tx.send(StreamEvent::Error(TurnError::unknown_session(sid)));
                 return;
             }
             Some(sess) => {
@@ -245,13 +357,14 @@ impl Router {
         };
         if let Some(retry_s) = limited {
             self.rate_limited += 1;
-            let _ = tx.send(StreamEvent::Error(format!(
-                "rate limited: session {sid} over {:.2} turns/s; retry after {retry_s:.2}s",
-                self.rate.rate
+            let _ = tx.send(StreamEvent::Error(TurnError::rate_limited(
+                sid,
+                self.rate.rate,
+                retry_s,
             )));
             return;
         }
-        let target = match owner {
+        match owner {
             None => {
                 // First turn: place the session, then open it there ahead
                 // of the turn (same channel, so ordering holds).
@@ -260,55 +373,170 @@ impl Router {
                     sess.owner = Some(w);
                 }
                 let _ = self.workers[w].tx.send(WorkerMsg::OpenSessionAs(sid));
-                w
+                self.send_turn(w, req, tx);
             }
-            Some(owner) => self.maybe_migrate(sid, owner),
-        };
-        self.send_turn(target, req, tx);
+            Some(owner) => self.route_resume(sid, owner, req, tx),
+        }
     }
 
     /// Resume routing: stay with the owner unless it is saturated while a
-    /// better worker has room — then try to migrate. The owner only
-    /// exports *spilled* (or fresh) sessions, so parked-resident affinity
-    /// is enforced at the source of truth and a racy load view can never
-    /// strand a lane.
-    fn maybe_migrate(&mut self, sid: u64, owner: usize) -> usize {
-        if self.workers.len() == 1 {
-            return owner;
-        }
-        let snaps = self.load_snapshots();
-        let best = pick_worker(&snaps);
-        if best == owner || !should_migrate(&snaps[owner], &snaps[best]) {
-            return owner;
-        }
-        let (tx, rx) = mpsc::channel();
-        if self.workers[owner]
-            .tx
-            .send(WorkerMsg::ExportSession(sid, tx))
-            .is_err()
-        {
-            return owner;
-        }
-        match rx.recv_timeout(WORKER_REPLY_TIMEOUT) {
-            Ok(Some(export)) => {
-                if let Err(mpsc::SendError(msg)) = self.workers[best]
-                    .tx
-                    .send(WorkerMsg::ImportSession(sid, export))
-                {
-                    // Target worker is gone: hand the exported state back
-                    // to its owner rather than dropping the session's KV.
-                    let _ = self.workers[owner].tx.send(msg);
-                    return owner;
+    /// better worker has room — then start an async export. The turn is
+    /// *held in the continuation*, not blocked on: the router keeps
+    /// processing events and dispatches it when the owner answers. The
+    /// owner only exports *spilled* (or fresh) sessions, so
+    /// parked-resident affinity is enforced at the source of truth and a
+    /// racy load view can never strand a lane.
+    fn route_resume(
+        &mut self,
+        sid: u64,
+        owner: usize,
+        req: TurnRequest,
+        tx: mpsc::Sender<StreamEvent>,
+    ) {
+        if self.workers.len() > 1 {
+            let snaps = self.load_snapshots();
+            let best = pick_worker(&snaps);
+            if best != owner && should_migrate(&snaps[owner], &snaps[best]) {
+                let cont = Continuation::Migrate { sid, owner, best, req, events: tx };
+                match self.send_request(owner, WorkerReq::ExportSession(sid), cont) {
+                    Ok(()) => {
+                        self.migrating.insert(sid);
+                        return;
+                    }
+                    // Owner channel gone: dispatch to it anyway and let
+                    // the dropped Submit surface as a closed stream.
+                    Err(Continuation::Migrate { req, events, .. }) => {
+                        self.send_turn(owner, req, events);
+                        return;
+                    }
+                    Err(_) => unreachable!("send_request returns the passed continuation"),
                 }
-                if let Some(sess) = self.sessions.get_mut(&sid) {
-                    sess.owner = Some(best);
-                }
-                self.rebalances += 1;
-                best
             }
-            // Not exportable (parked-resident / in-turn / queued turn) or
-            // no reply: affinity wins.
-            _ => owner,
+        }
+        self.send_turn(owner, req, tx);
+    }
+
+    /// A worker reply arrived on the event channel: resume its
+    /// continuation. Unknown correlation ids are late replies whose
+    /// deadline already failed the waiter — ignored, except a late
+    /// successful export, whose state is re-imported to its owner so the
+    /// session's KV is never dropped on the floor.
+    fn on_worker_reply(&mut self, reply: WorkerReply) {
+        let Some(op) = self.pending.remove(&reply.corr) else {
+            self.on_late_reply(reply);
+            return;
+        };
+        match (op.cont, reply.body) {
+            (Continuation::Close { reply }, WorkerReplyBody::Closed(ok)) => {
+                let _ = reply.send(ok);
+            }
+            (
+                Continuation::Metrics { mut remaining, mut snaps, reply: out },
+                WorkerReplyBody::Metrics(j),
+            ) => {
+                snaps.push(j);
+                remaining -= 1;
+                if remaining == 0 {
+                    let _ = out.send(self.aggregate(&snaps));
+                } else {
+                    // Re-register under the SAME correlation id: the
+                    // remaining workers reply with it too.
+                    self.pending.insert(
+                        reply.corr,
+                        PendingOp {
+                            deadline: op.deadline,
+                            cont: Continuation::Metrics { remaining, snaps, reply: out },
+                        },
+                    );
+                }
+            }
+            (Continuation::Migrate { sid, owner, best, req, events }, body) => {
+                self.migrating.remove(&sid);
+                let target = match body {
+                    WorkerReplyBody::Exported { export: Some(export), .. } => {
+                        if let Err(mpsc::SendError(msg)) = self.workers[best]
+                            .tx
+                            .send(WorkerMsg::ImportSession(sid, export))
+                        {
+                            // Target worker is gone: hand the exported
+                            // state back to its owner rather than
+                            // dropping the session's KV.
+                            let _ = self.workers[owner].tx.send(msg);
+                            owner
+                        } else {
+                            if let Some(sess) = self.sessions.get_mut(&sid) {
+                                sess.owner = Some(best);
+                            }
+                            self.rebalances += 1;
+                            best
+                        }
+                    }
+                    // Not exportable (parked-resident / in-turn / queued
+                    // turn): affinity wins.
+                    _ => owner,
+                };
+                self.send_turn(target, req, events);
+            }
+            // Protocol mismatch (a worker answered with the wrong body
+            // kind): fail closed rather than hang the waiter.
+            (Continuation::Close { reply }, _) => {
+                let _ = reply.send(false);
+            }
+            (Continuation::Metrics { snaps, reply, .. }, _) => {
+                let _ = reply.send(self.aggregate(&snaps));
+            }
+        }
+    }
+
+    /// Late replies (deadline already failed the waiter). A successful
+    /// export must not lose the session's KV: re-import it to the worker
+    /// that exported it and point the session back there.
+    fn on_late_reply(&mut self, reply: WorkerReply) {
+        if let WorkerReplyBody::Exported { sid, export: Some(export) } = reply.body {
+            self.migrating.remove(&sid);
+            let w = reply.worker;
+            if self.workers[w].tx.send(WorkerMsg::ImportSession(sid, export)).is_ok() {
+                if let Some(sess) = self.sessions.get_mut(&sid) {
+                    sess.owner = Some(w);
+                }
+            }
+        }
+    }
+
+    /// Fail every pending continuation whose envelope deadline passed.
+    /// Each missed reply counts once in `worker_reply_timeouts_total`.
+    fn expire_pending(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .pending
+            .iter()
+            .filter(|(_, op)| op.deadline <= now)
+            .map(|(&corr, _)| corr)
+            .collect();
+        for corr in expired {
+            let op = self.pending.remove(&corr).unwrap();
+            match op.cont {
+                Continuation::Close { reply } => {
+                    self.reply_timeouts += 1;
+                    let _ = reply.send(false);
+                }
+                Continuation::Metrics { remaining, snaps, reply } => {
+                    // One timeout per worker that never answered; serve
+                    // the partial aggregate rather than nothing.
+                    self.reply_timeouts += remaining as u64;
+                    let _ = reply.send(self.aggregate(&snaps));
+                }
+                Continuation::Migrate { sid, owner, events, .. } => {
+                    self.reply_timeouts += 1;
+                    self.migrating.remove(&sid);
+                    let _ = events.send(StreamEvent::Error(TurnError::deadline(format!(
+                        "worker {owner} did not answer session {sid} export in time; retry"
+                    ))));
+                }
+            }
         }
     }
 
@@ -323,8 +551,9 @@ impl Router {
         self.last_sweep = Instant::now();
         let ttl = self.session_ttl * 2;
         let mut swept_unplaced = 0u64;
-        self.sessions.retain(|_, s| {
-            let keep = s.last_used.elapsed() < ttl;
+        let migrating = &self.migrating;
+        self.sessions.retain(|sid, s| {
+            let keep = s.last_used.elapsed() < ttl || migrating.contains(sid);
             if !keep && s.owner.is_none() {
                 swept_unplaced += 1;
             }
@@ -343,32 +572,35 @@ impl Router {
     }
 }
 
-/// Assemble the two-tier engine: spawn `cfg.workers` workers (each with
-/// its own runtime + arena on its own thread), then the router thread in
-/// front of them. Returns the router's control channel and a guard that
-/// joins the router (which in turn joins the workers) on drop.
+/// Assemble the two-tier engine: create the router's event channel
+/// first (workers answer enveloped requests on it), spawn `cfg.workers`
+/// workers (each with its own runtime + arena on its own thread), then
+/// the router thread in front of them. Returns the event channel and a
+/// guard that joins the router (which in turn joins the workers) on
+/// drop.
 pub(crate) fn spawn_router(
     cfg: EngineConfig,
-) -> Result<(mpsc::Sender<RouterMsg>, ThreadGuard)> {
+) -> Result<(mpsc::Sender<RouterEvent>, ThreadGuard)> {
     let n = cfg.workers.max(1);
     let rate = RateCfg { rate: cfg.session_rate, burst: cfg.session_burst };
     let ttl = cfg.session_ttl;
+    let (tx, rx) = mpsc::channel::<RouterEvent>();
     let mut workers = Vec::with_capacity(n);
     for i in 0..n {
-        workers.push(spawn_worker(cfg.clone(), i)?);
+        workers.push(spawn_worker(cfg.clone(), i, tx.clone())?);
     }
-    let (tx, rx) = mpsc::channel::<RouterMsg>();
     let thread = std::thread::Builder::new()
         .name("engine-router".into())
         .spawn(move || {
             let mut router = Router::new(workers, rate, ttl);
             loop {
                 match rx.recv_timeout(Duration::from_millis(100)) {
-                    Ok(RouterMsg::Shutdown) => {
+                    Ok(RouterEvent::Client(RouterMsg::Shutdown)) => {
                         router.shutdown();
                         break;
                     }
-                    Ok(msg) => router.handle(msg),
+                    Ok(RouterEvent::Client(msg)) => router.handle(msg),
+                    Ok(RouterEvent::Worker(reply)) => router.on_worker_reply(reply),
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         // Every EngineHandle is gone: shut the tier down.
@@ -376,6 +608,7 @@ pub(crate) fn spawn_router(
                         break;
                     }
                 }
+                router.expire_pending();
                 router.sweep();
             }
         })

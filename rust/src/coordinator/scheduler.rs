@@ -59,6 +59,23 @@ pub fn should_migrate(owner: &WorkerLoadSnapshot, candidate: &WorkerLoadSnapshot
     owner.worker != candidate.worker && owner.is_saturated() && !candidate.is_saturated()
 }
 
+/// Least-slack-first service order (DESIGN.md D10): indices of `slacks`
+/// sorted ascending — the turn closest to breaching its TTFT budget is
+/// served first — with the **original index as tie-break**. With every
+/// turn in the same SLO class, slack = budget − waited is a strictly
+/// decreasing function of wait time, so this degenerates to exact FIFO
+/// and deterministic-stream tests see no reordering.
+pub fn order_by_slack(slacks: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..slacks.len()).collect();
+    order.sort_by(|&a, &b| {
+        slacks[a]
+            .partial_cmp(&slacks[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order
+}
+
 /// Scheduler tunables.
 #[derive(Debug, Clone)]
 pub struct SchedConfig {
@@ -66,6 +83,12 @@ pub struct SchedConfig {
     pub max_batch: usize,
     /// Max cold prefills admitted per round.
     pub prefill_per_round: usize,
+    /// Chunked prefill (DESIGN.md D10): cold prompts longer than this are
+    /// absorbed `prefill_chunk` tokens per round, interleaved with decode
+    /// rounds, instead of monopolizing one round with the whole prompt.
+    /// `0` disables (whole-prompt prefill, the pre-D10 behavior). Chunk
+    /// advancement shares the `prefill_per_round` budget.
+    pub prefill_chunk: usize,
     /// Max session resumes admitted per round (cheap — only new tokens are
     /// absorbed — but still bounded to cap round-time jitter).
     pub resume_per_round: usize,
@@ -85,6 +108,7 @@ impl Default for SchedConfig {
         SchedConfig {
             max_batch: 4,
             prefill_per_round: 1,
+            prefill_chunk: 0,
             resume_per_round: 4,
             park_masking: true,
             mask_reentry_rounds: 2,
@@ -162,6 +186,10 @@ impl Scheduler {
     pub fn new(cfg: SchedConfig) -> Self {
         let group_policy = GroupPolicy::new(cfg.mask_reentry_rounds);
         Scheduler { cfg, rotate: 0, group_policy }
+    }
+
+    pub fn config(&self) -> &SchedConfig {
+        &self.cfg
     }
 
     /// Per-round park-masking decision (DESIGN.md D8): feeds the arena's
@@ -413,6 +441,29 @@ mod tests {
         let mut s = Scheduler::new(SchedConfig::default());
         assert!(s.decide_group_mask(true));
         assert!(!s.decide_group_mask(false));
+    }
+
+    #[test]
+    fn slack_order_serves_closest_to_breach_first() {
+        // Mixed classes: the turn with the least remaining budget wins,
+        // even if it arrived last.
+        let order = order_by_slack(&[1500.0, 120.0, 29_000.0]);
+        assert_eq!(order, vec![1, 0, 2]);
+        // Negative slack (already breached) sorts ahead of everything.
+        let order = order_by_slack(&[200.0, -50.0]);
+        assert_eq!(order, vec![1, 0]);
+    }
+
+    #[test]
+    fn slack_order_same_class_is_fifo() {
+        // One class: slack strictly decreases with wait, so the oldest
+        // turn (index 0, smallest slack) is first — exact FIFO, the
+        // determinism guarantee chunked/sharded bit-identity tests lean on.
+        let order = order_by_slack(&[100.0, 150.0, 200.0]);
+        assert_eq!(order, vec![0, 1, 2]);
+        // Exact ties (same class, same arrival instant) break by index.
+        let order = order_by_slack(&[300.0, 300.0, 300.0]);
+        assert_eq!(order, vec![0, 1, 2]);
     }
 
     #[test]

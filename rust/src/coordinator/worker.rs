@@ -64,12 +64,15 @@ use anyhow::{bail, Context, Result};
 use super::engine::{ArenaStaging, EngineConfig};
 use super::kv_manager::{KvLimits, KvManager, WorkerLoad};
 use super::metrics::EngineMetrics;
+use super::protocol::{
+    Envelope, RouterEvent, TurnError, WorkerReply, WorkerReplyBody, WorkerReq,
+};
 use super::request::{FinishReason, RequestMetrics, Response, StreamEvent, TurnRequest};
-use super::scheduler::Scheduler;
+use super::scheduler::{order_by_slack, Scheduler};
 use crate::data::tokenizer::BOS;
 use crate::model::batch::copy_metrics;
 use crate::model::state::SeqState;
-use crate::model::{sampler, ModelDriver};
+use crate::model::{sampler, Arch, ModelDriver};
 use crate::runtime::{Runtime, SyncExecutor};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -78,6 +81,37 @@ pub(crate) struct Pending {
     pub req: TurnRequest,
     pub submitted: Instant,
     pub events: Option<mpsc::Sender<StreamEvent>>,
+}
+
+/// A cold prompt mid-chunked-prefill (DESIGN.md D10): admitted off the
+/// cold queue, but absorbing its prompt `prefill_chunk` tokens per round
+/// interleaved with decode rounds, so one long prompt cannot monopolize a
+/// round and starve running streams. The session (if any) stays `Fresh`
+/// until the final chunk installs the state into a lane — `route_pending`
+/// / `export_session` / `close_session` all consult the chunking list so
+/// the in-flight admission is never double-served, migrated or leaked.
+struct ChunkedAdmission {
+    req: TurnRequest,
+    submitted: Instant,
+    events: Option<mpsc::Sender<StreamEvent>>,
+    /// Queue wait up to admission (frozen when chunking starts).
+    queue_ms: f64,
+    /// BOS-prefixed full prompt.
+    prompt: Vec<i32>,
+    /// Tokens absorbed so far (TConst/TLin) or the cursor (Base, which
+    /// has no exact incremental absorb — see `advance_one_chunk`).
+    fed: usize,
+    /// Host-mirror state built chunk by chunk; `None` for Base and before
+    /// the first chunk lands.
+    state: Option<Box<SeqState>>,
+}
+
+/// Outcome of advancing one chunked admission by one chunk.
+enum ChunkStep {
+    /// More prompt remains (or the final install must wait for a lane).
+    Continue(ChunkedAdmission),
+    /// The admission finished (turn went live) or failed; tokens produced.
+    Done(usize),
 }
 
 struct Live {
@@ -173,6 +207,9 @@ pub struct Worker {
     pub metrics: EngineMetrics,
     waiting_resume: VecDeque<Pending>,
     waiting_cold: VecDeque<Pending>,
+    /// Cold admissions mid-chunked-prefill (DESIGN.md D10); advanced
+    /// least-slack-first under the `prefill_per_round` budget.
+    chunking: Vec<ChunkedAdmission>,
     live: Vec<Live>,
     sessions: HashMap<u64, Session>,
     next_seq: u64,
@@ -255,6 +292,7 @@ impl Worker {
             metrics: EngineMetrics::for_worker(worker_id),
             waiting_resume: VecDeque::new(),
             waiting_cold: VecDeque::new(),
+            chunking: Vec::new(),
             live: Vec::new(),
             sessions: HashMap::new(),
             next_seq: 1,
@@ -353,13 +391,16 @@ impl Worker {
             _ => return None,
         }
         // A turn already queued here still references the session; taking
-        // the state out from under it would fail that turn. Refuse — the
-        // router then routes to us, where the turns serialize normally.
+        // the state out from under it would fail that turn. Likewise an
+        // admission mid-chunked-prefill — its half-built state lives
+        // outside the session table. Refuse — the router then routes to
+        // us, where the turns serialize normally.
         let queued = self
             .waiting_resume
             .iter()
             .chain(self.waiting_cold.iter())
-            .any(|p| p.req.session_id == Some(sid));
+            .any(|p| p.req.session_id == Some(sid))
+            || self.chunking.iter().any(|c| c.req.session_id == Some(sid));
         if queued {
             return None;
         }
@@ -403,6 +444,16 @@ impl Worker {
         let Some(sess) = self.sessions.remove(&sid) else {
             return Ok(false);
         };
+        // A first turn mid-chunked-prefill dies with its session: its
+        // half-built host state is dropped, the client sees `Cancelled`.
+        if let Some(pos) = self
+            .chunking
+            .iter()
+            .position(|c| c.req.session_id == Some(sid))
+        {
+            let c = self.chunking.remove(pos);
+            self.cancel_chunked(c);
+        }
         match sess.state {
             ParkedState::InTurn(seq_id) => {
                 if let Some(idx) = self.live.iter().position(|l| l.seq_id == seq_id) {
@@ -427,8 +478,12 @@ impl Worker {
         let expired: Vec<u64> = self
             .sessions
             .iter()
-            .filter(|(_, s)| {
-                !matches!(s.state, ParkedState::InTurn(_)) && s.last_used.elapsed() >= ttl
+            .filter(|(&id, s)| {
+                !matches!(s.state, ParkedState::InTurn(_))
+                    && s.last_used.elapsed() >= ttl
+                    // A session whose first turn is mid-chunked-prefill is
+                    // active, whatever its Fresh state says.
+                    && !self.chunking.iter().any(|c| c.req.session_id == Some(id))
             })
             .map(|(&id, _)| id)
             .collect();
@@ -442,6 +497,21 @@ impl Worker {
             }
         }
         Ok(n)
+    }
+
+    /// How long the spawned-mode loop may block waiting for a message
+    /// while idle: up to the nearest parked session's TTL deadline
+    /// (so sweeps stay timely) and never more than [`IDLE_WAIT_CAP`].
+    /// Message arrival interrupts the wait regardless — this deadline is
+    /// *not* a service-latency poll.
+    pub(crate) fn idle_wait(&self) -> Duration {
+        self.sessions
+            .values()
+            .filter(|s| !matches!(s.state, ParkedState::InTurn(_)))
+            .map(|s| self.session_ttl.saturating_sub(s.last_used.elapsed()))
+            .min()
+            .map(|d| d.clamp(Duration::from_millis(1), IDLE_WAIT_CAP))
+            .unwrap_or(IDLE_WAIT_CAP)
     }
 
     /// Release a parked sequence's lane/slot in either backing.
@@ -525,13 +595,31 @@ impl Worker {
         match pending.req.session_id {
             None => self.waiting_cold.push_back(pending),
             Some(sid) => match self.sessions.get_mut(&sid) {
-                None => fail_pending(pending, &format!("unknown session {sid}"), &mut self.completed),
+                None => {
+                    fail_pending(pending, TurnError::unknown_session(sid), &mut self.completed)
+                }
                 Some(sess) => {
                     sess.last_used = Instant::now();
+                    // A chunked first turn still absorbing its prompt
+                    // leaves the session Fresh; a second turn racing it is
+                    // busy, exactly as if the first were InTurn.
+                    let chunking = self
+                        .chunking
+                        .iter()
+                        .any(|c| c.req.session_id == Some(sid));
                     match &sess.state {
+                        _ if chunking => fail_pending(
+                            pending,
+                            TurnError::busy(format!(
+                                "session {sid} already has a turn in flight"
+                            )),
+                            &mut self.completed,
+                        ),
                         ParkedState::InTurn(_) => fail_pending(
                             pending,
-                            &format!("session {sid} already has a turn in flight"),
+                            TurnError::busy(format!(
+                                "session {sid} already has a turn in flight"
+                            )),
                             &mut self.completed,
                         ),
                         ParkedState::Fresh => self.waiting_cold.push_back(pending),
@@ -545,7 +633,10 @@ impl Worker {
     }
 
     pub fn has_work(&self) -> bool {
-        !self.waiting_resume.is_empty() || !self.waiting_cold.is_empty() || !self.live.is_empty()
+        !self.waiting_resume.is_empty()
+            || !self.waiting_cold.is_empty()
+            || !self.chunking.is_empty()
+            || !self.live.is_empty()
     }
 
     /// One scheduler round: admissions (resume first, then cold prefill) +
@@ -553,6 +644,10 @@ impl Worker {
     pub fn step(&mut self) -> Result<usize> {
         let round_t0 = Instant::now();
         self.round += 1;
+        // TTFT SLO classes (DESIGN.md D10): serve whichever waiting turn
+        // is closest to breaching its class budget first. Same-class
+        // queues are untouched (slack order ≡ FIFO).
+        self.order_waiting_by_slack();
         let resume_ids: Vec<u64> = (0..self.waiting_resume.len() as u64).collect();
         let cold_ids: Vec<u64> = (0..self.waiting_cold.len() as u64).collect();
         let free = self.max_lanes.saturating_sub(self.live.len());
@@ -589,7 +684,14 @@ impl Worker {
             }
             produced += self.start_turn(pending)?;
         }
-        for _ in plan.admit {
+        // 1b. chunked-prefill advancement (DESIGN.md D10): in-flight
+        // chunked admissions spend the prefill budget first (least TTFT
+        // slack first); whatever remains admits new cold turns.
+        let prefill_budget = self.sched.config().prefill_per_round;
+        let (advanced, chunk_tokens) = self.advance_chunks(prefill_budget)?;
+        produced += chunk_tokens;
+        let cold_budget = prefill_budget.saturating_sub(advanced).min(plan.admit.len());
+        for _ in 0..cold_budget {
             // The plan's free-slot count predates this round's resume
             // admissions (which may have turned spillable parked lanes into
             // live ones): re-check capacity and defer rather than erroring.
@@ -661,7 +763,9 @@ impl Worker {
     }
 
     /// Admit one turn: cold prefill (ephemeral or first session turn) or
-    /// session resume (park → absorb only the new tokens).
+    /// session resume (park → absorb only the new tokens). Long cold
+    /// prompts divert to the chunked-prefill lane (DESIGN.md D10) instead
+    /// of prefilling here.
     fn start_turn(&mut self, pending: Pending) -> Result<usize> {
         let Pending { req, submitted, events } = pending;
         let queue_ms = submitted.elapsed().as_secs_f64() * 1000.0;
@@ -674,7 +778,7 @@ impl Worker {
                 None => {
                     fail_pending(
                         Pending { req, submitted, events },
-                        &format!("unknown session {sid}"),
+                        TurnError::unknown_session(sid),
                         &mut self.completed,
                     );
                     return Ok(0);
@@ -682,7 +786,9 @@ impl Worker {
                 Some(ParkedState::InTurn(_)) => {
                     fail_pending(
                         Pending { req, submitted, events },
-                        &format!("session {sid} already has a turn in flight"),
+                        TurnError::busy(format!(
+                            "session {sid} already has a turn in flight"
+                        )),
                         &mut self.completed,
                     );
                     return Ok(0);
@@ -703,7 +809,9 @@ impl Worker {
                     // (a step() error would abort every live turn).
                     fail_pending(
                         Pending { req, submitted, events },
-                        &format!("session {sid} resume failed: {e:#}"),
+                        TurnError::internal(format!(
+                            "session {sid} resume failed: {e:#}"
+                        )),
                         &mut self.completed,
                     );
                     return Ok(0);
@@ -711,40 +819,78 @@ impl Worker {
             },
             None => {
                 // Cold prefill: BOS-prefixed prompt (never empty).
-                self.ensure_capacity()?;
-                let seq_id = self.next_seq;
-                self.next_seq += 1;
                 let mut prompt = Vec::with_capacity(req.prompt.len() + 1);
                 prompt.push(BOS);
                 prompt.extend_from_slice(&req.prompt);
-                let logits = if self.resident {
-                    // Admission in resident mode: claim an arena lane, then
-                    // prefill straight into its slot view (DESIGN.md D5 —
-                    // no per-lane state materialized). On error the lane is
-                    // returned to the pool.
-                    let slot = self.kv.alloc_lane(seq_id)?;
-                    let arena =
-                        self.kv.arena_mut().context("resident pool lost its arena")?;
-                    match self.driver.prefill_resident(&mut self.rt, arena, slot, &prompt)
-                    {
-                        Ok(l) => l,
-                        Err(e) => {
-                            let _ = self.kv.free_lane(seq_id);
-                            return Err(e);
-                        }
-                    }
-                } else {
-                    let mut state = self.driver.new_state();
-                    let logits = self.driver.prefill(&mut self.rt, &mut state, &prompt)?;
-                    self.kv.alloc(seq_id, state)?;
-                    logits
-                };
-                (seq_id, logits, prompt.len(), 0u64)
+                let chunk = self.sched.config().prefill_chunk;
+                if chunk > 0 && prompt.len() > chunk {
+                    // Chunked prefill (DESIGN.md D10): absorb the prompt
+                    // `chunk` tokens per round, interleaved with decode
+                    // rounds, starting next round. The admission slot this
+                    // turn consumed was the round's prefill budget.
+                    self.chunking.push(ChunkedAdmission {
+                        req,
+                        submitted,
+                        events,
+                        queue_ms,
+                        prompt,
+                        fed: 0,
+                        state: None,
+                    });
+                    return Ok(0);
+                }
+                let fed = prompt.len();
+                let (seq_id, logits) = self.prefill_cold(&prompt)?;
+                (seq_id, logits, fed, 0u64)
             }
         };
+        self.begin_live(req, submitted, events, queue_ms, seq_id, logits, fed, saved)
+    }
+
+    /// Cold-prefill a BOS-prefixed prompt into a fresh lane. Resident
+    /// mode claims an arena lane and prefills straight into its slot view
+    /// (DESIGN.md D5 — no per-lane state materialized); on error the lane
+    /// is returned to the pool.
+    fn prefill_cold(&mut self, prompt: &[i32]) -> Result<(u64, Vec<f32>)> {
+        self.ensure_capacity()?;
+        let seq_id = self.next_seq;
+        self.next_seq += 1;
+        let logits = if self.resident {
+            let slot = self.kv.alloc_lane(seq_id)?;
+            let arena = self.kv.arena_mut().context("resident pool lost its arena")?;
+            match self.driver.prefill_resident(&mut self.rt, arena, slot, prompt) {
+                Ok(l) => l,
+                Err(e) => {
+                    let _ = self.kv.free_lane(seq_id);
+                    return Err(e);
+                }
+            }
+        } else {
+            let mut state = self.driver.new_state();
+            let logits = self.driver.prefill(&mut self.rt, &mut state, prompt)?;
+            self.kv.alloc(seq_id, state)?;
+            logits
+        };
+        Ok((seq_id, logits))
+    }
+
+    /// Bind an admitted turn to its lane and emit its first token — the
+    /// common tail of whole-prompt, resumed and chunked admissions.
+    #[allow(clippy::too_many_arguments)]
+    fn begin_live(
+        &mut self,
+        req: TurnRequest,
+        submitted: Instant,
+        events: Option<mpsc::Sender<StreamEvent>>,
+        queue_ms: f64,
+        seq_id: u64,
+        logits: Vec<f32>,
+        fed: usize,
+        saved: u64,
+    ) -> Result<usize> {
         self.metrics.prefill_tokens += fed as u64;
 
-        // Bind the turn to its session (validated above).
+        // Bind the turn to its session (validated by the caller).
         if let Some(sid) = req.session_id {
             if let Some(sess) = self.sessions.get_mut(&sid) {
                 sess.state = ParkedState::InTurn(seq_id);
@@ -788,6 +934,228 @@ impl Worker {
         live.emit_token(first);
         self.settle(live)?;
         Ok(1)
+    }
+
+    // -- chunked prefill (DESIGN.md D10) ------------------------------------
+
+    /// Advance up to `budget` chunked admissions by one chunk each, least
+    /// TTFT slack first (the admission closest to breaching its SLO class
+    /// budget absorbs first). Returns (admissions advanced, tokens
+    /// produced by admissions that finished and sampled their first
+    /// token).
+    fn advance_chunks(&mut self, budget: usize) -> Result<(usize, usize)> {
+        if budget == 0 || self.chunking.is_empty() {
+            return Ok((0, 0));
+        }
+        let now = Instant::now();
+        let slacks: Vec<f64> = self
+            .chunking
+            .iter()
+            .map(|c| {
+                c.req.slo.ttft_budget_ms()
+                    - now.duration_since(c.submitted).as_secs_f64() * 1000.0
+            })
+            .collect();
+        let order = order_by_slack(&slacks);
+        let mut slots: Vec<Option<ChunkedAdmission>> =
+            std::mem::take(&mut self.chunking).into_iter().map(Some).collect();
+        let mut advanced = 0;
+        let mut produced = 0;
+        let mut keep = Vec::with_capacity(slots.len());
+        for i in order {
+            let c = slots[i].take().expect("slack order visits each index once");
+            if advanced < budget {
+                advanced += 1;
+                match self.advance_one_chunk(c)? {
+                    ChunkStep::Continue(c) => keep.push(c),
+                    ChunkStep::Done(n) => produced += n,
+                }
+            } else {
+                keep.push(c);
+            }
+        }
+        self.chunking = keep;
+        Ok((advanced, produced))
+    }
+
+    /// Absorb one more chunk of one admission. TConst/TLin absorb exactly:
+    /// the first chunk cold-prefills a host-mirror state, later chunks go
+    /// through `ModelDriver::resume` — D6's contract (resume ≡ cold
+    /// prefill over the concatenation, bit for bit) is precisely what
+    /// makes the chunked stream identical to whole-prompt prefill. The
+    /// final chunk installs the state into a lane through the same
+    /// `sync_host` + `load_state` path a spilled resume uses. Base has no
+    /// exact incremental absorb (its resume is a decode-append
+    /// approximation), so its chunk rounds only meter out the admission
+    /// and the final round runs the whole prompt at once — trivially
+    /// identical output, with the TTFT cost paid in one round.
+    fn advance_one_chunk(&mut self, mut c: ChunkedAdmission) -> Result<ChunkStep> {
+        if let Some(sid) = c.req.session_id {
+            match self.sessions.get_mut(&sid) {
+                Some(sess) => sess.last_used = Instant::now(),
+                None => {
+                    // Session closed/evicted mid-chunking (close_session
+                    // cancels the admission itself; this covers races).
+                    fail_pending(
+                        Pending { req: c.req, submitted: c.submitted, events: c.events },
+                        TurnError::unknown_session(sid),
+                        &mut self.completed,
+                    );
+                    return Ok(ChunkStep::Done(0));
+                }
+            }
+        }
+        let chunk = self.sched.config().prefill_chunk.max(1);
+        let end = (c.fed + chunk).min(c.prompt.len());
+        let is_final = end == c.prompt.len();
+        // The final chunk needs a lane; if none is free or spillable,
+        // hold the admission (budget already spent) until a turn finishes.
+        if is_final && !self.kv.has_capacity() && self.lru_parked_resident().is_none() {
+            return Ok(ChunkStep::Continue(c));
+        }
+        self.metrics.chunked_prefill_rounds += 1;
+
+        if self.driver.arch == Arch::Base {
+            c.fed = end;
+            if !is_final {
+                return Ok(ChunkStep::Continue(c));
+            }
+            let (seq_id, logits) = match self.prefill_cold(&c.prompt) {
+                Ok(t) => t,
+                Err(e) => {
+                    fail_pending(
+                        Pending { req: c.req, submitted: c.submitted, events: c.events },
+                        TurnError::internal(format!("chunked prefill failed: {e:#}")),
+                        &mut self.completed,
+                    );
+                    return Ok(ChunkStep::Done(0));
+                }
+            };
+            let fed = c.prompt.len();
+            let n = self.begin_live(
+                c.req, c.submitted, c.events, c.queue_ms, seq_id, logits, fed, 0,
+            )?;
+            return Ok(ChunkStep::Done(n));
+        }
+
+        // TConst/TLin: exact incremental absorb on a host-mirror state.
+        let absorb = if c.state.is_none() {
+            let mut st = self.driver.new_state();
+            match self.driver.prefill(&mut self.rt, &mut st, &c.prompt[..end]) {
+                Ok(l) => {
+                    c.state = Some(Box::new(st));
+                    Ok(l)
+                }
+                Err(e) => Err(e),
+            }
+        } else {
+            let st = c.state.as_mut().expect("checked above");
+            self.driver.resume(&mut self.rt, st, &c.prompt[c.fed..end])
+        };
+        let logits = match absorb {
+            Ok(l) => l,
+            Err(e) => {
+                fail_pending(
+                    Pending { req: c.req, submitted: c.submitted, events: c.events },
+                    TurnError::internal(format!("chunked prefill failed: {e:#}")),
+                    &mut self.completed,
+                );
+                return Ok(ChunkStep::Done(0));
+            }
+        };
+        c.fed = end;
+        if !is_final {
+            return Ok(ChunkStep::Continue(c));
+        }
+        let st = *c.state.take().context("chunked admission lost its state")?;
+        let seq_id = match self.install_chunked_state(st) {
+            Ok(seq_id) => seq_id,
+            Err(e) => {
+                fail_pending(
+                    Pending { req: c.req, submitted: c.submitted, events: c.events },
+                    TurnError::internal(format!("chunked admission failed: {e:#}")),
+                    &mut self.completed,
+                );
+                return Ok(ChunkStep::Done(0));
+            }
+        };
+        let fed = c.prompt.len();
+        let n = self.begin_live(
+            c.req, c.submitted, c.events, c.queue_ms, seq_id, logits, fed, 0,
+        )?;
+        Ok(ChunkStep::Done(n))
+    }
+
+    /// Install a fully-absorbed host-mirror state into a lane — the same
+    /// `sync_host` + `load_state` path a spilled-session resume takes, so
+    /// the D6 bit-identity proofs carry over.
+    fn install_chunked_state(&mut self, st: SeqState) -> Result<u64> {
+        self.ensure_capacity()?;
+        let seq_id = self.next_seq;
+        self.next_seq += 1;
+        if self.kv.is_resident() {
+            let slot = self.kv.alloc_lane(seq_id)?;
+            let loaded = (|| -> Result<()> {
+                let arena =
+                    self.kv.arena_mut().context("resident pool lost its arena")?;
+                arena.sync_host(&mut self.rt)?;
+                arena.load_state(slot, &st)
+            })();
+            if let Err(e) = loaded {
+                let _ = self.kv.free_lane(seq_id);
+                return Err(e);
+            }
+        } else {
+            self.kv.alloc(seq_id, st)?;
+        }
+        Ok(seq_id)
+    }
+
+    /// Cancel an in-flight chunked admission (session closed under it):
+    /// the client sees a `Cancelled` turn, mirroring an in-turn close.
+    fn cancel_chunked(&mut self, c: ChunkedAdmission) {
+        let resp = Response {
+            id: c.req.id,
+            session_id: c.req.session_id,
+            tokens: Vec::new(),
+            finish_reason: FinishReason::Cancelled,
+            metrics: RequestMetrics { slo: c.req.slo, ..Default::default() },
+        };
+        match c.events {
+            Some(tx) => {
+                let _ = tx.send(StreamEvent::TurnDone(resp));
+                let _ = tx.send(StreamEvent::Closed { session_id: c.req.session_id });
+            }
+            None => self.completed.push(resp),
+        }
+    }
+
+    /// Reorder both waiting queues least-TTFT-slack-first (DESIGN.md
+    /// D10). With every queued turn in the same SLO class this is a
+    /// no-op (slack ordering degenerates to FIFO), so deterministic
+    /// stream tests are unaffected.
+    fn order_waiting_by_slack(&mut self) {
+        let now = Instant::now();
+        for q in [&mut self.waiting_resume, &mut self.waiting_cold] {
+            if q.len() < 2 {
+                continue;
+            }
+            let slacks: Vec<f64> = q
+                .iter()
+                .map(|p| {
+                    p.req.slo.ttft_budget_ms()
+                        - now.duration_since(p.submitted).as_secs_f64() * 1000.0
+                })
+                .collect();
+            let order = order_by_slack(&slacks);
+            if order.iter().enumerate().all(|(k, &i)| k == i) {
+                continue;
+            }
+            let mut items: Vec<Option<Pending>> = q.drain(..).map(Some).collect();
+            for i in order {
+                q.push_back(items[i].take().expect("slack order is a permutation"));
+            }
+        }
     }
 
     /// Resume a parked session with the new turn's tokens: the previous
@@ -1188,6 +1556,7 @@ impl Worker {
             syncs,
             peak_kv_bytes: live.peak_kv.max(final_bytes),
             worker: self.worker_id,
+            slo: live.req.slo,
         };
         self.metrics.ttft_ms.add(ttft_ms);
         self.metrics.total_ms.add(total_ms);
@@ -1260,19 +1629,20 @@ impl Worker {
     }
 }
 
-/// Reject a turn before it runs: stream an `Error` event, or (owned mode,
-/// no channel) record an aborted `Response` so the caller can observe it.
-pub(crate) fn fail_pending(pending: Pending, msg: &str, completed: &mut Vec<Response>) {
+/// Reject a turn before it runs: stream a structured `Error` event, or
+/// (owned mode, no channel) record an aborted `Response` so the caller
+/// can observe it.
+pub(crate) fn fail_pending(pending: Pending, err: TurnError, completed: &mut Vec<Response>) {
     match pending.events {
         Some(tx) => {
-            let _ = tx.send(StreamEvent::Error(msg.to_string()));
+            let _ = tx.send(StreamEvent::Error(err));
         }
         None => completed.push(Response {
             id: pending.req.id,
             session_id: pending.req.session_id,
             tokens: Vec::new(),
             finish_reason: FinishReason::Aborted,
-            metrics: RequestMetrics::default(),
+            metrics: RequestMetrics { slo: pending.req.slo, ..Default::default() },
         }),
     }
 }
@@ -1311,13 +1681,15 @@ fn window_fill(st: &SeqState) -> usize {
 // ---------------------------------------------------------------------------
 
 /// Control messages a spawned worker consumes (sent by the router).
+/// Round-trips (close / export / metrics) arrive as one enveloped
+/// [`WorkerReq`] with a correlation id; the worker answers on the
+/// router's own event channel (DESIGN.md D10) — never on a dedicated
+/// blocking reply slot.
 pub(crate) enum WorkerMsg {
     Submit(TurnRequest, mpsc::Sender<StreamEvent>),
     OpenSessionAs(u64),
-    CloseSession(u64, mpsc::Sender<bool>),
-    ExportSession(u64, mpsc::Sender<Option<SessionExport>>),
     ImportSession(u64, SessionExport),
-    Metrics(mpsc::Sender<Json>),
+    Request(Envelope<WorkerReq>),
     Shutdown,
 }
 
@@ -1340,10 +1712,20 @@ pub(crate) struct WorkerHandle {
     _thread: Arc<ThreadGuard>,
 }
 
+/// How long an idle worker may sleep with no parked sessions to sweep.
+/// Arrival wakes it immediately (blocking `recv_timeout`, not a poll);
+/// the deadline only bounds TTL-sweep latency.
+const IDLE_WAIT_CAP: Duration = Duration::from_secs(5);
+
 /// Create worker `worker_id` on a dedicated thread. The runtime (PJRT
 /// client) is constructed on that thread; the call blocks until the
-/// worker reports ready (or its startup error).
-pub(crate) fn spawn_worker(cfg: EngineConfig, worker_id: usize) -> Result<WorkerHandle> {
+/// worker reports ready (or its startup error). Enveloped round-trips
+/// are answered on `reply`, the router's event channel (DESIGN.md D10).
+pub(crate) fn spawn_worker(
+    cfg: EngineConfig,
+    worker_id: usize,
+    reply: mpsc::Sender<RouterEvent>,
+) -> Result<WorkerHandle> {
     let (tx, rx) = mpsc::channel::<WorkerMsg>();
     let load = Arc::new(WorkerLoad::default());
     let load_thread = load.clone();
@@ -1363,15 +1745,19 @@ pub(crate) fn spawn_worker(cfg: EngineConfig, worker_id: usize) -> Result<Worker
                 }
             };
             'run: loop {
-                // Drain control messages; block briefly when idle.
+                // Drain control messages. Idle workers **block** until a
+                // message arrives or the next session-TTL deadline — no
+                // fixed-period poll (the pre-D10 loop woke every 20 ms
+                // forever; see `idle_wakeups_*` in micro_metrics.json).
                 let mut msgs = Vec::new();
                 if worker.has_work() {
                     while let Ok(m) = rx.try_recv() {
                         msgs.push(m);
                     }
                 } else {
-                    match rx.recv_timeout(Duration::from_millis(20)) {
+                    match rx.recv_timeout(worker.idle_wait()) {
                         Ok(m) => {
+                            worker.metrics.idle_wakeups_message += 1;
                             msgs.push(m);
                             // Pull the rest of a burst (e.g. the Submit
                             // right behind an OpenSessionAs) in one go.
@@ -1379,7 +1765,9 @@ pub(crate) fn spawn_worker(cfg: EngineConfig, worker_id: usize) -> Result<Worker
                                 msgs.push(m);
                             }
                         }
-                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            worker.metrics.idle_wakeups_deadline += 1;
+                        }
                         Err(mpsc::RecvTimeoutError::Disconnected) => break 'run,
                     }
                 }
@@ -1394,18 +1782,32 @@ pub(crate) fn spawn_worker(cfg: EngineConfig, worker_id: usize) -> Result<Worker
                             });
                         }
                         WorkerMsg::OpenSessionAs(sid) => worker.open_session_as(sid),
-                        WorkerMsg::CloseSession(sid, tx) => {
-                            let ok = worker.close_session(sid).unwrap_or(false);
-                            let _ = tx.send(ok);
-                        }
-                        WorkerMsg::ExportSession(sid, tx) => {
-                            let _ = tx.send(worker.export_session(sid));
-                        }
                         WorkerMsg::ImportSession(sid, exp) => {
                             worker.import_session(sid, exp)
                         }
-                        WorkerMsg::Metrics(tx) => {
-                            let _ = tx.send(worker.metrics_json());
+                        WorkerMsg::Request(env) => {
+                            let body = match env.req {
+                                WorkerReq::CloseSession(sid) => WorkerReplyBody::Closed(
+                                    worker.close_session(sid).unwrap_or(false),
+                                ),
+                                WorkerReq::ExportSession(sid) => {
+                                    WorkerReplyBody::Exported {
+                                        sid,
+                                        export: worker.export_session(sid),
+                                    }
+                                }
+                                WorkerReq::Metrics => {
+                                    WorkerReplyBody::Metrics(worker.metrics_json())
+                                }
+                            };
+                            // Answer even past the deadline: the router
+                            // re-imports a late successful export rather
+                            // than dropping the session's KV.
+                            let _ = reply.send(RouterEvent::Worker(WorkerReply {
+                                corr: env.corr,
+                                worker: worker_id,
+                                body,
+                            }));
                         }
                         WorkerMsg::Shutdown => break 'run,
                     }

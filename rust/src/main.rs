@@ -8,7 +8,7 @@
 //!   info    print manifest / configs / artifact inventory
 
 use anyhow::{bail, Result};
-use tconstformer::coordinator::{ArenaStaging, Engine, EngineConfig, Request};
+use tconstformer::coordinator::{ArenaStaging, Engine, EngineConfig, Request, SloClass};
 use tconstformer::data::corpus::{self, CorpusSpec};
 use tconstformer::data::tokenizer::ByteTokenizer;
 use tconstformer::model::{Arch, SyncMode};
@@ -74,7 +74,10 @@ fn engine_cfg_from(args: &tconstformer::util::cli::Args) -> Result<EngineConfig>
             m => bail!("bad --sync-mode {m:?}"),
         },
         max_lanes: args.get_usize("max-lanes", 4)?,
-        sched: Default::default(),
+        sched: tconstformer::coordinator::scheduler::SchedConfig {
+            prefill_chunk: args.get_usize("prefill-chunk", 0)?,
+            ..Default::default()
+        },
         checkpoint: args.get("checkpoint").map(str::to_string),
         resident: !args.flag("legacy-batching"),
         staging: if args.flag("host-arena") {
@@ -102,6 +105,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt_default("workers", "parallel arena workers behind the session-affine router", "1")
         .opt_default("session-rate", "per-session turn rate limit, turns/s (0 = off)", "0")
         .opt_default("session-burst", "rate-limit burst capacity", "4")
+        .opt_default("prefill-chunk", "cold-prompt prefill chunk size in tokens, interleaved with decode rounds (0 = whole prompt)", "0")
+        .opt_default("slo-class", "default TTFT SLO class for turns without one (interactive|standard|batch)", "standard")
         .opt_default("addr", "listen address", "127.0.0.1:8077")
         .opt_default("session-ttl", "idle parked-session eviction TTL (seconds)", "600")
         .opt_default("max-conns", "max concurrent HTTP connections", "64")
@@ -120,11 +125,16 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         cfg.max_lanes,
         cfg.session_ttl,
     );
+    let default_slo = {
+        let s = args.get_or("slo-class", "standard");
+        SloClass::parse(s).ok_or_else(|| anyhow::anyhow!("bad --slo-class {s:?}"))?
+    };
     let handle = Engine::spawn(cfg)?;
     server::serve(
         &ServerConfig {
             addr: args.get_or("addr", "127.0.0.1:8077").to_string(),
             max_conns: args.get_usize("max-conns", 64)?,
+            default_slo,
         },
         handle,
         None,

@@ -21,14 +21,27 @@
 //!   session gauges (live/parked/evicted, resume tokens saved).
 //! * `GET /healthz` — liveness
 //!
+//! **Error schema (DESIGN.md D10).** Every error response — and every
+//! in-stream SSE `error` event — carries the structured body
+//! `{"code", "message", "retryable"}` (plus `"retry_after_s"` when rate
+//! limited), with the status taken from the code's canonical mapping
+//! (`unknown_session`→404, `session_busy`→409, `rate_limited`→429,
+//! `deadline`→504, `bad_request`→400, `internal`→500). Rate-limited
+//! turns also carry a `Retry-After` header. `/generate` is the frozen
+//! pre-session API: it keeps its response shape verbatim and is marked
+//! `Deprecation: true` on every response — new clients should use the
+//! session endpoints.
+//!
+//! Turn bodies accept an optional `"slo"` class (`interactive` |
+//! `standard` | `batch`) feeding the worker's TTFT-slack scheduling;
+//! unknown values are a 400, absent values take
+//! [`ServerConfig::default_slo`] (`--slo-class`).
+//!
 //! Request bodies are capped at [`MAX_BODY`] (1 MiB): larger
 //! `Content-Length`s are answered `413` without parsing a truncated body.
 //! Concurrent connections are capped by [`ServerConfig::max_conns`]
 //! (excess accepts are answered `503` immediately) so a client flood
-//! cannot exhaust server threads. When the engine's per-session rate
-//! limit is enabled (`--session-rate`), over-rate turns are answered
-//! `429 Too Many Requests` with a `Retry-After` header instead of
-//! queuing unboundedly (DESIGN.md D7).
+//! cannot exhaust server threads.
 //!
 //! One thread per connection; requests are forwarded to the engine thread
 //! through [`EngineHandle`], so HTTP concurrency never touches PJRT state.
@@ -41,7 +54,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{EngineHandle, Response, StreamEvent, TurnRequest};
+use crate::coordinator::{
+    EngineHandle, Response, SloClass, StreamEvent, TurnError, TurnRequest,
+};
 use crate::data::tokenizer::{ByteTokenizer, EOS};
 use crate::model::sampler::SamplingParams;
 use crate::util::json::Json;
@@ -55,11 +70,18 @@ pub struct ServerConfig {
     pub addr: String,
     /// Max concurrent connections; excess accepts are answered `503`.
     pub max_conns: usize,
+    /// SLO class assumed for turn bodies that carry no `"slo"` field
+    /// (`--slo-class`).
+    pub default_slo: SloClass,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:8077".into(), max_conns: 64 }
+        ServerConfig {
+            addr: "127.0.0.1:8077".into(),
+            max_conns: 64,
+            default_slo: SloClass::default(),
+        }
     }
 }
 
@@ -148,6 +170,7 @@ fn respond_with(
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Error",
     };
     let mut headers = String::new();
@@ -163,15 +186,24 @@ fn respond_with(
     Ok(())
 }
 
-/// Whole seconds to advertise in `Retry-After`, parsed from the router's
-/// "… retry after 1.23s" rejection message (ceiling, min 1).
-fn retry_after_secs(msg: &str) -> u64 {
-    msg.rsplit("retry after")
-        .next()
-        .and_then(|tail| tail.trim().trim_end_matches('s').parse::<f64>().ok())
-        .map(|s| s.max(0.0).ceil() as u64)
-        .unwrap_or(1)
-        .max(1)
+/// Response headers a [`TurnError`] implies beyond its body: a
+/// `Retry-After` (whole seconds, ceiling, min 1) when it carries a retry
+/// hint.
+fn error_headers(e: &TurnError) -> Vec<(&'static str, String)> {
+    match e.retry_after_s {
+        Some(s) => vec![("Retry-After", format!("{}", (s.max(0.0).ceil() as u64).max(1)))],
+        None => Vec::new(),
+    }
+}
+
+/// Answer with the error's canonical status and structured JSON body.
+fn respond_error(stream: &mut TcpStream, e: &TurnError) -> Result<()> {
+    respond_with(
+        stream,
+        e.code.http_status(),
+        &error_headers(e),
+        &e.to_json().to_string(),
+    )
 }
 
 /// Parse `/v1/sessions/{id}[/tail]` → (id, tail).
@@ -184,9 +216,24 @@ fn session_route(path: &str) -> Option<(u64, Option<&str>)> {
 }
 
 /// Shared body → [`TurnRequest`] parsing for `/generate` and turn posts.
-fn parse_turn(body: &[u8], id: u64, session_id: Option<u64>) -> Result<TurnRequest> {
-    let j = Json::parse(std::str::from_utf8(body).context("utf8 body")?)
-        .map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+/// Malformed bodies come back as a structured `bad_request`.
+fn parse_turn(
+    body: &[u8],
+    id: u64,
+    session_id: Option<u64>,
+    default_slo: SloClass,
+) -> Result<TurnRequest, TurnError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| TurnError::bad_request("body is not utf-8"))?;
+    let j = Json::parse(text).map_err(|e| TurnError::bad_request(format!("bad json: {e}")))?;
+    let slo = match j.get("slo").as_str() {
+        None => default_slo,
+        Some(s) => SloClass::parse(s).ok_or_else(|| {
+            TurnError::bad_request(format!(
+                "bad slo class {s:?}; expected interactive|standard|batch"
+            ))
+        })?,
+    };
     let tk = ByteTokenizer;
     let prompt = tk.encode(j.get("prompt").as_str().unwrap_or(""));
     Ok(TurnRequest {
@@ -204,6 +251,7 @@ fn parse_turn(body: &[u8], id: u64, session_id: Option<u64>) -> Result<TurnReque
         } else {
             None
         },
+        slo,
     })
 }
 
@@ -236,6 +284,7 @@ fn response_json(resp: &Response) -> Json {
                 ("peak_kv_bytes", Json::num(resp.metrics.peak_kv_bytes as f64)),
                 ("tokens_per_s", Json::num(resp.metrics.tokens_per_s())),
                 ("worker", Json::num(resp.metrics.worker as f64)),
+                ("slo", Json::str(resp.metrics.slo.as_str())),
             ]),
         ),
     ];
@@ -245,10 +294,22 @@ fn response_json(resp: &Response) -> Json {
     Json::obj(fields)
 }
 
-fn handle_generate(engine: &EngineHandle, body: &[u8], next_id: &AtomicU64) -> Result<Json> {
-    let req = parse_turn(body, next_id.fetch_add(1, Ordering::Relaxed), None)?;
-    let resp = engine.generate(req)?;
-    Ok(response_json(&resp))
+fn handle_generate(
+    engine: &EngineHandle,
+    body: &[u8],
+    next_id: &AtomicU64,
+    default_slo: SloClass,
+) -> Result<Json, TurnError> {
+    let req = parse_turn(body, next_id.fetch_add(1, Ordering::Relaxed), None, default_slo)?;
+    let handle = engine.submit(req);
+    loop {
+        match handle.recv() {
+            Some(StreamEvent::TurnDone(resp)) => return Ok(response_json(&resp)),
+            Some(StreamEvent::Error(e)) => return Err(e),
+            Some(_) => {}
+            None => return Err(TurnError::internal("engine unavailable")),
+        }
+    }
 }
 
 /// One chunk of a chunked transfer (our SSE events are one chunk each, so
@@ -266,47 +327,33 @@ fn handle_turn(
     session_id: u64,
     body: &[u8],
     next_id: &AtomicU64,
+    default_slo: SloClass,
 ) -> Result<()> {
-    let req = match parse_turn(body, next_id.fetch_add(1, Ordering::Relaxed), Some(session_id)) {
+    let req = match parse_turn(
+        body,
+        next_id.fetch_add(1, Ordering::Relaxed),
+        Some(session_id),
+        default_slo,
+    ) {
         Ok(r) => r,
-        Err(e) => {
-            return respond(
-                stream,
-                400,
-                &Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string(),
-            )
-        }
+        Err(e) => return respond_error(stream, &e),
     };
     let handle = engine.submit(req);
     // Peek the first event before committing to a 200: an immediate Error
-    // (unknown/busy session) becomes a plain JSON error response.
+    // (unknown/busy/rate-limited session) becomes a plain JSON error
+    // response with the error's own status and, when rate limited, a
+    // Retry-After header — no message sniffing, the code is typed.
     let first = match handle.recv() {
-        Some(StreamEvent::Error(e)) => {
-            // Coarse mapping of the engine's rejection reasons; anything
-            // unrecognized is a server-side failure, not a client fault.
-            let body = Json::obj(vec![("error", Json::str(e.clone()))]).to_string();
-            if e.contains("rate limited") {
-                // The router's token bucket rejected the turn before it
-                // queued; tell the client when to come back instead of
-                // holding the connection.
-                return respond_with(
-                    stream,
-                    429,
-                    &[("Retry-After", retry_after_secs(&e).to_string())],
-                    &body,
-                );
-            }
-            let status = if e.contains("unknown session") {
-                404
-            } else if e.contains("turn in flight") {
-                409
-            } else {
-                500
-            };
-            return respond(stream, status, &body);
-        }
+        Some(StreamEvent::Error(e)) => return respond_error(stream, &e),
         Some(ev) => ev,
-        None => return respond(stream, 503, r#"{"error":"engine unavailable"}"#),
+        None => {
+            return respond_with(
+                stream,
+                503,
+                &[],
+                &TurnError::internal("engine unavailable").to_json().to_string(),
+            )
+        }
     };
     write!(
         stream,
@@ -331,7 +378,9 @@ fn handle_turn(
                 (j, true)
             }
             StreamEvent::Closed { .. } => (Json::obj(vec![("closed", Json::Bool(true))]), true),
-            StreamEvent::Error(e) => (Json::obj(vec![("error", Json::str(e))]), true),
+            // Mid-stream failure: the same structured schema as the
+            // non-stream error bodies, nested under "error".
+            StreamEvent::Error(e) => (Json::obj(vec![("error", e.to_json())]), true),
         };
         if write_chunk(stream, &format!("data: {payload}\n\n")).is_err() {
             // Client went away: dropping `handle` cancels the turn.
@@ -346,55 +395,76 @@ fn handle_turn(
     Ok(())
 }
 
-fn handle_conn(mut stream: TcpStream, engine: EngineHandle, next_id: Arc<AtomicU64>) {
+fn handle_conn(
+    mut stream: TcpStream,
+    engine: EngineHandle,
+    next_id: Arc<AtomicU64>,
+    default_slo: SloClass,
+) {
+    // Structured bodies whose status is not the error code's canonical
+    // one (413 payload-too-large, 503 engine-gone) are sent explicitly.
+    let unavailable = || TurnError::internal("engine unavailable").to_json().to_string();
+    let not_found = || TurnError::bad_request("not found").to_json().to_string();
     let result = (|| -> Result<()> {
         let req = read_request(&mut stream)?;
         if req.too_large {
             respond(
                 &mut stream,
                 413,
-                &format!(r#"{{"error":"body exceeds {MAX_BODY} bytes"}}"#),
+                &TurnError::bad_request(format!("body exceeds {MAX_BODY} bytes"))
+                    .to_json()
+                    .to_string(),
             )?;
             drain_body(&mut stream, req.content_length, 8 << 20);
             return Ok(());
         }
         match (req.method.as_str(), req.path.as_str()) {
-            ("POST", "/generate") => match handle_generate(&engine, &req.body, &next_id) {
-                Ok(j) => respond(&mut stream, 200, &j.to_string()),
-                Err(e) => respond(
-                    &mut stream,
-                    400,
-                    &Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string(),
-                ),
-            },
+            ("POST", "/generate") => {
+                // The frozen pre-session API: response shape unchanged,
+                // but every reply advertises its deprecation.
+                let dep = ("Deprecation", "true".to_string());
+                match handle_generate(&engine, &req.body, &next_id, default_slo) {
+                    Ok(j) => respond_with(&mut stream, 200, &[dep], &j.to_string()),
+                    Err(e) => {
+                        let mut headers = error_headers(&e);
+                        headers.push(dep);
+                        respond_with(
+                            &mut stream,
+                            e.code.http_status(),
+                            &headers,
+                            &e.to_json().to_string(),
+                        )
+                    }
+                }
+            }
             ("POST", "/v1/sessions") => match engine.open_session() {
                 Ok(sid) => respond(
                     &mut stream,
                     200,
                     &Json::obj(vec![("session_id", Json::num(sid as f64))]).to_string(),
                 ),
-                Err(_) => respond(&mut stream, 503, r#"{"error":"engine unavailable"}"#),
+                Err(_) => respond(&mut stream, 503, &unavailable()),
             },
             ("POST", p) => match session_route(p) {
                 Some((sid, Some("turns"))) => {
-                    handle_turn(&mut stream, &engine, sid, &req.body, &next_id)
+                    handle_turn(&mut stream, &engine, sid, &req.body, &next_id, default_slo)
                 }
-                _ => respond(&mut stream, 404, r#"{"error":"not found"}"#),
+                _ => respond(&mut stream, 404, &not_found()),
             },
             ("DELETE", p) => match session_route(p) {
                 Some((sid, None)) => match engine.close_session(sid) {
                     Ok(true) => respond(&mut stream, 200, r#"{"closed":true}"#),
-                    Ok(false) => respond(&mut stream, 404, r#"{"error":"unknown session"}"#),
-                    Err(_) => respond(&mut stream, 503, r#"{"error":"engine unavailable"}"#),
+                    Ok(false) => respond_error(&mut stream, &TurnError::unknown_session(sid)),
+                    Err(_) => respond(&mut stream, 503, &unavailable()),
                 },
-                _ => respond(&mut stream, 404, r#"{"error":"not found"}"#),
+                _ => respond(&mut stream, 404, &not_found()),
             },
             ("GET", "/metrics") => {
                 let m = engine.metrics()?;
                 respond(&mut stream, 200, &m.to_string())
             }
             ("GET", "/healthz") => respond(&mut stream, 200, r#"{"ok":true}"#),
-            _ => respond(&mut stream, 404, r#"{"error":"not found"}"#),
+            _ => respond(&mut stream, 404, &not_found()),
         }
     })();
     if let Err(e) = result {
@@ -440,16 +510,19 @@ pub fn serve(cfg: &ServerConfig, engine: EngineHandle, stop: Option<Arc<AtomicBo
                     let _ = respond(
                         &mut stream,
                         503,
-                        r#"{"error":"connection limit reached"}"#,
+                        &TurnError::internal("connection limit reached")
+                            .to_json()
+                            .to_string(),
                     );
                     continue;
                 }
                 let guard = ConnGuard(active.clone());
                 let engine = engine.clone();
                 let next_id = next_id.clone();
+                let default_slo = cfg.default_slo;
                 std::thread::spawn(move || {
                     let _guard = guard;
-                    handle_conn(stream, engine, next_id)
+                    handle_conn(stream, engine, next_id, default_slo)
                 });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -627,12 +700,32 @@ mod tests {
     use super::*;
 
     #[test]
-    fn retry_after_parses_router_hint() {
-        let hint = "rate limited: session 3 over 1.00 turns/s; retry after 0.37s";
-        assert_eq!(retry_after_secs(hint), 1);
-        assert_eq!(retry_after_secs("retry after 2.10s"), 3);
-        assert_eq!(retry_after_secs("retry after 5s"), 5);
-        assert_eq!(retry_after_secs("no hint at all"), 1);
+    fn error_headers_carry_retry_after_ceiling() {
+        let e = TurnError::rate_limited(3, 1.0, 0.37);
+        assert_eq!(error_headers(&e), vec![("Retry-After", "1".to_string())]);
+        let e = TurnError::rate_limited(3, 1.0, 2.1);
+        assert_eq!(error_headers(&e), vec![("Retry-After", "3".to_string())]);
+        assert!(error_headers(&TurnError::unknown_session(1)).is_empty());
+    }
+
+    #[test]
+    fn parse_turn_reads_slo_class() {
+        let req = parse_turn(br#"{"prompt":"x"}"#, 1, None, SloClass::Batch).unwrap();
+        assert_eq!(req.slo, SloClass::Batch, "absent slo takes the default");
+        let req =
+            parse_turn(br#"{"prompt":"x","slo":"interactive"}"#, 1, None, SloClass::Standard)
+                .unwrap();
+        assert_eq!(req.slo, SloClass::Interactive);
+        let err = parse_turn(br#"{"prompt":"x","slo":"turbo"}"#, 1, None, SloClass::Standard)
+            .unwrap_err();
+        assert_eq!(err.code.http_status(), 400);
+    }
+
+    #[test]
+    fn bad_json_is_a_structured_bad_request() {
+        let err = parse_turn(b"{nope", 1, None, SloClass::Standard).unwrap_err();
+        assert_eq!(err.code.http_status(), 400);
+        assert_eq!(err.to_json().get("code").as_str(), Some("bad_request"));
     }
 }
 

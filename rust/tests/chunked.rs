@@ -1,0 +1,198 @@
+//! Chunked-prefill invariants (DESIGN.md D10), over the tiny artifacts
+//! (self-skip when absent, like the other artifact-gated suites).
+//!
+//! * **bit-identity** — streams served with cold prompts split into
+//!   chunks interleaved with decode rounds must equal whole-prompt
+//!   prefill token-for-token, for all three architectures under both
+//!   stagings (chunking changes *when* prompt tokens are absorbed, never
+//!   what any lane's graphs see);
+//! * **park/resume** — a session whose cold first turn was chunked must
+//!   park and resume exactly like one admitted whole (the installed lane
+//!   state is the same bytes);
+//! * **metering** — `chunked_prefill_rounds` counts the extra admission
+//!   rounds, so the bit-identity runs are provably non-vacuous;
+//! * **async protocol** — a healthy served engine completes turns,
+//!   metrics snapshots and session closes with
+//!   `worker_reply_timeouts_total == 0` (no router op ever waited out a
+//!   worker reply deadline on the happy path).
+
+use std::time::Duration;
+
+use tconstformer::coordinator::scheduler::SchedConfig;
+use tconstformer::coordinator::{ArenaStaging, Engine, EngineConfig, TurnRequest};
+use tconstformer::model::{Arch, SyncMode};
+
+fn artifacts_dir() -> String {
+    std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
+}
+
+fn tiny_cfg(arch: Arch, prefill_chunk: usize) -> EngineConfig {
+    EngineConfig {
+        artifacts_dir: artifacts_dir(),
+        preset: "tiny".into(),
+        arch,
+        sync_mode: SyncMode::Incremental,
+        max_lanes: 4,
+        sched: SchedConfig { prefill_chunk, ..Default::default() },
+        session_ttl: Duration::from_secs(600),
+        ..Default::default()
+    }
+}
+
+fn prompt(n: usize, seed: usize) -> Vec<i32> {
+    (0..n).map(|i| 1 + ((i * 37 + seed * 101) % 255) as i32).collect()
+}
+
+/// Run a mixed workload — two long cold prompts (chunk-eligible) and one
+/// short one (admitted whole even when chunking is on) — and return the
+/// token streams sorted by id.
+fn run_mixed_workload(cfg: &EngineConfig) -> Vec<Vec<i32>> {
+    let mut engine = Engine::new(cfg).unwrap();
+    let reqs = vec![
+        TurnRequest::greedy(0, prompt(41, 0), 12),
+        TurnRequest::greedy(1, prompt(4, 1), 12),
+        TurnRequest::greedy(2, prompt(29, 2), 12),
+    ];
+    let mut out = engine.run_workload(reqs).unwrap();
+    out.sort_by_key(|r| r.id);
+    out.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn chunked_cold_streams_bit_identical_to_whole_prompt() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    for arch in [Arch::TConst, Arch::TLin, Arch::Base] {
+        for staging in [ArenaStaging::DeviceArena, ArenaStaging::HostArena] {
+            let whole = run_mixed_workload(&EngineConfig {
+                staging,
+                ..tiny_cfg(arch, 0)
+            });
+            let chunked = run_mixed_workload(&EngineConfig {
+                staging,
+                ..tiny_cfg(arch, 7)
+            });
+            assert_eq!(
+                chunked, whole,
+                "{arch:?}/{staging:?}: chunked prefill changed the streams"
+            );
+        }
+    }
+}
+
+/// A session whose cold first turn crossed several chunk boundaries must
+/// park and resume exactly like one admitted whole — both the first
+/// turn's stream and the resumed second turn's.
+#[test]
+fn park_resume_across_chunk_boundary_matches_whole_prompt() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    for arch in [Arch::TConst, Arch::TLin, Arch::Base] {
+        for staging in [ArenaStaging::DeviceArena, ArenaStaging::HostArena] {
+            let mut streams: Vec<Vec<Vec<i32>>> = Vec::new();
+            for chunk in [5usize, 0] {
+                let cfg = EngineConfig { staging, ..tiny_cfg(arch, chunk) };
+                let mut engine = Engine::new(&cfg).unwrap();
+                let sid = engine.open_session();
+                // Turn 1's prompt spans several chunks; a concurrent
+                // ephemeral turn keeps decode rounds running while the
+                // chunks advance.
+                engine.submit(TurnRequest::greedy_turn(1, sid, prompt(43, 3), 9));
+                engine.submit(TurnRequest::greedy(2, prompt(11, 8), 9));
+                engine.run_to_completion().unwrap();
+                let t1 = engine.completed.iter().find(|r| r.id == 1).unwrap().tokens.clone();
+                engine.completed.clear();
+                // Turn 2 resumes the parked state laid down by the
+                // chunked (or whole) admission.
+                engine.submit(TurnRequest::greedy_turn(3, sid, prompt(9, 4), 7));
+                engine.run_to_completion().unwrap();
+                let t2 = engine.completed.remove(0).tokens.clone();
+                streams.push(vec![t1, t2]);
+            }
+            assert_eq!(
+                streams[0], streams[1],
+                "{arch:?}/{staging:?}: park/resume across a chunk boundary diverged"
+            );
+        }
+    }
+}
+
+/// The chunked arm actually took extra admission rounds (otherwise the
+/// bit-identity assertions above prove nothing).
+#[test]
+fn chunked_rounds_are_metered() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine = Engine::new(&tiny_cfg(Arch::TConst, 7)).unwrap();
+    engine.submit(TurnRequest::greedy(1, prompt(41, 0), 6));
+    engine.run_to_completion().unwrap();
+    let m = engine.metrics_json();
+    // BOS + 41 prompt tokens in 7-token chunks -> 6 admission rounds.
+    let rounds = m.get("chunked_prefill_rounds").as_usize().unwrap();
+    assert!(rounds >= 6, "expected >= 6 chunk rounds, got {rounds}");
+
+    let mut engine = Engine::new(&tiny_cfg(Arch::TConst, 0)).unwrap();
+    engine.submit(TurnRequest::greedy(1, prompt(41, 0), 6));
+    engine.run_to_completion().unwrap();
+    let m = engine.metrics_json();
+    assert_eq!(
+        m.get("chunked_prefill_rounds").as_usize(),
+        Some(0),
+        "chunk metering must stay zero when chunking is off"
+    );
+}
+
+/// Happy-path envelope protocol: a served engine under normal traffic —
+/// turns, metrics snapshots, closes — never times out a worker reply.
+#[test]
+fn happy_path_worker_reply_timeouts_zero() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let cfg = EngineConfig { workers: 2, ..tiny_cfg(Arch::TConst, 7) };
+    let handle = Engine::spawn(cfg).unwrap();
+    let mut sids = Vec::new();
+    for i in 0..4u64 {
+        let sid = handle.open_session().unwrap();
+        handle
+            .submit(TurnRequest::greedy_turn(i, sid, prompt(30 + i as usize, i as usize), 5))
+            .wait()
+            .unwrap();
+        sids.push(sid);
+    }
+    // Metrics snapshots fan an envelope to every worker; several in a row
+    // exercise reply correlation under live traffic.
+    for _ in 0..3 {
+        let m = handle.metrics().unwrap();
+        assert_eq!(m.get("worker_reply_timeouts_total").as_usize(), Some(0));
+    }
+    // Resume each session once (exercises the affinity/migration path),
+    // then close them all (each close is an enveloped round-trip).
+    for (i, &sid) in sids.iter().enumerate() {
+        handle
+            .submit(TurnRequest::greedy_turn(100 + i as u64, sid, prompt(6, i), 4))
+            .wait()
+            .unwrap();
+    }
+    for &sid in &sids {
+        assert!(handle.close_session(sid).unwrap());
+    }
+    let m = handle.metrics().unwrap();
+    assert_eq!(
+        m.get("worker_reply_timeouts_total").as_usize(),
+        Some(0),
+        "happy path must never time out a worker reply: {m}"
+    );
+    handle.shutdown();
+}

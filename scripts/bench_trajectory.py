@@ -9,16 +9,23 @@ This script maintains two committed trajectory files at the repo root —
   sync-vs-steady p99 latency split;
 * ``BENCH_ttft.json``  — one entry per PR: cold-prefill vs resumed TTFT.
 
+Both modes optionally take ``--replay replay_metrics.json`` (the session
+replayer's soak artifact): its per-SLO-class TTFT p99s
+(``ttft_slo_p99_interactive`` / ``_standard`` / ``_batch``) are merged into
+the BENCH_ttft.json entry and gated with the same timing band as the other
+TTFT keys. A replay file from a non-soak run (no SLO keys) is skipped with
+a note, so the flag is safe to pass unconditionally.
+
 Modes:
 
     append  — extract a trajectory point from micro_metrics.json and append
               it to both files (run locally; commit the result with the PR):
                   python3 scripts/bench_trajectory.py append \
-                      --micro micro_metrics.json [--label my-pr]
+                      --micro micro_metrics.json [--replay replay_metrics.json] [--label my-pr]
     gate    — compare micro_metrics.json against the committed baseline and
               exit non-zero on regression beyond the noise band (run in CI):
                   python3 scripts/bench_trajectory.py gate \
-                      --micro micro_metrics.json
+                      --micro micro_metrics.json [--replay replay_metrics.json]
 
 The gate's baseline is the median of the last up-to-5 committed entries for
 the same preset; an empty trajectory (or no entries for this preset) passes
@@ -54,6 +61,13 @@ MICRO_KEYS = [
     ("steady_p99_ms", "time"),
 ]
 TTFT_KEYS = [("cold_ms", "time"), ("resumed_ms", "time")]
+# Per-SLO-class TTFT p99s from the replayer's soak artifact (merged into
+# BENCH_ttft.json when --replay is given; absent keys gate-pass).
+REPLAY_SLO_KEYS = [
+    ("ttft_slo_p99_interactive", "time"),
+    ("ttft_slo_p99_standard", "time"),
+    ("ttft_slo_p99_batch", "time"),
+]
 TIMING_BAND = 0.30
 
 
@@ -98,6 +112,20 @@ def extract_ttft_point(micro):
     return {"cold_ms": t["cold_ms"], "resumed_ms": t["resumed_ms"]}
 
 
+def extract_replay_point(replay_path):
+    """The per-SLO-class TTFT p99s from the replayer's soak artifact, or
+    {} when the file is absent or was not a soak run (both fine)."""
+    replay = load_json(replay_path) if replay_path else None
+    if replay is None:
+        if replay_path:
+            print(f"note: {replay_path} not found — skipping SLO TTFT keys")
+        return {}
+    point = {k: replay[k] for k, _ in REPLAY_SLO_KEYS if k in replay}
+    if not point:
+        print(f"note: {replay_path} has no SLO keys (non-soak run) — skipping")
+    return point
+
+
 def stamp(point, micro, label):
     return {
         "preset": micro.get("preset", "unknown"),
@@ -112,9 +140,10 @@ def append(args):
     if micro is None:
         raise SystemExit(f"{args.micro} not found — run `cargo bench --bench micro` first")
     label = args.label or os.environ.get("GITHUB_SHA", "local")[:12]
+    ttft_point = {**extract_ttft_point(micro), **extract_replay_point(args.replay)}
     for path, point in [
         (MICRO_TRAJ, extract_micro_point(micro)),
-        (TTFT_TRAJ, extract_ttft_point(micro)),
+        (TTFT_TRAJ, ttft_point),
     ]:
         traj = load_json(path, default=[])
         traj.append(stamp(point, micro, label))
@@ -153,9 +182,11 @@ def gate(args):
     if micro is None:
         raise SystemExit(f"{args.micro} not found — run `cargo bench --bench micro` first")
     preset = micro.get("preset", "unknown")
+    replay_point = extract_replay_point(args.replay)
+    replay_keys = [(k, kind) for k, kind in REPLAY_SLO_KEYS if k in replay_point]
     points = {
         MICRO_TRAJ: (extract_micro_point(micro), MICRO_KEYS),
-        TTFT_TRAJ: (extract_ttft_point(micro), TTFT_KEYS),
+        TTFT_TRAJ: ({**extract_ttft_point(micro), **replay_point}, TTFT_KEYS + replay_keys),
     }
     failures = []
     for path, (point, keys) in points.items():
@@ -183,6 +214,7 @@ def main():
     for mode, fn in [("append", append), ("gate", gate)]:
         p = sub.add_parser(mode)
         p.add_argument("--micro", default="micro_metrics.json")
+        p.add_argument("--replay", default=None)
         if mode == "append":
             p.add_argument("--label", default=None)
         p.set_defaults(fn=fn)
