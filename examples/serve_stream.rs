@@ -19,6 +19,18 @@
 //! resumed-only variants) and the router's `worker_reply_timeouts_total`,
 //! which must stay 0 in the happy path.
 //!
+//! `mode = restart` exercises the D11 persistent session store in two
+//! phases. Phase 1 boots an engine with the disk tier on (`$STORE_DIR`,
+//! default a tmpdir) and a short `session_ttl`, runs each conversation's
+//! **first** turn, and waits for every parked session to demote into the
+//! store. Phase 2 shuts the engine down, boots a fresh one over the same
+//! store directory — the router rebuilds its session table from the store
+//! scan — and runs each conversation's **second** turn against the
+//! recovered session ids. The replay JSON reports the disk-resume TTFT
+//! percentiles (`ttft_disk_resume_p50_ms` / `ttft_disk_resume_p99_ms`),
+//! the prefill tokens those resumes saved vs replaying cold, and the
+//! store's refusal counters (0 in any healthy run).
+//!
 //! Besides the stdout report, the per-turn cold-vs-resumed TTFT figures
 //! are written as JSON to `$REPLAY_JSON` (default `replay_metrics.json`)
 //! so CI can publish them per run alongside the micro bench's
@@ -128,6 +140,255 @@ fn replay_conversation(addr: &str, item: &workload::WorkItem, slo: &str) -> Vec<
     stats
 }
 
+/// One SSE turn against an already-open session. Returns
+/// `(ttft_ms, saved_prefill_tokens)` when the stream completed cleanly.
+fn sse_turn(addr: &str, sid: usize, prompt: &[i32], max_new: usize) -> Option<(f64, f64)> {
+    let tk = ByteTokenizer;
+    let body = turn_body(&tk, prompt, max_new, "standard");
+    match http::http_post_sse(addr, &format!("/v1/sessions/{sid}/turns"), &body) {
+        Ok((200, events, first_ms)) => {
+            let done = events.last().cloned().unwrap_or(Json::Null);
+            if done.get("done").as_bool().unwrap_or(false) {
+                let saved = done
+                    .get("metrics")
+                    .get("saved_prefill_tokens")
+                    .as_f64()
+                    .unwrap_or(0.0);
+                Some((first_ms, saved))
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// `mode = restart`: the two-phase D11 disk-tier scenario (module docs).
+fn run_restart(arch: Arch, n_convs: usize, workers: usize) -> anyhow::Result<()> {
+    let store_dir = std::env::var("STORE_DIR").unwrap_or_else(|_| {
+        std::env::temp_dir()
+            .join(format!("tconst-replay-store-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    });
+    let _ = std::fs::remove_dir_all(&store_dir);
+    println!(
+        "== serve_stream: arch={} conversations={} workers={} restart (store={store_dir}) ==",
+        arch.as_str(),
+        n_convs,
+        workers,
+    );
+
+    let cfg = |ttl: std::time::Duration| EngineConfig {
+        preset: "tiny".into(),
+        arch,
+        workers,
+        store_dir: Some(store_dir.clone()),
+        session_ttl: ttl,
+        ..Default::default()
+    };
+    // Two turns per conversation: the cold first turn runs pre-restart,
+    // the follow-up resumes from disk post-restart. Arrival pacing is
+    // irrelevant here — turns run back to back.
+    let corp = corpus::generate(&CorpusSpec { total_tokens: 1 << 16, ..Default::default() });
+    let items = workload::generate(
+        &WorkloadSpec {
+            n_requests: n_convs,
+            rate_per_s: 100.0,
+            prompt_len_min: 24,
+            prompt_len_max: 96,
+            new_tokens_min: 8,
+            new_tokens_max: 24,
+            turns_min: 2,
+            turns_max: 2,
+            ..Default::default()
+        },
+        &corp.train,
+    );
+
+    // -- phase 1: cold first turns, then demote the whole batch to disk --
+    let engine = Engine::spawn(cfg(std::time::Duration::from_millis(400)))?;
+    let addr1 = "127.0.0.1:8098";
+    let stop1 = Arc::new(AtomicBool::new(false));
+    let (h1, s1) = (engine.clone(), stop1.clone());
+    let server1 = std::thread::spawn(move || {
+        http::serve(
+            &ServerConfig { addr: addr1.to_string(), ..Default::default() },
+            h1,
+            Some(s1),
+        )
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    let mut ttft_cold = Percentiles::default();
+    // (sid, follow-up prompt, follow-up max_new) for phase 2.
+    let mut sessions: Vec<(usize, Vec<i32>, usize)> = Vec::new();
+    let mut errors = 0usize;
+    for item in &items {
+        let sid = match http::http_post(addr1, "/v1/sessions", "{}") {
+            Ok((200, body)) => {
+                match Json::parse(&body).ok().and_then(|j| j.get("session_id").as_usize()) {
+                    Some(sid) => sid,
+                    None => {
+                        errors += 1;
+                        continue;
+                    }
+                }
+            }
+            _ => {
+                errors += 1;
+                continue;
+            }
+        };
+        match sse_turn(addr1, sid, &item.prompt_tokens, item.max_new_tokens) {
+            Some((ttft_ms, _)) => {
+                ttft_cold.add(ttft_ms);
+                let (fp, fmax) = item
+                    .followups
+                    .first()
+                    .map(|f| (f.prompt_tokens.clone(), f.max_new_tokens))
+                    .unwrap_or_else(|| (item.prompt_tokens.clone(), item.max_new_tokens));
+                sessions.push((sid, fp, fmax));
+            }
+            None => errors += 1,
+        }
+    }
+
+    // Each session parks when its turn finishes; the worker demotes it to
+    // the store once it idles past session_ttl. Wait for the whole batch.
+    let want = sessions.len() as f64;
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let m = engine.metrics()?;
+        if m.get("disk_tier_sessions").as_f64().unwrap_or(0.0) >= want {
+            break;
+        }
+        if std::time::Instant::now() >= deadline {
+            println!(
+                "  warning: only {} of {want} sessions reached the disk tier before timeout",
+                m.get("disk_tier_sessions")
+            );
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let m1 = engine.metrics()?;
+    println!("\n-- phase 1 (pre-restart) --");
+    println!("  cold turns       {:>8}  (errors {errors})", sessions.len());
+    println!(
+        "  ttft cold        p50 {:>8.1} ms   p95 {:>8.1} ms",
+        nan0(ttft_cold.p50()),
+        nan0(ttft_cold.p95())
+    );
+    println!(
+        "  disk tier        {} sessions, {} bytes  (demoted {})",
+        m1.get("disk_tier_sessions"),
+        m1.get("disk_tier_bytes"),
+        m1.get("sessions_demoted_disk"),
+    );
+
+    stop1.store(true, Ordering::Relaxed);
+    server1.join().unwrap()?;
+    engine.shutdown();
+    drop(engine);
+
+    // -- phase 2: fresh engine over the same store; resume from the scan --
+    let engine = Engine::spawn(cfg(std::time::Duration::from_secs(600)))?;
+    let addr2 = "127.0.0.1:8097";
+    let stop2 = Arc::new(AtomicBool::new(false));
+    let (h2, s2) = (engine.clone(), stop2.clone());
+    let server2 = std::thread::spawn(move || {
+        http::serve(
+            &ServerConfig { addr: addr2.to_string(), ..Default::default() },
+            h2,
+            Some(s2),
+        )
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    let recovered = engine
+        .metrics()?
+        .get("router_sessions_recovered")
+        .as_f64()
+        .unwrap_or(0.0);
+    let mut ttft_resume = Percentiles::default();
+    let mut saved = 0.0f64;
+    let mut resumed_ok = 0usize;
+    for (sid, prompt, max_new) in &sessions {
+        match sse_turn(addr2, *sid, prompt, *max_new) {
+            Some((ttft_ms, s)) => {
+                ttft_resume.add(ttft_ms);
+                saved += s;
+                resumed_ok += 1;
+            }
+            None => errors += 1,
+        }
+        let _ = http::http_request_raw(
+            addr2,
+            &format!(
+                "DELETE /v1/sessions/{sid} HTTP/1.1\r\nHost: {addr2}\r\nConnection: close\r\n\r\n"
+            ),
+        );
+    }
+    let m2 = engine.metrics()?;
+
+    println!("\n-- phase 2 (post-restart) --");
+    println!(
+        "  sessions recovered from store scan  {recovered:>4.0}  (resumed turns ok {resumed_ok}, errors {errors})"
+    );
+    println!(
+        "  ttft disk-resume p50 {:>8.1} ms   p99 {:>8.1} ms",
+        nan0(ttft_resume.p50()),
+        nan0(ttft_resume.p99())
+    );
+    println!(
+        "  prefill tokens saved by disk resume {saved:>7.0}   (promoted {}  store reads {})",
+        m2.get("sessions_promoted_disk"),
+        m2.get("store_reads_total"),
+    );
+    println!(
+        "  store refusals   corrupt {}  stale {}",
+        m2.get("store_refused_corrupt"),
+        m2.get("store_refused_stale"),
+    );
+
+    let json_path =
+        std::env::var("REPLAY_JSON").unwrap_or_else(|_| "replay_metrics.json".into());
+    let report = Json::obj(vec![
+        ("arch", Json::str(arch.as_str())),
+        ("workers", Json::num(workers as f64)),
+        ("conversations", Json::num(n_convs as f64)),
+        ("restart", Json::Bool(true)),
+        ("errors", Json::num(errors as f64)),
+        ("ttft_cold_p50_ms", Json::num(nan0(ttft_cold.p50()))),
+        ("ttft_cold_p95_ms", Json::num(nan0(ttft_cold.p95()))),
+        ("ttft_disk_resume_p50_ms", Json::num(nan0(ttft_resume.p50()))),
+        ("ttft_disk_resume_p99_ms", Json::num(nan0(ttft_resume.p99()))),
+        ("disk_sessions_recovered", Json::num(recovered)),
+        ("disk_prefill_tokens_saved", Json::num(saved)),
+        (
+            "sessions_promoted_disk",
+            Json::num(m2.get("sessions_promoted_disk").as_f64().unwrap_or(0.0)),
+        ),
+        (
+            "store_refused_corrupt",
+            Json::num(m2.get("store_refused_corrupt").as_f64().unwrap_or(0.0)),
+        ),
+        (
+            "store_refused_stale",
+            Json::num(m2.get("store_refused_stale").as_f64().unwrap_or(0.0)),
+        ),
+    ]);
+    std::fs::write(&json_path, report.to_string())?;
+    println!("\nreplay metrics -> {json_path}");
+
+    stop2.store(true, Ordering::Relaxed);
+    server2.join().unwrap()?;
+    engine.shutdown();
+    let _ = std::fs::remove_dir_all(&store_dir);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let arch = Arch::parse(args.first().map(String::as_str).unwrap_or("tconst"))?;
@@ -135,7 +396,11 @@ fn main() -> anyhow::Result<()> {
     let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8.0);
     let turns: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(3);
     let workers: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
-    let soak = args.get(5).map(String::as_str) == Some("soak");
+    let mode = args.get(5).cloned().unwrap_or_default();
+    if mode == "restart" {
+        return run_restart(arch, n_convs, workers);
+    }
+    let soak = mode == "soak";
     // Soak runs exercise chunked prefill (the anti-head-of-line path);
     // plain runs keep the historical whole-prompt admission.
     let prefill_chunk: usize = if soak {

@@ -86,6 +86,34 @@ pub struct EngineConfig {
     pub session_rate: f64,
     /// Rate-limit burst capacity (clamped to >= 1 when limiting is on).
     pub session_burst: f64,
+    /// Persistent session store directory (DESIGN.md D11). When set,
+    /// TTL-expired host-spilled sessions demote into checksummed snapshot
+    /// files there instead of being dropped, the router rebuilds its
+    /// session table from the directory at boot (restart recovery), and
+    /// migrating a disk-tier session ships its store key instead of hot
+    /// bytes. `None` (the default) disables the disk tier entirely.
+    pub store_dir: Option<String>,
+    /// Disk-tier capacity cap in bytes; the store LRU-evicts snapshots to
+    /// stay under it. `0` = unlimited.
+    pub store_cap_bytes: u64,
+    /// Disk-tier TTL: snapshots idle longer than this are removed by the
+    /// store's GC sweep. `None` = no TTL (snapshots live until resumed,
+    /// closed, or cap-evicted).
+    pub store_ttl: Option<Duration>,
+}
+
+impl EngineConfig {
+    /// The compatibility fingerprint recorded in every snapshot header: a
+    /// snapshot resumes only on an engine with the same arch, preset, and
+    /// checkpoint (anything else is refused as stale, DESIGN.md D11).
+    pub fn store_fingerprint(&self) -> String {
+        format!(
+            "arch={};preset={};checkpoint={}",
+            self.arch.as_str(),
+            self.preset,
+            self.checkpoint.as_deref().unwrap_or("none"),
+        )
+    }
 }
 
 impl Default for EngineConfig {
@@ -105,6 +133,9 @@ impl Default for EngineConfig {
             workers: 1,
             session_rate: 0.0,
             session_burst: 4.0,
+            store_dir: None,
+            store_cap_bytes: 0,
+            store_ttl: None,
         }
     }
 }

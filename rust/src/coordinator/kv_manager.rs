@@ -144,6 +144,12 @@ pub struct KvManager {
     /// surfaced in error messages so a sharded engine's failures name
     /// their shard.
     worker_id: usize,
+    /// Disk-tier accounting (DESIGN.md D11): snapshot bytes this worker's
+    /// sessions hold in the persistent store. Disk sessions own no lane
+    /// or slot, but the tier is metered here so the KV byte story —
+    /// live / parked / disk — has a single owner per worker.
+    disk_bytes: u64,
+    disk_sessions: usize,
 }
 
 impl KvManager {
@@ -160,6 +166,8 @@ impl KvManager {
             peak_bytes: 0,
             parked: Vec::new(),
             worker_id,
+            disk_bytes: 0,
+            disk_sessions: 0,
         }
     }
 
@@ -335,6 +343,31 @@ impl KvManager {
     /// KV bytes pinned by sequences currently in a turn.
     pub fn live_bytes(&self) -> u64 {
         self.total_bytes().saturating_sub(self.parked_bytes())
+    }
+
+    // -- disk-tier accounting (DESIGN.md D11) -------------------------------
+
+    /// A session of this worker demoted into the persistent store.
+    pub fn note_disk_add(&mut self, bytes: u64) {
+        self.disk_bytes += bytes;
+        self.disk_sessions += 1;
+    }
+
+    /// A disk-tier session promoted back, closed, exported by reference,
+    /// or reconciled away after a store-side eviction.
+    pub fn note_disk_remove(&mut self, bytes: u64) {
+        self.disk_bytes = self.disk_bytes.saturating_sub(bytes);
+        self.disk_sessions = self.disk_sessions.saturating_sub(1);
+    }
+
+    /// Snapshot bytes this worker's sessions hold in the disk tier.
+    pub fn disk_bytes(&self) -> u64 {
+        self.disk_bytes
+    }
+
+    /// Sessions of this worker currently parked in the disk tier.
+    pub fn disk_sessions(&self) -> usize {
+        self.disk_sessions
     }
 
     /// Total tokens a sequence's state has absorbed so far, in either
@@ -608,6 +641,25 @@ mod tests {
         load.queue_depth.store(2, Ordering::Relaxed);
         kv.publish(&load);
         assert!(load.snapshot(2).is_saturated(), "live+parked+queue fills 4 lanes");
+    }
+
+    #[test]
+    fn disk_tier_accounting_is_saturating() {
+        let mut kv = KvManager::new(KvLimits::default());
+        assert_eq!(kv.disk_bytes(), 0);
+        assert_eq!(kv.disk_sessions(), 0);
+        kv.note_disk_add(100);
+        kv.note_disk_add(50);
+        assert_eq!(kv.disk_bytes(), 150);
+        assert_eq!(kv.disk_sessions(), 2);
+        kv.note_disk_remove(100);
+        assert_eq!(kv.disk_bytes(), 50);
+        assert_eq!(kv.disk_sessions(), 1);
+        // A double-remove (reconcile racing a promote) must not underflow.
+        kv.note_disk_remove(100);
+        kv.note_disk_remove(100);
+        assert_eq!(kv.disk_bytes(), 0);
+        assert_eq!(kv.disk_sessions(), 0);
     }
 
     #[test]

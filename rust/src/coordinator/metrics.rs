@@ -11,6 +11,7 @@
 use std::time::Instant;
 
 use super::kv_manager::WorkerLoadSnapshot;
+use super::request::SloClass;
 use crate::util::json::Json;
 use crate::util::stats::{Percentiles, Summary};
 
@@ -67,6 +68,20 @@ pub struct EngineMetrics {
     /// Parked sessions demoted from their arena lane to a host-mirror
     /// state under capacity pressure.
     pub sessions_spilled: u64,
+    /// Disk tier (DESIGN.md D11): TTL-expired sessions demoted into the
+    /// persistent store instead of being dropped.
+    pub sessions_demoted_disk: u64,
+    /// Disk-tier sessions promoted back for a resume.
+    pub sessions_promoted_disk: u64,
+    /// Sessions adopted by store reference (migration or boot recovery) —
+    /// no snapshot bytes moved through the import.
+    pub sessions_imported_byref: u64,
+    /// Snapshots refused at promote time as damaged (truncated, checksum
+    /// or payload corruption, io).
+    pub store_refused_corrupt: u64,
+    /// Snapshots refused at promote time as stale (schema or
+    /// arch/preset/checkpoint fingerprint mismatch).
+    pub store_refused_stale: u64,
     /// Turns that resumed a parked session.
     pub resume_turns: u64,
     /// Tokens actually fed on resume paths (window replay + new tokens).
@@ -80,10 +95,24 @@ pub struct EngineMetrics {
     pub sessions_parked_spilled: u64,
     pub kv_bytes_parked: u64,
     pub kv_bytes_live: u64,
+    /// Disk-tier gauges (DESIGN.md D11), refreshed from the KvManager's
+    /// accounting before each snapshot.
+    pub disk_tier_bytes: u64,
+    pub disk_tier_sessions: u64,
     /// Per-request latency distributions (ms).
     pub ttft_ms: Percentiles,
     pub total_ms: Percentiles,
     pub per_token_ms: Percentiles,
+    /// Per-SLO-class TTFT digests (DESIGN.md D10 satellite): one
+    /// distribution per class so an interactive p99 regression is not
+    /// averaged away by batch traffic. `turns_slo_*` are the matching
+    /// finished-turn counts (also the aggregation weights).
+    pub ttft_interactive: Percentiles,
+    pub ttft_standard: Percentiles,
+    pub ttft_batch: Percentiles,
+    pub turns_slo_interactive: u64,
+    pub turns_slo_standard: u64,
+    pub turns_slo_batch: u64,
     /// Decode-round wall time (ms) — the hot-loop health signal.
     pub round_ms: Summary,
     /// KV byte gauges across all live sequences.
@@ -131,6 +160,11 @@ impl Default for EngineMetrics {
             sessions_closed: 0,
             sessions_evicted: 0,
             sessions_spilled: 0,
+            sessions_demoted_disk: 0,
+            sessions_promoted_disk: 0,
+            sessions_imported_byref: 0,
+            store_refused_corrupt: 0,
+            store_refused_stale: 0,
             resume_turns: 0,
             resume_fed_tokens: 0,
             resume_saved_tokens: 0,
@@ -139,9 +173,17 @@ impl Default for EngineMetrics {
             sessions_parked_spilled: 0,
             kv_bytes_parked: 0,
             kv_bytes_live: 0,
+            disk_tier_bytes: 0,
+            disk_tier_sessions: 0,
             ttft_ms: Percentiles::default(),
             total_ms: Percentiles::default(),
             per_token_ms: Percentiles::default(),
+            ttft_interactive: Percentiles::default(),
+            ttft_standard: Percentiles::default(),
+            ttft_batch: Percentiles::default(),
+            turns_slo_interactive: 0,
+            turns_slo_standard: 0,
+            turns_slo_batch: 0,
             round_ms: Summary::new(),
             kv_bytes_current: 0,
             kv_bytes_peak: 0,
@@ -167,6 +209,19 @@ impl EngineMetrics {
         self.kv_bytes_peak = self.kv_bytes_peak.max(current);
     }
 
+    /// Record a finished turn's TTFT under its SLO class digest.
+    pub fn observe_slo_ttft(&mut self, slo: SloClass, ttft_ms: f64) {
+        let (digest, count) = match slo {
+            SloClass::Interactive => {
+                (&mut self.ttft_interactive, &mut self.turns_slo_interactive)
+            }
+            SloClass::Standard => (&mut self.ttft_standard, &mut self.turns_slo_standard),
+            SloClass::Batch => (&mut self.ttft_batch, &mut self.turns_slo_batch),
+        };
+        digest.add(ttft_ms);
+        *count += 1;
+    }
+
     pub fn uptime_s(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
     }
@@ -186,6 +241,25 @@ impl EngineMetrics {
             ("sessions_closed", Json::num(self.sessions_closed as f64)),
             ("sessions_evicted", Json::num(self.sessions_evicted as f64)),
             ("sessions_spilled", Json::num(self.sessions_spilled as f64)),
+            (
+                "sessions_demoted_disk",
+                Json::num(self.sessions_demoted_disk as f64),
+            ),
+            (
+                "sessions_promoted_disk",
+                Json::num(self.sessions_promoted_disk as f64),
+            ),
+            (
+                "sessions_imported_byref",
+                Json::num(self.sessions_imported_byref as f64),
+            ),
+            (
+                "store_refused_corrupt",
+                Json::num(self.store_refused_corrupt as f64),
+            ),
+            ("store_refused_stale", Json::num(self.store_refused_stale as f64)),
+            ("disk_tier_bytes", Json::num(self.disk_tier_bytes as f64)),
+            ("disk_tier_sessions", Json::num(self.disk_tier_sessions as f64)),
             ("sessions_in_turn", Json::num(self.sessions_in_turn as f64)),
             (
                 "sessions_parked_resident",
@@ -241,6 +315,30 @@ impl EngineMetrics {
             ("throughput_tok_s", Json::num(self.throughput_tok_s())),
             ("ttft_ms_p50", Json::num(nan0(self.ttft_ms.p50()))),
             ("ttft_ms_p95", Json::num(nan0(self.ttft_ms.p95()))),
+            (
+                "turns_slo_interactive",
+                Json::num(self.turns_slo_interactive as f64),
+            ),
+            ("turns_slo_standard", Json::num(self.turns_slo_standard as f64)),
+            ("turns_slo_batch", Json::num(self.turns_slo_batch as f64)),
+            (
+                "ttft_slo_p50_interactive",
+                Json::num(nan0(self.ttft_interactive.p50())),
+            ),
+            (
+                "ttft_slo_p99_interactive",
+                Json::num(nan0(self.ttft_interactive.p99())),
+            ),
+            (
+                "ttft_slo_p50_standard",
+                Json::num(nan0(self.ttft_standard.p50())),
+            ),
+            (
+                "ttft_slo_p99_standard",
+                Json::num(nan0(self.ttft_standard.p99())),
+            ),
+            ("ttft_slo_p50_batch", Json::num(nan0(self.ttft_batch.p50()))),
+            ("ttft_slo_p99_batch", Json::num(nan0(self.ttft_batch.p99()))),
             ("total_ms_p50", Json::num(nan0(self.total_ms.p50()))),
             ("total_ms_p95", Json::num(nan0(self.total_ms.p95()))),
             ("per_token_ms_p50", Json::num(nan0(self.per_token_ms.p50()))),
@@ -290,6 +388,17 @@ pub struct RouterStats {
     /// missed the deadline (DESIGN.md D10). 0 in the happy path — any
     /// nonzero value means a worker wedged while the router kept routing.
     pub worker_reply_timeouts: u64,
+    /// Sessions rebuilt from the persistent store's boot scan
+    /// (DESIGN.md D11 restart recovery).
+    pub sessions_recovered: u64,
+    /// Disk-tier gauges and counters, read once router-side from the
+    /// shared store (workers see the same store — summing per-worker
+    /// copies would multiply them by N). All 0 without `--store-dir`.
+    pub store_bytes: u64,
+    pub store_sessions: u64,
+    pub store_reads: u64,
+    pub store_evicted_ttl: u64,
+    pub store_evicted_cap: u64,
 }
 
 /// Counters that sum across workers (same keys as the single-worker
@@ -300,6 +409,16 @@ const SUM_KEYS: &[&str] = &[
     "requests_cancelled",
     "sessions_evicted",
     "sessions_spilled",
+    "sessions_demoted_disk",
+    "sessions_promoted_disk",
+    "sessions_imported_byref",
+    "store_refused_corrupt",
+    "store_refused_stale",
+    "disk_tier_bytes",
+    "disk_tier_sessions",
+    "turns_slo_interactive",
+    "turns_slo_standard",
+    "turns_slo_batch",
     "sessions_in_turn",
     "sessions_parked_resident",
     "sessions_parked_spilled",
@@ -344,6 +463,19 @@ const AVG_KEYS: &[&str] = &[
     "total_ms_p95",
     "per_token_ms_p50",
     "round_ms_mean",
+];
+
+/// Per-SLO-class TTFT digests: averaged like [`AVG_KEYS`], but weighted
+/// by that class's own finished-turn count (`turns_slo_*`) so a worker
+/// that served no interactive traffic cannot drag the interactive p99
+/// toward zero.
+const CLASS_AVG_KEYS: &[(&str, &str)] = &[
+    ("ttft_slo_p50_interactive", "turns_slo_interactive"),
+    ("ttft_slo_p99_interactive", "turns_slo_interactive"),
+    ("ttft_slo_p50_standard", "turns_slo_standard"),
+    ("ttft_slo_p99_standard", "turns_slo_standard"),
+    ("ttft_slo_p50_batch", "turns_slo_batch"),
+    ("ttft_slo_p99_batch", "turns_slo_batch"),
 ];
 
 fn finished_turns(snap: &Json) -> f64 {
@@ -402,6 +534,40 @@ pub fn aggregate_metrics(
         };
         fields.push((key, Json::num(nan0(v))));
     }
+    for &(key, weight_key) in CLASS_AVG_KEYS {
+        let class_weight: f64 = snaps
+            .iter()
+            .map(|s| s.get(weight_key).as_f64().unwrap_or(0.0))
+            .sum();
+        let v = if class_weight > 0.0 {
+            snaps
+                .iter()
+                .map(|s| {
+                    s.get(weight_key).as_f64().unwrap_or(0.0)
+                        * s.get(key).as_f64().unwrap_or(0.0)
+                })
+                .sum::<f64>()
+                / class_weight
+        } else {
+            0.0
+        };
+        fields.push((key, Json::num(nan0(v))));
+    }
+    fields.push((
+        "router_sessions_recovered",
+        Json::num(stats.sessions_recovered as f64),
+    ));
+    fields.push(("store_bytes", Json::num(stats.store_bytes as f64)));
+    fields.push(("store_sessions", Json::num(stats.store_sessions as f64)));
+    fields.push(("store_reads_total", Json::num(stats.store_reads as f64)));
+    fields.push((
+        "store_evicted_ttl_total",
+        Json::num(stats.store_evicted_ttl as f64),
+    ));
+    fields.push((
+        "store_evicted_cap_total",
+        Json::num(stats.store_evicted_cap as f64),
+    ));
     // Per-worker gauges (satellite: live/parked lanes & bytes, decode
     // rounds, queue depth) with a few headline counters from each
     // worker's own snapshot.

@@ -27,7 +27,7 @@
 
 use std::time::Instant;
 
-use super::worker::SessionExport;
+use super::worker::Exported;
 use crate::util::json::Json;
 
 /// Machine-readable failure class, shared by the engine boundary and the
@@ -186,8 +186,10 @@ pub struct Envelope<Req> {
 pub enum WorkerReq {
     /// Free the session's parked state; cancel a turn in flight.
     CloseSession(u64),
-    /// Export the session for migration (only spilled/fresh sessions
-    /// accept; `Exported { export: None }` means affinity wins).
+    /// Export the session for migration (spilled/fresh sessions export
+    /// their state inline, disk-tier sessions export **by reference** —
+    /// a store key, no snapshot bytes read — and `Exported { export:
+    /// None }` means affinity wins; DESIGN.md D7/D11).
     ExportSession(u64),
     /// Snapshot the worker's metrics.
     Metrics,
@@ -197,7 +199,7 @@ pub enum WorkerReq {
 #[derive(Debug)]
 pub enum WorkerReplyBody {
     Closed(bool),
-    Exported { sid: u64, export: Option<SessionExport> },
+    Exported { sid: u64, export: Option<Exported> },
     Metrics(Json),
 }
 

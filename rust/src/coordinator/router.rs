@@ -37,10 +37,10 @@
 //! — queues stay bounded by admission, not by hope.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::engine::EngineConfig;
 use super::kv_manager::WorkerLoadSnapshot;
@@ -50,7 +50,8 @@ use super::protocol::{
 };
 use super::request::{StreamEvent, TurnRequest};
 use super::scheduler::{pick_worker, should_migrate};
-use super::worker::{spawn_worker, ThreadGuard, WorkerHandle, WorkerMsg};
+use super::worker::{spawn_worker, Exported, ThreadGuard, WorkerHandle, WorkerMsg};
+use crate::store::{DiskStore, SessionStore, SharedStore};
 use crate::util::json::Json;
 
 /// Envelope deadline for worker replies (close / export / metrics).
@@ -173,10 +174,22 @@ struct Router {
     /// retryable busy error until the migration resolves.
     migrating: HashSet<u64>,
     last_sweep: Instant,
+    /// The shared persistent session store (DESIGN.md D11), when
+    /// `--store-dir` is set. Workers demote/promote through it; the
+    /// router reads its gauges once per `/metrics` aggregate and keeps
+    /// mappings alive while a session's snapshot survives on disk.
+    store: Option<SharedStore>,
+    /// Sessions rebuilt from the store's boot scan (restart recovery).
+    sessions_recovered: u64,
 }
 
 impl Router {
-    fn new(workers: Vec<WorkerHandle>, rate: RateCfg, session_ttl: Duration) -> Self {
+    fn new(
+        workers: Vec<WorkerHandle>,
+        rate: RateCfg,
+        session_ttl: Duration,
+        store: Option<SharedStore>,
+    ) -> Self {
         Router {
             workers,
             sessions: HashMap::new(),
@@ -193,7 +206,28 @@ impl Router {
             pending: HashMap::new(),
             migrating: HashSet::new(),
             last_sweep: Instant::now(),
+            store,
+            sessions_recovered: 0,
         }
+    }
+
+    /// Adopt a session recovered from the store's boot scan: it is
+    /// already placed (`owner`) because the worker was handed its
+    /// by-reference import before the router loop started. The id space
+    /// advances past every recovered id so new sessions never collide
+    /// with snapshots on disk.
+    fn adopt_recovered(&mut self, sid: u64, owner: usize) {
+        let now = Instant::now();
+        self.sessions.insert(
+            sid,
+            RouterSession {
+                owner: Some(owner),
+                last_used: now,
+                bucket: TokenBucket::new(&self.rate, now),
+            },
+        );
+        self.next_session = self.next_session.max(sid + 1);
+        self.sessions_recovered += 1;
     }
 
     fn load_snapshots(&self) -> Vec<WorkerLoadSnapshot> {
@@ -315,6 +349,13 @@ impl Router {
     }
 
     fn aggregate(&self, snaps: &[Json]) -> Json {
+        // Store gauges are read once here, not summed from workers: every
+        // worker shares the same store, so per-worker copies would count
+        // each byte N times.
+        let (store_bytes, store_sessions, counters) = match &self.store {
+            Some(s) => (s.bytes(), s.sessions() as u64, s.counters()),
+            None => (0, 0, Default::default()),
+        };
         let stats = RouterStats {
             workers: self.workers.len(),
             uptime_s: self.started.elapsed().as_secs_f64(),
@@ -324,6 +365,12 @@ impl Router {
             router_rebalance_total: self.rebalances,
             rate_limited_turns: self.rate_limited,
             worker_reply_timeouts: self.reply_timeouts,
+            sessions_recovered: self.sessions_recovered,
+            store_bytes,
+            store_sessions,
+            store_reads: counters.reads,
+            store_evicted_ttl: counters.evicted_ttl,
+            store_evicted_cap: counters.evicted_cap,
         };
         aggregate_metrics(&stats, snaps, &self.load_snapshots())
     }
@@ -543,7 +590,12 @@ impl Router {
     /// Drop idle session mappings. Workers TTL-evict the actual state
     /// themselves; the router keeps its entry twice as long so it never
     /// forgets a session a worker still holds (the worker is the source
-    /// of truth — a turn routed to an evicted session fails there).
+    /// of truth — a turn routed to an evicted session fails there). A
+    /// placed session whose snapshot still lives in the persistent store
+    /// is kept regardless of age: the disk tier exists precisely so
+    /// sessions outlive the in-memory TTL, and the store's own TTL/cap
+    /// sweeps bound its growth (the worker reconciles and drops the
+    /// mapping when the snapshot goes).
     fn sweep(&mut self) {
         if self.last_sweep.elapsed() < Duration::from_secs(1) {
             return;
@@ -552,8 +604,12 @@ impl Router {
         let ttl = self.session_ttl * 2;
         let mut swept_unplaced = 0u64;
         let migrating = &self.migrating;
+        let store = self.store.as_deref();
         self.sessions.retain(|sid, s| {
-            let keep = s.last_used.elapsed() < ttl || migrating.contains(sid);
+            let keep = s.last_used.elapsed() < ttl
+                || migrating.contains(sid)
+                || (s.owner.is_some()
+                    && store.is_some_and(|st| st.contains(*sid)));
             if !keep && s.owner.is_none() {
                 swept_unplaced += 1;
             }
@@ -584,15 +640,58 @@ pub(crate) fn spawn_router(
     let n = cfg.workers.max(1);
     let rate = RateCfg { rate: cfg.session_rate, burst: cfg.session_burst };
     let ttl = cfg.session_ttl;
+    // Open the persistent store (DESIGN.md D11) before any worker exists:
+    // the boot scan below must observe the directory as the previous
+    // process left it.
+    let store: Option<SharedStore> = match &cfg.store_dir {
+        Some(dir) => Some(Arc::new(
+            DiskStore::open(
+                std::path::Path::new(dir),
+                &cfg.store_fingerprint(),
+                cfg.store_cap_bytes,
+                cfg.store_ttl,
+            )
+            .with_context(|| format!("opening session store at {dir}"))?,
+        )),
+        None => None,
+    };
     let (tx, rx) = mpsc::channel::<RouterEvent>();
     let mut workers = Vec::with_capacity(n);
     for i in 0..n {
-        workers.push(spawn_worker(cfg.clone(), i, tx.clone())?);
+        workers.push(spawn_worker(cfg.clone(), i, tx.clone(), store.clone())?);
+    }
+    // Restart recovery: rebuild the session table from the store's index.
+    // Each surviving snapshot becomes a disk-tier session on a worker
+    // (round-robin — snapshots are by-reference, so placement is free and
+    // the first resume promotes wherever it lands); the router adopts the
+    // mapping once its loop owns the table. Validation stays lazy: a
+    // corrupt or stale snapshot is refused at promote time, not here —
+    // boot cost is one directory scan regardless of snapshot sizes.
+    let mut recovered: Vec<(u64, usize)> = Vec::new();
+    if let Some(store) = &store {
+        let mut entries = store.entries();
+        entries.sort_by_key(|e| e.sid);
+        for (i, e) in entries.into_iter().enumerate() {
+            let w = i % n;
+            if workers[w]
+                .tx
+                .send(WorkerMsg::ImportSession(
+                    e.sid,
+                    Exported::ByRef { bytes: e.bytes },
+                ))
+                .is_ok()
+            {
+                recovered.push((e.sid, w));
+            }
+        }
     }
     let thread = std::thread::Builder::new()
         .name("engine-router".into())
         .spawn(move || {
-            let mut router = Router::new(workers, rate, ttl);
+            let mut router = Router::new(workers, rate, ttl, store);
+            for (sid, owner) in recovered {
+                router.adopt_recovered(sid, owner);
+            }
             loop {
                 match rx.recv_timeout(Duration::from_millis(100)) {
                     Ok(RouterEvent::Client(RouterMsg::Shutdown)) => {

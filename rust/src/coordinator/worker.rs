@@ -74,6 +74,7 @@ use crate::model::batch::copy_metrics;
 use crate::model::state::SeqState;
 use crate::model::{sampler, Arch, ModelDriver};
 use crate::runtime::{Runtime, SyncExecutor};
+use crate::store::{SessionSnapshot, SharedStore, StoreError};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -156,6 +157,10 @@ enum ParkedState {
     Resident(u64),
     /// Demoted to a host-mirror state under capacity pressure.
     Spilled(Box<SeqState>),
+    /// Demoted to the persistent store (DESIGN.md D11): the state lives
+    /// in a snapshot file keyed by the session id; only its byte cost is
+    /// tracked here. Resume promotes it back through the spilled path.
+    Disk { bytes: u64 },
     /// A live turn currently owns the state (under its seq id).
     InTurn(u64),
 }
@@ -174,11 +179,24 @@ struct Session {
 /// A session packed up for cross-worker migration (DESIGN.md D7): the
 /// host-mirror state (if any) plus the resume bookkeeping. `SeqState` is
 /// plain host tensors, so the export is `Send`.
+#[derive(Debug)]
 pub(crate) struct SessionExport {
     state: Option<Box<SeqState>>,
     last_token: i32,
     tokens_absorbed: u64,
     turns: u64,
+}
+
+/// What an export hands the router. Spilled/fresh sessions ship their
+/// hot bytes inline; a disk-tier session ships **by reference** — its
+/// snapshot stays in the shared store and only the store key (the
+/// session id) plus the byte cost moves, so migration never reads the
+/// snapshot on the source worker (DESIGN.md D11, pinned by the
+/// `store_reads_total` assertion in `rust/tests/store.rs`).
+#[derive(Debug)]
+pub(crate) enum Exported {
+    Inline(SessionExport),
+    ByRef { bytes: u64 },
 }
 
 pub struct Worker {
@@ -200,6 +218,11 @@ pub struct Worker {
     /// Monotone round counter ([`Self::step`] calls).
     round: u64,
     session_ttl: Duration,
+    /// Disk tier below the host spill (DESIGN.md D11): when present,
+    /// TTL-expired sessions demote into it instead of being dropped.
+    /// `None` (owned mode, or no `--store-dir`) keeps the two-tier
+    /// lifecycle exactly.
+    store: Option<SharedStore>,
     /// Which shard of the two-tier engine this is (0 in owned mode).
     worker_id: usize,
     /// Shared load gauges the router reads; `None` in owned mode.
@@ -287,6 +310,7 @@ impl Worker {
             pending_syncs: HashMap::new(),
             round: 0,
             session_ttl: cfg.session_ttl,
+            store: None,
             worker_id,
             load: None,
             metrics: EngineMetrics::for_worker(worker_id),
@@ -328,6 +352,14 @@ impl Worker {
     pub(crate) fn bind_load(&mut self, load: Arc<WorkerLoad>) {
         load.max_lanes.store(self.max_lanes, Ordering::Relaxed);
         self.load = Some(load);
+    }
+
+    /// Attach the shared persistent session store (DESIGN.md D11). The
+    /// router opens one [`crate::store::DiskStore`] and hands every
+    /// worker a clone — snapshots are plain host bytes, so unlike PJRT
+    /// state the store moves freely between threads.
+    pub(crate) fn bind_store(&mut self, store: SharedStore) {
+        self.store = Some(store);
     }
 
     /// Roll the worker's current state up into the shared gauges: the
@@ -383,11 +415,14 @@ impl Worker {
     }
 
     /// Hand a **relocatable** session over for migration: spilled (or
-    /// fresh) sessions move; parked-resident and in-turn sessions refuse —
-    /// their lane is the affinity the router must respect.
-    pub(crate) fn export_session(&mut self, sid: u64) -> Option<SessionExport> {
+    /// fresh) sessions move their hot bytes inline, disk-tier sessions
+    /// move by store reference; parked-resident and in-turn sessions
+    /// refuse — their lane is the affinity the router must respect.
+    pub(crate) fn export_session(&mut self, sid: u64) -> Option<Exported> {
         match self.sessions.get(&sid).map(|s| &s.state) {
-            Some(ParkedState::Spilled(_)) | Some(ParkedState::Fresh) => {}
+            Some(ParkedState::Spilled(_))
+            | Some(ParkedState::Fresh)
+            | Some(ParkedState::Disk { .. }) => {}
             _ => return None,
         }
         // A turn already queued here still references the session; taking
@@ -408,34 +443,53 @@ impl Worker {
         let state = match sess.state {
             ParkedState::Spilled(b) => Some(b),
             ParkedState::Fresh => None,
+            ParkedState::Disk { bytes } => {
+                // By reference (DESIGN.md D11): the snapshot file stays in
+                // the shared store; only the bookkeeping entry moves.
+                self.kv.note_disk_remove(bytes);
+                return Some(Exported::ByRef { bytes });
+            }
             _ => unreachable!("export precondition checked above"),
         };
-        Some(SessionExport {
+        Some(Exported::Inline(SessionExport {
             state,
             last_token: sess.last_token,
             tokens_absorbed: sess.tokens_absorbed,
             turns: sess.turns,
-        })
+        }))
     }
 
     /// Adopt a session exported from another worker; its next turn resumes
-    /// here (re-admitted through the ordinary spilled-resume path).
-    pub(crate) fn import_session(&mut self, sid: u64, exp: SessionExport) {
+    /// here (re-admitted through the ordinary spilled-resume path). A
+    /// by-reference import installs a disk-tier placeholder — the
+    /// authoritative resume bookkeeping lives inside the snapshot and is
+    /// restored when the next turn promotes it.
+    pub(crate) fn import_session(&mut self, sid: u64, exp: Exported) {
         self.next_session = self.next_session.max(sid + 1);
-        let state = match exp.state {
-            Some(b) => ParkedState::Spilled(b),
-            None => ParkedState::Fresh,
-        };
-        self.sessions.insert(
-            sid,
-            Session {
-                state,
+        let sess = match exp {
+            Exported::Inline(exp) => Session {
+                state: match exp.state {
+                    Some(b) => ParkedState::Spilled(b),
+                    None => ParkedState::Fresh,
+                },
                 last_token: exp.last_token,
                 tokens_absorbed: exp.tokens_absorbed,
                 last_used: Instant::now(),
                 turns: exp.turns,
             },
-        );
+            Exported::ByRef { bytes } => {
+                self.kv.note_disk_add(bytes);
+                self.metrics.sessions_imported_byref += 1;
+                Session {
+                    state: ParkedState::Disk { bytes },
+                    last_token: BOS,
+                    tokens_absorbed: 0,
+                    last_used: Instant::now(),
+                    turns: 0,
+                }
+            }
+        };
+        self.sessions.insert(sid, sess);
     }
 
     /// Close a session, freeing its parked state. A turn in flight is
@@ -464,6 +518,14 @@ impl Worker {
                 }
             }
             ParkedState::Resident(seq_id) => self.free_seq(seq_id)?,
+            ParkedState::Disk { bytes } => {
+                // The snapshot dies with the session (removal is
+                // idempotent — the store may have GC'd it already).
+                if let Some(store) = &self.store {
+                    let _ = store.remove(sid);
+                }
+                self.kv.note_disk_remove(bytes);
+            }
             ParkedState::Spilled(_) | ParkedState::Fresh => {}
         }
         self.metrics.sessions_closed += 1;
@@ -471,15 +533,20 @@ impl Worker {
     }
 
     /// Evict idle parked sessions past the TTL (LRU order is implicit:
-    /// every expired session goes). Called once per engine round and on
-    /// the idle tick.
+    /// every expired session goes). With a persistent store attached
+    /// (DESIGN.md D11) expiry **demotes to the disk tier** instead of
+    /// dropping — the session stays resumable; only a failed or empty
+    /// (fresh) demotion falls back to eviction. Called once per engine
+    /// round and on the idle tick.
     pub fn sweep_sessions(&mut self) -> Result<usize> {
         let ttl = self.session_ttl;
         let expired: Vec<u64> = self
             .sessions
             .iter()
             .filter(|(&id, s)| {
-                !matches!(s.state, ParkedState::InTurn(_))
+                // Disk-tier sessions are already cold storage; their
+                // lifetime belongs to the store's own TTL/cap GC.
+                !matches!(s.state, ParkedState::InTurn(_) | ParkedState::Disk { .. })
                     && s.last_used.elapsed() >= ttl
                     // A session whose first turn is mid-chunked-prefill is
                     // active, whatever its Fresh state says.
@@ -489,6 +556,16 @@ impl Worker {
             .collect();
         let n = expired.len();
         for sid in expired {
+            if self.store.is_some() {
+                match self.demote_session(sid) {
+                    Ok(true) => continue,
+                    Ok(false) => {} // nothing durable to keep (fresh)
+                    Err(e) => eprintln!(
+                        "[worker {}] session {sid} demote failed, evicting: {e:#}",
+                        self.worker_id
+                    ),
+                }
+            }
             if let Some(sess) = self.sessions.remove(&sid) {
                 if let ParkedState::Resident(seq_id) = sess.state {
                     self.free_seq(seq_id)?;
@@ -496,18 +573,130 @@ impl Worker {
                 self.metrics.sessions_evicted += 1;
             }
         }
+        // Run the store's own GC and reconcile: a snapshot the store
+        // TTL/cap-evicted under us leaves a dangling disk-tier entry —
+        // drop it so later turns fail fast with unknown_session.
+        if let Some(store) = self.store.clone() {
+            store.sweep();
+            let gone: Vec<(u64, u64)> = self
+                .sessions
+                .iter()
+                .filter_map(|(&id, s)| match s.state {
+                    ParkedState::Disk { bytes } if !store.contains(id) => {
+                        Some((id, bytes))
+                    }
+                    _ => None,
+                })
+                .collect();
+            for (sid, bytes) in gone {
+                self.sessions.remove(&sid);
+                self.kv.note_disk_remove(bytes);
+                self.metrics.sessions_evicted += 1;
+            }
+        }
         Ok(n)
+    }
+
+    /// Demote one TTL-expired session into the persistent store
+    /// (DESIGN.md D11): a resident state spills to its host mirror
+    /// first, then the mirror plus the resume bookkeeping is written as
+    /// one atomic snapshot file and the hot copy is dropped. Returns
+    /// whether the session went durable (`Fresh` has nothing to
+    /// persist). On a store refusal the hot copy is already consumed —
+    /// the caller evicts the leftover entry, exactly the no-store
+    /// behavior.
+    fn demote_session(&mut self, sid: u64) -> Result<bool> {
+        let store = self.store.clone().context("demote without a store")?;
+        if matches!(
+            self.sessions.get(&sid).map(|s| &s.state),
+            Some(ParkedState::Resident(_))
+        ) {
+            self.spill_session(sid)?;
+        }
+        let snap = {
+            let sess = self.sessions.get_mut(&sid).context("session vanished")?;
+            let state = match std::mem::replace(&mut sess.state, ParkedState::Fresh) {
+                ParkedState::Spilled(b) => *b,
+                other => {
+                    sess.state = other;
+                    return Ok(false);
+                }
+            };
+            SessionSnapshot {
+                sid,
+                last_token: sess.last_token,
+                tokens_absorbed: sess.tokens_absorbed,
+                turns: sess.turns,
+                state,
+            }
+        };
+        let bytes = store.put(&snap).map_err(anyhow::Error::from)?;
+        let sess = self.sessions.get_mut(&sid).context("session vanished")?;
+        sess.state = ParkedState::Disk { bytes };
+        self.kv.note_disk_add(bytes);
+        self.metrics.sessions_demoted_disk += 1;
+        Ok(true)
+    }
+
+    /// Promote a disk-tier session back to a host-spilled state: read and
+    /// validate its snapshot, restore the resume bookkeeping (including
+    /// the turn count feeding the sampling salt — what keeps a
+    /// resumed-after-restart stream bit-identical), and delete the file.
+    /// The caller then runs the ordinary spilled resume, so the D6
+    /// bit-identity proof carries over. A refused snapshot is metered by
+    /// failure class, removed, and the session dropped — typed error,
+    /// never a silent garbage resume. No-op for non-disk states.
+    fn promote_disk(&mut self, sid: u64) -> Result<()> {
+        let bytes = match self.sessions.get(&sid).map(|s| &s.state) {
+            Some(&ParkedState::Disk { bytes }) => bytes,
+            _ => return Ok(()),
+        };
+        let store = self
+            .store
+            .clone()
+            .context("disk-tier session without a store")?;
+        match store.get(sid) {
+            Ok(snap) => {
+                let _ = store.remove(sid);
+                self.kv.note_disk_remove(bytes);
+                let sess = self.sessions.get_mut(&sid).context("session vanished")?;
+                sess.state = ParkedState::Spilled(Box::new(snap.state));
+                sess.last_token = snap.last_token;
+                sess.tokens_absorbed = snap.tokens_absorbed;
+                sess.turns = snap.turns;
+                self.metrics.sessions_promoted_disk += 1;
+                Ok(())
+            }
+            Err(e) => {
+                match &e {
+                    // The store GC'd it between our sweeps: an eviction,
+                    // not a refusal.
+                    StoreError::NotFound { .. } => self.metrics.sessions_evicted += 1,
+                    e if e.is_stale() => self.metrics.store_refused_stale += 1,
+                    _ => self.metrics.store_refused_corrupt += 1,
+                }
+                let _ = store.remove(sid);
+                self.kv.note_disk_remove(bytes);
+                self.sessions.remove(&sid);
+                Err(anyhow::Error::from(e))
+            }
+        }
     }
 
     /// How long the spawned-mode loop may block waiting for a message
     /// while idle: up to the nearest parked session's TTL deadline
     /// (so sweeps stay timely) and never more than [`IDLE_WAIT_CAP`].
-    /// Message arrival interrupts the wait regardless — this deadline is
-    /// *not* a service-latency poll.
+    /// Disk-tier sessions are excluded — they have no worker-side TTL
+    /// deadline (the cap alone bounds store-GC latency), so a worker
+    /// holding only disk sessions does not busy-wake. Message arrival
+    /// interrupts the wait regardless — this deadline is *not* a
+    /// service-latency poll.
     pub(crate) fn idle_wait(&self) -> Duration {
         self.sessions
             .values()
-            .filter(|s| !matches!(s.state, ParkedState::InTurn(_)))
+            .filter(|s| {
+                !matches!(s.state, ParkedState::InTurn(_) | ParkedState::Disk { .. })
+            })
             .map(|s| self.session_ttl.saturating_sub(s.last_used.elapsed()))
             .min()
             .map(|d| d.clamp(Duration::from_millis(1), IDLE_WAIT_CAP))
@@ -623,7 +812,9 @@ impl Worker {
                             &mut self.completed,
                         ),
                         ParkedState::Fresh => self.waiting_cold.push_back(pending),
-                        ParkedState::Resident(_) | ParkedState::Spilled(_) => {
+                        ParkedState::Resident(_)
+                        | ParkedState::Spilled(_)
+                        | ParkedState::Disk { .. } => {
                             self.waiting_resume.push_back(pending)
                         }
                     }
@@ -755,7 +946,7 @@ impl Worker {
     fn must_defer_resume(&self, pending: &Pending) -> bool {
         let Some(sid) = pending.req.session_id else { return false };
         match self.sessions.get(&sid).map(|s| &s.state) {
-            Some(ParkedState::Spilled(_)) => {
+            Some(ParkedState::Spilled(_)) | Some(ParkedState::Disk { .. }) => {
                 !self.kv.has_capacity() && self.lru_parked_resident().is_none()
             }
             _ => false,
@@ -794,9 +985,9 @@ impl Worker {
                     return Ok(0);
                 }
                 Some(ParkedState::Fresh) => {}
-                Some(ParkedState::Resident(_)) | Some(ParkedState::Spilled(_)) => {
-                    resume_sid = Some(sid)
-                }
+                Some(ParkedState::Resident(_))
+                | Some(ParkedState::Spilled(_))
+                | Some(ParkedState::Disk { .. }) => resume_sid = Some(sid),
             }
         }
 
@@ -1163,6 +1354,9 @@ impl Worker {
     /// ≤ W_og window replay for TConst/TLin) are absorbed — never the
     /// conversation history. Returns (seq_id, logits, fed, saved).
     fn resume_turn(&mut self, sid: u64, req: &TurnRequest) -> Result<(u64, Vec<f32>, usize, u64)> {
+        // A disk-tier session first promotes back to a host-spilled state
+        // (DESIGN.md D11); everything below is then the ordinary resume.
+        self.promote_disk(sid)?;
         let (last_token, absorbed) = {
             let sess = self.sessions.get(&sid).context("session vanished")?;
             (sess.last_token, sess.tokens_absorbed)
@@ -1265,6 +1459,11 @@ impl Worker {
             }
             ParkedState::Fresh | ParkedState::InTurn(_) => {
                 bail!("session has no parked state to resume")
+            }
+            // `resume_turn` promotes disk-tier sessions before taking the
+            // state, so this arm is unreachable in practice.
+            ParkedState::Disk { .. } => {
+                bail!("disk-tier session must promote before resume")
             }
         }
     }
@@ -1559,6 +1758,7 @@ impl Worker {
             slo: live.req.slo,
         };
         self.metrics.ttft_ms.add(ttft_ms);
+        self.metrics.observe_slo_ttft(live.req.slo, ttft_ms);
         self.metrics.total_ms.add(total_ms);
         self.metrics.tokens_generated += generated.len() as u64;
         match reason {
@@ -1617,7 +1817,8 @@ impl Worker {
                 ParkedState::InTurn(_) => in_turn += 1,
                 ParkedState::Resident(_) => parked_res += 1,
                 ParkedState::Spilled(_) => parked_spill += 1,
-                ParkedState::Fresh => {}
+                // Counted through the kv disk-tier gauges below.
+                ParkedState::Disk { .. } | ParkedState::Fresh => {}
             }
         }
         self.metrics.sessions_in_turn = in_turn;
@@ -1625,6 +1826,8 @@ impl Worker {
         self.metrics.sessions_parked_spilled = parked_spill;
         self.metrics.kv_bytes_parked = self.kv.parked_bytes();
         self.metrics.kv_bytes_live = self.kv.live_bytes();
+        self.metrics.disk_tier_bytes = self.kv.disk_bytes();
+        self.metrics.disk_tier_sessions = self.kv.disk_sessions() as u64;
         self.metrics.snapshot()
     }
 }
@@ -1688,7 +1891,7 @@ fn window_fill(st: &SeqState) -> usize {
 pub(crate) enum WorkerMsg {
     Submit(TurnRequest, mpsc::Sender<StreamEvent>),
     OpenSessionAs(u64),
-    ImportSession(u64, SessionExport),
+    ImportSession(u64, Exported),
     Request(Envelope<WorkerReq>),
     Shutdown,
 }
@@ -1725,6 +1928,7 @@ pub(crate) fn spawn_worker(
     cfg: EngineConfig,
     worker_id: usize,
     reply: mpsc::Sender<RouterEvent>,
+    store: Option<SharedStore>,
 ) -> Result<WorkerHandle> {
     let (tx, rx) = mpsc::channel::<WorkerMsg>();
     let load = Arc::new(WorkerLoad::default());
@@ -1736,6 +1940,9 @@ pub(crate) fn spawn_worker(
             let mut worker = match Worker::for_worker(&cfg, worker_id) {
                 Ok(mut w) => {
                     w.bind_load(load_thread);
+                    if let Some(store) = store {
+                        w.bind_store(store);
+                    }
                     let _ = ready_tx.send(Ok(()));
                     w
                 }

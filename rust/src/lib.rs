@@ -33,6 +33,7 @@ pub mod data;
 pub mod model;
 pub mod runtime;
 pub mod server;
+pub mod store;
 pub mod trainer;
 pub mod util;
 

@@ -92,6 +92,12 @@ fn engine_cfg_from(args: &tconstformer::util::cli::Args) -> Result<EngineConfig>
         workers: args.get_usize("workers", 1)?.max(1),
         session_rate: args.get_f64("session-rate", 0.0)?,
         session_burst: args.get_f64("session-burst", 4.0)?,
+        store_dir: args.get("store-dir").map(str::to_string),
+        store_cap_bytes: args.get_usize("store-cap-bytes", 0)? as u64,
+        store_ttl: match args.get_usize("store-ttl", 0)? {
+            0 => None,
+            s => Some(std::time::Duration::from_secs(s as u64)),
+        },
     })
 }
 
@@ -111,6 +117,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt_default("session-ttl", "idle parked-session eviction TTL (seconds)", "600")
         .opt_default("max-conns", "max concurrent HTTP connections", "64")
         .opt("checkpoint", "trained checkpoint stem to load")
+        .opt("store-dir", "persistent session store directory: TTL-expired sessions demote to disk snapshots there and survive restarts (off when unset)")
+        .opt_default("store-cap-bytes", "disk-tier capacity cap in bytes, LRU-evicted (0 = unlimited)", "0")
+        .opt_default("store-ttl", "disk-tier snapshot TTL in seconds (0 = none)", "0")
         .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)")
         .flag("host-arena", "stage resident arena slabs on the host (disable device residency)")
         .flag("sync-blocking", "fold TConst windows in-line instead of on the background sync stream (D9 control arm)");
@@ -125,6 +134,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         cfg.max_lanes,
         cfg.session_ttl,
     );
+    if let Some(dir) = &cfg.store_dir {
+        println!(
+            "[serve] session store: {dir} (cap {} B, ttl {:?})",
+            cfg.store_cap_bytes, cfg.store_ttl
+        );
+    }
     let default_slo = {
         let s = args.get_or("slo-class", "standard");
         SloClass::parse(s).ok_or_else(|| anyhow::anyhow!("bad --slo-class {s:?}"))?

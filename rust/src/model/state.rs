@@ -14,7 +14,7 @@
 use crate::runtime::{HostTensor, ModelConfig};
 
 /// Dispatchable per-sequence state.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum SeqState {
     Base(BaseState),
     TLin(TLinState),
@@ -52,7 +52,7 @@ impl SeqState {
 // Baseline
 // ---------------------------------------------------------------------------
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BaseState {
     /// (n_layer, 1, L_bucket, D) projected K/V; None until prefill.
     pub cache_k: Option<HostTensor>,
@@ -88,7 +88,7 @@ impl BaseState {
 /// arena double-buffer the fold (DESIGN.md D9) — window *n* is folded on
 /// the background stream while decode proceeds against window *n+1*'s
 /// prefix, and the commit touches nothing the in-flight rounds read.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TConstState {
     pub ctx_k: HostTensor,   // (nb, H+1, 1, W_oh, D)
     pub ctx_v: HostTensor,   // (nb, H+1, 1, W_oh, D)
@@ -151,7 +151,7 @@ impl TConstState {
 // TLinFormer
 // ---------------------------------------------------------------------------
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TLinState {
     /// Constant context + window state (identical layout to TConst).
     pub inner: TConstState,
@@ -179,6 +179,279 @@ impl TLinState {
         self.inner.bytes()
             + self.hist_k.as_ref().map(|t| t.nbytes() as u64).unwrap_or(0)
             + self.hist_v.as_ref().map(|t| t.nbytes() as u64).unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot codec (DESIGN.md D11)
+// ---------------------------------------------------------------------------
+
+/// Decode failure for a [`SeqState`] snapshot payload. Typed so the
+/// session store can refuse a damaged file with a structured
+/// [`crate::store::StoreError`] instead of a panic or a silent drop:
+/// [`CodecError::Truncated`] maps to a short read (a crashed writer),
+/// [`CodecError::Invalid`] to structural corruption.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The buffer ended before the encoding did.
+    Truncated,
+    /// Structurally invalid: bad variant tag, dtype tag, or an element
+    /// count that disagrees with its shape.
+    Invalid(String),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated => write!(f, "truncated state encoding"),
+            CodecError::Invalid(d) => write!(f, "invalid state encoding: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &HostTensor) {
+    let shape = t.shape();
+    out.push(match t {
+        HostTensor::F32 { .. } => 0,
+        HostTensor::I32 { .. } => 1,
+    });
+    out.push(shape.len() as u8);
+    for &d in shape {
+        put_u32(out, d as u32);
+    }
+    match t {
+        HostTensor::F32 { data, .. } => {
+            out.reserve(data.len() * 4);
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        HostTensor::I32 { data, .. } => {
+            out.reserve(data.len() * 4);
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn put_opt_tensor(out: &mut Vec<u8>, t: &Option<HostTensor>) {
+    match t {
+        None => out.push(0),
+        Some(t) => {
+            out.push(1);
+            put_tensor(out, t);
+        }
+    }
+}
+
+fn put_vec_i32(out: &mut Vec<u8>, v: &[i32]) {
+    put_u32(out, v.len() as u32);
+    out.reserve(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn encode_tconst(out: &mut Vec<u8>, s: &TConstState) {
+    put_tensor(out, &s.ctx_k);
+    put_tensor(out, &s.ctx_v);
+    put_tensor(out, &s.ctx_sum);
+    out.extend_from_slice(&s.ctx_gate.to_le_bytes());
+    put_tensor(out, &s.gen_k);
+    put_tensor(out, &s.gen_v);
+    put_u64(out, s.slot as u64);
+    put_vec_i32(out, &s.window_tokens);
+    put_vec_i32(out, &s.history);
+    put_u64(out, s.tokens_seen as u64);
+    put_u64(out, s.syncs);
+}
+
+/// Bounds-checked little-endian reader over a snapshot payload.
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        let end = self.off.checked_add(n).ok_or(CodecError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(CodecError::Truncated);
+        }
+        let s = &self.buf[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn usize64(&mut self) -> Result<usize, CodecError> {
+        usize::try_from(self.u64()?)
+            .map_err(|_| CodecError::Invalid("usize field overflows".into()))
+    }
+
+    fn tensor(&mut self) -> Result<HostTensor, CodecError> {
+        let dtype = self.u8()?;
+        let ndim = self.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        let mut numel: usize = 1;
+        for _ in 0..ndim {
+            let d = self.u32()? as usize;
+            numel = numel
+                .checked_mul(d)
+                .ok_or_else(|| CodecError::Invalid("tensor shape overflows".into()))?;
+            shape.push(d);
+        }
+        // Reserve the raw bytes first: a corrupt length fails the bounds
+        // check here instead of driving a huge allocation below.
+        let nbytes = numel
+            .checked_mul(4)
+            .ok_or_else(|| CodecError::Invalid("tensor size overflows".into()))?;
+        let raw = self.take(nbytes)?;
+        match dtype {
+            0 => Ok(HostTensor::F32 {
+                shape,
+                data: raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            }),
+            1 => Ok(HostTensor::I32 {
+                shape,
+                data: raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            }),
+            t => Err(CodecError::Invalid(format!("bad dtype tag {t}"))),
+        }
+    }
+
+    fn opt_tensor(&mut self) -> Result<Option<HostTensor>, CodecError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.tensor()?)),
+            t => Err(CodecError::Invalid(format!("bad option tag {t}"))),
+        }
+    }
+
+    fn vec_i32(&mut self) -> Result<Vec<i32>, CodecError> {
+        let n = self.u32()? as usize;
+        let nbytes = n
+            .checked_mul(4)
+            .ok_or_else(|| CodecError::Invalid("vec length overflows".into()))?;
+        let raw = self.take(nbytes)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn tconst(&mut self) -> Result<TConstState, CodecError> {
+        Ok(TConstState {
+            ctx_k: self.tensor()?,
+            ctx_v: self.tensor()?,
+            ctx_sum: self.tensor()?,
+            ctx_gate: self.f32()?,
+            gen_k: self.tensor()?,
+            gen_v: self.tensor()?,
+            slot: self.usize64()?,
+            window_tokens: self.vec_i32()?,
+            history: self.vec_i32()?,
+            tokens_seen: self.usize64()?,
+            syncs: self.u64()?,
+        })
+    }
+}
+
+impl SeqState {
+    /// Append this state's snapshot encoding to `out`: a variant tag, then
+    /// every field little-endian (tensors as dtype tag + shape + raw
+    /// element bytes). Float payloads round-trip **bit-exactly** — the
+    /// disk-promoted resume's bit-identity guarantee starts here.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            SeqState::Base(s) => {
+                out.push(0);
+                put_opt_tensor(out, &s.cache_k);
+                put_opt_tensor(out, &s.cache_v);
+                put_u64(out, s.bucket as u64);
+                put_u64(out, s.pos as u64);
+            }
+            SeqState::TLin(s) => {
+                out.push(1);
+                encode_tconst(out, &s.inner);
+                put_opt_tensor(out, &s.hist_k);
+                put_opt_tensor(out, &s.hist_v);
+                put_u64(out, s.hist_bucket as u64);
+                put_u64(out, s.hist_len as u64);
+                put_u64(out, s.tokens_seen as u64);
+            }
+            SeqState::TConst(s) => {
+                out.push(2);
+                encode_tconst(out, s);
+            }
+        }
+    }
+
+    /// Inverse of [`SeqState::encode`]. Strict: trailing bytes after a
+    /// well-formed encoding are themselves a [`CodecError::Invalid`] (a
+    /// snapshot payload is exactly one state).
+    pub fn decode(buf: &[u8]) -> Result<SeqState, CodecError> {
+        let mut r = Reader { buf, off: 0 };
+        let st = match r.u8()? {
+            0 => SeqState::Base(BaseState {
+                cache_k: r.opt_tensor()?,
+                cache_v: r.opt_tensor()?,
+                bucket: r.usize64()?,
+                pos: r.usize64()?,
+            }),
+            1 => {
+                let inner = r.tconst()?;
+                SeqState::TLin(TLinState {
+                    inner,
+                    hist_k: r.opt_tensor()?,
+                    hist_v: r.opt_tensor()?,
+                    hist_bucket: r.usize64()?,
+                    hist_len: r.usize64()?,
+                    tokens_seen: r.usize64()?,
+                })
+            }
+            2 => SeqState::TConst(r.tconst()?),
+            t => return Err(CodecError::Invalid(format!("bad state tag {t}"))),
+        };
+        if r.off != buf.len() {
+            return Err(CodecError::Invalid(format!(
+                "{} trailing bytes after state",
+                buf.len() - r.off
+            )));
+        }
+        Ok(st)
     }
 }
 
@@ -234,6 +507,67 @@ mod tests {
         s.cache_v = Some(HostTensor::zeros_f32(&[c.n_layer, 1, bucket, c.d_model]));
         s.bucket = bucket;
         assert_eq!(s.bytes(), memory::base_bytes(&c, 1, bucket as u64));
+    }
+
+    fn populated_tconst(c: &ModelConfig) -> TConstState {
+        let mut s = TConstState::new(c);
+        s.ctx_gate = 0.75;
+        s.slot = 3;
+        s.window_tokens = vec![5, 6, 7];
+        s.history = vec![1, 2, 3, 4, 5, 6, 7];
+        s.tokens_seen = 7;
+        s.syncs = 2;
+        if let Ok(d) = s.ctx_k.as_f32_mut() {
+            for (i, v) in d.iter_mut().enumerate() {
+                *v = (i as f32).sin();
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn codec_round_trips_every_variant_bit_exactly() {
+        let c = cfg();
+        let mut base = BaseState::new(&c);
+        base.cache_k = Some(HostTensor::zeros_f32(&[c.n_layer, 1, 64, c.d_model]));
+        base.cache_v = Some(HostTensor::zeros_f32(&[c.n_layer, 1, 64, c.d_model]));
+        base.bucket = 64;
+        base.pos = 9;
+        let mut tlin = TLinState::new(&c);
+        tlin.inner = populated_tconst(&c);
+        tlin.hist_k = Some(HostTensor::zeros_f32(&[c.n_block, 1, 128, c.d_model]));
+        tlin.hist_v = Some(HostTensor::zeros_f32(&[c.n_block, 1, 128, c.d_model]));
+        tlin.hist_bucket = 128;
+        tlin.hist_len = 40;
+        tlin.tokens_seen = 72;
+        for st in [
+            SeqState::Base(base),
+            SeqState::TLin(tlin),
+            SeqState::TConst(populated_tconst(&c)),
+        ] {
+            let mut buf = Vec::new();
+            st.encode(&mut buf);
+            assert_eq!(SeqState::decode(&buf).unwrap(), st);
+        }
+    }
+
+    #[test]
+    fn codec_refuses_truncation_and_garbage_with_typed_errors() {
+        let c = cfg();
+        let st = SeqState::TConst(populated_tconst(&c));
+        let mut buf = Vec::new();
+        st.encode(&mut buf);
+        // Any strict prefix is a Truncated error, never a panic.
+        for cut in [0, 1, buf.len() / 2, buf.len() - 1] {
+            assert_eq!(SeqState::decode(&buf[..cut]), Err(CodecError::Truncated));
+        }
+        // A bad variant tag and trailing bytes are Invalid.
+        let mut bad = buf.clone();
+        bad[0] = 9;
+        assert!(matches!(SeqState::decode(&bad), Err(CodecError::Invalid(_))));
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(matches!(SeqState::decode(&long), Err(CodecError::Invalid(_))));
     }
 
     #[test]

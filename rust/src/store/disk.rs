@@ -1,0 +1,386 @@
+//! [`DiskStore`]: the filesystem backend of the disk tier (DESIGN.md
+//! D11).
+//!
+//! One snapshot per session at `<dir>/sess-<sid hex>.snap`, written
+//! atomically (unique tmp file + `rename`) so a crash mid-write leaves
+//! the previous snapshot intact, never a torn one. An in-memory index
+//! (built by scanning the directory at open) makes `contains`/`entries`
+//! and the GC sweep free of per-call directory scans; file ages seed the
+//! index from mtimes so TTL survives a restart.
+//!
+//! Capacity (`--store-cap-bytes`) is enforced at `put` by evicting the
+//! least-recently-touched snapshots; TTL (`--store-ttl`) is enforced by
+//! [`DiskStore::sweep`], rate-limited to once per second.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant, SystemTime};
+
+use super::{
+    decode_snapshot, encode_snapshot, SessionSnapshot, SessionStore, StoreCounters, StoreEntry,
+    StoreError,
+};
+
+const SNAP_PREFIX: &str = "sess-";
+const SNAP_SUFFIX: &str = ".snap";
+/// Minimum interval between effective [`DiskStore::sweep`] runs.
+const SWEEP_INTERVAL: Duration = Duration::from_secs(1);
+
+#[derive(Debug, Clone, Copy)]
+struct IndexEntry {
+    bytes: u64,
+    last_touch: Instant,
+}
+
+#[derive(Debug)]
+struct Index {
+    by_sid: HashMap<u64, IndexEntry>,
+    total_bytes: u64,
+    last_sweep: Option<Instant>,
+}
+
+/// Disk-backed [`SessionStore`]. Shared as one instance per engine
+/// (`Arc`), so byte accounting and eviction order are process-consistent
+/// across workers.
+#[derive(Debug)]
+pub struct DiskStore {
+    dir: PathBuf,
+    fingerprint: String,
+    /// 0 = unlimited.
+    cap_bytes: u64,
+    ttl: Option<Duration>,
+    index: Mutex<Index>,
+    tmp_seq: AtomicU64,
+    reads: AtomicU64,
+    evicted_ttl: AtomicU64,
+    evicted_cap: AtomicU64,
+}
+
+fn io_err(key: u64, source: std::io::Error) -> StoreError {
+    StoreError::Io { key, source }
+}
+
+fn parse_snap_name(name: &str) -> Option<u64> {
+    let hex = name.strip_prefix(SNAP_PREFIX)?.strip_suffix(SNAP_SUFFIX)?;
+    u64::from_str_radix(hex, 16).ok()
+}
+
+impl DiskStore {
+    /// Open (creating if needed) a store directory. Rebuilds the index
+    /// from the files present — this is the restart-recovery scan — and
+    /// clears any leftover tmp files from a crashed writer.
+    pub fn open(
+        dir: &Path,
+        fingerprint: &str,
+        cap_bytes: u64,
+        ttl: Option<Duration>,
+    ) -> Result<Self, StoreError> {
+        std::fs::create_dir_all(dir).map_err(|e| io_err(0, e))?;
+        let mut by_sid = HashMap::new();
+        let mut total_bytes = 0u64;
+        let now = Instant::now();
+        for entry in std::fs::read_dir(dir).map_err(|e| io_err(0, e))? {
+            let entry = entry.map_err(|e| io_err(0, e))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(sid) = parse_snap_name(&name) else {
+                if name.ends_with(".tmp") {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+                continue;
+            };
+            let meta = entry.metadata().map_err(|e| io_err(sid, e))?;
+            // Seed last_touch from the file's age so the TTL clock
+            // survives a restart; unknowable ages count as fresh.
+            let age = meta
+                .modified()
+                .ok()
+                .and_then(|m| SystemTime::now().duration_since(m).ok())
+                .unwrap_or(Duration::ZERO);
+            let last_touch = now.checked_sub(age).unwrap_or(now);
+            total_bytes += meta.len();
+            by_sid.insert(sid, IndexEntry { bytes: meta.len(), last_touch });
+        }
+        Ok(DiskStore {
+            dir: dir.to_path_buf(),
+            fingerprint: fingerprint.to_string(),
+            cap_bytes,
+            ttl,
+            index: Mutex::new(Index { by_sid, total_bytes, last_sweep: None }),
+            tmp_seq: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+            evicted_ttl: AtomicU64::new(0),
+            evicted_cap: AtomicU64::new(0),
+        })
+    }
+
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    fn path_for(&self, sid: u64) -> PathBuf {
+        self.dir.join(format!("{SNAP_PREFIX}{sid:016x}{SNAP_SUFFIX}"))
+    }
+
+    /// Remove a snapshot file + index entry. Caller holds the index lock.
+    fn evict_locked(&self, idx: &mut Index, sid: u64) -> u64 {
+        let Some(e) = idx.by_sid.remove(&sid) else { return 0 };
+        idx.total_bytes = idx.total_bytes.saturating_sub(e.bytes);
+        let _ = std::fs::remove_file(self.path_for(sid));
+        e.bytes
+    }
+}
+
+impl SessionStore for DiskStore {
+    fn put(&self, snap: &SessionSnapshot) -> Result<u64, StoreError> {
+        let sid = snap.sid;
+        let bytes = encode_snapshot(snap, &self.fingerprint);
+        let new_len = bytes.len() as u64;
+        let mut idx = self.index.lock().unwrap();
+        if self.cap_bytes > 0 {
+            if new_len > self.cap_bytes {
+                return Err(StoreError::CapacityExceeded {
+                    key: sid,
+                    needed: new_len,
+                    cap: self.cap_bytes,
+                });
+            }
+            // LRU-evict other snapshots until this one fits (replacing
+            // our own prior snapshot releases its bytes implicitly).
+            let own = idx.by_sid.get(&sid).map(|e| e.bytes).unwrap_or(0);
+            while idx.total_bytes - own + new_len > self.cap_bytes {
+                let victim = idx
+                    .by_sid
+                    .iter()
+                    .filter(|(&s, _)| s != sid)
+                    .min_by_key(|(_, e)| e.last_touch)
+                    .map(|(&s, _)| s);
+                match victim {
+                    Some(v) => {
+                        self.evict_locked(&mut idx, v);
+                        self.evicted_cap.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => unreachable!("new_len <= cap_bytes with no other snapshots"),
+                }
+            }
+        }
+        let tmp = self.dir.join(format!(
+            "put-{sid:016x}.{}.tmp",
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, &bytes).map_err(|e| io_err(sid, e))?;
+        if let Err(e) = std::fs::rename(&tmp, self.path_for(sid)) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(io_err(sid, e));
+        }
+        let prev = idx
+            .by_sid
+            .insert(sid, IndexEntry { bytes: new_len, last_touch: Instant::now() });
+        idx.total_bytes =
+            idx.total_bytes - prev.map(|p| p.bytes).unwrap_or(0) + new_len;
+        Ok(new_len)
+    }
+
+    fn get(&self, sid: u64) -> Result<SessionSnapshot, StoreError> {
+        {
+            let mut idx = self.index.lock().unwrap();
+            match idx.by_sid.get_mut(&sid) {
+                None => return Err(StoreError::NotFound { key: sid }),
+                Some(e) => e.last_touch = Instant::now(),
+            }
+        }
+        let bytes = std::fs::read(self.path_for(sid)).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                StoreError::NotFound { key: sid }
+            } else {
+                io_err(sid, e)
+            }
+        })?;
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        decode_snapshot(sid, &bytes, &self.fingerprint)
+    }
+
+    fn remove(&self, sid: u64) -> Result<u64, StoreError> {
+        let mut idx = self.index.lock().unwrap();
+        Ok(self.evict_locked(&mut idx, sid))
+    }
+
+    fn contains(&self, sid: u64) -> bool {
+        self.index.lock().unwrap().by_sid.contains_key(&sid)
+    }
+
+    fn entries(&self) -> Vec<StoreEntry> {
+        let idx = self.index.lock().unwrap();
+        let mut v: Vec<StoreEntry> = idx
+            .by_sid
+            .iter()
+            .map(|(&sid, e)| StoreEntry { sid, bytes: e.bytes })
+            .collect();
+        v.sort_by_key(|e| e.sid);
+        v
+    }
+
+    fn sweep(&self) {
+        let Some(ttl) = self.ttl else { return };
+        let mut idx = self.index.lock().unwrap();
+        let now = Instant::now();
+        if idx
+            .last_sweep
+            .is_some_and(|t| now.duration_since(t) < SWEEP_INTERVAL)
+        {
+            return;
+        }
+        idx.last_sweep = Some(now);
+        let expired: Vec<u64> = idx
+            .by_sid
+            .iter()
+            .filter(|(_, e)| now.duration_since(e.last_touch) > ttl)
+            .map(|(&sid, _)| sid)
+            .collect();
+        for sid in expired {
+            self.evict_locked(&mut idx, sid);
+            self.evicted_ttl.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn bytes(&self) -> u64 {
+        self.index.lock().unwrap().total_bytes
+    }
+
+    fn sessions(&self) -> usize {
+        self.index.lock().unwrap().by_sid.len()
+    }
+
+    fn counters(&self) -> StoreCounters {
+        StoreCounters {
+            reads: self.reads.load(Ordering::Relaxed),
+            evicted_ttl: self.evicted_ttl.load(Ordering::Relaxed),
+            evicted_cap: self.evicted_cap.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::state::{BaseState, SeqState};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "tconst-diskstore-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn snap(sid: u64, pos: usize) -> SessionSnapshot {
+        SessionSnapshot {
+            sid,
+            last_token: sid as i32,
+            tokens_absorbed: pos as u64,
+            turns: 1,
+            state: SeqState::Base(BaseState {
+                cache_k: None,
+                cache_v: None,
+                bucket: 0,
+                pos,
+            }),
+        }
+    }
+
+    #[test]
+    fn put_get_remove_and_accounting() {
+        let dir = tmpdir("basic");
+        let store = DiskStore::open(&dir, "fp", 0, None).unwrap();
+        let n = store.put(&snap(1, 5)).unwrap();
+        assert_eq!(store.bytes(), n);
+        assert_eq!(store.sessions(), 1);
+        assert!(store.contains(1));
+        assert_eq!(store.get(1).unwrap(), snap(1, 5));
+        assert_eq!(store.counters().reads, 1);
+        // Overwrite replaces, does not double-count.
+        store.put(&snap(1, 6)).unwrap();
+        assert_eq!(store.sessions(), 1);
+        assert_eq!(store.get(1).unwrap().state.tokens_seen(), 6);
+        assert_eq!(store.remove(1).unwrap(), store.put(&snap(1, 6)).unwrap());
+        store.remove(1).unwrap();
+        assert_eq!((store.bytes(), store.sessions()), (0, 0));
+        assert!(matches!(store.get(1), Err(StoreError::NotFound { .. })));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_rebuilds_index_from_files() {
+        let dir = tmpdir("reopen");
+        let store = DiskStore::open(&dir, "fp", 0, None).unwrap();
+        store.put(&snap(3, 7)).unwrap();
+        store.put(&snap(9, 8)).unwrap();
+        let bytes = store.bytes();
+        drop(store);
+        let store = DiskStore::open(&dir, "fp", 0, None).unwrap();
+        assert_eq!(store.sessions(), 2);
+        assert_eq!(store.bytes(), bytes);
+        assert_eq!(
+            store.entries().iter().map(|e| e.sid).collect::<Vec<_>>(),
+            vec![3, 9]
+        );
+        assert_eq!(store.get(3).unwrap(), snap(3, 7));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cap_evicts_lru_and_oversize_is_refused() {
+        let dir = tmpdir("cap");
+        let one = {
+            let probe = DiskStore::open(&dir, "fp", 0, None).unwrap();
+            let n = probe.put(&snap(1, 1)).unwrap();
+            probe.remove(1).unwrap();
+            n
+        };
+        let store = DiskStore::open(&dir, "fp", 2 * one, None).unwrap();
+        store.put(&snap(1, 1)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        store.put(&snap(2, 2)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        store.get(1).unwrap(); // touch 1 → 2 becomes the LRU victim
+        store.put(&snap(3, 3)).unwrap();
+        assert!(store.contains(1) && store.contains(3) && !store.contains(2));
+        assert_eq!(store.counters().evicted_cap, 1);
+        assert!(matches!(
+            DiskStore::open(&dir, "fp", 1, None).unwrap().put(&snap(4, 4)),
+            Err(StoreError::CapacityExceeded { .. })
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ttl_sweep_evicts_idle_snapshots() {
+        let dir = tmpdir("ttl");
+        let store =
+            DiskStore::open(&dir, "fp", 0, Some(Duration::from_millis(10))).unwrap();
+        store.put(&snap(1, 1)).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        store.sweep();
+        assert_eq!(store.sessions(), 0);
+        assert_eq!(store.counters().evicted_ttl, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_fingerprint_is_refused_on_get() {
+        let dir = tmpdir("stale");
+        DiskStore::open(&dir, "arch=a", 0, None)
+            .unwrap()
+            .put(&snap(1, 1))
+            .unwrap();
+        let err = DiskStore::open(&dir, "arch=b", 0, None)
+            .unwrap()
+            .get(1)
+            .unwrap_err();
+        assert!(err.is_stale());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,383 @@
+//! Persistent session store — the **disk tier** below the host spill
+//! (DESIGN.md D11).
+//!
+//! TConstFormer's O(1) KV cache (Eq. 7) makes a parked session's complete
+//! state a *constant-size* artifact, so durable persistence is cheap: a
+//! TTL-expired host-spilled session demotes into one checksummed snapshot
+//! file instead of being dropped, a resume promotes it back through the
+//! proven `sync_host` + `load_state` path bit-identically, a restarted
+//! engine rebuilds its session table from a store scan, and migrating a
+//! disk-tier session ships a store key instead of hot bytes
+//! (`Exported::ByRef`).
+//!
+//! The tier is a [`SessionStore`] trait with one backend, [`DiskStore`]
+//! (`--store-dir`, off by default). Snapshot files are written atomically
+//! (tmp + rename) and carry a header recording the snapshot **schema
+//! version** and an **arch/preset/checkpoint fingerprint** plus a
+//! whole-file checksum, so a stale or damaged file is refused with a
+//! typed [`StoreError`] — never silently resumed (pinned by
+//! `rust/tests/store.rs`).
+
+pub mod disk;
+
+pub use disk::DiskStore;
+
+use std::sync::Arc;
+
+use crate::model::state::{CodecError, SeqState};
+
+/// Snapshot file magic: "TConstFormer Session Snapshot".
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"TCSS";
+
+/// Bump on any change to the snapshot layout; older files are refused
+/// with [`StoreError::SchemaMismatch`], not reinterpreted.
+pub const SNAPSHOT_SCHEMA_VERSION: u32 = 1;
+
+/// Typed refusal from the store. Every failure mode a damaged, stale, or
+/// missing snapshot can produce is a distinct variant, so callers can
+/// meter corrupt-vs-stale refusals separately in `/metrics` and tests can
+/// assert the exact failure class (no panic, no silent drop).
+#[derive(Debug)]
+pub enum StoreError {
+    /// Filesystem failure (permissions, disk full, ...).
+    Io { key: u64, source: std::io::Error },
+    /// No snapshot for this session key.
+    NotFound { key: u64 },
+    /// The file ended before the encoding did (crashed writer; the atomic
+    /// tmp + rename write makes this unreachable for completed puts).
+    Truncated { key: u64 },
+    /// Whole-file checksum mismatch (bit rot or concurrent mutation).
+    ChecksumMismatch { key: u64 },
+    /// Written by a different snapshot schema version.
+    SchemaMismatch { key: u64, found: u32, expected: u32 },
+    /// Written by an engine with a different arch/preset/checkpoint — the
+    /// state would load but stream garbage, so it is refused instead.
+    FingerprintMismatch { key: u64, found: String, expected: String },
+    /// Structurally invalid payload.
+    Corrupt { key: u64, detail: String },
+    /// The snapshot cannot fit under `--store-cap-bytes` even after
+    /// evicting every other resident snapshot.
+    CapacityExceeded { key: u64, needed: u64, cap: u64 },
+}
+
+impl StoreError {
+    /// Short metric-friendly label for the failure class.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            StoreError::Io { .. } => "io",
+            StoreError::NotFound { .. } => "not_found",
+            StoreError::Truncated { .. } => "truncated",
+            StoreError::ChecksumMismatch { .. } => "checksum",
+            StoreError::SchemaMismatch { .. } => "schema",
+            StoreError::FingerprintMismatch { .. } => "fingerprint",
+            StoreError::Corrupt { .. } => "corrupt",
+            StoreError::CapacityExceeded { .. } => "capacity",
+        }
+    }
+
+    /// A *stale* snapshot: intact but written by an incompatible engine
+    /// (schema or fingerprint). Counted apart from corruption.
+    pub fn is_stale(&self) -> bool {
+        matches!(
+            self,
+            StoreError::SchemaMismatch { .. } | StoreError::FingerprintMismatch { .. }
+        )
+    }
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io { key, source } => write!(f, "session {key}: io error: {source}"),
+            StoreError::NotFound { key } => write!(f, "session {key}: no snapshot"),
+            StoreError::Truncated { key } => write!(f, "session {key}: truncated snapshot"),
+            StoreError::ChecksumMismatch { key } => {
+                write!(f, "session {key}: snapshot checksum mismatch")
+            }
+            StoreError::SchemaMismatch { key, found, expected } => write!(
+                f,
+                "session {key}: snapshot schema v{found}, this engine expects v{expected}"
+            ),
+            StoreError::FingerprintMismatch { key, found, expected } => write!(
+                f,
+                "session {key}: snapshot fingerprint {found:?} does not match engine {expected:?}"
+            ),
+            StoreError::Corrupt { key, detail } => {
+                write!(f, "session {key}: corrupt snapshot: {detail}")
+            }
+            StoreError::CapacityExceeded { key, needed, cap } => write!(
+                f,
+                "session {key}: snapshot of {needed} B exceeds store cap of {cap} B"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// One parked session's complete durable state: the [`SeqState`] plus the
+/// resume bookkeeping the worker needs to rebuild its session entry
+/// (carry token, absorbed-token count, turn count — the turn count also
+/// feeds the per-session sampling salt, which is what keeps a
+/// resumed-after-restart stream bit-identical).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    pub sid: u64,
+    pub last_token: i32,
+    pub tokens_absorbed: u64,
+    pub turns: u64,
+    pub state: SeqState,
+}
+
+/// One store inventory row (boot-time recovery scan).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreEntry {
+    pub sid: u64,
+    /// Snapshot file size — what the session costs the disk tier.
+    pub bytes: u64,
+}
+
+/// Cumulative store counters, surfaced once (router-side) in `/metrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    /// Snapshot payload reads (`get`). The by-ref migration test pins
+    /// this: moving a disk-tier session between workers must not read it.
+    pub reads: u64,
+    /// Snapshots evicted by the store's own TTL sweep.
+    pub evicted_ttl: u64,
+    /// Snapshots evicted to make room under `--store-cap-bytes`.
+    pub evicted_cap: u64,
+}
+
+/// The disk tier's interface. Object-safe and shared (`Arc<dyn ...>`)
+/// across the router and every worker thread — snapshots are plain host
+/// bytes, so unlike PJRT state they move freely between threads.
+pub trait SessionStore: Send + Sync {
+    /// Persist a snapshot atomically; replaces any existing snapshot for
+    /// the same session. Returns the snapshot's size in bytes.
+    fn put(&self, snap: &SessionSnapshot) -> Result<u64, StoreError>;
+
+    /// Load and validate a session's snapshot.
+    fn get(&self, sid: u64) -> Result<SessionSnapshot, StoreError>;
+
+    /// Delete a session's snapshot. Returns the bytes freed (0 when no
+    /// snapshot existed — removal is idempotent).
+    fn remove(&self, sid: u64) -> Result<u64, StoreError>;
+
+    /// Whether a snapshot currently exists for this session.
+    fn contains(&self, sid: u64) -> bool;
+
+    /// Inventory of resident snapshots (the router's boot recovery scan).
+    fn entries(&self) -> Vec<StoreEntry>;
+
+    /// Run the TTL GC sweep. Internally rate-limited, so callers may
+    /// invoke it on every worker sweep without rescanning cost.
+    fn sweep(&self);
+
+    /// Total bytes currently held by the tier.
+    fn bytes(&self) -> u64;
+
+    /// Number of snapshots currently held by the tier.
+    fn sessions(&self) -> usize;
+
+    fn counters(&self) -> StoreCounters;
+}
+
+/// How the engine passes the tier around (router + one clone per worker).
+pub type SharedStore = Arc<dyn SessionStore>;
+
+// ---------------------------------------------------------------------------
+// Snapshot file codec
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit — the whole-file checksum. Hand-rolled on purpose: the
+/// repo's dependency budget is anyhow + xla, and FNV is plenty to catch
+/// torn writes and bit rot (this guards integrity, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a snapshot into its on-disk form:
+///
+/// ```text
+/// magic "TCSS" | schema u32 | fp_len u32 | fingerprint | sid u64
+/// | last_token i32 | tokens_absorbed u64 | turns u64
+/// | payload_len u64 | payload (SeqState::encode) | fnv1a64 of all prior
+/// ```
+pub fn encode_snapshot(snap: &SessionSnapshot, fingerprint: &str) -> Vec<u8> {
+    let mut payload = Vec::new();
+    snap.state.encode(&mut payload);
+    let mut out = Vec::with_capacity(payload.len() + fingerprint.len() + 64);
+    out.extend_from_slice(&SNAPSHOT_MAGIC);
+    out.extend_from_slice(&SNAPSHOT_SCHEMA_VERSION.to_le_bytes());
+    out.extend_from_slice(&(fingerprint.len() as u32).to_le_bytes());
+    out.extend_from_slice(fingerprint.as_bytes());
+    out.extend_from_slice(&snap.sid.to_le_bytes());
+    out.extend_from_slice(&snap.last_token.to_le_bytes());
+    out.extend_from_slice(&snap.tokens_absorbed.to_le_bytes());
+    out.extend_from_slice(&snap.turns.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    let sum = fnv1a64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+struct HeaderReader<'a> {
+    key: u64,
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> HeaderReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        let end = self
+            .off
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or(StoreError::Truncated { key: self.key })?;
+        let s = &self.buf[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, StoreError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, StoreError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, StoreError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Validate and deserialize a snapshot file. Validation order: length →
+/// checksum → magic → schema → fingerprint → payload, so the most
+/// specific refusal wins (a truncated file is `Truncated`, not a
+/// checksum mismatch on garbage).
+pub fn decode_snapshot(
+    key: u64,
+    bytes: &[u8],
+    expected_fingerprint: &str,
+) -> Result<SessionSnapshot, StoreError> {
+    if bytes.len() < SNAPSHOT_MAGIC.len() + 8 {
+        return Err(StoreError::Truncated { key });
+    }
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+    if fnv1a64(body) != stored {
+        return Err(StoreError::ChecksumMismatch { key });
+    }
+    let mut r = HeaderReader { key, buf: body, off: 0 };
+    if r.take(4)? != SNAPSHOT_MAGIC {
+        return Err(StoreError::Corrupt { key, detail: "bad magic".into() });
+    }
+    let schema = r.u32()?;
+    if schema != SNAPSHOT_SCHEMA_VERSION {
+        return Err(StoreError::SchemaMismatch {
+            key,
+            found: schema,
+            expected: SNAPSHOT_SCHEMA_VERSION,
+        });
+    }
+    let fp_len = r.u32()? as usize;
+    let fp = String::from_utf8(r.take(fp_len)?.to_vec())
+        .map_err(|_| StoreError::Corrupt { key, detail: "non-utf8 fingerprint".into() })?;
+    if fp != expected_fingerprint {
+        return Err(StoreError::FingerprintMismatch {
+            key,
+            found: fp,
+            expected: expected_fingerprint.to_string(),
+        });
+    }
+    let sid = r.u64()?;
+    let last_token = r.i32()?;
+    let tokens_absorbed = r.u64()?;
+    let turns = r.u64()?;
+    let payload_len = r.u64()? as usize;
+    let payload = r.take(payload_len)?;
+    if r.off != body.len() {
+        return Err(StoreError::Corrupt {
+            key,
+            detail: format!("{} trailing bytes", body.len() - r.off),
+        });
+    }
+    let state = SeqState::decode(payload).map_err(|e| match e {
+        CodecError::Truncated => StoreError::Truncated { key },
+        CodecError::Invalid(detail) => StoreError::Corrupt { key, detail },
+    })?;
+    Ok(SessionSnapshot { sid, last_token, tokens_absorbed, turns, state })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::state::{BaseState, SeqState};
+
+    fn snap(sid: u64) -> SessionSnapshot {
+        SessionSnapshot {
+            sid,
+            last_token: 42,
+            tokens_absorbed: 99,
+            turns: 3,
+            state: SeqState::Base(BaseState {
+                cache_k: None,
+                cache_v: None,
+                bucket: 0,
+                pos: 99,
+            }),
+        }
+    }
+
+    #[test]
+    fn snapshot_file_round_trips() {
+        let s = snap(7);
+        let bytes = encode_snapshot(&s, "fp");
+        assert_eq!(decode_snapshot(7, &bytes, "fp").unwrap(), s);
+    }
+
+    #[test]
+    fn refusals_are_specific() {
+        let bytes = encode_snapshot(&snap(7), "fp");
+        // Truncation beats checksum on a short read.
+        assert!(matches!(
+            decode_snapshot(7, &bytes[..5], "fp"),
+            Err(StoreError::Truncated { .. })
+        ));
+        // A flipped payload byte is a checksum mismatch.
+        let mut bad = bytes.clone();
+        bad[bytes.len() / 2] ^= 0x40;
+        assert!(matches!(
+            decode_snapshot(7, &bad, "fp"),
+            Err(StoreError::ChecksumMismatch { .. })
+        ));
+        // Wrong fingerprint is stale, not corrupt.
+        let err = decode_snapshot(7, &bytes, "other").unwrap_err();
+        assert!(matches!(err, StoreError::FingerprintMismatch { .. }));
+        assert!(err.is_stale());
+        // Wrong schema version (re-checksummed so it is reachable).
+        let mut v2 = bytes.clone();
+        v2[4..8].copy_from_slice(&2u32.to_le_bytes());
+        let body_len = v2.len() - 8;
+        let sum = fnv1a64(&v2[..body_len]);
+        v2[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode_snapshot(7, &v2, "fp").unwrap_err();
+        assert!(matches!(err, StoreError::SchemaMismatch { found: 2, .. }));
+        assert!(err.is_stale());
+    }
+}

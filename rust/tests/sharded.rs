@@ -27,6 +27,19 @@ fn have_artifacts() -> bool {
     std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
 }
 
+/// CI soak knob (DESIGN.md D11): with `TEST_STORE_DIR` set, every engine
+/// in this suite runs with a persistent session store under a fresh
+/// subdirectory, exercising the disk tier's wiring alongside the sharding
+/// scenarios. Per-engine subdirectories keep session-id parity intact
+/// (recovering another engine's snapshots would shift the id sequence).
+fn test_store_dir() -> Option<String> {
+    use std::sync::atomic::AtomicUsize;
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let root = std::env::var("TEST_STORE_DIR").ok()?;
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    Some(format!("{root}/sharded-{}-{n}", std::process::id()))
+}
+
 fn tiny_cfg(arch: Arch, workers: usize) -> EngineConfig {
     EngineConfig {
         artifacts_dir: artifacts_dir(),
@@ -34,6 +47,7 @@ fn tiny_cfg(arch: Arch, workers: usize) -> EngineConfig {
         arch,
         max_lanes: 2,
         workers,
+        store_dir: test_store_dir(),
         ..Default::default()
     }
 }

@@ -1,0 +1,523 @@
+//! Persistent session store tests (DESIGN.md D11): the disk tier below
+//! the host spill.
+//!
+//! Pure-logic tests (no artifacts needed) pin the snapshot codec with a
+//! hand-rolled property sweep over all three state variants and pin the
+//! typed-refusal contract at the file level (corrupt / truncated /
+//! stale snapshots each yield their own [`StoreError`], never a panic).
+//!
+//! Artifact-gated engine tests pin the acceptance criteria:
+//! * a disk-promoted resume is **bit-identical** to an in-memory spilled
+//!   resume for all three archs × both stagings;
+//! * a restarted engine rebuilds its session table from `--store-dir`
+//!   and resumes bit-identically (restart recovery);
+//! * migrating a disk-tier session between workers moves the store key,
+//!   not the snapshot bytes (`store_reads_total` stays at the single
+//!   promote-time read);
+//! * a corrupt or stale snapshot fails the resume with a typed error and
+//!   is counted in `/metrics` — never silently resumed.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use tconstformer::coordinator::{
+    ArenaStaging, Engine, EngineConfig, EngineHandle, Response, TurnRequest,
+};
+use tconstformer::model::sampler::SamplingParams;
+use tconstformer::model::state::{BaseState, SeqState, TConstState, TLinState};
+use tconstformer::model::Arch;
+use tconstformer::runtime::HostTensor;
+use tconstformer::store::{
+    decode_snapshot, encode_snapshot, DiskStore, SessionSnapshot, SessionStore,
+    StoreError,
+};
+use tconstformer::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+fn artifacts_dir() -> String {
+    std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
+}
+
+/// Fresh per-test store directory under the system tmpdir.
+fn store_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("tconst-store-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn prompt(n: usize, seed: usize) -> Vec<i32> {
+    (0..n).map(|i| 1 + ((i * 37 + seed * 101) % 255) as i32).collect()
+}
+
+fn tiny_cfg(arch: Arch, staging: ArenaStaging) -> EngineConfig {
+    EngineConfig {
+        artifacts_dir: artifacts_dir(),
+        preset: "tiny".into(),
+        arch,
+        staging,
+        max_lanes: 1,
+        ..Default::default()
+    }
+}
+
+/// Poll `/metrics` until `key >= want` (the demote/recovery paths run on
+/// worker TTL deadlines, not on our clock). Returns the last snapshot.
+fn wait_metric(handle: &EngineHandle, key: &str, want: f64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let m = handle.metrics().expect("metrics");
+        if m.get(key).as_f64().unwrap_or(0.0) >= want {
+            return m;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for {key} >= {want}; last snapshot: {m}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn sampled_turn(id: u64, sid: u64, p: Vec<i32>, max_new: usize, c: u64) -> TurnRequest {
+    let mut req = TurnRequest::greedy_turn(id, sid, p, max_new);
+    req.sampling = SamplingParams { temperature: 0.7, top_k: 0, seed: 42 + c };
+    req
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot codec: hand-rolled property round-trip (the dependency budget
+// is anyhow + xla, so no proptest crate — an LCG drives the case sweep)
+// ---------------------------------------------------------------------------
+
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn pick(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+
+    /// Finite f32 (NaN would break the PartialEq round-trip oracle even
+    /// when the bytes are identical).
+    fn f32(&mut self) -> f32 {
+        ((self.next() % 200_001) as f32 - 100_000.0) / 997.0
+    }
+
+    fn tensor(&mut self, shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor::F32 {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| self.f32()).collect(),
+        }
+    }
+
+    fn tokens(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| (self.next() % 256) as i32).collect()
+    }
+
+    /// A random well-formed state; `dims` plays the role of a preset
+    /// (two sweeps: small shapes and larger ones).
+    fn state(&mut self, variant: usize, dims: (usize, usize, usize)) -> SeqState {
+        let (w, d, nb) = dims;
+        match variant {
+            0 => {
+                let bucket = [0usize, 32, 64][self.pick(3)];
+                let (ck, cv) = if bucket == 0 {
+                    (None, None)
+                } else {
+                    (
+                        Some(self.tensor(&[2, 1, bucket, d])),
+                        Some(self.tensor(&[2, 1, bucket, d])),
+                    )
+                };
+                SeqState::Base(BaseState {
+                    cache_k: ck,
+                    cache_v: cv,
+                    bucket,
+                    pos: self.pick(bucket + 1),
+                })
+            }
+            1 => SeqState::TLin(TLinState {
+                inner: self.tconst(w, d, nb),
+                hist_k: Some(self.tensor(&[nb, 1, 2 * w, d])),
+                hist_v: Some(self.tensor(&[nb, 1, 2 * w, d])),
+                hist_bucket: 2 * w,
+                hist_len: self.pick(2 * w + 1),
+                tokens_seen: self.pick(500),
+            }),
+            _ => SeqState::TConst(self.tconst(w, d, nb)),
+        }
+    }
+
+    fn tconst(&mut self, w: usize, d: usize, nb: usize) -> TConstState {
+        let fill = self.pick(w);
+        TConstState {
+            ctx_k: self.tensor(&[nb, 3, 1, w, d]),
+            ctx_v: self.tensor(&[nb, 3, 1, w, d]),
+            ctx_sum: self.tensor(&[nb, 1, w, d]),
+            ctx_gate: self.f32(),
+            gen_k: self.tensor(&[nb, 4, 1, w, d]),
+            gen_v: self.tensor(&[nb, 4, 1, w, d]),
+            slot: fill,
+            window_tokens: self.tokens(fill),
+            history: self.tokens(self.pick(64)),
+            tokens_seen: self.pick(1000),
+            syncs: self.next() % 32,
+        }
+    }
+}
+
+/// Property sweep: every (variant × dim-preset × seed) snapshot survives
+/// encode → decode bit-exactly, under its own fingerprint, and is refused
+/// under any other fingerprint.
+#[test]
+fn snapshot_codec_property_round_trip() {
+    let mut rng = Lcg(0xD11D_11D1);
+    let presets = [(8usize, 4usize, 1usize), (16, 8, 2)];
+    for variant in 0..3 {
+        for &dims in &presets {
+            for case in 0..8u64 {
+                let snap = SessionSnapshot {
+                    sid: rng.next(),
+                    last_token: (rng.next() % 256) as i32,
+                    tokens_absorbed: rng.next() % 10_000,
+                    turns: rng.next() % 100,
+                    state: rng.state(variant, dims),
+                };
+                let fp = format!("arch=a{variant};preset=p{};case={case}", dims.0);
+                let bytes = encode_snapshot(&snap, &fp);
+                let back = decode_snapshot(snap.sid, &bytes, &fp)
+                    .unwrap_or_else(|e| panic!("v{variant} case {case}: {e}"));
+                assert_eq!(back, snap, "v{variant} case {case}: round trip drifted");
+                assert!(
+                    decode_snapshot(snap.sid, &bytes, "arch=other")
+                        .unwrap_err()
+                        .is_stale(),
+                    "v{variant} case {case}: foreign fingerprint accepted"
+                );
+            }
+        }
+    }
+}
+
+/// File-level typed refusals through a real [`DiskStore`]: a truncated
+/// write, a flipped byte, and a foreign-engine snapshot each produce
+/// their own [`StoreError`] on `get` — no panic, no silent garbage.
+#[test]
+fn disk_store_refuses_damaged_files_with_typed_errors() {
+    let dir = store_dir("refusals");
+    let snap = SessionSnapshot {
+        sid: 5,
+        last_token: 7,
+        tokens_absorbed: 3,
+        turns: 1,
+        state: SeqState::Base(BaseState { cache_k: None, cache_v: None, bucket: 0, pos: 3 }),
+    };
+    let path = dir.join(format!("sess-{:016x}.snap", 5));
+
+    // Truncated write (a crashed writer that bypassed the tmp+rename
+    // protocol): refused as Truncated.
+    let store = DiskStore::open(&dir, "fp", 0, None).unwrap();
+    store.put(&snap).unwrap();
+    let full = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &full[..5]).unwrap();
+    assert!(matches!(
+        DiskStore::open(&dir, "fp", 0, None).unwrap().get(5),
+        Err(StoreError::Truncated { key: 5 })
+    ));
+
+    // Bit rot: one flipped payload byte fails the whole-file checksum.
+    let mut rotten = full.clone();
+    rotten[full.len() / 2] ^= 0x01;
+    std::fs::write(&path, &rotten).unwrap();
+    assert!(matches!(
+        DiskStore::open(&dir, "fp", 0, None).unwrap().get(5),
+        Err(StoreError::ChecksumMismatch { key: 5 })
+    ));
+
+    // Intact file, wrong engine: stale, distinguishable from corruption.
+    std::fs::write(&path, &full).unwrap();
+    let err = DiskStore::open(&dir, "fp2", 0, None).unwrap().get(5).unwrap_err();
+    assert!(err.is_stale(), "got {err}");
+    assert!(matches!(err, StoreError::FingerprintMismatch { key: 5, .. }));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level acceptance tests (artifact-gated)
+// ---------------------------------------------------------------------------
+
+/// Run the canonical 3-turn pressure script on `handle`: session A parks,
+/// session B's cold turn spills A off the single lane, then A resumes.
+/// Returns (a1, b1, a2).
+fn pressure_script(handle: &EngineHandle, pause: Option<&dyn Fn()>) -> (Response, Response, Response) {
+    let sa = handle.open_session().unwrap();
+    let sb = handle.open_session().unwrap();
+    let a1 = handle.submit(sampled_turn(1, sa, prompt(40, 1), 6, 1)).wait().unwrap();
+    let b1 = handle.submit(sampled_turn(2, sb, prompt(33, 2), 5, 2)).wait().unwrap();
+    if let Some(p) = pause {
+        p();
+    }
+    let a2 = handle.submit(sampled_turn(3, sa, prompt(9, 3), 5, 1)).wait().unwrap();
+    (a1, b1, a2)
+}
+
+/// Tentpole acceptance (a): TTL-demoting a spilled session to disk and
+/// promoting it back on resume is **bit-identical** (under temperature
+/// sampling) to the in-memory spilled resume, for all three archs × both
+/// stagings. The promote restores the bookkeeping (carry token, absorbed
+/// count, turn count → sampling salt) from the snapshot, so even one
+/// byte of drift anywhere in the codec or the demote/promote path would
+/// show in the streams.
+#[test]
+fn disk_promoted_resume_matches_spilled_resume() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    for arch in [Arch::TConst, Arch::TLin, Arch::Base] {
+        for staging in [ArenaStaging::DeviceArena, ArenaStaging::HostArena] {
+            // Control: plain spilled resume, state never leaves memory.
+            let control = Engine::spawn(tiny_cfg(arch, staging)).unwrap();
+            let (ca1, cb1, ca2) = pressure_script(&control, None);
+            control.shutdown();
+
+            // Disk arm: a short TTL demotes both parked sessions into the
+            // store; A's resume then promotes from a snapshot file.
+            let dir = store_dir(&format!("identity-{arch:?}-{staging:?}"));
+            let cfg = EngineConfig {
+                store_dir: Some(dir.to_string_lossy().into_owned()),
+                session_ttl: Duration::from_millis(300),
+                ..tiny_cfg(arch, staging)
+            };
+            let disk = Engine::spawn(cfg).unwrap();
+            let wait_both_demoted = || {
+                wait_metric(&disk, "disk_tier_sessions", 2.0);
+            };
+            let (da1, db1, da2) = pressure_script(&disk, Some(&wait_both_demoted));
+            let m = wait_metric(&disk, "sessions_promoted_disk", 1.0);
+            assert!(
+                m.get("sessions_demoted_disk").as_f64().unwrap() >= 2.0,
+                "{arch:?}/{staging:?}: demotions not counted: {m}"
+            );
+            assert_eq!(
+                m.get("store_reads_total").as_usize(),
+                Some(1),
+                "{arch:?}/{staging:?}: promote must read the snapshot exactly once"
+            );
+            disk.shutdown();
+
+            assert_eq!(da1.tokens, ca1.tokens, "{arch:?}/{staging:?}: turn a1 diverged");
+            assert_eq!(db1.tokens, cb1.tokens, "{arch:?}/{staging:?}: turn b1 diverged");
+            assert_eq!(
+                da2.tokens, ca2.tokens,
+                "{arch:?}/{staging:?}: disk-promoted resume diverged from spilled resume"
+            );
+            assert!(
+                da2.metrics.saved_prefill_tokens > 0,
+                "{arch:?}/{staging:?}: promote lost the resume"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+/// Tentpole acceptance (b): park → kill the engine → boot a fresh one on
+/// the same `--store-dir` → the router rebuilds its session table from
+/// the store scan and the next turn resumes **bit-identically** to an
+/// uninterrupted engine (and still saves the history prefill).
+#[test]
+fn restart_recovers_sessions_from_store_scan() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    // Control: one uninterrupted engine, resident resume.
+    let control = Engine::spawn(tiny_cfg(Arch::TConst, ArenaStaging::DeviceArena)).unwrap();
+    let sid_c = control.open_session().unwrap();
+    let c1 = control.submit(sampled_turn(1, sid_c, prompt(40, 1), 6, 1)).wait().unwrap();
+    let c2 = control.submit(sampled_turn(2, sid_c, prompt(9, 3), 5, 1)).wait().unwrap();
+    control.shutdown();
+
+    let dir = store_dir("restart");
+    let cfg = || EngineConfig {
+        store_dir: Some(dir.to_string_lossy().into_owned()),
+        session_ttl: Duration::from_millis(300),
+        ..tiny_cfg(Arch::TConst, ArenaStaging::DeviceArena)
+    };
+    let first = Engine::spawn(cfg()).unwrap();
+    let sid = first.open_session().unwrap();
+    assert_eq!(sid, sid_c, "control must share the session id (sampling salt)");
+    let r1 = first.submit(sampled_turn(1, sid, prompt(40, 1), 6, 1)).wait().unwrap();
+    wait_metric(&first, "disk_tier_sessions", 1.0);
+    first.shutdown();
+    drop(first); // joins router + workers; only the snapshot file survives
+
+    let second = Engine::spawn(cfg()).unwrap();
+    let m = second.metrics().unwrap();
+    assert_eq!(
+        m.get("router_sessions_recovered").as_usize(),
+        Some(1),
+        "boot scan missed the snapshot: {m}"
+    );
+    assert_eq!(m.get("sessions_imported_byref").as_usize(), Some(1));
+    let r2 = second.submit(sampled_turn(2, sid, prompt(9, 3), 5, 1)).wait().unwrap();
+    assert_eq!(r1.tokens, c1.tokens, "pre-restart turn diverged");
+    assert_eq!(r2.tokens, c2.tokens, "post-restart resume diverged from control");
+    assert!(
+        r2.metrics.saved_prefill_tokens > 0,
+        "restart recovery lost the resume (history re-prefilled)"
+    );
+    // Satellite: per-class TTFT digests are live (greedy_turn defaults to
+    // the standard class).
+    let m = second.metrics().unwrap();
+    assert!(m.get("turns_slo_standard").as_f64().unwrap() >= 1.0, "{m}");
+    assert!(m.get("ttft_slo_p99_standard").as_f64().unwrap() > 0.0, "{m}");
+    second.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Tentpole acceptance (c): a disk-tier session resuming on a saturated
+/// owner migrates **by reference** — the export ships the store key, the
+/// source worker never reads the snapshot (`store_reads_total` stays at
+/// the single promote-time read on the target) — and the migrated stream
+/// is bit-identical to an uncontended single-worker run.
+#[test]
+fn byref_migration_moves_disk_session_without_reading_it() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    // Control: same conversation, one worker, no store.
+    let control = Engine::spawn(tiny_cfg(Arch::TConst, ArenaStaging::DeviceArena)).unwrap();
+    let sid_c = control.open_session().unwrap();
+    let c1 = control.submit(sampled_turn(1, sid_c, prompt(40, 1), 6, 1)).wait().unwrap();
+    let c2 = control.submit(sampled_turn(3, sid_c, prompt(9, 3), 5, 1)).wait().unwrap();
+    control.shutdown();
+
+    let dir = store_dir("byref");
+    let cfg = EngineConfig {
+        store_dir: Some(dir.to_string_lossy().into_owned()),
+        session_ttl: Duration::from_millis(500),
+        workers: 2,
+        ..tiny_cfg(Arch::TConst, ArenaStaging::DeviceArena)
+    };
+    let handle = Engine::spawn(cfg).unwrap();
+    let sa = handle.open_session().unwrap();
+    assert_eq!(sa, sid_c);
+    let a1 = handle.submit(sampled_turn(1, sa, prompt(40, 1), 6, 1)).wait().unwrap();
+    wait_metric(&handle, "disk_tier_sessions", 1.0);
+
+    // A is on disk, so its worker publishes no lane load — session B's
+    // first placement tie-breaks onto the same worker and parks on its
+    // only lane, saturating it while the other worker sits empty. Resuming
+    // A then forces the router to move the disk-tier session by store
+    // reference. (B stays parked through the resume: its TTL clock is
+    // fresh and the 500 ms demote deadline is far beyond this settle.)
+    let sb = handle.open_session().unwrap();
+    let b1 = handle.submit(sampled_turn(2, sb, prompt(20, 2), 5, 2)).wait().unwrap();
+    assert_eq!(b1.metrics.worker, a1.metrics.worker, "B missed A's owner");
+    std::thread::sleep(Duration::from_millis(200)); // let B's park publish
+    let a2 = handle.submit(sampled_turn(3, sa, prompt(9, 3), 5, 1)).wait().unwrap();
+
+    assert_ne!(a2.metrics.worker, a1.metrics.worker, "resume did not migrate");
+    assert_eq!(a1.tokens, c1.tokens, "turn 1 diverged");
+    assert_eq!(a2.tokens, c2.tokens, "migrated disk resume changed the stream");
+    let m = handle.metrics().unwrap();
+    assert_eq!(m.get("sessions_imported_byref").as_usize(), Some(1), "{m}");
+    assert_eq!(m.get("router_rebalance_total").as_usize(), Some(1), "{m}");
+    assert_eq!(m.get("sessions_promoted_disk").as_usize(), Some(1), "{m}");
+    assert_eq!(
+        m.get("store_reads_total").as_usize(),
+        Some(1),
+        "by-ref migration must not read snapshot bytes on the source: {m}"
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Tentpole acceptance (d): a snapshot damaged on disk (or written by a
+/// different engine) is refused at promote time with a typed error the
+/// client sees as a failed turn — and the refusal is metered by class in
+/// `/metrics`. The session is dropped, so the next turn fails fast as
+/// unknown instead of retrying garbage.
+#[test]
+fn corrupt_and_stale_snapshots_are_refused_and_metered() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let dir = store_dir("refuse");
+    let cfg = |arch: Arch| EngineConfig {
+        store_dir: Some(dir.to_string_lossy().into_owned()),
+        session_ttl: Duration::from_millis(300),
+        ..tiny_cfg(arch, ArenaStaging::DeviceArena)
+    };
+    let first = Engine::spawn(cfg(Arch::TConst)).unwrap();
+    let sid = first.open_session().unwrap();
+    first.submit(sampled_turn(1, sid, prompt(40, 1), 6, 1)).wait().unwrap();
+    wait_metric(&first, "disk_tier_sessions", 1.0);
+    first.shutdown();
+    drop(first);
+
+    // Stale: a TLin engine over a TConst store — recovery adopts the
+    // session (validation is lazy), the resume refuses it as stale.
+    let stale = Engine::spawn(cfg(Arch::TLin)).unwrap();
+    assert_eq!(
+        stale.metrics().unwrap().get("router_sessions_recovered").as_usize(),
+        Some(1)
+    );
+    let err = stale
+        .submit(sampled_turn(2, sid, prompt(9, 3), 5, 1))
+        .wait()
+        .expect_err("stale snapshot must fail the turn");
+    assert!(err.to_string().contains("resume failed"), "got: {err:#}");
+    let m = stale.metrics().unwrap();
+    assert_eq!(m.get("store_refused_stale").as_usize(), Some(1), "{m}");
+    assert_eq!(m.get("store_refused_corrupt").as_usize(), Some(0), "{m}");
+    // The refused session is gone, and so is its snapshot.
+    let err = stale
+        .submit(sampled_turn(3, sid, prompt(4, 4), 3, 1))
+        .wait()
+        .expect_err("refused session must be dropped");
+    assert!(err.to_string().contains("unknown session"), "got: {err:#}");
+    stale.shutdown();
+    drop(stale);
+
+    // Corrupt: re-park a session, flip one byte in its snapshot file,
+    // reboot, resume → checksum refusal, metered separately from stale.
+    let park = Engine::spawn(cfg(Arch::TConst)).unwrap();
+    let sid2 = park.open_session().unwrap();
+    park.submit(sampled_turn(4, sid2, prompt(30, 5), 5, 2)).wait().unwrap();
+    wait_metric(&park, "disk_tier_sessions", 1.0);
+    park.shutdown();
+    drop(park);
+    let path = dir.join(format!("sess-{sid2:016x}.snap"));
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let second = Engine::spawn(cfg(Arch::TConst)).unwrap();
+    let err = second
+        .submit(sampled_turn(5, sid2, prompt(9, 6), 5, 2))
+        .wait()
+        .expect_err("corrupt snapshot must fail the turn");
+    assert!(err.to_string().contains("resume failed"), "got: {err:#}");
+    let m = second.metrics().unwrap();
+    assert_eq!(m.get("store_refused_corrupt").as_usize(), Some(1), "{m}");
+    second.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

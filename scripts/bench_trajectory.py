@@ -9,12 +9,14 @@ This script maintains two committed trajectory files at the repo root —
   sync-vs-steady p99 latency split;
 * ``BENCH_ttft.json``  — one entry per PR: cold-prefill vs resumed TTFT.
 
-Both modes optionally take ``--replay replay_metrics.json`` (the session
-replayer's soak artifact): its per-SLO-class TTFT p99s
-(``ttft_slo_p99_interactive`` / ``_standard`` / ``_batch``) are merged into
-the BENCH_ttft.json entry and gated with the same timing band as the other
-TTFT keys. A replay file from a non-soak run (no SLO keys) is skipped with
-a note, so the flag is safe to pass unconditionally.
+Both modes optionally take ``--replay replay_metrics.json`` (repeatable —
+pass it once per session-replayer artifact). The soak artifact's
+per-SLO-class TTFT p99s (``ttft_slo_p99_interactive`` / ``_standard`` /
+``_batch``) and the restart artifact's disk-resume TTFT
+(``ttft_disk_resume_p99_ms``) are merged into the BENCH_ttft.json entry
+and gated with the same timing band as the other TTFT keys. A replay file
+without any gated key (e.g. a plain non-soak run) is skipped with a note,
+so the flag is safe to pass unconditionally.
 
 Modes:
 
@@ -61,12 +63,14 @@ MICRO_KEYS = [
     ("steady_p99_ms", "time"),
 ]
 TTFT_KEYS = [("cold_ms", "time"), ("resumed_ms", "time")]
-# Per-SLO-class TTFT p99s from the replayer's soak artifact (merged into
-# BENCH_ttft.json when --replay is given; absent keys gate-pass).
+# Replayer-artifact keys (merged into BENCH_ttft.json when --replay is
+# given; absent keys gate-pass): the soak run's per-SLO-class TTFT p99s
+# and the restart run's resumed-from-disk TTFT p99.
 REPLAY_SLO_KEYS = [
     ("ttft_slo_p99_interactive", "time"),
     ("ttft_slo_p99_standard", "time"),
     ("ttft_slo_p99_batch", "time"),
+    ("ttft_disk_resume_p99_ms", "time"),
 ]
 TIMING_BAND = 0.30
 
@@ -112,17 +116,20 @@ def extract_ttft_point(micro):
     return {"cold_ms": t["cold_ms"], "resumed_ms": t["resumed_ms"]}
 
 
-def extract_replay_point(replay_path):
-    """The per-SLO-class TTFT p99s from the replayer's soak artifact, or
-    {} when the file is absent or was not a soak run (both fine)."""
-    replay = load_json(replay_path) if replay_path else None
-    if replay is None:
-        if replay_path:
-            print(f"note: {replay_path} not found — skipping SLO TTFT keys")
-        return {}
-    point = {k: replay[k] for k, _ in REPLAY_SLO_KEYS if k in replay}
-    if not point:
-        print(f"note: {replay_path} has no SLO keys (non-soak run) — skipping")
+def extract_replay_point(replay_paths):
+    """The gated keys merged from every replayer artifact given via
+    --replay (soak SLO p99s, restart disk-resume TTFT); absent files or
+    files without gated keys are skipped with a note (both fine)."""
+    point = {}
+    for replay_path in replay_paths or []:
+        replay = load_json(replay_path)
+        if replay is None:
+            print(f"note: {replay_path} not found — skipping its replay keys")
+            continue
+        found = {k: replay[k] for k, _ in REPLAY_SLO_KEYS if k in replay}
+        if not found:
+            print(f"note: {replay_path} has no gated replay keys — skipping")
+        point.update(found)
     return point
 
 
@@ -214,7 +221,7 @@ def main():
     for mode, fn in [("append", append), ("gate", gate)]:
         p = sub.add_parser(mode)
         p.add_argument("--micro", default="micro_metrics.json")
-        p.add_argument("--replay", default=None)
+        p.add_argument("--replay", action="append", default=None)
         if mode == "append":
             p.add_argument("--label", default=None)
         p.set_defaults(fn=fn)
