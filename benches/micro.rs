@@ -56,7 +56,7 @@ fn latency_by_step_kind(
     }
     let mut ex = if overlapped {
         let ex = SyncExecutor::spawn(artifacts, None)?;
-        ex.warmup(&rt.manifest.name_tconst_window(preset));
+        warm_window_folds(rt, driver, &ex, preset);
         Some(ex)
     } else {
         None
@@ -125,6 +125,176 @@ fn latency_by_step_kind(
     }
     let tok_s = tokens as f64 / t_all.elapsed().as_secs_f64();
     Ok((steady, sync, tok_s))
+}
+
+/// Warm every window-fold variant the manifest carries for this arch on
+/// the background executor — B1 plus the batched buckets, and for TLin
+/// every history bucket (mirrors the worker's construction warmup).
+fn warm_window_folds(rt: &Runtime, driver: &ModelDriver, ex: &SyncExecutor, preset: &str) {
+    let m = &rt.manifest;
+    let hist_buckets: Vec<Option<usize>> = match driver.arch {
+        Arch::TLin => m.buckets(preset).into_iter().map(Some).collect(),
+        _ => vec![None],
+    };
+    let mut batches = m.batch_buckets.clone();
+    if !batches.contains(&1) {
+        batches.insert(0, 1);
+    }
+    for bucket in hist_buckets {
+        for &b in &batches {
+            if let Some(name) = m.name_window_fold(preset, driver.arch.as_str(), bucket, b) {
+                if m.graphs.contains_key(&name) {
+                    ex.warmup(&name);
+                }
+            }
+        }
+    }
+}
+
+/// Which fold path a fold-pressure arm exercises (DESIGN.md D12).
+#[derive(Clone, Copy, PartialEq)]
+enum FoldArm {
+    /// In-line folds inside decode (the PR-6 synchronous control).
+    Synchronous,
+    /// One background execution per window-full lane (`--sync-batch=0`).
+    PerLane,
+    /// One background execution for all of a round's full lanes (default).
+    Batched,
+}
+
+struct FoldArmReport {
+    steady: Percentiles,
+    sync: Percentiles,
+    /// Sampled token stream per lane — the cross-arm bit-identity witness.
+    streams: Vec<Vec<i32>>,
+    /// Background executions issued per boundary round (0 for the
+    /// synchronous arm, which has no background stream).
+    execs_per_boundary: f64,
+    boundary_rounds: u64,
+}
+
+/// D12 fold-pressure sweep: `prompts.len()` lanes prefilled with
+/// equal-length prompts so every lane's window fills on the SAME round.
+/// Replays the worker's round-boundary pass under one fold arm and meters
+/// per-token latency by step kind, background executions per boundary
+/// round, and the sampled streams.
+fn fold_pressure_arm(
+    rt: &mut Runtime,
+    driver: &ModelDriver,
+    artifacts: &str,
+    preset: &str,
+    prompts: &[Vec<i32>],
+    cap: usize,
+    arm: FoldArm,
+    rounds: usize,
+) -> anyhow::Result<FoldArmReport> {
+    let w = driver.cfg.w_og;
+    let mut arena = driver.new_arena(cap);
+    let mut slots = Vec::new();
+    for p in prompts {
+        let mut st = driver.new_state();
+        driver.prefill(rt, &mut st, p)?;
+        let slot = arena.alloc()?;
+        arena.load_state(slot, &st)?;
+        slots.push(slot);
+    }
+    let mut ex = if arm == FoldArm::Synchronous {
+        None
+    } else {
+        let ex = SyncExecutor::spawn(artifacts, None)?;
+        warm_window_folds(rt, driver, &ex, preset);
+        Some(ex)
+    };
+    let mut last: Vec<i32> = vec![65; slots.len()];
+    let mut streams: Vec<Vec<i32>> = vec![Vec::new(); slots.len()];
+    // Untimed warm round (compile/caches); identical across arms, so its
+    // sampled tokens still belong to the compared streams.
+    let logits = driver.decode_resident(rt, &mut arena, &slots, &last)?;
+    for (i, l) in logits.iter().enumerate() {
+        last[i] = tconstformer::model::sampler::argmax(l);
+        streams[i].push(last[i]);
+    }
+    let mut steady = Percentiles::default();
+    let mut sync = Percentiles::default();
+    let mut boundary_rounds = 0u64;
+    let mut execs_total = 0u64;
+    for _ in 0..rounds {
+        let t0 = std::time::Instant::now();
+        let mut round_is_sync = false;
+        let live: Vec<usize> = if let Some(ex) = ex.as_mut() {
+            for &s in &slots {
+                if let Some(t) = arena.sync_ticket(s) {
+                    if ex.is_done(t) {
+                        driver.commit_sync_resident(rt, &mut arena, ex, s)?;
+                    }
+                }
+            }
+            let full: Vec<usize> = slots
+                .iter()
+                .copied()
+                .filter(|&s| !arena.sync_pending(s) && arena.lanes[s].fill >= w)
+                .collect();
+            if !full.is_empty() {
+                round_is_sync = true;
+                boundary_rounds += 1;
+                let e0 = ex.executions();
+                if arm == FoldArm::Batched {
+                    driver.begin_sync_resident_batch(rt, &mut arena, ex, &full)?;
+                } else {
+                    for &s in &full {
+                        driver.begin_sync_resident(rt, &mut arena, ex, s)?;
+                    }
+                }
+                execs_total += ex.executions() - e0;
+            }
+            let mut live: Vec<usize> = (0..slots.len())
+                .filter(|&i| !arena.sync_pending(slots[i]))
+                .collect();
+            if live.is_empty() {
+                // All lanes full on the same round (the sweep's design):
+                // block-commit so every round still decodes every lane —
+                // the sync-step figure then measures exactly the fold
+                // dispatch+wait cost of the arm.
+                for &s in &slots {
+                    if arena.sync_pending(s) {
+                        driver.commit_sync_resident(rt, &mut arena, ex, s)?;
+                    }
+                }
+                live = (0..slots.len()).collect();
+            }
+            live
+        } else {
+            round_is_sync = slots.iter().any(|&s| arena.lanes[s].fill >= w);
+            (0..slots.len()).collect()
+        };
+        let lv_slots: Vec<usize> = live.iter().map(|&i| slots[i]).collect();
+        let lv_toks: Vec<i32> = live.iter().map(|&i| last[i]).collect();
+        let logits = driver.decode_resident(rt, &mut arena, &lv_slots, &lv_toks)?;
+        for (j, &i) in live.iter().enumerate() {
+            last[i] = tconstformer::model::sampler::argmax(&logits[j]);
+            streams[i].push(last[i]);
+        }
+        let dt = t0.elapsed().as_secs_f64() * 1000.0 / live.len().max(1) as f64;
+        if round_is_sync {
+            sync.add(dt);
+        } else {
+            steady.add(dt);
+        }
+    }
+    if let Some(ex) = ex.as_mut() {
+        for &s in &slots {
+            if arena.sync_pending(s) {
+                driver.commit_sync_resident(rt, &mut arena, ex, s)?;
+            }
+        }
+    }
+    Ok(FoldArmReport {
+        steady,
+        sync,
+        streams,
+        execs_per_boundary: execs_total as f64 / boundary_rounds.max(1) as f64,
+        boundary_rounds,
+    })
 }
 
 /// Per-step host↔device traffic of a resident arena's decode, averaged
@@ -446,6 +616,128 @@ fn main() -> anyhow::Result<()> {
         lat_row("synchronous", &s_steady, &s_sync, s_toks),
         lat_row("overlapped", &o_steady, &o_sync, o_toks),
     ]);
+
+    // --- D12 fold-pressure sweep: batched vs per-lane background folds -----
+    // Eight lanes prefilled with equal-length prompts so every window
+    // fills on the SAME round. The batched arm must issue ONE background
+    // execution per boundary round (vs one per lane), with sampled streams
+    // bit-identical across batched / per-lane / synchronous arms — for
+    // TConst AND TLin.
+    let fold_lanes = 8usize;
+    let fold_cap = rt
+        .manifest
+        .batch_bucket_for(fold_lanes)
+        .expect("no batch bucket covers the fold-pressure lane count");
+    let fold_prompts: Vec<Vec<i32>> = (0..fold_lanes)
+        .map(|i| (0..16).map(|j| 1 + ((j * 7 + i * 13) % 255) as i32).collect())
+        .collect();
+    let fold_rounds = 2 * driver.cfg.w_og + 24;
+    let mut fold_fields: Vec<(&str, Json)> = vec![
+        ("lanes", Json::num(fold_lanes as f64)),
+        ("rounds", Json::num(fold_rounds as f64)),
+    ];
+    let mut fold_hist_rows: Vec<Json> = Vec::new();
+    for arch in [Arch::TConst, Arch::TLin] {
+        let drv = ModelDriver::new(&rt, &preset, arch)?;
+        let mut run = |arm: FoldArm| {
+            fold_pressure_arm(
+                &mut rt, &drv, &artifacts, &preset, &fold_prompts, fold_cap, arm,
+                fold_rounds,
+            )
+        };
+        let batched = run(FoldArm::Batched)?;
+        let perlane = run(FoldArm::PerLane)?;
+        let synchronous = run(FoldArm::Synchronous)?;
+        let a = arch.as_str();
+        println!(
+            "fold pressure [{a}] batched:     sync p99 {:>7.3} ms | steady p99 {:>7.3} ms | {:.2} execs/boundary ({} boundaries)",
+            batched.sync.p99(),
+            batched.steady.p99(),
+            batched.execs_per_boundary,
+            batched.boundary_rounds,
+        );
+        println!(
+            "fold pressure [{a}] per-lane:    sync p99 {:>7.3} ms | steady p99 {:>7.3} ms | {:.2} execs/boundary",
+            perlane.sync.p99(),
+            perlane.steady.p99(),
+            perlane.execs_per_boundary,
+        );
+        println!(
+            "fold pressure [{a}] synchronous: sync p99 {:>7.3} ms | steady p99 {:>7.3} ms",
+            synchronous.sync.p99(),
+            synchronous.steady.p99(),
+        );
+        assert!(
+            batched.boundary_rounds > 0,
+            "fold-pressure sweep crossed no boundary rounds — raise fold_rounds"
+        );
+        // The tentpole meter: one batched execution per round, not per lane.
+        assert!(
+            (batched.execs_per_boundary - 1.0).abs() < 1e-9,
+            "batched arm issued {} executions per boundary round (want 1)",
+            batched.execs_per_boundary
+        );
+        assert!(
+            (perlane.execs_per_boundary - fold_lanes as f64).abs() < 1e-9,
+            "per-lane arm issued {} executions per boundary round (want {fold_lanes})",
+            perlane.execs_per_boundary
+        );
+        // Bit-identity across the three arms, lane by lane.
+        for (x, xn) in [(&perlane, "per-lane"), (&synchronous, "synchronous")] {
+            for (i, (sb, sx)) in batched.streams.iter().zip(&x.streams).enumerate() {
+                let n = sb.len().min(sx.len());
+                assert!(n > 0, "lane {i}: empty stream in the {xn} arm");
+                assert_eq!(
+                    &sb[..n],
+                    &sx[..n],
+                    "lane {i}: batched stream diverges from the {xn} arm"
+                );
+            }
+        }
+        let keys: [&str; 6] = match arch {
+            Arch::TLin => [
+                "tlin_fold_sync_batched_p99_ms",
+                "tlin_fold_sync_perlane_p99_ms",
+                "tlin_fold_sync_synchronous_p99_ms",
+                "tlin_fold_steady_batched_p99_ms",
+                "tlin_fold_batched_execs_per_round",
+                "tlin_fold_perlane_execs_per_round",
+            ],
+            _ => [
+                "fold_sync_batched_p99_ms",
+                "fold_sync_perlane_p99_ms",
+                "fold_sync_synchronous_p99_ms",
+                "fold_steady_batched_p99_ms",
+                "fold_batched_execs_per_round",
+                "fold_perlane_execs_per_round",
+            ],
+        };
+        fold_fields.push((keys[0], Json::num(batched.sync.p99())));
+        fold_fields.push((keys[1], Json::num(perlane.sync.p99())));
+        fold_fields.push((keys[2], Json::num(synchronous.sync.p99())));
+        fold_fields.push((keys[3], Json::num(batched.steady.p99())));
+        fold_fields.push((keys[4], Json::num(batched.execs_per_boundary)));
+        fold_fields.push((keys[5], Json::num(perlane.execs_per_boundary)));
+        for (arm_name, rep) in [
+            ("batched", &batched),
+            ("per-lane", &perlane),
+            ("synchronous", &synchronous),
+        ] {
+            fold_hist_rows.push(Json::obj(vec![
+                ("arch", Json::str(a)),
+                ("arm", Json::str(arm_name)),
+                ("steady_p50_ms", Json::num(rep.steady.p50())),
+                ("steady_p99_ms", Json::num(rep.steady.p99())),
+                ("sync_p50_ms", Json::num(rep.sync.p50())),
+                ("sync_p99_ms", Json::num(rep.sync.p99())),
+                ("sync_max_ms", Json::num(rep.sync.percentile(100.0))),
+                ("sync_steps", Json::num(rep.sync.len() as f64)),
+                ("execs_per_boundary_round", Json::num(rep.execs_per_boundary)),
+            ]));
+        }
+    }
+    let fold_pressure = Json::obj(fold_fields);
+
     let hist_path = std::env::var("BENCH_HIST_JSON")
         .unwrap_or_else(|_| "latency_histogram.json".into());
     std::fs::write(
@@ -454,6 +746,7 @@ fn main() -> anyhow::Result<()> {
             ("preset", Json::str(preset.clone())),
             ("w_og", Json::num(driver.cfg.w_og as f64)),
             ("per_token_latency", latency_hist.clone()),
+            ("fold_pressure", Json::Arr(fold_hist_rows)),
         ])
         .to_string(),
     )?;
@@ -550,6 +843,7 @@ fn main() -> anyhow::Result<()> {
         ),
         ("park_grouping", Json::Arr(park_rows)),
         ("per_token_latency", latency_hist),
+        ("fold_pressure", fold_pressure),
         (
             "ttft",
             Json::obj(vec![

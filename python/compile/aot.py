@@ -171,13 +171,20 @@ def build_graphs(preset: str, include_train: bool) -> List[GraphDef]:
         return (out["logits"], out["gen_k"], out["gen_v"],
                 nctx.ctx_k, nctx.ctx_v, nctx.ctx_sum)
 
-    add(
-        f"{preset}_tconst_window_B1", "tconst", "window", 1, None,
-        tconst_window,
-        [("tokens", spec((1, cfg.w_og), I32)), ("n_valid", spec((1,), I32))]
-        + _ctx_specs(cfg, 1),
-        ["logits", "gen_k", "gen_v", "new_ctx_k", "new_ctx_v", "new_ctx_sum"],
-    )
+    # Window folds are lowered at every batch bucket: B1 is the synchronous /
+    # per-lane arm, B>1 lets the background SyncExecutor fold all window-full
+    # lanes of a decode round in one execution. The builder is already
+    # batch-major with per-row n_valid/gate masks, so the batched graphs are
+    # the same math row-by-row (commits stay bit-identical to B1 folds).
+    window_batches = sorted(set([1] + BATCH_BUCKETS))
+    for B in window_batches:
+        add(
+            f"{preset}_tconst_window_B{B}", "tconst", "window", B, None,
+            tconst_window,
+            [("tokens", spec((B, cfg.w_og), I32)), ("n_valid", spec((B,), I32))]
+            + _ctx_specs(cfg, B),
+            ["logits", "gen_k", "gen_v", "new_ctx_k", "new_ctx_v", "new_ctx_sum"],
+        )
     for B in BATCH_BUCKETS:
         def tconst_decode(p, tok, slot, ck, cv, cs, cg, gk, gv):
             lo, gk2, gv2 = tc.decode(p, cfg, tok, slot,
@@ -209,14 +216,16 @@ def build_graphs(preset: str, include_train: bool) -> List[GraphDef]:
                     nctx.ctx_k, nctx.ctx_v, nctx.ctx_sum,
                     out["append_k"], out["append_v"])
 
-        add(
-            f"{preset}_tlin_window_L{L}_B1", "tlin", "window", 1, L,
-            tlin_window,
-            [("tokens", spec((1, cfg.w_og), I32)), ("n_valid", spec((1,), I32))]
-            + _ctx_specs(cfg, 1) + _hist_specs(cfg, 1, L),
-            ["logits", "gen_k", "gen_v", "new_ctx_k", "new_ctx_v",
-             "new_ctx_sum", "append_k", "append_v"],
-        )
+        for B in window_batches:
+            add(
+                f"{preset}_tlin_window_L{L}_B{B}", "tlin", "window", B, L,
+                tlin_window,
+                [("tokens", spec((B, cfg.w_og), I32)),
+                 ("n_valid", spec((B,), I32))]
+                + _ctx_specs(cfg, B) + _hist_specs(cfg, B, L),
+                ["logits", "gen_k", "gen_v", "new_ctx_k", "new_ctx_v",
+                 "new_ctx_sum", "append_k", "append_v"],
+            )
         for B in BATCH_BUCKETS:
             def tlin_decode(p, tok, slot, ck, cv, cs, cg, gk, gv, hk, hv, hl):
                 lo, gk2, gv2 = tl.decode(p, cfg, tok, slot,

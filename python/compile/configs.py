@@ -114,5 +114,8 @@ def history_buckets(cfg: ModelConfig) -> List[int]:
     return out
 
 
-# Decode batch-lane buckets served by the continuous batcher.
-BATCH_BUCKETS: List[int] = [1, 4]
+# Decode batch-lane buckets served by the continuous batcher. Window-fold
+# graphs are lowered at the same buckets so the background sync executor can
+# fold every window-full lane of a decode round in one batched execution
+# (the arena is capped at the largest bucket, so 8 also raises max lanes).
+BATCH_BUCKETS: List[int] = [1, 4, 8]

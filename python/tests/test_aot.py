@@ -34,12 +34,13 @@ def test_expected_graph_inventory(tiny_graphs):
         kinds.setdefault((g.arch, g.kind), []).append(g)
     nb = len(history_buckets(cfg))
     nbb = len(BATCH_BUCKETS)
+    nwb = len(set([1] + BATCH_BUCKETS))  # window-fold batch variants
     assert len(kinds[("base", "prefill")]) == nb
     assert len(kinds[("base", "decode")]) == nb * nbb
-    assert len(kinds[("tconst", "window")]) == 1           # no buckets: O(1) state
+    assert len(kinds[("tconst", "window")]) == nwb         # no buckets: O(1) state
     assert len(kinds[("tconst", "decode")]) == nbb
     assert len(kinds[("tconst", "sync_full")]) == nb       # paper-literal ablation
-    assert len(kinds[("tlin", "window")]) == nb
+    assert len(kinds[("tlin", "window")]) == nb * nwb
     assert len(kinds[("tlin", "decode")]) == nb * nbb
     for arch in ("base", "tlin", "tconst"):
         assert len(kinds[(arch, "train_step")]) == 1
@@ -89,6 +90,55 @@ def test_graph_fn_runs_and_matches_result_arity(tiny_graphs):
             args.append(jnp.asarray(rng.standard_normal(s.shape), jnp.float32) * 0.05)
     out = g.fn(*args)
     assert len(out) == len(g.results)
+
+
+def _run_graph(g, cfg, extra):
+    flat = [jnp.asarray(a) for a in P.flatten(P.init_params(cfg, g.arch, seed=1))]
+    out = g.fn(*(flat + [jnp.asarray(v) for v in extra]))
+    return [np.asarray(o) for o in out]
+
+
+# Batch-axis position per window-graph arg/result name.
+_BAXIS = {"tokens": 0, "n_valid": 0, "ctx_k": 2, "ctx_v": 2, "ctx_sum": 1,
+          "ctx_gate": 0, "hist_k": 1, "hist_v": 1, "hist_len": 0}
+_RAXIS = {"logits": 0, "gen_k": 2, "gen_v": 2, "new_ctx_k": 2, "new_ctx_v": 2,
+          "new_ctx_sum": 1, "append_k": 1, "append_v": 1}
+
+
+@pytest.mark.parametrize("arch,b1,bN", [
+    ("tconst", "tiny_tconst_window_B1", "tiny_tconst_window_B4"),
+    ("tlin", "tiny_tlin_window_L128_B1", "tiny_tlin_window_L128_B4"),
+])
+def test_batched_window_fold_rows_match_single_lane(tiny_graphs, arch, b1, bN):
+    """The batched-fold contract the Rust SyncExecutor relies on: folding k
+    lanes through the B>1 window graph is bit-identical, row by row, to k
+    single-lane folds through the B1 graph."""
+    cfg = PRESETS["tiny"]
+    g1 = next(g for g in tiny_graphs if g.name == b1)
+    gb = next(g for g in tiny_graphs if g.name == bN)
+    rng = np.random.default_rng(7)
+    batched = []
+    for name, s in gb.args[gb.n_param_args:]:
+        if s.dtype == jnp.int32:
+            if name == "n_valid":
+                v = np.full(s.shape, cfg.w_og, np.int32)
+            elif name == "hist_len":
+                v = np.full(s.shape, 64, np.int32)
+            else:
+                v = rng.integers(1, 255, size=s.shape).astype(np.int32)
+        elif name == "ctx_gate":
+            v = np.ones(s.shape, np.float32)
+        else:
+            v = rng.standard_normal(s.shape).astype(np.float32) * 0.1
+        batched.append((name, v))
+    out_b = _run_graph(gb, cfg, [v for _, v in batched])
+    for i in range(gb.batch):
+        row = [np.take(v, [i], axis=_BAXIS[n]) for n, v in batched]
+        out_1 = _run_graph(g1, cfg, row)
+        for rn, ob, o1 in zip(gb.results, out_b, out_1):
+            np.testing.assert_array_equal(
+                np.take(ob, [i], axis=_RAXIS[rn]), o1,
+                err_msg=f"{arch} row {i} result {rn}")
 
 
 def test_tensorio_roundtrip():

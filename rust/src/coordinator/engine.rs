@@ -65,15 +65,20 @@ pub struct EngineConfig {
     /// Host-arena vs device-arena staging of the resident slabs (ignored
     /// when `resident` is false).
     pub staging: ArenaStaging,
-    /// Run the TConst periodic window fold on a background execution
-    /// stream (DESIGN.md D9): the syncing lane rides decode rounds as a
+    /// Run the periodic window fold on a background execution stream
+    /// (DESIGN.md D9): the syncing lane rides decode rounds as a
     /// masked row while its fold executes concurrently, turning the
     /// every-W_og-th-token latency spike into overlap. Applies only where
-    /// supported (resident TConst arenas in Incremental sync mode); other
+    /// supported (resident TConst/TLin arenas in Incremental sync mode); other
     /// configurations sync in-line regardless. `false` forces the
     /// synchronous control arm (the A/B baseline for bit-identity tests
     /// and the bench's spike measurement).
     pub overlap_sync: bool,
+    /// Submit all of a decode round's window-full lanes as **one** batched
+    /// background fold execution (DESIGN.md D12) instead of one per lane.
+    /// `false` is the per-lane A/B control arm (`--sync-batch=0`); streams
+    /// are bit-identical either way. Ignored when `overlap_sync` is off.
+    pub sync_batch: bool,
     /// Idle parked sessions older than this are evicted (DESIGN.md D6).
     pub session_ttl: Duration,
     /// Parallel arena workers behind the session-affine router
@@ -129,6 +134,7 @@ impl Default for EngineConfig {
             resident: true,
             staging: ArenaStaging::DeviceArena,
             overlap_sync: true,
+            sync_batch: true,
             session_ttl: Duration::from_secs(600),
             workers: 1,
             session_rate: 0.0,

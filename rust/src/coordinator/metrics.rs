@@ -47,6 +47,14 @@ pub struct EngineMetrics {
     /// the next round boundary); a rising mean signals the background
     /// stream falling behind decode.
     pub sync_commit_wait_rounds: u64,
+    /// Batched background folds (DESIGN.md D12): background **executions**
+    /// issued for rounds where batching actually coalesced lanes (i.e. the
+    /// round submitted fewer executions than window-full lanes). 0 with
+    /// `--sync-batch=0` or when every round has at most one full lane.
+    pub sync_folds_batched_total: u64,
+    /// Window-full lanes per coalesced round (the batch-size distribution
+    /// behind `sync_folds_batched_total`).
+    pub sync_batch_size: Percentiles,
     /// Executions that ran with at least one donated (input/output
     /// aliased) buffer, mirrored from the worker's own runtime. Folds
     /// executed on the background stream's runtime are not included.
@@ -152,6 +160,8 @@ impl Default for EngineMetrics {
             park_compactions: 0,
             sync_overlapped_total: 0,
             sync_commit_wait_rounds: 0,
+            sync_folds_batched_total: 0,
+            sync_batch_size: Percentiles::default(),
             donated_executions: 0,
             chunked_prefill_rounds: 0,
             idle_wakeups_message: 0,
@@ -299,6 +309,18 @@ impl EngineMetrics {
                 "sync_commit_wait_rounds",
                 Json::num(self.sync_commit_wait_rounds as f64),
             ),
+            (
+                "sync_folds_batched_total",
+                Json::num(self.sync_folds_batched_total as f64),
+            ),
+            (
+                "sync_batch_size_p50",
+                Json::num(nan0(self.sync_batch_size.p50())),
+            ),
+            (
+                "sync_batch_size_max",
+                Json::num(nan0(self.sync_batch_size.percentile(100.0))),
+            ),
             ("donated_executions", Json::num(self.donated_executions as f64)),
             (
                 "chunked_prefill_rounds",
@@ -437,6 +459,7 @@ const SUM_KEYS: &[&str] = &[
     "park_compactions",
     "sync_overlapped_total",
     "sync_commit_wait_rounds",
+    "sync_folds_batched_total",
     "donated_executions",
     "chunked_prefill_rounds",
     "idle_wakeups_message",
@@ -463,6 +486,8 @@ const AVG_KEYS: &[&str] = &[
     "total_ms_p95",
     "per_token_ms_p50",
     "round_ms_mean",
+    "sync_batch_size_p50",
+    "sync_batch_size_max",
 ];
 
 /// Per-SLO-class TTFT digests: averaged like [`AVG_KEYS`], but weighted

@@ -39,20 +39,23 @@
 //! (`decode_full_group_rounds` / `decode_partial_group_rounds` /
 //! `decode_masked_lane_steps` / `park_compactions`).
 //!
-//! **Overlapped sync (DESIGN.md D9):** where supported (resident TConst
-//! arenas in Incremental mode) the worker owns a
+//! **Overlapped sync (DESIGN.md D9/D12):** where supported (resident
+//! TConst/TLin arenas in Incremental mode) the worker owns a
 //! [`crate::runtime::SyncExecutor`] and the every-`W_og`-th-token window
 //! fold runs on that background stream instead of stalling the decode
 //! round. At each round boundary `overlap_boundary` lands finished folds
 //! (re-opening their lanes), submits folds for lanes whose window just
-//! filled, and lets still-pending lanes ride the round as masked rows —
-//! the same D8 machinery parked lanes use, so the full-slab adoption
-//! path survives. The only blocking wait is the progress guarantee
-//! (every lane of the round pending, none landed). Per-lane token and
-//! graph-input sequences are unchanged by deferral, so overlapped
-//! streams are bit-identical to the `--sync-blocking` control arm.
-//! `/metrics` exposes `sync_overlapped_total`, `sync_commit_wait_rounds`
-//! and `donated_executions`.
+//! filled — **all of them in one batched execution** when `sync_batch`
+//! is on (D12; `--sync-batch=0` is the per-lane control arm) — and lets
+//! still-pending lanes ride the round as masked rows — the same D8
+//! machinery parked lanes use, so the full-slab adoption path survives.
+//! The only blocking wait is the progress guarantee (every lane of the
+//! round pending, none landed). Per-lane token and graph-input sequences
+//! are unchanged by deferral or batching, so overlapped streams are
+//! bit-identical to the `--sync-blocking` control arm in both sync-batch
+//! arms. `/metrics` exposes `sync_overlapped_total`,
+//! `sync_folds_batched_total`, `sync_batch_size_p50/max`,
+//! `sync_commit_wait_rounds` and `donated_executions`.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
@@ -209,9 +212,12 @@ pub struct Worker {
     /// falling back to legacy when no batch bucket covers `max_lanes`).
     resident: bool,
     /// Background sync stream (DESIGN.md D9): `Some` only for resident
-    /// workers whose driver supports the overlapped fold (TConst,
+    /// workers whose driver supports the overlapped fold (TConst/TLin,
     /// Incremental) with `overlap_sync` on. `None` syncs in-line.
     overlap: Option<SyncExecutor>,
+    /// Batch all of a round's window-full lanes into one background fold
+    /// execution (DESIGN.md D12). Off = the per-lane A/B control arm.
+    sync_batch: bool,
     /// Arena slot → round its in-flight fold was submitted (feeds the
     /// `sync_commit_wait_rounds` metric at commit).
     pending_syncs: HashMap<usize, u64>,
@@ -285,8 +291,10 @@ impl Worker {
         }
         // Background sync stream (DESIGN.md D9): a second runtime on its
         // own thread, loading the same artifacts + checkpoint so its folds
-        // are bit-identical to in-line ones. The window graph is warmed
-        // eagerly so the first fold never pays compile latency mid-stream.
+        // are bit-identical to in-line ones. Every fold graph this arch can
+        // submit — all lowered batch variants, and for TLin every history
+        // bucket — is warmed eagerly so neither the first fold nor the
+        // first *batched* fold pays compile latency mid-stream (D12).
         let overlap = if resident && cfg.overlap_sync && driver.overlap_sync_supported() {
             let ex = SyncExecutor::spawn(
                 &cfg.artifacts_dir,
@@ -294,7 +302,26 @@ impl Worker {
                     (cfg.preset.clone(), cfg.arch.as_str().to_string(), ck.clone())
                 }),
             )?;
-            ex.warmup(&rt.manifest.name_tconst_window(&cfg.preset));
+            let m = &rt.manifest;
+            let hist_buckets: Vec<Option<usize>> = match cfg.arch {
+                Arch::TLin => m.buckets(&cfg.preset).into_iter().map(Some).collect(),
+                _ => vec![None],
+            };
+            let mut batches = m.batch_buckets.clone();
+            if !batches.contains(&1) {
+                batches.insert(0, 1);
+            }
+            for bucket in hist_buckets {
+                for &b in &batches {
+                    if let Some(name) =
+                        m.name_window_fold(&cfg.preset, cfg.arch.as_str(), bucket, b)
+                    {
+                        if m.graphs.contains_key(&name) {
+                            ex.warmup(&name);
+                        }
+                    }
+                }
+            }
             Some(ex)
         } else {
             None
@@ -307,6 +334,7 @@ impl Worker {
             max_lanes: cfg.max_lanes,
             resident,
             overlap,
+            sync_batch: cfg.sync_batch,
             pending_syncs: HashMap::new(),
             round: 0,
             session_ttl: cfg.session_ttl,
@@ -1599,17 +1627,37 @@ impl Worker {
         }
 
         // -- submit phase: full windows go to the background stream ---------
+        // With `sync_batch` on (D12), ALL of the round's window-full lanes
+        // go down in one batched fold execution; off is the per-lane A/B
+        // control arm. Either way each lane holds its own commit ticket,
+        // so the commit phase above is arm-agnostic.
         let w = self.driver.cfg.w_og;
         let full_idx: Vec<usize> = {
             let arena = self.kv.arena().context("resident pool lost its arena")?;
             (0..slots.len()).filter(|&i| arena.lanes[slots[i]].fill >= w).collect()
         };
         if !full_idx.is_empty() {
-            for &i in &full_idx {
+            let full_slots: Vec<usize> = full_idx.iter().map(|&i| slots[i]).collect();
+            if self.sync_batch && full_slots.len() > 1 {
                 let ex = self.overlap.as_mut().context("overlap executor vanished")?;
                 let arena = self.kv.arena_mut().context("resident pool lost its arena")?;
-                self.driver.begin_sync_resident(&mut self.rt, arena, ex, slots[i])?;
-                self.pending_syncs.insert(slots[i], round);
+                let execs = self
+                    .driver
+                    .begin_sync_resident_batch(&mut self.rt, arena, ex, &full_slots)?;
+                if execs < full_slots.len() {
+                    self.metrics.sync_folds_batched_total += execs as u64;
+                    self.metrics.sync_batch_size.add(full_slots.len() as f64);
+                }
+            } else {
+                for &slot in &full_slots {
+                    let ex = self.overlap.as_mut().context("overlap executor vanished")?;
+                    let arena =
+                        self.kv.arena_mut().context("resident pool lost its arena")?;
+                    self.driver.begin_sync_resident(&mut self.rt, arena, ex, slot)?;
+                }
+            }
+            for &slot in &full_slots {
+                self.pending_syncs.insert(slot, round);
                 self.metrics.sync_overlapped_total += 1;
             }
             remove_indices(ids, &full_idx);

@@ -86,6 +86,7 @@ fn engine_cfg_from(args: &tconstformer::util::cli::Args) -> Result<EngineConfig>
             ArenaStaging::DeviceArena
         },
         overlap_sync: !args.flag("sync-blocking"),
+        sync_batch: args.get_or("sync-batch", "1") != "0",
         session_ttl: std::time::Duration::from_secs(
             args.get_usize("session-ttl", 600)? as u64
         ),
@@ -120,9 +121,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt("store-dir", "persistent session store directory: TTL-expired sessions demote to disk snapshots there and survive restarts (off when unset)")
         .opt_default("store-cap-bytes", "disk-tier capacity cap in bytes, LRU-evicted (0 = unlimited)", "0")
         .opt_default("store-ttl", "disk-tier snapshot TTL in seconds (0 = none)", "0")
+        .opt_default("sync-batch", "batch a round's window-full lanes into one background fold execution (0 = one execution per lane, the D12 control arm)", "1")
         .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)")
         .flag("host-arena", "stage resident arena slabs on the host (disable device residency)")
-        .flag("sync-blocking", "fold TConst windows in-line instead of on the background sync stream (D9 control arm)");
+        .flag("sync-blocking", "fold windows in-line instead of on the background sync stream (D9 control arm)");
     let args = cmd.parse(rest)?;
     let cfg = engine_cfg_from(&args)?;
     println!(
@@ -167,9 +169,10 @@ fn cmd_gen(rest: &[String]) -> Result<()> {
         .opt_default("max-new-tokens", "tokens to generate", "64")
         .opt_default("temperature", "sampling temperature (0=greedy)", "0")
         .opt("checkpoint", "trained checkpoint stem to load")
+        .opt_default("sync-batch", "batch a round's window-full lanes into one background fold execution (0 = one execution per lane, the D12 control arm)", "1")
         .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)")
         .flag("host-arena", "stage resident arena slabs on the host (disable device residency)")
-        .flag("sync-blocking", "fold TConst windows in-line instead of on the background sync stream (D9 control arm)");
+        .flag("sync-blocking", "fold windows in-line instead of on the background sync stream (D9 control arm)");
     let args = cmd.parse(rest)?;
     let cfg = engine_cfg_from(&args)?;
     let mut engine = Engine::new(&cfg)?;

@@ -1068,12 +1068,8 @@ impl LaneArena {
     }
 
     /// Submit lane `slot`'s full generation window to the background sync
-    /// stream instead of folding it in-line (DESIGN.md D9). The window
-    /// empties immediately (`fill = 0` — the same post-sync lane clock an
-    /// in-line [`Self::sync_slot`] would leave), so the lane satisfies the
-    /// D8 masking invariant and rides subsequent decode rounds as a masked
-    /// row until [`Self::commit_sync_overlap`]. Incremental-mode TConst
-    /// only: the Full ablation's O(N) recompression stays synchronous.
+    /// stream instead of folding it in-line (DESIGN.md D9). Single-lane
+    /// convenience over [`Self::begin_sync_overlap_batch`].
     pub fn begin_sync_overlap(
         &mut self,
         drv: &ModelDriver,
@@ -1081,58 +1077,239 @@ impl LaneArena {
         ex: &mut crate::runtime::SyncExecutor,
         slot: usize,
     ) -> Result<()> {
-        if self.arch != Arch::TConst || drv.sync_mode != SyncMode::Incremental {
-            bail!("overlapped sync requires a TConst arena in Incremental sync mode");
+        self.begin_sync_overlap_batch(drv, rt, ex, &[slot]).map(|_| ())
+    }
+
+    /// Submit every lane in `slots` (each with a full generation window) to
+    /// the background sync stream as **one batched execution** (DESIGN.md
+    /// D12): the lanes' windows and context rows are packed batch-major
+    /// into the smallest lowered fold-batch bucket that fits, padding rows
+    /// (zero tokens, `n_valid = 0`, gate 0 — the D8 masked-row recipe)
+    /// filling the remainder. Each lane gets its own commit ticket, so
+    /// [`Self::commit_sync_overlap`] and park/evict lifecycles see no
+    /// difference from per-lane submission. The windows empty immediately
+    /// (`fill = 0` — the same post-sync lane clock an in-line
+    /// [`Self::sync_slot`] would leave), so the lanes satisfy the D8
+    /// masking invariant and ride subsequent decode rounds as masked rows
+    /// until committed. Incremental-mode TConst/TLin only: the Full
+    /// ablation's O(N) recompression stays synchronous.
+    ///
+    /// Returns the number of executor executions submitted: 1 when a
+    /// batched graph covers the group, `> 1` only when the artifact set
+    /// lacks a large-enough fold-batch bucket and the group is split.
+    pub fn begin_sync_overlap_batch(
+        &mut self,
+        drv: &ModelDriver,
+        rt: &mut Runtime,
+        ex: &mut crate::runtime::SyncExecutor,
+        slots: &[usize],
+    ) -> Result<usize> {
+        if !matches!(self.arch, Arch::TConst | Arch::TLin)
+            || drv.sync_mode != SyncMode::Incremental
+        {
+            bail!("overlapped sync requires a TConst/TLin arena in Incremental sync mode");
         }
-        if slot >= self.cap || !self.lanes[slot].occupied {
-            bail!("begin_sync_overlap on unoccupied arena slot {slot}");
+        if slots.is_empty() {
+            bail!("begin_sync_overlap_batch with no lanes");
         }
-        let m = &self.lanes[slot];
-        if m.parked {
-            bail!("begin_sync_overlap on parked arena slot {slot}");
+        let w = self.cfg.w_og;
+        // Validate every lane before mutating any: a bail here must leave
+        // the whole group untouched.
+        let mut seen = vec![false; self.cap];
+        for &slot in slots {
+            if slot >= self.cap || !self.lanes[slot].occupied {
+                bail!("begin_sync_overlap on unoccupied arena slot {slot}");
+            }
+            let m = &self.lanes[slot];
+            if m.parked {
+                bail!("begin_sync_overlap on parked arena slot {slot}");
+            }
+            if m.sync_ticket.is_some() {
+                bail!("begin_sync_overlap on arena slot {slot} with a sync already in flight");
+            }
+            if m.fill != w {
+                bail!("begin_sync_overlap with {}/{} window tokens", m.fill, w);
+            }
+            if seen[slot] {
+                bail!("duplicate arena slot {slot} in batched sync");
+            }
+            seen[slot] = true;
         }
-        if m.sync_ticket.is_some() {
-            bail!("begin_sync_overlap on arena slot {slot} with a sync already in flight");
-        }
-        if m.fill != self.cfg.w_og {
-            bail!(
-                "begin_sync_overlap with {}/{} window tokens",
-                m.fill,
-                self.cfg.w_og
-            );
-        }
-        // The fold reads only the context slabs; steady-state decode never
-        // adopts those on device (only gen_k/gen_v rotate), so this
-        // download is a no-op outside the boundary step itself.
-        self.ensure_host(rt, &["ctx_k", "ctx_v", "ctx_sum"])?;
+        // TLin: one fold graph serves the whole batch, so its history
+        // bucket must fit the longest lane. The arena slab is grown to
+        // match when a lane reached a full window without ever decoding
+        // (monotone, same migration event decode_tlin performs).
+        let arch_name = if self.arch == Arch::TLin { "tlin" } else { "tconst" };
+        let fold_bucket = if self.arch == Arch::TLin {
+            let need = slots
+                .iter()
+                .map(|&s| self.lanes[s].hist_len)
+                .max()
+                .unwrap()
+                .max(1);
+            let target = rt
+                .manifest
+                .bucket_for(&drv.preset, need)
+                .with_context(|| format!("history {need} exceeds largest bucket"))?;
+            let grew = {
+                let ArenaState::TLin { hist_k, hist_v, hist_bucket, .. } = &mut self.state
+                else {
+                    unreachable!()
+                };
+                if *hist_bucket < target {
+                    *hist_k = grow_axis(hist_k, 2, target)?;
+                    *hist_v = grow_axis(hist_v, 2, target)?;
+                    *hist_bucket = target;
+                    true
+                } else {
+                    false
+                }
+            };
+            if grew {
+                if let Some(dev) = self.device.as_mut() {
+                    dev.flags.host_wrote("hist_k");
+                    dev.flags.host_wrote("hist_v");
+                }
+            }
+            Some(target)
+        } else {
+            None
+        };
+        let bsz = match rt
+            .manifest
+            .window_fold_batch_for(&drv.preset, arch_name, fold_bucket, slots.len())
+        {
+            Some(b) => b,
+            None => {
+                // No single lowered graph covers this many lanes (older
+                // artifact set, or a group beyond the largest fold-batch
+                // bucket): split into the largest available chunks. Each
+                // chunk then resolves a bucket, so recursion is one level.
+                let largest = rt
+                    .manifest
+                    .batch_buckets
+                    .iter()
+                    .rev()
+                    .copied()
+                    .find(|&b| {
+                        rt.manifest
+                            .name_window_fold(&drv.preset, arch_name, fold_bucket, b)
+                            .is_some_and(|nm| rt.manifest.graphs.contains_key(&nm))
+                    })
+                    .context("no window-fold graph in the artifact set")?;
+                let mut execs = 0;
+                for chunk in slots.chunks(largest) {
+                    execs += self.begin_sync_overlap_batch(drv, rt, ex, chunk)?;
+                }
+                return Ok(execs);
+            }
+        };
+        // The fold reads only the context (and TLin history) slabs;
+        // steady-state decode never adopts those on device (only
+        // gen_k/gen_v rotate), so this download is a no-op outside the
+        // boundary step itself.
+        let keys: &[&str] = if self.arch == Arch::TLin {
+            &["ctx_k", "ctx_v", "ctx_sum", "hist_k", "hist_v"]
+        } else {
+            &["ctx_k", "ctx_v", "ctx_sum"]
+        };
+        self.ensure_host(rt, keys)?;
         let (nb, h1) = (self.cfg.n_block, self.cfg.h_inner + 1);
         let (woh, d) = (self.cfg.w_oh, self.cfg.d_model);
-        let ArenaState::TConst(slabs) = &self.state else { unreachable!() };
-        let ctx_k = read_block(&slabs.ctx_k, &[0, 0, slot, 0, 0], &[nb, h1, 1, woh, d])?;
-        let ctx_v = read_block(&slabs.ctx_v, &[0, 0, slot, 0, 0], &[nb, h1, 1, woh, d])?;
-        let ctx_sum = read_block(&slabs.ctx_sum, &[0, slot, 0, 0], &[nb, 1, woh, d])?;
-        let m = &mut self.lanes[slot];
-        let chunk = std::mem::take(&mut m.window_tokens);
-        let gate = m.gate;
-        let (name, args) =
-            tconstformer::fold_args(drv, rt, &chunk, ctx_k, ctx_v, ctx_sum, gate)?;
-        let ticket = ex.submit(&name, args)?;
-        let m = &mut self.lanes[slot];
-        m.fill = 0;
-        m.sync_ticket = Some(ticket);
-        Ok(())
+        let mut ctx_k = HostTensor::zeros_f32(&[nb, h1, bsz, woh, d]);
+        let mut ctx_v = HostTensor::zeros_f32(&[nb, h1, bsz, woh, d]);
+        let mut ctx_sum = HostTensor::zeros_f32(&[nb, bsz, woh, d]);
+        let mut hist = fold_bucket
+            .map(|l| {
+                (
+                    HostTensor::zeros_f32(&[nb, bsz, l, d]),
+                    HostTensor::zeros_f32(&[nb, bsz, l, d]),
+                )
+            });
+        match &self.state {
+            ArenaState::TConst(slabs) => {
+                for (i, &slot) in slots.iter().enumerate() {
+                    copy_block(&mut ctx_k, &[0, 0, i, 0, 0], &slabs.ctx_k,
+                               &[0, 0, slot, 0, 0], &[nb, h1, 1, woh, d])?;
+                    copy_block(&mut ctx_v, &[0, 0, i, 0, 0], &slabs.ctx_v,
+                               &[0, 0, slot, 0, 0], &[nb, h1, 1, woh, d])?;
+                    copy_block(&mut ctx_sum, &[0, i, 0, 0], &slabs.ctx_sum,
+                               &[0, slot, 0, 0], &[nb, 1, woh, d])?;
+                }
+            }
+            ArenaState::TLin { inner, hist_k, hist_v, .. } => {
+                let l = fold_bucket.unwrap();
+                let (bk, bv) = hist.as_mut().unwrap();
+                for (i, &slot) in slots.iter().enumerate() {
+                    copy_block(&mut ctx_k, &[0, 0, i, 0, 0], &inner.ctx_k,
+                               &[0, 0, slot, 0, 0], &[nb, h1, 1, woh, d])?;
+                    copy_block(&mut ctx_v, &[0, 0, i, 0, 0], &inner.ctx_v,
+                               &[0, 0, slot, 0, 0], &[nb, h1, 1, woh, d])?;
+                    copy_block(&mut ctx_sum, &[0, i, 0, 0], &inner.ctx_sum,
+                               &[0, slot, 0, 0], &[nb, 1, woh, d])?;
+                    copy_block(bk, &[0, i, 0, 0], hist_k,
+                               &[0, slot, 0, 0], &[nb, 1, l, d])?;
+                    copy_block(bv, &[0, i, 0, 0], hist_v,
+                               &[0, slot, 0, 0], &[nb, 1, l, d])?;
+                }
+            }
+            ArenaState::Base { .. } => unreachable!(),
+        }
+        let mut toks = vec![0i32; bsz * w];
+        let mut nv = vec![0i32; bsz];
+        let mut gate = vec![0f32; bsz];
+        let mut hlen = vec![0i32; bsz];
+        for (i, &slot) in slots.iter().enumerate() {
+            let m = &mut self.lanes[slot];
+            let chunk = std::mem::take(&mut m.window_tokens);
+            if chunk.len() != w {
+                bail!("begin_sync_overlap with {}/{} window tokens", chunk.len(), w);
+            }
+            toks[i * w..(i + 1) * w].copy_from_slice(&chunk);
+            nv[i] = w as i32;
+            gate[i] = m.gate;
+            hlen[i] = m.hist_len as i32;
+        }
+        let name = rt
+            .manifest
+            .name_window_fold(&drv.preset, arch_name, fold_bucket, bsz)
+            .context("window fold name")?;
+        let toks_t = HostTensor::from_i32(&[bsz, w], toks)?;
+        let nv_t = HostTensor::from_i32(&[bsz], nv)?;
+        let gate_t = HostTensor::from_f32(&[bsz], gate)?;
+        let args = match hist {
+            None => vec![toks_t, nv_t, ctx_k, ctx_v, ctx_sum, gate_t],
+            Some((bk, bv)) => vec![
+                toks_t, nv_t, ctx_k, ctx_v, ctx_sum, gate_t,
+                bk, bv, HostTensor::from_i32(&[bsz], hlen)?,
+            ],
+        };
+        let tickets = ex.submit_batch(&name, args, slots.len())?;
+        for (i, &slot) in slots.iter().enumerate() {
+            let m = &mut self.lanes[slot];
+            m.fill = 0;
+            m.sync_ticket = Some(tickets[i]);
+        }
+        Ok(1)
     }
 
     /// Land an overlapped window fold: blocks until the background result
     /// arrives (a no-op when it already did — poll [`Self::sync_ticket`]
-    /// with `is_done` to avoid the wait), writes the folded context into
-    /// the lane's slab rows, and re-opens the lane for decode. Commits
-    /// touch **only** the three context slabs — the fold does not produce
-    /// a generation window (its stale bytes are masked by `fill = 0`,
-    /// exactly as after an in-line sync), so the steady-state gen_k/gen_v
-    /// rotation and its zero-transfer property are untouched.
+    /// with `is_done` to avoid the wait), writes the lane's row of the
+    /// folded context into its slab rows, and re-opens the lane for
+    /// decode. TConst commits touch **only** the three context slabs — the
+    /// fold does not produce a generation window (its stale bytes are
+    /// masked by `fill = 0`, exactly as after an in-line sync), so the
+    /// steady-state gen_k/gen_v rotation and its zero-transfer property
+    /// are untouched. A TLin fold additionally appends the window's raw
+    /// K/V to the lane's history; the context adoption, the history
+    /// splice, and the `hist_len` advance all happen inside this one
+    /// `&mut self` call — no decode round can observe the new context
+    /// without the matching history rows (the D12 commit-atomicity
+    /// invariant).
     pub fn commit_sync_overlap(
         &mut self,
+        drv: &ModelDriver,
         rt: &mut Runtime,
         ex: &mut crate::runtime::SyncExecutor,
         slot: usize,
@@ -1143,31 +1320,77 @@ impl LaneArena {
         let Some(ticket) = self.lanes[slot].sync_ticket.take() else {
             bail!("commit_sync_overlap on arena slot {slot} with no sync in flight");
         };
-        let mut out = ex.wait(ticket)?;
-        // results: logits, gen_k, gen_v, new_ctx_k, new_ctx_v, new_ctx_sum
-        if out.len() != 6 {
-            bail!("window fold returned {} results, expected 6", out.len());
-        }
-        let ctx_sum = out.pop().context("ctx_sum")?;
-        let ctx_v = out.pop().context("ctx_v")?;
-        let ctx_k = out.pop().context("ctx_k")?;
-        self.ensure_host(rt, &["ctx_k", "ctx_v", "ctx_sum"])?;
-        {
-            let ArenaState::TConst(slabs) = &mut self.state else {
-                bail!("commit_sync_overlap on a non-tconst arena")
-            };
-            insert_axis(&mut slabs.ctx_k, &ctx_k, 2, slot)?;
-            insert_axis(&mut slabs.ctx_v, &ctx_v, 2, slot)?;
-            insert_axis(&mut slabs.ctx_sum, &ctx_sum, 1, slot)?;
+        let fold = ex.wait(ticket)?;
+        let (out, r) = (&fold.out, fold.row);
+        let (nb, h1) = (self.cfg.n_block, self.cfg.h_inner + 1);
+        let (woh, d) = (self.cfg.w_oh, self.cfg.d_model);
+        match self.arch {
+            Arch::TConst => {
+                // results: logits, gen_k, gen_v, new_ctx_k/v/sum
+                if out.len() != 6 {
+                    bail!("window fold returned {} results, expected 6", out.len());
+                }
+                self.ensure_host(rt, &["ctx_k", "ctx_v", "ctx_sum"])?;
+                let ArenaState::TConst(slabs) = &mut self.state else {
+                    bail!("commit_sync_overlap arch mismatch")
+                };
+                copy_block(&mut slabs.ctx_k, &[0, 0, slot, 0, 0], &out[3],
+                           &[0, 0, r, 0, 0], &[nb, h1, 1, woh, d])?;
+                copy_block(&mut slabs.ctx_v, &[0, 0, slot, 0, 0], &out[4],
+                           &[0, 0, r, 0, 0], &[nb, h1, 1, woh, d])?;
+                copy_block(&mut slabs.ctx_sum, &[0, slot, 0, 0], &out[5],
+                           &[0, r, 0, 0], &[nb, 1, woh, d])?;
+                if let Some(dev) = self.device.as_mut() {
+                    for k in ["ctx_k", "ctx_v", "ctx_sum"] {
+                        dev.flags.host_wrote(k);
+                    }
+                }
+            }
+            Arch::TLin => {
+                // results: ... new_ctx_k/v/sum, append_k, append_v
+                if out.len() != 8 {
+                    bail!("tlin window fold returned {} results, expected 8", out.len());
+                }
+                let w = self.cfg.w_og;
+                let hist_len = self.lanes[slot].hist_len;
+                let target = rt
+                    .manifest
+                    .bucket_for(&drv.preset, (hist_len + w).max(1))
+                    .with_context(|| {
+                        format!("history {} exceeds largest bucket", hist_len + w)
+                    })?;
+                self.ensure_host(rt, &["ctx_k", "ctx_v", "ctx_sum", "hist_k", "hist_v"])?;
+                let ArenaState::TLin { inner, hist_k, hist_v, hist_bucket } = &mut self.state
+                else {
+                    bail!("commit_sync_overlap arch mismatch")
+                };
+                if *hist_bucket < target {
+                    *hist_k = grow_axis(hist_k, 2, target)?;
+                    *hist_v = grow_axis(hist_v, 2, target)?;
+                    *hist_bucket = target;
+                }
+                copy_block(&mut inner.ctx_k, &[0, 0, slot, 0, 0], &out[3],
+                           &[0, 0, r, 0, 0], &[nb, h1, 1, woh, d])?;
+                copy_block(&mut inner.ctx_v, &[0, 0, slot, 0, 0], &out[4],
+                           &[0, 0, r, 0, 0], &[nb, h1, 1, woh, d])?;
+                copy_block(&mut inner.ctx_sum, &[0, slot, 0, 0], &out[5],
+                           &[0, r, 0, 0], &[nb, 1, woh, d])?;
+                copy_block(hist_k, &[0, slot, hist_len, 0], &out[6],
+                           &[0, r, 0, 0], &[nb, 1, w, d])?;
+                copy_block(hist_v, &[0, slot, hist_len, 0], &out[7],
+                           &[0, r, 0, 0], &[nb, 1, w, d])?;
+                self.lanes[slot].hist_len = hist_len + w;
+                if let Some(dev) = self.device.as_mut() {
+                    for k in ["ctx_k", "ctx_v", "ctx_sum", "hist_k", "hist_v"] {
+                        dev.flags.host_wrote(k);
+                    }
+                }
+            }
+            Arch::Base => bail!("commit_sync_overlap on a baseline arena"),
         }
         let m = &mut self.lanes[slot];
         m.gate = 1.0;
         m.syncs += 1;
-        if let Some(dev) = self.device.as_mut() {
-            for k in ["ctx_k", "ctx_v", "ctx_sum"] {
-                dev.flags.host_wrote(k);
-            }
-        }
         Ok(())
     }
 

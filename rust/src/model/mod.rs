@@ -275,12 +275,14 @@ impl ModelDriver {
     }
 
     /// Whether this driver's periodic sync can run on the background
-    /// stream (DESIGN.md D9): TConst in Incremental mode — the O(1) fold
-    /// the paper's schedule amortizes. The Full ablation's O(N)
-    /// recompression and TLin/Base (which have no window fold) stay
-    /// synchronous.
+    /// stream (DESIGN.md D9/D12): TConst or TLin in Incremental mode —
+    /// the window fold the paper's schedule amortizes (for TLin the fold
+    /// also appends raw history; the commit splices it atomically). The
+    /// Full ablation's O(N) recompression and Base (which has no window
+    /// fold) stay synchronous.
     pub fn overlap_sync_supported(&self) -> bool {
-        self.arch == Arch::TConst && self.sync_mode == SyncMode::Incremental
+        matches!(self.arch, Arch::TConst | Arch::TLin)
+            && self.sync_mode == SyncMode::Incremental
     }
 
     /// Submit a resident lane's full generation window to the background
@@ -296,9 +298,25 @@ impl ModelDriver {
         arena.begin_sync_overlap(self, rt, ex, slot)
     }
 
+    /// Submit a whole round's window-full lanes to the background sync
+    /// stream as one batched fold execution (DESIGN.md D12); each lane
+    /// still commits independently through [`Self::commit_sync_resident`].
+    /// Returns the number of executor executions submitted (1 unless the
+    /// artifact set forces a split).
+    pub fn begin_sync_resident_batch(
+        &self,
+        rt: &mut Runtime,
+        arena: &mut LaneArena,
+        ex: &mut crate::runtime::SyncExecutor,
+        slots: &[usize],
+    ) -> Result<usize> {
+        arena.begin_sync_overlap_batch(self, rt, ex, slots)
+    }
+
     /// Land a lane's overlapped window fold, committing the folded context
-    /// and re-opening the lane for decode (blocks if the fold is still in
-    /// flight — poll [`LaneArena::sync_ticket`] to avoid the wait).
+    /// (and, for TLin, the history append) and re-opening the lane for
+    /// decode (blocks if the fold is still in flight — poll
+    /// [`LaneArena::sync_ticket`] to avoid the wait).
     pub fn commit_sync_resident(
         &self,
         rt: &mut Runtime,
@@ -306,7 +324,7 @@ impl ModelDriver {
         ex: &mut crate::runtime::SyncExecutor,
         slot: usize,
     ) -> Result<()> {
-        arena.commit_sync_overlap(rt, ex, slot)
+        arena.commit_sync_overlap(self, rt, ex, slot)
     }
 
     /// Park a resident lane at a turn boundary (DESIGN.md D6/D8): marks it

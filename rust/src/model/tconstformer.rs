@@ -66,34 +66,6 @@ pub(crate) fn run_window_raw(
     rt.execute(&name, &[&toks, &nv, ctx_k, ctx_v, ctx_sum, &gate])
 }
 
-/// Assemble the window-fold graph call as **owned** tensors for the
-/// background sync stream (DESIGN.md D9): the graph name plus its six
-/// arguments `[toks, nv, ctx_k, ctx_v, ctx_sum, gate]`, exactly as
-/// [`run_window_raw`] would feed them. The context tensors are moved in
-/// (the arena extracts the lane's rows) so the whole bundle is `Send` and
-/// can cross to the [`crate::runtime::SyncExecutor`] thread. Same graph,
-/// same inputs, same deterministic backend ⇒ the overlapped fold's
-/// results are bit-identical to an in-line [`sync`].
-pub(crate) fn fold_args(
-    drv: &ModelDriver,
-    rt: &Runtime,
-    chunk: &[i32],
-    ctx_k: HostTensor,
-    ctx_v: HostTensor,
-    ctx_sum: HostTensor,
-    ctx_gate: f32,
-) -> Result<(String, Vec<HostTensor>)> {
-    let w = drv.cfg.w_og;
-    if chunk.is_empty() || chunk.len() > w {
-        bail!("fold_args with {}/{} window tokens", chunk.len(), w);
-    }
-    let name = rt.manifest.name_tconst_window(&drv.preset);
-    let toks = window_tokens_tensor(chunk, w)?;
-    let nv = HostTensor::from_i32(&[1], vec![chunk.len() as i32])?;
-    let gate = HostTensor::from_f32(&[1], vec![ctx_gate])?;
-    Ok((name, vec![toks, nv, ctx_k, ctx_v, ctx_sum, gate]))
-}
-
 /// [`run_window_raw`] against a state. `chunk = None` folds the state's
 /// own `window_tokens` (the sync path) — taking the chunk through the
 /// state avoids cloning it just to appease the borrow checker.

@@ -296,7 +296,11 @@ impl Manifest {
     }
 
     pub fn name_tconst_window(&self, preset: &str) -> String {
-        format!("{preset}_tconst_window_B1")
+        self.name_tconst_window_b(preset, 1)
+    }
+
+    pub fn name_tconst_window_b(&self, preset: &str, batch: usize) -> String {
+        format!("{preset}_tconst_window_B{batch}")
     }
 
     pub fn name_tconst_decode(&self, preset: &str, batch: usize) -> String {
@@ -308,7 +312,48 @@ impl Manifest {
     }
 
     pub fn name_tlin_window(&self, preset: &str, bucket: usize) -> String {
-        format!("{preset}_tlin_window_L{bucket}_B1")
+        self.name_tlin_window_b(preset, bucket, 1)
+    }
+
+    pub fn name_tlin_window_b(&self, preset: &str, bucket: usize, batch: usize) -> String {
+        format!("{preset}_tlin_window_L{bucket}_B{batch}")
+    }
+
+    /// Name of a window-fold graph for `arch` at history bucket `bucket`
+    /// (TLin only; `None` for TConst) and fold batch `batch`.
+    pub fn name_window_fold(
+        &self,
+        preset: &str,
+        arch: &str,
+        bucket: Option<usize>,
+        batch: usize,
+    ) -> Option<String> {
+        match arch {
+            "tconst" => Some(self.name_tconst_window_b(preset, batch)),
+            "tlin" => bucket.map(|l| self.name_tlin_window_b(preset, l, batch)),
+            _ => None,
+        }
+    }
+
+    /// Smallest fold batch bucket that can hold `n` window-full lanes AND
+    /// whose graph actually exists in this artifact set — older manifests
+    /// only carry the B1 folds, in which case callers fall back to per-lane
+    /// submission.
+    pub fn window_fold_batch_for(
+        &self,
+        preset: &str,
+        arch: &str,
+        bucket: Option<usize>,
+        n: usize,
+    ) -> Option<usize> {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .find(|&b| {
+                self.name_window_fold(preset, arch, bucket, b)
+                    .is_some_and(|nm| self.graphs.contains_key(&nm))
+            })
     }
 
     pub fn name_tlin_decode(&self, preset: &str, bucket: usize, batch: usize) -> String {
@@ -345,6 +390,21 @@ impl Manifest {
                 }
                 if d.arg < g.n_param_args {
                     bail!("graph {name}: donation of a parameter arg {}", d.arg);
+                }
+            }
+            // A batched window fold is only usable if its B1 sibling exists
+            // with the same result tuple — the commit path slices rows out
+            // of the batched outputs assuming the single-lane layout.
+            if g.kind == "window" && g.batch > 1 {
+                let sib = self
+                    .name_window_fold(&g.preset, &g.arch, g.bucket, 1)
+                    .with_context(|| format!("graph {name}: window fold of unknown arch"))?;
+                let s = self
+                    .graphs
+                    .get(&sib)
+                    .with_context(|| format!("graph {name}: missing B1 sibling {sib}"))?;
+                if s.results != g.results {
+                    bail!("graph {name}: result tuple differs from B1 sibling {sib}");
                 }
             }
         }

@@ -1,5 +1,5 @@
-//! Overlapped global sync (DESIGN.md D9): a background execution stream
-//! for TConst/TLin window folds.
+//! Overlapped global sync (DESIGN.md D9/D12): a background execution
+//! stream for TConst/TLin window folds.
 //!
 //! TConstFormer's O(1) claim is *amortized* — every `W_og`-th token pays a
 //! window fold (the periodic cache miss). The [`SyncExecutor`] turns that
@@ -10,6 +10,14 @@
 //! against window *n+1*'s prefix. The arena commits the folded context
 //! when the result lands (see `LaneArena::begin_sync_overlap` /
 //! `commit_sync_overlap`).
+//!
+//! Batched folds (D12): a decode round where several lanes hit the window
+//! boundary submits **one** execution through [`SyncExecutor::submit_batch`]
+//! — a batch-major fold graph over all of them — and gets back one ticket
+//! per lane. Each lane commits independently ([`Self::wait`] returns a
+//! [`FoldResult`] naming the lane's row in the shared output tuple), so the
+//! commit path is identical whether the fold ran batched or alone, and a
+//! lane can be committed/parked while its batch-siblings are still pending.
 //!
 //! Why a second runtime rather than an async submit on the main client:
 //! the `xla-rs` binding exposes only a blocking `execute_b`, and the
@@ -22,8 +30,10 @@
 //! on the *same deterministic CPU backend* as the synchronous path, over
 //! inputs extracted at the same schedule point — its outputs are
 //! bit-identical to what `tconstformer::sync` would have produced
-//! in-line. The overlapped stream therefore equals the synchronous stream
-//! bit-for-bit (asserted by `rust/tests/overlap.rs`).
+//! in-line. The batched graphs are row-wise the same math as the B1 fold
+//! (pinned by `python/tests/test_aot.py` and `rust/tests/overlap.rs`), so
+//! the overlapped stream equals the synchronous stream bit-for-bit in
+//! every arm.
 //!
 //! Requests and replies carry plain [`HostTensor`]s (owned `Vec` data, so
 //! `Send`); the fold's host↔device traffic happens on the executor's own
@@ -31,6 +41,7 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
@@ -41,15 +52,25 @@ use super::tensor::HostTensor;
 enum Req {
     /// Compile a graph and upload its params ahead of the first fold.
     Warmup { graph: String },
-    Execute { ticket: u64, graph: String, args: Vec<HostTensor> },
+    Execute { exec: u64, graph: String, args: Vec<HostTensor> },
     Shutdown,
 }
 
 struct Reply {
-    ticket: u64,
+    exec: u64,
     /// Errors cross the thread as strings (`anyhow::Error` is not `Sync`
     /// by construction here and the caller only reports them).
     result: Result<Vec<HostTensor>, String>,
+}
+
+/// One lane's view of a completed (possibly batched) fold: the shared
+/// output tuple plus which batch row belongs to this lane. `rows == 1` and
+/// `row == 0` for a single-lane fold, so commit code can keep using the
+/// `insert_axis`/`read_block` row-slicing path unconditionally.
+pub struct FoldResult {
+    pub out: Arc<Vec<HostTensor>>,
+    pub row: usize,
+    pub rows: usize,
 }
 
 /// Handle to the background sync stream: submit a window fold, keep
@@ -58,11 +79,17 @@ struct Reply {
 pub struct SyncExecutor {
     tx: mpsc::Sender<Req>,
     rx: mpsc::Receiver<Reply>,
-    /// Results that arrived while waiting for a different ticket.
-    ready: HashMap<u64, Result<Vec<HostTensor>, String>>,
+    /// Per-lane ticket -> (execution id, batch row, batch rows).
+    tickets: HashMap<u64, (u64, usize, usize)>,
+    /// Landed executions: shared result + tickets still to collect it.
+    ready: HashMap<u64, (Result<Arc<Vec<HostTensor>>, String>, usize)>,
+    /// Rows (= outstanding tickets) per in-flight execution.
+    exec_rows: HashMap<u64, usize>,
     next_ticket: u64,
+    next_exec: u64,
     submitted: u64,
     collected: u64,
+    executions: u64,
     thread: Option<JoinHandle<()>>,
 }
 
@@ -106,11 +133,11 @@ impl SyncExecutor {
                             // first fold's error, with full context.
                             let _ = rt.warm(&graph);
                         }
-                        Req::Execute { ticket, graph, args } => {
+                        Req::Execute { exec, graph, args } => {
                             let refs: Vec<&HostTensor> = args.iter().collect();
                             let result =
                                 rt.execute(&graph, &refs).map_err(|e| format!("{e:#}"));
-                            if rep_tx.send(Reply { ticket, result }).is_err() {
+                            if rep_tx.send(Reply { exec, result }).is_err() {
                                 return; // handle dropped
                             }
                         }
@@ -125,10 +152,14 @@ impl SyncExecutor {
         Ok(SyncExecutor {
             tx: req_tx,
             rx: rep_rx,
+            tickets: HashMap::new(),
             ready: HashMap::new(),
+            exec_rows: HashMap::new(),
             next_ticket: 1,
+            next_exec: 1,
             submitted: 0,
             collected: 0,
+            executions: 0,
             thread: Some(thread),
         })
     }
@@ -144,29 +175,64 @@ impl SyncExecutor {
     /// [`Self::wait`] on. The inputs are moved to the executor thread —
     /// extract them before mutating the lane they came from.
     pub fn submit(&mut self, graph: &str, args: Vec<HostTensor>) -> Result<u64> {
-        let ticket = self.next_ticket;
-        self.next_ticket += 1;
+        Ok(self.submit_batch(graph, args, 1)?[0])
+    }
+
+    /// Submit ONE execution of a batched fold covering `rows` lanes (batch
+    /// rows `0..rows` of every batch-major arg, padding rows excluded);
+    /// returns one ticket per lane, in row order. Each ticket is waited on
+    /// independently — the shared output tuple is retained (refcounted)
+    /// until every row's ticket has collected it.
+    pub fn submit_batch(
+        &mut self,
+        graph: &str,
+        args: Vec<HostTensor>,
+        rows: usize,
+    ) -> Result<Vec<u64>> {
+        assert!(rows >= 1, "batched fold needs at least one live row");
+        let exec = self.next_exec;
+        self.next_exec += 1;
         self.tx
-            .send(Req::Execute { ticket, graph: graph.to_string(), args })
+            .send(Req::Execute { exec, graph: graph.to_string(), args })
             .ok()
             .context("sync-executor thread gone")?;
-        self.submitted += 1;
-        Ok(ticket)
+        self.executions += 1;
+        self.exec_rows.insert(exec, rows);
+        let mut tickets = Vec::with_capacity(rows);
+        for row in 0..rows {
+            let t = self.next_ticket;
+            self.next_ticket += 1;
+            self.tickets.insert(t, (exec, row, rows));
+            tickets.push(t);
+        }
+        self.submitted += rows as u64;
+        Ok(tickets)
     }
 
     /// Collect a submitted fold's results, blocking until they land.
-    /// Results for *other* tickets arriving meanwhile are stashed, so
-    /// tickets may be waited on in any order.
-    pub fn wait(&mut self, ticket: u64) -> Result<Vec<HostTensor>> {
+    /// Results for *other* executions arriving meanwhile are stashed, so
+    /// tickets may be waited on in any order — including out of row order
+    /// within one batched execution.
+    pub fn wait(&mut self, ticket: u64) -> Result<FoldResult> {
+        let (exec, row, rows) = self
+            .tickets
+            .remove(&ticket)
+            .with_context(|| format!("unknown sync ticket {ticket}"))?;
         loop {
-            if let Some(result) = self.ready.remove(&ticket) {
+            if let Some((result, remaining)) = self.ready.get_mut(&exec) {
                 self.collected += 1;
-                return result.map_err(|e| anyhow::anyhow!("background sync failed: {e}"));
+                let out = result.clone();
+                *remaining -= 1;
+                if *remaining == 0 {
+                    self.ready.remove(&exec);
+                }
+                return match out {
+                    Ok(out) => Ok(FoldResult { out, row, rows }),
+                    Err(e) => bail!("background sync failed: {e}"),
+                };
             }
             match self.rx.recv() {
-                Ok(rep) => {
-                    self.ready.insert(rep.ticket, rep.result);
-                }
+                Ok(rep) => self.stash(rep),
                 Err(_) => bail!("sync-executor thread died with ticket {ticket} in flight"),
             }
         }
@@ -176,14 +242,29 @@ impl SyncExecutor {
     /// it would not block).
     pub fn is_done(&mut self, ticket: u64) -> bool {
         while let Ok(rep) = self.rx.try_recv() {
-            self.ready.insert(rep.ticket, rep.result);
+            self.stash(rep);
         }
-        self.ready.contains_key(&ticket)
+        self.tickets
+            .get(&ticket)
+            .map(|(exec, _, _)| self.ready.contains_key(exec))
+            .unwrap_or(false)
     }
 
-    /// Folds submitted but not yet collected.
+    fn stash(&mut self, rep: Reply) {
+        let rows = self.exec_rows.remove(&rep.exec).unwrap_or(1);
+        self.ready.insert(rep.exec, (rep.result.map(Arc::new), rows));
+    }
+
+    /// Folds (lane-tickets) submitted but not yet collected.
     pub fn in_flight(&self) -> u64 {
         self.submitted - self.collected
+    }
+
+    /// Total executor-thread executions issued — the denominator of the
+    /// batching win: one batched round adds 1 here but `rows` to
+    /// `submitted`. Asserted by the fold-pressure bench.
+    pub fn executions(&self) -> u64 {
+        self.executions
     }
 }
 

@@ -1,13 +1,20 @@
-//! Overlapped-sync and donation invariants (DESIGN.md D9), over the tiny
-//! artifacts (self-skip when absent, like the other artifact-gated suites).
+//! Overlapped-sync and donation invariants (DESIGN.md D9/D12), over the
+//! tiny artifacts (self-skip when absent, like the other artifact-gated
+//! suites).
 //!
 //! * **bit-identity** — streams served with the background sync stream
 //!   must equal the synchronous control arm token-for-token, for all three
 //!   architectures under both stagings (the overlap changes *when* the
 //!   fold runs, never what any lane's graphs see);
+//! * **batched folds** (D12) — one batched background execution over k
+//!   window-full lanes must leave every lane bit-identical to k sequential
+//!   single-lane folds, for TConst and TLin under both stagings, including
+//!   partial batches that ride padded rows (property-tested over k);
 //! * **park/resume** — sessions parked and resumed while the engine runs
 //!   overlapped must match the synchronous arm too (a pending fold is
-//!   always committed before the park boundary);
+//!   always committed before the park boundary), and a lane whose row of a
+//!   shared batched execution is committed can park/resume while a sibling
+//!   row is still in flight;
 //! * **fold equivalence** — one overlapped begin/commit leaves the exact
 //!   ctx slabs an in-line fold produces (same graph, same inputs, second
 //!   PJRT client over the same artifacts);
@@ -21,6 +28,7 @@ use std::time::Duration;
 use tconstformer::coordinator::{ArenaStaging, Engine, EngineConfig, TurnRequest};
 use tconstformer::model::{Arch, ModelDriver, SyncMode};
 use tconstformer::runtime::{Runtime, SyncExecutor};
+use tconstformer::util::proptest::{check, shrinkers};
 
 fn artifacts_dir() -> String {
     std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
@@ -84,20 +92,23 @@ fn overlapped_streams_bit_identical_to_synchronous() {
 }
 
 #[test]
-fn overlap_engages_on_tconst_incremental_only() {
+fn overlap_engages_on_tconst_and_tlin_incremental_only() {
     if !have_artifacts() {
         eprintln!("skipping: no artifacts");
         return;
     }
-    let e = Engine::new(&tiny_cfg(Arch::TConst)).unwrap();
-    assert!(e.is_overlap(), "TConst/Incremental must get the background stream");
-    let e = Engine::new(&EngineConfig { overlap_sync: false, ..tiny_cfg(Arch::TConst) })
-        .unwrap();
-    assert!(!e.is_overlap(), "--sync-blocking must force the control arm");
-    for arch in [Arch::TLin, Arch::Base] {
+    for arch in [Arch::TConst, Arch::TLin] {
         let e = Engine::new(&tiny_cfg(arch)).unwrap();
-        assert!(!e.is_overlap(), "{arch:?} has no window fold to overlap");
+        assert!(
+            e.is_overlap(),
+            "{arch:?}/Incremental must get the background stream"
+        );
+        let e = Engine::new(&EngineConfig { overlap_sync: false, ..tiny_cfg(arch) })
+            .unwrap();
+        assert!(!e.is_overlap(), "--sync-blocking must force the control arm");
     }
+    let e = Engine::new(&tiny_cfg(Arch::Base)).unwrap();
+    assert!(!e.is_overlap(), "Base has no window fold to overlap");
     let e = Engine::new(&EngineConfig {
         sync_mode: SyncMode::Full,
         ..tiny_cfg(Arch::TConst)
@@ -271,6 +282,196 @@ fn boundary_ops_refuse_inflight_sync() {
     // Commit unblocks everything.
     driver.commit_sync_resident(&mut rt, &mut arena, &mut ex, slot).unwrap();
     driver.decode_resident(&mut rt, &mut arena, &[slot], &[tok]).unwrap();
+}
+
+/// Build `k` window-full lanes in a fresh arena, fold them — one batched
+/// background execution or `k` sequential single-lane folds — commit
+/// every row, then decode through the next window. The returned streams
+/// are the bit-identity witness over the folded state (ctx slabs, and for
+/// TLin the spliced history).
+fn fold_k_lanes(
+    rt: &mut Runtime,
+    driver: &ModelDriver,
+    artifacts: &str,
+    k: usize,
+    device: bool,
+    batched: bool,
+) -> Vec<Vec<i32>> {
+    let w = driver.cfg.w_og;
+    let cap = rt
+        .manifest
+        .batch_bucket_for(k)
+        .expect("no batch bucket covers k lanes");
+    let mut arena = driver.new_arena(cap);
+    if device {
+        arena.enable_device(rt);
+    }
+    let mut slots = Vec::new();
+    let mut toks = Vec::new();
+    for i in 0..k {
+        let slot = arena.alloc().unwrap();
+        let mut st = driver.new_state();
+        driver.prefill(rt, &mut st, &prompt(6 + 3 * i, i)).unwrap();
+        arena.load_state(slot, &st).unwrap();
+        // Per-lane decode to exactly window-full (prompt lengths differ,
+        // so lanes reach the boundary at different decode counts).
+        let mut tok = 65i32;
+        while arena.lanes[slot].fill < w {
+            let l = driver.decode_resident(rt, &mut arena, &[slot], &[tok]).unwrap();
+            tok = tconstformer::model::sampler::argmax(&l[0]);
+        }
+        slots.push(slot);
+        toks.push(tok);
+    }
+    let mut ex = SyncExecutor::spawn(artifacts, None).unwrap();
+    if batched {
+        driver
+            .begin_sync_resident_batch(rt, &mut arena, &mut ex, &slots)
+            .unwrap();
+    } else {
+        for &s in &slots {
+            driver.begin_sync_resident(rt, &mut arena, &mut ex, s).unwrap();
+        }
+    }
+    for &s in &slots {
+        driver.commit_sync_resident(rt, &mut arena, &mut ex, s).unwrap();
+    }
+    let mut streams = vec![Vec::new(); k];
+    for _ in 0..(w + 2) {
+        let l = driver.decode_resident(rt, &mut arena, &slots, &toks).unwrap();
+        for i in 0..k {
+            toks[i] = tconstformer::model::sampler::argmax(&l[i]);
+            streams[i].push(toks[i]);
+        }
+    }
+    streams
+}
+
+/// D12 property: a batched background fold of k lanes is bit-identical,
+/// lane by lane, to k sequential single-lane folds — all supported archs,
+/// both stagings, with k spanning bucket and non-bucket (padded-row)
+/// sizes.
+#[test]
+fn batched_fold_bit_identical_to_sequential_folds() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let artifacts = artifacts_dir();
+    let rt = std::cell::RefCell::new(Runtime::load(&artifacts).unwrap());
+    for arch in [Arch::TConst, Arch::TLin] {
+        for device in [true, false] {
+            let driver = {
+                let r = rt.borrow();
+                ModelDriver::new(&r, "tiny", arch).unwrap()
+            };
+            let name = format!(
+                "batched_fold_{arch:?}_{}",
+                if device { "device" } else { "host" }
+            );
+            check(
+                &name,
+                2,
+                42,
+                |r| r.usize(2, 9),
+                shrinkers::usize_toward(2),
+                |&k| {
+                    let rt = &mut *rt.borrow_mut();
+                    let batched = fold_k_lanes(rt, &driver, &artifacts, k, device, true);
+                    let sequential =
+                        fold_k_lanes(rt, &driver, &artifacts, k, device, false);
+                    if batched == sequential {
+                        Ok(())
+                    } else {
+                        Err(format!(
+                            "k={k}: batched fold diverged from sequential folds"
+                        ))
+                    }
+                },
+            );
+        }
+    }
+}
+
+/// D12 lifecycle: rows of one shared batched execution commit
+/// independently. Mid-flight rows refuse park/free/extract; a committed
+/// row can park and resume while its sibling row is still uncommitted;
+/// the sibling then commits normally and both streams match the
+/// sequential control arm.
+#[test]
+fn park_resume_mid_batched_fold_lifecycle() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let artifacts = artifacts_dir();
+    let mut rt = Runtime::load(&artifacts).unwrap();
+    let driver = ModelDriver::new(&rt, "tiny", Arch::TConst).unwrap();
+    let w = driver.cfg.w_og;
+    let cap = rt.manifest.batch_bucket_for(2).unwrap();
+    let mk = |rt: &mut Runtime| {
+        let mut arena = driver.new_arena(cap);
+        let mut slots = Vec::new();
+        let mut toks = Vec::new();
+        for i in 0..2 {
+            let slot = arena.alloc().unwrap();
+            let mut st = driver.new_state();
+            driver.prefill(rt, &mut st, &prompt(8 + 5 * i, i)).unwrap();
+            arena.load_state(slot, &st).unwrap();
+            let mut tok = 65i32;
+            while arena.lanes[slot].fill < w {
+                let l = driver.decode_resident(rt, &mut arena, &[slot], &[tok]).unwrap();
+                tok = tconstformer::model::sampler::argmax(&l[0]);
+            }
+            slots.push(slot);
+            toks.push(tok);
+        }
+        (arena, slots, toks)
+    };
+    let (mut a, a_slots, mut a_toks) = mk(&mut rt);
+    let (mut b, b_slots, mut b_toks) = mk(&mut rt);
+
+    let mut ex = SyncExecutor::spawn(&artifacts, None).unwrap();
+    driver
+        .begin_sync_resident_batch(&mut rt, &mut a, &mut ex, &a_slots)
+        .unwrap();
+    for &s in &a_slots {
+        assert!(a.sync_pending(s));
+        assert!(a.set_parked(s, true).is_err(), "park mid-batched-fold must be refused");
+        assert!(a.free(s).is_err(), "free mid-batched-fold must be refused");
+        assert!(
+            a.extract_state(s).is_err(),
+            "extract mid-batched-fold must be refused"
+        );
+    }
+    // Commit row 0 only: its share of the shared execution lands; the
+    // sibling row stays pending and guarded.
+    driver.commit_sync_resident(&mut rt, &mut a, &mut ex, a_slots[0]).unwrap();
+    assert!(!a.sync_pending(a_slots[0]));
+    assert!(a.sync_pending(a_slots[1]));
+    assert!(
+        a.set_parked(a_slots[1], true).is_err(),
+        "pending sibling must still refuse park"
+    );
+    a.set_parked(a_slots[0], true).unwrap();
+    a.set_parked(a_slots[0], false).unwrap();
+    driver.commit_sync_resident(&mut rt, &mut a, &mut ex, a_slots[1]).unwrap();
+
+    // Sequential control arm on its own executor.
+    let mut ex2 = SyncExecutor::spawn(&artifacts, None).unwrap();
+    for &s in &b_slots {
+        driver.begin_sync_resident(&mut rt, &mut b, &mut ex2, s).unwrap();
+        driver.commit_sync_resident(&mut rt, &mut b, &mut ex2, s).unwrap();
+    }
+    for _ in 0..(w + 2) {
+        let la = driver.decode_resident(&mut rt, &mut a, &a_slots, &a_toks).unwrap();
+        let lb = driver.decode_resident(&mut rt, &mut b, &b_slots, &b_toks).unwrap();
+        assert_eq!(la, lb, "post-fold streams diverged after mid-flight park/resume");
+        for i in 0..2 {
+            a_toks[i] = tconstformer::model::sampler::argmax(&la[i]);
+            b_toks[i] = tconstformer::model::sampler::argmax(&lb[i]);
+        }
+    }
 }
 
 /// Donation parity: the aliased decode graphs are numerically inert —

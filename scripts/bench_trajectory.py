@@ -30,9 +30,15 @@ Modes:
                       --micro micro_metrics.json [--replay replay_metrics.json]
 
 The gate's baseline is the median of the last up-to-5 committed entries for
-the same preset; an empty trajectory (or no entries for this preset) passes
-with a note, so seeding the files as ``[]`` is safe. Noise bands default to
-30% on timing-derived figures (CI runners jitter) and 5% + 64 B on the
+the same preset. An empty trajectory (or no entries for this preset) is
+**seeded from the current run** — the gate appends this run's point as the
+baseline entry and passes with a note, so starting the files as ``[]`` is
+safe and the very next run gates against real numbers. A gated key absent
+from the new run is a hard failure (the bench regressed its own report),
+not a silent pass. The fold-pressure sweep (DESIGN.md D12) additionally
+gates an absolute cross-arm invariant: the batched arm's sync-step p99
+must not exceed the per-lane arm's. Noise bands default to 30% on
+timing-derived figures (CI runners jitter) and 5% + 64 B on the
 byte/fraction meters (near-deterministic). stdlib only.
 """
 
@@ -61,6 +67,8 @@ MICRO_KEYS = [
     ("full_group_round_frac", "frac"),
     ("sync_p99_ms", "time"),
     ("steady_p99_ms", "time"),
+    ("fold_sync_batched_p99_ms", "time"),
+    ("fold_sync_perlane_p99_ms", "time"),
 ]
 TTFT_KEYS = [("cold_ms", "time"), ("resumed_ms", "time")]
 # Replayer-artifact keys (merged into BENCH_ttft.json when --replay is
@@ -82,6 +90,16 @@ def load_json(path, default=None):
         return json.load(f)
 
 
+def require(d, key, where):
+    """A gated key missing from the new run is a bench bug, not a pass."""
+    if not isinstance(d, dict) or key not in d or d[key] is None:
+        raise SystemExit(
+            f"gated key {key!r} is absent from {where} — "
+            "rerun `cargo bench --bench micro` (did the bench drop a report section?)"
+        )
+    return d[key]
+
+
 def overlapped_row(micro):
     for row in micro.get("per_token_latency", []):
         if row.get("arm") == "overlapped":
@@ -97,23 +115,35 @@ def extract_micro_point(micro):
     # present (falls back to the no-parked row on older artifacts).
     withparked = [r for r in park if r.get("parked_lanes", 0) > 0] or park
     frac = min((r["masked_full_group_frac"] for r in withparked), default=0.0)
+    fold = micro.get("fold_pressure")
     return {
-        "tokens_per_s": lat["tokens_per_s"],
-        "copy_bytes_per_step": micro["host_copy_per_step"]["arena_bytes"],
-        "upload_bytes_per_step": micro["device_transfer_per_step"][
-            "device_arena_upload_bytes"
-        ],
+        "tokens_per_s": require(lat, "tokens_per_s", "the overlapped latency row"),
+        "copy_bytes_per_step": require(
+            micro.get("host_copy_per_step"), "arena_bytes", "host_copy_per_step"
+        ),
+        "upload_bytes_per_step": require(
+            micro.get("device_transfer_per_step"),
+            "device_arena_upload_bytes",
+            "device_transfer_per_step",
+        ),
         "full_group_round_frac": frac,
-        "sync_p99_ms": lat["sync_p99_ms"],
-        "steady_p99_ms": lat["steady_p99_ms"],
+        "sync_p99_ms": require(lat, "sync_p99_ms", "the overlapped latency row"),
+        "steady_p99_ms": require(lat, "steady_p99_ms", "the overlapped latency row"),
+        "fold_sync_batched_p99_ms": require(
+            fold, "fold_sync_batched_p99_ms", "the fold_pressure section"
+        ),
+        "fold_sync_perlane_p99_ms": require(
+            fold, "fold_sync_perlane_p99_ms", "the fold_pressure section"
+        ),
     }
 
 
 def extract_ttft_point(micro):
     t = micro.get("ttft")
-    if not t:
-        raise SystemExit("micro_metrics.json has no ttft section")
-    return {"cold_ms": t["cold_ms"], "resumed_ms": t["resumed_ms"]}
+    return {
+        "cold_ms": require(t, "cold_ms", "the ttft section"),
+        "resumed_ms": require(t, "resumed_ms", "the ttft section"),
+    }
 
 
 def extract_replay_point(replay_paths):
@@ -199,6 +229,22 @@ def gate(args):
     for path, (point, keys) in points.items():
         traj = load_json(path, default=[])
         name = os.path.basename(path)
+        for key, _ in keys:
+            # extract_* already hard-fails on structurally missing keys;
+            # this catches a None smuggled through a replay artifact.
+            require(point, key, name)
+        if not any(e.get("preset") == preset for e in traj):
+            # Empty trajectory (or none for this preset): seed the baseline
+            # from this run so the very next gate compares real numbers.
+            traj.append(stamp(point, micro, "seed"))
+            with open(path, "w") as f:
+                json.dump(traj, f, indent=1)
+                f.write("\n")
+            print(
+                f"{name}: no committed entries for preset {preset!r} — "
+                "seeded baseline from this run; pass"
+            )
+            continue
         for key, kind in keys:
             base = baseline(traj, preset, key)
             if base is None:
@@ -209,6 +255,24 @@ def gate(args):
             print(f"{name}/{key}: {detail} — {verdict}")
             if not ok:
                 failures.append(f"{name}/{key}: {detail}")
+    # D12 cross-arm invariant, absolute (not trajectory-relative): under
+    # fold pressure the batched arm's sync-step p99 must not exceed the
+    # per-lane arm it replaces (small band for CI timer jitter).
+    mp = points[MICRO_TRAJ][0]
+    batched = mp["fold_sync_batched_p99_ms"]
+    perlane = mp["fold_sync_perlane_p99_ms"]
+    limit = perlane * 1.10 + 0.05
+    ok = batched <= limit
+    verdict = "ok" if ok else "REGRESSION"
+    print(
+        f"fold_pressure: batched sync p99 {batched:.3f} ms vs per-lane "
+        f"{perlane:.3f} ms (ceil {limit:.3f}) — {verdict}"
+    )
+    if not ok:
+        failures.append(
+            f"fold_pressure: batched sync p99 {batched:.3f} ms exceeds "
+            f"per-lane {perlane:.3f} ms"
+        )
     if failures:
         print(f"\nbench gate FAILED ({len(failures)} regression(s) beyond the noise band)")
         sys.exit(1)
