@@ -31,6 +31,21 @@
 //! the prefill tokens those resumes saved vs replaying cold, and the
 //! store's refusal counters (0 in any healthy run).
 //!
+//! `mode = chaos` exercises the D13 worker-failure path end to end, in
+//! two phases like `restart`. Phase 1 seeds the disk tier: every
+//! conversation's first turn runs against a faults-free engine with a
+//! short `session_ttl`, and the run waits until the whole batch has
+//! demoted into `$STORE_DIR`. Phase 2 boots a fresh engine over the same
+//! store with a fault plan armed (`$CHAOS_FAULT_PLAN`, default
+//! `kill=0@40`), drives a long **driver turn** on a session owned by the
+//! doomed worker until the plan kills it mid-decode, waits for the
+//! router to detect the death and re-admit the dead worker's sessions,
+//! then resumes every surviving conversation — timing each post-failure
+//! resume. The replay JSON reports the client-observed recovery latency
+//! (`recovery_ms_p50` / `recovery_ms_p99`), the router's own
+//! `recovery_ms` histogram, and the `worker_failures_total` /
+//! `sessions_readopted_total` / `sessions_lost_total` ledger.
+//!
 //! Besides the stdout report, the per-turn cold-vs-resumed TTFT figures
 //! are written as JSON to `$REPLAY_JSON` (default `replay_metrics.json`)
 //! so CI can publish them per run alongside the micro bench's
@@ -389,6 +404,248 @@ fn run_restart(arch: Arch, n_convs: usize, workers: usize) -> anyhow::Result<()>
     Ok(())
 }
 
+/// `mode = chaos`: the two-phase D13 worker-failure scenario (module
+/// docs). Seeds the disk tier, kills a worker mid-decode by fault plan,
+/// and times every post-failure resume.
+fn run_chaos(arch: Arch, n_convs: usize, workers: usize) -> anyhow::Result<()> {
+    use tconstformer::coordinator::FaultPlan;
+
+    // One worker must die and at least one must survive.
+    let workers = workers.max(2);
+    let plan_spec =
+        std::env::var("CHAOS_FAULT_PLAN").unwrap_or_else(|_| "kill=0@40".to_string());
+    let store_dir = std::env::var("STORE_DIR").unwrap_or_else(|_| {
+        std::env::temp_dir()
+            .join(format!("tconst-replay-chaos-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    });
+    let _ = std::fs::remove_dir_all(&store_dir);
+    println!(
+        "== serve_stream: arch={} conversations={} workers={} chaos (plan={plan_spec}, store={store_dir}) ==",
+        arch.as_str(),
+        n_convs,
+        workers,
+    );
+
+    let cfg = |ttl: std::time::Duration, faults: FaultPlan| EngineConfig {
+        preset: "tiny".into(),
+        arch,
+        workers,
+        store_dir: Some(store_dir.clone()),
+        session_ttl: ttl,
+        faults,
+        ..Default::default()
+    };
+    let corp = corpus::generate(&CorpusSpec { total_tokens: 1 << 16, ..Default::default() });
+    let items = workload::generate(
+        &WorkloadSpec {
+            n_requests: n_convs,
+            rate_per_s: 100.0,
+            prompt_len_min: 24,
+            prompt_len_max: 96,
+            new_tokens_min: 8,
+            new_tokens_max: 24,
+            turns_min: 2,
+            turns_max: 2,
+            ..Default::default()
+        },
+        &corp.train,
+    );
+
+    // -- phase 1: faults-free seeding — demote the whole batch to disk --
+    let engine = Engine::spawn(cfg(
+        std::time::Duration::from_millis(400),
+        FaultPlan::default(),
+    ))?;
+    let addr1 = "127.0.0.1:8096";
+    let stop1 = Arc::new(AtomicBool::new(false));
+    let (h1, s1) = (engine.clone(), stop1.clone());
+    let server1 = std::thread::spawn(move || {
+        http::serve(
+            &ServerConfig { addr: addr1.to_string(), ..Default::default() },
+            h1,
+            Some(s1),
+        )
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    let mut sessions: Vec<(usize, Vec<i32>, usize)> = Vec::new();
+    let mut errors = 0usize;
+    for item in &items {
+        let sid = match http::http_post(addr1, "/v1/sessions", "{}") {
+            Ok((200, body)) => {
+                match Json::parse(&body).ok().and_then(|j| j.get("session_id").as_usize()) {
+                    Some(sid) => sid,
+                    None => {
+                        errors += 1;
+                        continue;
+                    }
+                }
+            }
+            _ => {
+                errors += 1;
+                continue;
+            }
+        };
+        match sse_turn(addr1, sid, &item.prompt_tokens, item.max_new_tokens) {
+            Some(_) => {
+                let (fp, fmax) = item
+                    .followups
+                    .first()
+                    .map(|f| (f.prompt_tokens.clone(), f.max_new_tokens))
+                    .unwrap_or_else(|| (item.prompt_tokens.clone(), item.max_new_tokens));
+                sessions.push((sid, fp, fmax));
+            }
+            None => errors += 1,
+        }
+    }
+    let want = sessions.len() as f64;
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let m = engine.metrics()?;
+        if m.get("disk_tier_sessions").as_f64().unwrap_or(0.0) >= want {
+            break;
+        }
+        if std::time::Instant::now() >= deadline {
+            println!(
+                "  warning: only {} of {want} sessions reached the disk tier before timeout",
+                m.get("disk_tier_sessions")
+            );
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("\n-- phase 1 (seed) --");
+    println!("  seeded sessions  {:>8}  (errors {errors})", sessions.len());
+
+    stop1.store(true, Ordering::Relaxed);
+    server1.join().unwrap()?;
+    engine.shutdown();
+    drop(engine);
+    anyhow::ensure!(
+        sessions.len() >= 2,
+        "chaos run needs at least 2 seeded sessions (got {})",
+        sessions.len()
+    );
+
+    // -- phase 2: same store, fault plan armed; kill mid-soak ------------
+    let engine = Engine::spawn(cfg(
+        std::time::Duration::from_secs(600),
+        FaultPlan::parse(&plan_spec)?,
+    ))?;
+    let addr2 = "127.0.0.1:8095";
+    let stop2 = Arc::new(AtomicBool::new(false));
+    let (h2, s2) = (engine.clone(), stop2.clone());
+    let server2 = std::thread::spawn(move || {
+        http::serve(
+            &ServerConfig { addr: addr2.to_string(), ..Default::default() },
+            h2,
+            Some(s2),
+        )
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    // The boot scan re-adopts snapshots round-robin in ascending-sid
+    // order, so the lowest surviving sid sits on worker 0 — the default
+    // plan's victim. A long driver turn on it pushes that worker's round
+    // counter over the kill threshold mid-decode.
+    sessions.sort_by_key(|(sid, _, _)| *sid);
+    let driver = sessions.remove(0);
+    let tk = ByteTokenizer;
+    let driver_body = turn_body(&tk, &driver.1, 200, "standard");
+    let driver_failed = match http::http_post_sse(
+        addr2,
+        &format!("/v1/sessions/{}/turns", driver.0),
+        &driver_body,
+    ) {
+        Ok((200, events, _)) => !events
+            .last()
+            .map(|e| e.get("done").as_bool().unwrap_or(false))
+            .unwrap_or(false),
+        _ => true,
+    };
+
+    // Wait for the router to notice the death and finish re-admission.
+    let detect_deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let failures = loop {
+        let m = engine.metrics()?;
+        let f = m.get("worker_failures_total").as_f64().unwrap_or(0.0);
+        if f >= 1.0 {
+            break f;
+        }
+        if std::time::Instant::now() >= detect_deadline {
+            println!("  warning: no worker failure detected before timeout");
+            break f;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    };
+
+    // Resume every surviving conversation, timing each post-failure
+    // resume — the client-observed recovery latency.
+    let mut recovery_ms = Percentiles::default();
+    let mut resumed_ok = 0usize;
+    for (sid, prompt, max_new) in &sessions {
+        let t = std::time::Instant::now();
+        match sse_turn(addr2, *sid, prompt, *max_new) {
+            Some(_) => {
+                recovery_ms.add(t.elapsed().as_secs_f64() * 1000.0);
+                resumed_ok += 1;
+            }
+            None => errors += 1,
+        }
+    }
+    let m2 = engine.metrics()?;
+    let readopted = m2.get("sessions_readopted_total").as_f64().unwrap_or(0.0);
+    let lost = m2.get("sessions_lost_total").as_f64().unwrap_or(0.0);
+
+    println!("\n-- phase 2 (post-kill) --");
+    println!(
+        "  driver turn failed {driver_failed}   worker failures {failures:.0}   \
+         readopted {readopted:.0}   lost {lost:.0}"
+    );
+    println!(
+        "  recovery (client) p50 {:>8.1} ms   p99 {:>8.1} ms   ({resumed_ok} resumes ok, errors {errors})",
+        nan0(recovery_ms.p50()),
+        nan0(recovery_ms.p99())
+    );
+    println!(
+        "  recovery (router) p50 {:>8.1} ms   p99 {:>8.1} ms",
+        m2.get("recovery_ms_p50").as_f64().unwrap_or(0.0),
+        m2.get("recovery_ms_p99").as_f64().unwrap_or(0.0),
+    );
+
+    let json_path =
+        std::env::var("REPLAY_JSON").unwrap_or_else(|_| "replay_metrics.json".into());
+    let report = Json::obj(vec![
+        ("arch", Json::str(arch.as_str())),
+        ("workers", Json::num(workers as f64)),
+        ("conversations", Json::num(n_convs as f64)),
+        ("chaos", Json::Bool(true)),
+        ("fault_plan", Json::str(&plan_spec)),
+        ("errors", Json::num(errors as f64)),
+        ("driver_turn_failed", Json::Bool(driver_failed)),
+        ("worker_failures_total", Json::num(failures)),
+        ("sessions_readopted_total", Json::num(readopted)),
+        ("sessions_lost_total", Json::num(lost)),
+        ("recovery_ms_p50", Json::num(nan0(recovery_ms.p50()))),
+        ("recovery_ms_p99", Json::num(nan0(recovery_ms.p99()))),
+        (
+            "router_recovery_ms_p99",
+            Json::num(m2.get("recovery_ms_p99").as_f64().unwrap_or(0.0)),
+        ),
+        ("resumed_ok", Json::num(resumed_ok as f64)),
+    ]);
+    std::fs::write(&json_path, report.to_string())?;
+    println!("\nreplay metrics -> {json_path}");
+
+    stop2.store(true, Ordering::Relaxed);
+    server2.join().unwrap()?;
+    engine.shutdown();
+    let _ = std::fs::remove_dir_all(&store_dir);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let arch = Arch::parse(args.first().map(String::as_str).unwrap_or("tconst"))?;
@@ -399,6 +656,9 @@ fn main() -> anyhow::Result<()> {
     let mode = args.get(5).cloned().unwrap_or_default();
     if mode == "restart" {
         return run_restart(arch, n_convs, workers);
+    }
+    if mode == "chaos" {
+        return run_chaos(arch, n_convs, workers);
     }
     let soak = mode == "soak";
     // Soak runs exercise chunked prefill (the anti-head-of-line path);

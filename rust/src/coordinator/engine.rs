@@ -22,7 +22,8 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use super::protocol::RouterEvent;
+use super::faults::FaultPlan;
+use super::protocol::{RouterEvent, TurnError};
 use super::request::{Response, StreamEvent, TurnRequest};
 use super::router::{spawn_router, RouterMsg};
 use super::scheduler::SchedConfig;
@@ -105,6 +106,12 @@ pub struct EngineConfig {
     /// store's GC sweep. `None` = no TTL (snapshots live until resumed,
     /// closed, or cap-evicted).
     pub store_ttl: Option<Duration>,
+    /// Deterministic fault-injection schedule (DESIGN.md D13,
+    /// `--fault-plan`). Compiled in but **inert by default**: the default
+    /// plan injects nothing. Non-default plans kill a named worker at a
+    /// scheduled round, delay/drop one enveloped reply, or corrupt a
+    /// store snapshot — the chaos test/replayer harness.
+    pub faults: FaultPlan,
 }
 
 impl EngineConfig {
@@ -142,6 +149,7 @@ impl Default for EngineConfig {
             store_dir: None,
             store_cap_bytes: 0,
             store_ttl: None,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -196,7 +204,7 @@ impl EngineHandle {
     pub fn submit(&self, req: TurnRequest) -> SessionHandle {
         let (tx, rx) = mpsc::channel();
         let _ = self.tx.send(RouterEvent::Client(RouterMsg::Submit(req, tx)));
-        SessionHandle { rx }
+        SessionHandle { rx, terminal_seen: std::cell::Cell::new(false) }
     }
 
     /// Blocking generate — the one-shot compatibility path: submit and
@@ -226,26 +234,60 @@ impl EngineHandle {
 /// sampled token.
 pub struct SessionHandle {
     rx: mpsc::Receiver<StreamEvent>,
+    /// Whether a terminal event (`TurnDone` / `Error`) was observed. A
+    /// stream that drops *without* one means the worker thread holding
+    /// the turn died (DESIGN.md D13); `recv` then synthesizes exactly one
+    /// retryable `worker_lost` error instead of ending silently.
+    terminal_seen: std::cell::Cell<bool>,
 }
 
 impl SessionHandle {
-    /// Next event; `None` when the stream is exhausted or the engine died.
+    /// Next event; `None` when the stream is exhausted. A disconnect
+    /// *before* any terminal event yields one synthetic retryable
+    /// [`TurnError::worker_lost`] `Error` event (then `None`): the
+    /// worker holding the turn died and its channel dropped mid-stream.
     pub fn recv(&self) -> Option<StreamEvent> {
-        self.rx.recv().ok()
+        match self.rx.recv() {
+            Ok(ev) => Some(self.note(ev)),
+            Err(_) => self.synth_lost(),
+        }
     }
 
+    /// As [`Self::recv`] with a deadline; a timeout returns `None`
+    /// without synthesizing anything (the turn may still be running).
     pub fn recv_timeout(&self, timeout: Duration) -> Option<StreamEvent> {
-        self.rx.recv_timeout(timeout).ok()
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => Some(self.note(ev)),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => self.synth_lost(),
+        }
+    }
+
+    fn note(&self, ev: StreamEvent) -> StreamEvent {
+        if matches!(ev, StreamEvent::TurnDone(_) | StreamEvent::Error(_)) {
+            self.terminal_seen.set(true);
+        }
+        ev
+    }
+
+    fn synth_lost(&self) -> Option<StreamEvent> {
+        if self.terminal_seen.get() {
+            return None;
+        }
+        self.terminal_seen.set(true);
+        Some(StreamEvent::Error(TurnError::worker_lost(
+            "worker connection lost mid-turn; session may be re-adopting — retry",
+        )))
     }
 
     /// Drain the stream to its terminal event and return the response.
     pub fn wait(&self) -> Result<Response> {
         loop {
-            match self.rx.recv() {
-                Ok(StreamEvent::TurnDone(resp)) => return Ok(resp),
-                Ok(StreamEvent::Error(e)) => bail!("turn failed: {e}"),
-                Ok(_) => {}
-                Err(_) => bail!("engine dropped the turn"),
+            match self.recv() {
+                Some(StreamEvent::TurnDone(resp)) => return Ok(resp),
+                Some(StreamEvent::Error(e)) => bail!("turn failed: {e}"),
+                Some(_) => {}
+                None => bail!("engine dropped the turn"),
             }
         }
     }

@@ -1,0 +1,281 @@
+//! Deterministic fault injection (DESIGN.md D13): the test harness for
+//! worker failure as a first-class event.
+//!
+//! A [`FaultPlan`] is compiled into the engine (`EngineConfig::faults`,
+//! `--fault-plan` on the CLI) but **inert by default** — the default
+//! plan injects nothing and every hook is a cheap field check on a cold
+//! path. A non-empty plan makes failures *reproducible*: the same plan
+//! against the same workload kills the same worker at the same decode
+//! round, delays or drops the same [`super::protocol::WorkerReply`],
+//! and corrupts the same store snapshot, so `rust/tests/chaos.rs` and
+//! the replayer's `chaos` mode can assert recovery behavior (re-adopted
+//! vs lost sessions, retryable `worker_lost` turn errors, recovery
+//! latency) deterministically instead of relying on `kill -9` timing.
+//!
+//! Plan grammar — `;`-separated directives:
+//!
+//! | directive | effect |
+//! |---|---|
+//! | `kill=<worker>@<round>` | worker thread exits (simulated crash) once its decode-round counter reaches `<round>`; repeatable |
+//! | `delay-reply=<worker>@<nth>:<ms>` | the worker's `<nth>` enveloped reply (1-based) is sent `<ms>` late |
+//! | `drop-reply=<worker>@<nth>` | the worker's `<nth>` enveloped reply is never sent (the router's envelope deadline fires) |
+//! | `corrupt-snapshot=<sid>` | flip one byte of session `<sid>`'s store snapshot right after it demotes (checksum refusal on promote) |
+//!
+//! Example: `kill=1@120;drop-reply=0@2`.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// Kill a named worker once its round counter reaches `round`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillAt {
+    pub worker: usize,
+    pub round: u64,
+}
+
+/// Target one enveloped reply: the `nth` (1-based) `WorkerReply` the
+/// named worker would send.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplyFault {
+    pub worker: usize,
+    pub nth: u64,
+    /// Delay before sending (0 for `drop-reply`, which never sends).
+    pub delay_ms: u64,
+}
+
+/// What the worker does with one enveloped reply it is about to send.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplyAction {
+    Deliver,
+    Delay(Duration),
+    Drop,
+}
+
+/// The deterministic fault schedule. `Default` is the inert plan — no
+/// faults, every hook short-circuits.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Simulated crashes: the worker thread returns (dropping its
+    /// channel, lanes and event senders) at the scheduled round.
+    pub kills: Vec<KillAt>,
+    /// Delay one enveloped reply (stall simulation; the reply still
+    /// arrives, possibly past its deadline).
+    pub delay_reply: Option<ReplyFault>,
+    /// Drop one enveloped reply outright (the continuation fails with
+    /// `WorkerError::Deadline` semantics).
+    pub drop_reply: Option<ReplyFault>,
+    /// Corrupt these sessions' snapshots right after demotion, so the
+    /// next promote refuses with a checksum error.
+    pub corrupt_snapshots: Vec<u64>,
+}
+
+impl FaultPlan {
+    /// Whether this plan injects nothing (the compiled-in default).
+    pub fn is_inert(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+
+    /// Parse the `;`-separated directive grammar (see the module doc).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for raw in spec.split(';') {
+            let d = raw.trim();
+            if d.is_empty() {
+                continue;
+            }
+            let (key, val) = d
+                .split_once('=')
+                .with_context(|| format!("fault directive `{d}` has no `=`"))?;
+            match key.trim() {
+                "kill" => {
+                    let (w, r) = split_at_sign(val)
+                        .with_context(|| format!("kill directive `{d}`"))?;
+                    plan.kills.push(KillAt { worker: w as usize, round: r });
+                }
+                "delay-reply" => {
+                    let (w, rest) = split_at_sign_str(val)
+                        .with_context(|| format!("delay-reply directive `{d}`"))?;
+                    let (nth, ms) = rest.split_once(':').with_context(|| {
+                        format!("delay-reply directive `{d}` needs `<nth>:<ms>`")
+                    })?;
+                    plan.delay_reply = Some(ReplyFault {
+                        worker: w as usize,
+                        nth: parse_u64(nth)?,
+                        delay_ms: parse_u64(ms)?,
+                    });
+                }
+                "drop-reply" => {
+                    let (w, nth) = split_at_sign(val)
+                        .with_context(|| format!("drop-reply directive `{d}`"))?;
+                    plan.drop_reply =
+                        Some(ReplyFault { worker: w as usize, nth, delay_ms: 0 });
+                }
+                "corrupt-snapshot" => {
+                    plan.corrupt_snapshots.push(parse_u64(val)?);
+                }
+                other => bail!("unknown fault directive `{other}` in `{d}`"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Whether the named worker's scheduled crash is due at `round`
+    /// (its monotone decode-round counter).
+    pub fn kill_due(&self, worker: usize, round: u64) -> bool {
+        self.kills.iter().any(|k| k.worker == worker && round >= k.round)
+    }
+
+    /// What to do with the worker's `nth` (1-based) enveloped reply.
+    pub fn reply_action(&self, worker: usize, nth: u64) -> ReplyAction {
+        if let Some(f) = &self.drop_reply {
+            if f.worker == worker && f.nth == nth {
+                return ReplyAction::Drop;
+            }
+        }
+        if let Some(f) = &self.delay_reply {
+            if f.worker == worker && f.nth == nth {
+                return ReplyAction::Delay(Duration::from_millis(f.delay_ms));
+            }
+        }
+        ReplyAction::Deliver
+    }
+
+    /// Whether this session's store snapshot should be corrupted after
+    /// demotion.
+    pub fn corrupts(&self, sid: u64) -> bool {
+        self.corrupt_snapshots.contains(&sid)
+    }
+}
+
+/// Flip the final byte of a session's snapshot file in `dir` (the
+/// `DiskStore` layout: `sess-<sid:016x>.snap`, payload last), so the
+/// next read fails its checksum — the corrupt-snapshot fault hook and a
+/// test utility.
+pub fn corrupt_snapshot_file(dir: &Path, sid: u64) -> Result<()> {
+    let path = dir.join(format!("sess-{sid:016x}.snap"));
+    let mut bytes =
+        std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    let last = bytes
+        .last_mut()
+        .with_context(|| format!("{} is empty", path.display()))?;
+    *last ^= 0xFF;
+    std::fs::write(&path, &bytes)
+        .with_context(|| format!("rewriting {}", path.display()))?;
+    Ok(())
+}
+
+fn parse_u64(s: &str) -> Result<u64> {
+    s.trim()
+        .parse::<u64>()
+        .with_context(|| format!("expected a number, got `{s}`"))
+}
+
+fn split_at_sign(val: &str) -> Result<(u64, u64)> {
+    let (a, b) = val
+        .split_once('@')
+        .with_context(|| format!("`{val}` needs `<worker>@<n>`"))?;
+    Ok((parse_u64(a)?, parse_u64(b)?))
+}
+
+fn split_at_sign_str(val: &str) -> Result<(u64, &str)> {
+    let (a, b) = val
+        .split_once('@')
+        .with_context(|| format!("`{val}` needs `<worker>@...`"))?;
+    Ok((parse_u64(a)?, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert() {
+        let p = FaultPlan::default();
+        assert!(p.is_inert());
+        assert!(!p.kill_due(0, u64::MAX));
+        assert_eq!(p.reply_action(0, 1), ReplyAction::Deliver);
+        assert!(!p.corrupts(1));
+        // The empty spec parses to the inert plan.
+        assert!(FaultPlan::parse("").unwrap().is_inert());
+        assert!(FaultPlan::parse(" ; ").unwrap().is_inert());
+    }
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlan::parse(
+            "kill=1@120; kill=0@40; delay-reply=0@2:250; drop-reply=1@3; \
+             corrupt-snapshot=7",
+        )
+        .unwrap();
+        assert!(!p.is_inert());
+        assert_eq!(
+            p.kills,
+            vec![KillAt { worker: 1, round: 120 }, KillAt { worker: 0, round: 40 }]
+        );
+        assert_eq!(
+            p.delay_reply,
+            Some(ReplyFault { worker: 0, nth: 2, delay_ms: 250 })
+        );
+        assert_eq!(p.drop_reply, Some(ReplyFault { worker: 1, nth: 3, delay_ms: 0 }));
+        assert!(p.corrupts(7) && !p.corrupts(8));
+    }
+
+    #[test]
+    fn kill_due_is_a_threshold_not_an_equality() {
+        // The worker may blow past the scheduled round inside one long
+        // drain; the kill must still fire.
+        let p = FaultPlan::parse("kill=1@10").unwrap();
+        assert!(!p.kill_due(1, 9));
+        assert!(p.kill_due(1, 10));
+        assert!(p.kill_due(1, 11));
+        assert!(!p.kill_due(0, 11), "only the named worker dies");
+    }
+
+    #[test]
+    fn reply_faults_hit_exactly_the_nth_reply() {
+        let p = FaultPlan::parse("delay-reply=0@2:50;drop-reply=1@1").unwrap();
+        assert_eq!(p.reply_action(0, 1), ReplyAction::Deliver);
+        assert_eq!(
+            p.reply_action(0, 2),
+            ReplyAction::Delay(Duration::from_millis(50))
+        );
+        assert_eq!(p.reply_action(0, 3), ReplyAction::Deliver);
+        assert_eq!(p.reply_action(1, 1), ReplyAction::Drop);
+        assert_eq!(p.reply_action(1, 2), ReplyAction::Deliver);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in [
+            "kill",
+            "kill=1",
+            "kill=x@3",
+            "explode=1@2",
+            "delay-reply=0@2",
+            "corrupt-snapshot=abc",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn corrupt_snapshot_file_flips_a_byte() {
+        let dir = std::env::temp_dir().join(format!(
+            "tconst-faults-{}-{}",
+            std::process::id(),
+            line!()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("sess-{:016x}.snap", 5u64));
+        std::fs::write(&path, [1u8, 2, 3]).unwrap();
+        corrupt_snapshot_file(&dir, 5).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1u8, 2, 3 ^ 0xFF]);
+        // Missing and empty snapshots error instead of panicking.
+        assert!(corrupt_snapshot_file(&dir, 6).is_err());
+        std::fs::write(&path, []).unwrap();
+        assert!(corrupt_snapshot_file(&dir, 5).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

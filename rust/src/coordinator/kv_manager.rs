@@ -47,6 +47,12 @@ pub struct WorkerLoad {
     pub decode_rounds: AtomicU64,
     /// The worker's lane capacity (static, set at startup).
     pub max_lanes: AtomicUsize,
+    /// Liveness epoch (DESIGN.md D13): bumped on every worker loop
+    /// iteration alongside the gauge publish. The router reads it
+    /// directly (not via the snapshot) and declares the worker dead when
+    /// the epoch stalls while the gauges show outstanding work, or when
+    /// the worker thread is gone.
+    pub heartbeat: AtomicU64,
 }
 
 /// Plain-value snapshot of a [`WorkerLoad`], as consumed by the routing

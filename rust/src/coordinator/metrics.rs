@@ -413,6 +413,19 @@ pub struct RouterStats {
     /// Sessions rebuilt from the persistent store's boot scan
     /// (DESIGN.md D11 restart recovery).
     pub sessions_recovered: u64,
+    /// Workers the router declared dead (exited thread or stalled
+    /// heartbeat) and failed over (DESIGN.md D13).
+    pub worker_failures: u64,
+    /// Dead workers' sessions re-admitted on a survivor — only disk-tier
+    /// sessions qualify (their snapshot outlives the thread).
+    pub sessions_readopted: u64,
+    /// Dead workers' sessions dropped — resident/spilled/in-turn state
+    /// died with the thread and has no snapshot to recover from.
+    pub sessions_lost: u64,
+    /// Failure-detection → re-admission-complete latency (ms), one
+    /// sample per failed worker. 0 while no failure has occurred.
+    pub recovery_ms_p50: f64,
+    pub recovery_ms_p99: f64,
     /// Disk-tier gauges and counters, read once router-side from the
     /// shared store (workers see the same store — summing per-worker
     /// copies would multiply them by N). All 0 without `--store-dir`.
@@ -582,6 +595,15 @@ pub fn aggregate_metrics(
         "router_sessions_recovered",
         Json::num(stats.sessions_recovered as f64),
     ));
+    // Worker-failure recovery (DESIGN.md D13).
+    fields.push(("worker_failures_total", Json::num(stats.worker_failures as f64)));
+    fields.push((
+        "sessions_readopted_total",
+        Json::num(stats.sessions_readopted as f64),
+    ));
+    fields.push(("sessions_lost_total", Json::num(stats.sessions_lost as f64)));
+    fields.push(("recovery_ms_p50", Json::num(nan0(stats.recovery_ms_p50))));
+    fields.push(("recovery_ms_p99", Json::num(nan0(stats.recovery_ms_p99))));
     fields.push(("store_bytes", Json::num(stats.store_bytes as f64)));
     fields.push(("store_sessions", Json::num(stats.store_sessions as f64)));
     fields.push(("store_reads_total", Json::num(stats.store_reads as f64)));
@@ -640,6 +662,24 @@ mod tests {
         // round-trips through the serializer
         let txt = j.to_string();
         assert!(Json::parse(&txt).is_ok());
+    }
+
+    #[test]
+    fn aggregate_reports_worker_failure_counters() {
+        let stats = RouterStats {
+            worker_failures: 1,
+            sessions_readopted: 2,
+            sessions_lost: 1,
+            recovery_ms_p99: 12.0,
+            ..Default::default()
+        };
+        let j = aggregate_metrics(&stats, &[], &[]);
+        assert_eq!(j.get("worker_failures_total").as_usize(), Some(1));
+        assert_eq!(j.get("sessions_readopted_total").as_usize(), Some(2));
+        assert_eq!(j.get("sessions_lost_total").as_usize(), Some(1));
+        assert!((j.get("recovery_ms_p99").as_f64().unwrap() - 12.0).abs() < 1e-9);
+        // No failures yet → the digests report 0, not NaN (nan0).
+        assert_eq!(j.get("recovery_ms_p50").as_f64(), Some(0.0));
     }
 
     #[test]

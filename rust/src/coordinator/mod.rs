@@ -29,6 +29,7 @@
 //!   failure.
 
 pub mod engine;
+pub mod faults;
 pub mod kv_manager;
 pub mod metrics;
 pub mod protocol;
@@ -38,6 +39,7 @@ pub mod scheduler;
 pub mod worker;
 
 pub use engine::{ArenaStaging, Engine, EngineConfig, EngineHandle, SessionHandle};
+pub use faults::FaultPlan;
 pub use kv_manager::{WorkerLoad, WorkerLoadSnapshot};
 pub use protocol::{ErrorCode, TurnError, WorkerError};
 pub use request::{

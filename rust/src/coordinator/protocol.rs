@@ -47,6 +47,10 @@ pub enum ErrorCode {
     BadRequest,
     /// Engine-internal failure (admission, prefill, device error).
     Internal,
+    /// The worker holding the turn/session died or stalled (DESIGN.md
+    /// D13). Always retryable: recoverable sessions re-admit on a
+    /// survivor, so the identical request may succeed immediately.
+    WorkerLost,
 }
 
 impl ErrorCode {
@@ -58,6 +62,7 @@ impl ErrorCode {
             ErrorCode::Deadline => "deadline",
             ErrorCode::BadRequest => "bad_request",
             ErrorCode::Internal => "internal",
+            ErrorCode::WorkerLost => "worker_lost",
         }
     }
 
@@ -70,6 +75,7 @@ impl ErrorCode {
             ErrorCode::Deadline => 504,
             ErrorCode::BadRequest => 400,
             ErrorCode::Internal => 500,
+            ErrorCode::WorkerLost => 503,
         }
     }
 }
@@ -142,6 +148,18 @@ impl TurnError {
             code: ErrorCode::Internal,
             message: msg.into(),
             retryable: false,
+            retry_after_s: None,
+        }
+    }
+
+    /// The worker holding this turn died or stalled mid-flight. Always
+    /// retryable: disk-backed sessions re-adopt on a survivor, so a
+    /// retried turn lands on live capacity (DESIGN.md D13).
+    pub fn worker_lost(msg: impl Into<String>) -> Self {
+        TurnError {
+            code: ErrorCode::WorkerLost,
+            message: msg.into(),
+            retryable: true,
             retry_after_s: None,
         }
     }
@@ -242,6 +260,18 @@ mod tests {
         assert_eq!(ErrorCode::Deadline.http_status(), 504);
         assert_eq!(ErrorCode::BadRequest.http_status(), 400);
         assert_eq!(ErrorCode::Internal.http_status(), 500);
+        assert_eq!(ErrorCode::WorkerLost.http_status(), 503);
+    }
+
+    #[test]
+    fn worker_lost_is_retryable() {
+        let e = TurnError::worker_lost("worker 1 lost; retry");
+        assert_eq!(e.code, ErrorCode::WorkerLost);
+        assert!(e.retryable);
+        assert!(e.retry_after_s.is_none());
+        let j = e.to_json();
+        assert_eq!(j.get("code").as_str(), Some("worker_lost"));
+        assert_eq!(j.get("retryable").as_bool(), Some(true));
     }
 
     #[test]

@@ -49,16 +49,27 @@ use super::protocol::{
     Envelope, RouterEvent, TurnError, WorkerReply, WorkerReplyBody, WorkerReq,
 };
 use super::request::{StreamEvent, TurnRequest};
-use super::scheduler::{pick_worker, should_migrate};
+use super::scheduler::{pick_worker_among, should_migrate};
 use super::worker::{spawn_worker, Exported, ThreadGuard, WorkerHandle, WorkerMsg};
 use crate::store::{DiskStore, SessionStore, SharedStore};
 use crate::util::json::Json;
+use crate::util::stats::Percentiles;
 
 /// Envelope deadline for worker replies (close / export / metrics).
 /// Workers answer between rounds, so this only trips when a worker is
 /// wedged — the continuation then fails with deadline semantics instead
 /// of stalling the router.
 const WORKER_REPLY_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// How long a worker's liveness epoch may sit unchanged *while its
+/// gauges show outstanding work* before the router declares it wedged
+/// (DESIGN.md D13). Twice the envelope deadline: a worker too slow for
+/// every reply deadline is indistinguishable from dead. Idle workers
+/// are exempt (they park in `recv_timeout` up to the 5 s idle cap and
+/// bump the epoch on every wake, which is inside this window anyway).
+/// Exited threads do not wait out this window — `thread_finished()`
+/// catches them on the next loop iteration.
+const HEARTBEAT_STALL: Duration = Duration::from_secs(10);
 
 /// Per-session turn rate limit (token bucket). `rate <= 0` disables.
 #[derive(Debug, Clone, Copy)]
@@ -123,8 +134,12 @@ enum Continuation {
     Close { reply: mpsc::Sender<bool> },
     /// Collect one metrics snapshot per worker (single correlation id
     /// fanned out to all of them), aggregate when the last arrives.
+    /// `outstanding` holds the worker **ids** that have not answered —
+    /// ids, not a count, so a worker that dies mid-fan-out can be
+    /// removed by name instead of stalling the aggregate until the
+    /// deadline (DESIGN.md D13).
     Metrics {
-        remaining: usize,
+        outstanding: Vec<usize>,
         snaps: Vec<Json>,
         reply: mpsc::Sender<Json>,
     },
@@ -142,6 +157,11 @@ enum Continuation {
 
 struct PendingOp {
     deadline: Instant,
+    /// The single worker this op targets (`None` for the metrics
+    /// fan-out, which tracks its targets in `Continuation::Metrics::
+    /// outstanding`) — how `fail_worker` finds the ops a dead worker
+    /// can never answer.
+    worker: Option<usize>,
     cont: Continuation,
 }
 
@@ -181,6 +201,19 @@ struct Router {
     store: Option<SharedStore>,
     /// Sessions rebuilt from the store's boot scan (restart recovery).
     sessions_recovered: u64,
+    /// Workers declared dead (DESIGN.md D13): excluded from placement,
+    /// fan-outs and migration targets. Never resurrected — a worker's
+    /// PJRT state is unrecoverable once its thread exits.
+    dead: Vec<bool>,
+    /// Per-worker `(last heartbeat epoch, when it changed)` — the
+    /// wedged-thread detector's memory.
+    hb_seen: Vec<(u64, Instant)>,
+    worker_failures: u64,
+    sessions_readopted: u64,
+    sessions_lost: u64,
+    /// Failure-detection → re-admission-complete latency (ms), one
+    /// sample per failed worker.
+    recovery_ms: Percentiles,
 }
 
 impl Router {
@@ -190,6 +223,7 @@ impl Router {
         session_ttl: Duration,
         store: Option<SharedStore>,
     ) -> Self {
+        let n = workers.len();
         Router {
             workers,
             sessions: HashMap::new(),
@@ -208,6 +242,12 @@ impl Router {
             last_sweep: Instant::now(),
             store,
             sessions_recovered: 0,
+            dead: vec![false; n],
+            hb_seen: vec![(0, Instant::now()); n],
+            worker_failures: 0,
+            sessions_readopted: 0,
+            sessions_lost: 0,
+            recovery_ms: Percentiles::default(),
         }
     }
 
@@ -238,16 +278,184 @@ impl Router {
             .collect()
     }
 
+    /// Load snapshots of the live workers only (each still carrying its
+    /// true worker id) — what placement and fan-outs operate on once a
+    /// worker has died (DESIGN.md D13).
+    fn alive_loads(&self) -> Vec<WorkerLoadSnapshot> {
+        self.workers
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.dead[*i])
+            .map(|(i, w)| w.load.snapshot(i))
+            .collect()
+    }
+
     /// Dispatch a turn to worker `w`, accounting it as in flight until
-    /// the worker pulls it off its channel.
-    fn send_turn(&self, w: usize, req: TurnRequest, tx: mpsc::Sender<StreamEvent>) {
+    /// the worker pulls it off its channel. A dead channel fails the
+    /// turn with a retryable `worker_lost` (the event sender comes back
+    /// inside the `SendError`) and triggers the failover immediately —
+    /// no client ever waits out a detection window on a send the router
+    /// already knows was lost.
+    fn send_turn(&mut self, w: usize, req: TurnRequest, tx: mpsc::Sender<StreamEvent>) {
         use std::sync::atomic::Ordering;
         self.workers[w].load.inflight_msgs.fetch_add(1, Ordering::Relaxed);
-        if self.workers[w].tx.send(WorkerMsg::Submit(req, tx)).is_err() {
-            // Worker gone: the dropped event sender surfaces as a closed
-            // stream to the client.
+        if let Err(mpsc::SendError(msg)) =
+            self.workers[w].tx.send(WorkerMsg::Submit(req, tx))
+        {
             self.workers[w].load.inflight_msgs.fetch_sub(1, Ordering::Relaxed);
+            if let WorkerMsg::Submit(_, tx) = msg {
+                let _ = tx.send(StreamEvent::Error(TurnError::worker_lost(format!(
+                    "worker {w} is gone; recoverable sessions are re-adopting — retry"
+                ))));
+            }
+            self.fail_worker(w);
         }
+    }
+
+    /// Detect dead or wedged workers, called on every loop iteration
+    /// (≤ 100 ms cadence — the detection half of DESIGN.md D13). Two
+    /// signals, both cheap reads:
+    /// * **exited thread** (`thread_finished()`) — a crash, panic or
+    ///   fault-plan kill; it can never answer again, so fail over now;
+    /// * **stalled heartbeat** — the liveness epoch unchanged for
+    ///   [`HEARTBEAT_STALL`] *while the gauges show outstanding work*
+    ///   (live lanes, queued or in-flight turns): a wedged thread. Idle
+    ///   workers are exempt — they have nothing to fail over and bump
+    ///   the epoch on every idle wake anyway.
+    fn check_workers(&mut self) {
+        use std::sync::atomic::Ordering;
+        let now = Instant::now();
+        for w in 0..self.workers.len() {
+            if self.dead[w] {
+                continue;
+            }
+            let hb = self.workers[w].load.heartbeat.load(Ordering::Relaxed);
+            if hb != self.hb_seen[w].0 {
+                self.hb_seen[w] = (hb, now);
+            }
+            if self.workers[w].thread_finished() {
+                self.fail_worker(w);
+                continue;
+            }
+            let snap = self.workers[w].load.snapshot(w);
+            let busy =
+                snap.live_lanes > 0 || snap.queue_depth > 0 || snap.inflight > 0;
+            if busy && now.duration_since(self.hb_seen[w].1) >= HEARTBEAT_STALL {
+                eprintln!(
+                    "[router] worker {w} heartbeat stalled \
+                     >{HEARTBEAT_STALL:?} with work outstanding"
+                );
+                self.fail_worker(w);
+            }
+        }
+    }
+
+    /// Declare worker `w` dead and fail over (DESIGN.md D13). Ordering
+    /// matters: first fail the control ops it can never answer, then
+    /// settle every session it owned — **readopted** when its snapshot
+    /// lives in the shared store (re-imported *by reference* on a
+    /// survivor, the same primitive boot recovery uses), **lost**
+    /// otherwise (resident/spilled/in-turn state died with the thread).
+    /// Live turns on the dead worker need no action here: its exit
+    /// dropped their event senders, which the client edge surfaces as a
+    /// synthetic retryable `worker_lost` error. Idempotent; a worker is
+    /// never resurrected.
+    fn fail_worker(&mut self, w: usize) {
+        if self.dead.get(w).copied().unwrap_or(true) {
+            return;
+        }
+        let t0 = Instant::now();
+        self.dead[w] = true;
+        self.worker_failures += 1;
+        eprintln!("[router] worker {w} lost; failing over its sessions");
+        // 1. Pending ops targeting the dead worker.
+        let affected: Vec<u64> = self
+            .pending
+            .iter()
+            .filter(|(_, op)| match &op.cont {
+                Continuation::Metrics { outstanding, .. } => outstanding.contains(&w),
+                _ => op.worker == Some(w),
+            })
+            .map(|(&corr, _)| corr)
+            .collect();
+        for corr in affected {
+            let op = self.pending.remove(&corr).unwrap();
+            match op.cont {
+                Continuation::Close { reply } => {
+                    let _ = reply.send(false);
+                }
+                Continuation::Metrics { mut outstanding, snaps, reply } => {
+                    // The fan-out proceeds without the dead worker; the
+                    // aggregate flushes now if it was the last holdout.
+                    outstanding.retain(|&x| x != w);
+                    if outstanding.is_empty() {
+                        let _ = reply.send(self.aggregate(&snaps));
+                    } else {
+                        self.pending.insert(
+                            corr,
+                            PendingOp {
+                                deadline: op.deadline,
+                                worker: None,
+                                cont: Continuation::Metrics { outstanding, snaps, reply },
+                            },
+                        );
+                    }
+                }
+                Continuation::Migrate { sid, owner, req, events, .. } => {
+                    self.migrating.remove(&sid);
+                    if owner == w {
+                        // The exporter died holding the session's state;
+                        // the held turn fails retryably and the session
+                        // settles in the re-admission scan below.
+                        let _ = events.send(StreamEvent::Error(TurnError::worker_lost(
+                            format!("worker {w} died during session {sid} export; retry"),
+                        )));
+                    } else {
+                        // The migration *target* died; affinity wins.
+                        self.send_turn(owner, req, events);
+                    }
+                }
+            }
+        }
+        // 2. Re-admission: one store scan, then every session the dead
+        // worker owned either re-imports by reference on a survivor or
+        // is dropped and metered.
+        let on_disk: HashMap<u64, u64> = match &self.store {
+            Some(store) => {
+                store.entries().into_iter().map(|e| (e.sid, e.bytes)).collect()
+            }
+            None => HashMap::new(),
+        };
+        let alive = self.alive_loads();
+        let owned: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.owner == Some(w))
+            .map(|(&sid, _)| sid)
+            .collect();
+        for sid in owned {
+            let target = on_disk.get(&sid).and_then(|&bytes| {
+                let t = pick_worker_among(&alive)?;
+                self.workers[t]
+                    .tx
+                    .send(WorkerMsg::ImportSession(sid, Exported::ByRef { bytes }))
+                    .ok()?;
+                Some(t)
+            });
+            match target {
+                Some(t) => {
+                    if let Some(sess) = self.sessions.get_mut(&sid) {
+                        sess.owner = Some(t);
+                    }
+                    self.sessions_readopted += 1;
+                }
+                None => {
+                    self.sessions.remove(&sid);
+                    self.sessions_lost += 1;
+                }
+            }
+        }
+        self.recovery_ms.add(t0.elapsed().as_secs_f64() * 1000.0);
     }
 
     /// Send one enveloped control request to worker `w` and register its
@@ -269,7 +477,8 @@ impl Router {
         {
             return Err(cont);
         }
-        self.pending.insert(corr, PendingOp { deadline, cont });
+        self.pending
+            .insert(corr, PendingOp { deadline, worker: Some(w), cont });
         Ok(())
     }
 
@@ -319,8 +528,13 @@ impl Router {
                 let corr = self.next_corr;
                 self.next_corr += 1;
                 let deadline = Instant::now() + WORKER_REPLY_TIMEOUT;
-                let mut remaining = 0;
-                for w in &self.workers {
+                let mut outstanding = Vec::new();
+                for (i, w) in self.workers.iter().enumerate() {
+                    // Dead workers never answer; asking them would stall
+                    // every aggregate until the deadline.
+                    if self.dead[i] {
+                        continue;
+                    }
                     if w.tx
                         .send(WorkerMsg::Request(Envelope {
                             corr,
@@ -329,10 +543,10 @@ impl Router {
                         }))
                         .is_ok()
                     {
-                        remaining += 1;
+                        outstanding.push(i);
                     }
                 }
-                if remaining == 0 {
+                if outstanding.is_empty() {
                     let _ = reply.send(self.aggregate(&[]));
                     return;
                 }
@@ -340,7 +554,12 @@ impl Router {
                     corr,
                     PendingOp {
                         deadline,
-                        cont: Continuation::Metrics { remaining, snaps: Vec::new(), reply },
+                        worker: None,
+                        cont: Continuation::Metrics {
+                            outstanding,
+                            snaps: Vec::new(),
+                            reply,
+                        },
                     },
                 );
             }
@@ -366,6 +585,12 @@ impl Router {
             rate_limited_turns: self.rate_limited,
             worker_reply_timeouts: self.reply_timeouts,
             sessions_recovered: self.sessions_recovered,
+            worker_failures: self.worker_failures,
+            sessions_readopted: self.sessions_readopted,
+            sessions_lost: self.sessions_lost,
+            // NaN (no failures yet) → 0 via nan0 in aggregate_metrics.
+            recovery_ms_p50: self.recovery_ms.p50(),
+            recovery_ms_p99: self.recovery_ms.p99(),
             store_bytes,
             store_sessions,
             store_reads: counters.reads,
@@ -377,9 +602,16 @@ impl Router {
 
     fn route_turn(&mut self, req: TurnRequest, tx: mpsc::Sender<StreamEvent>) {
         let Some(sid) = req.session_id else {
-            // Ephemeral one-shot: bucket-aware placement, no affinity.
-            let w = pick_worker(&self.load_snapshots());
-            self.send_turn(w, req, tx);
+            // Ephemeral one-shot: bucket-aware placement over the live
+            // workers, no affinity.
+            match pick_worker_among(&self.alive_loads()) {
+                Some(w) => self.send_turn(w, req, tx),
+                None => {
+                    let _ = tx.send(StreamEvent::Error(TurnError::internal(
+                        "no live workers",
+                    )));
+                }
+            }
             return;
         };
         if self.migrating.contains(&sid) {
@@ -413,9 +645,15 @@ impl Router {
         }
         match owner {
             None => {
-                // First turn: place the session, then open it there ahead
-                // of the turn (same channel, so ordering holds).
-                let w = pick_worker(&self.load_snapshots());
+                // First turn: place the session on a live worker, then
+                // open it there ahead of the turn (same channel, so
+                // ordering holds).
+                let Some(w) = pick_worker_among(&self.alive_loads()) else {
+                    let _ = tx.send(StreamEvent::Error(TurnError::internal(
+                        "no live workers",
+                    )));
+                    return;
+                };
                 if let Some(sess) = self.sessions.get_mut(&sid) {
                     sess.owner = Some(w);
                 }
@@ -440,9 +678,9 @@ impl Router {
         req: TurnRequest,
         tx: mpsc::Sender<StreamEvent>,
     ) {
-        if self.workers.len() > 1 {
+        if self.workers.len() > 1 && !self.dead[owner] {
             let snaps = self.load_snapshots();
-            let best = pick_worker(&snaps);
+            let best = pick_worker_among(&self.alive_loads()).unwrap_or(owner);
             if best != owner && should_migrate(&snaps[owner], &snaps[best]) {
                 let cont = Continuation::Migrate { sid, owner, best, req, events: tx };
                 match self.send_request(owner, WorkerReq::ExportSession(sid), cont) {
@@ -478,21 +716,26 @@ impl Router {
                 let _ = reply.send(ok);
             }
             (
-                Continuation::Metrics { mut remaining, mut snaps, reply: out },
+                Continuation::Metrics { mut outstanding, mut snaps, reply: out },
                 WorkerReplyBody::Metrics(j),
             ) => {
                 snaps.push(j);
-                remaining -= 1;
-                if remaining == 0 {
+                outstanding.retain(|&x| x != reply.worker);
+                if outstanding.is_empty() {
                     let _ = out.send(self.aggregate(&snaps));
                 } else {
                     // Re-register under the SAME correlation id: the
-                    // remaining workers reply with it too.
+                    // outstanding workers reply with it too.
                     self.pending.insert(
                         reply.corr,
                         PendingOp {
                             deadline: op.deadline,
-                            cont: Continuation::Metrics { remaining, snaps, reply: out },
+                            worker: None,
+                            cont: Continuation::Metrics {
+                                outstanding,
+                                snaps,
+                                reply: out,
+                            },
                         },
                     );
                 }
@@ -570,10 +813,10 @@ impl Router {
                     self.reply_timeouts += 1;
                     let _ = reply.send(false);
                 }
-                Continuation::Metrics { remaining, snaps, reply } => {
+                Continuation::Metrics { outstanding, snaps, reply } => {
                     // One timeout per worker that never answered; serve
                     // the partial aggregate rather than nothing.
-                    self.reply_timeouts += remaining as u64;
+                    self.reply_timeouts += outstanding.len() as u64;
                     let _ = reply.send(self.aggregate(&snaps));
                 }
                 Continuation::Migrate { sid, owner, events, .. } => {
@@ -707,6 +950,7 @@ pub(crate) fn spawn_router(
                         break;
                     }
                 }
+                router.check_workers();
                 router.expire_pending();
                 router.sweep();
             }
@@ -755,5 +999,90 @@ mod tests {
         for _ in 0..1000 {
             assert!(b.try_take(&cfg, t0).is_none());
         }
+    }
+
+    fn bare_router() -> Router {
+        Router::new(
+            Vec::new(),
+            RateCfg { rate: 0.0, burst: 0.0 },
+            Duration::from_secs(60),
+            None,
+        )
+    }
+
+    #[test]
+    fn expired_metrics_fanout_with_unanswered_workers_leaves_no_pending_entry() {
+        // A metrics fan-out whose deadline passed with two workers still
+        // outstanding (e.g. one dead, one wedged) must drain fully: the
+        // partial aggregate is served, both misses are counted, and —
+        // the leak this test pins — no `PendingOp` survives.
+        let mut r = bare_router();
+        let (tx, rx) = mpsc::channel();
+        r.pending.insert(
+            7,
+            PendingOp {
+                deadline: Instant::now() - Duration::from_millis(1),
+                worker: None,
+                cont: Continuation::Metrics {
+                    outstanding: vec![0, 1],
+                    snaps: Vec::new(),
+                    reply: tx,
+                },
+            },
+        );
+        r.expire_pending();
+        assert!(r.pending.is_empty(), "expired fan-out leaked a PendingOp");
+        assert_eq!(r.reply_timeouts, 2, "one timeout per unanswered worker");
+        let j = rx.recv().expect("partial aggregate still served");
+        assert_eq!(j.get("workers").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn metrics_fanout_tracks_outstanding_workers_by_id() {
+        let mut r = bare_router();
+        let (tx, rx) = mpsc::channel();
+        r.pending.insert(
+            3,
+            PendingOp {
+                deadline: Instant::now() + Duration::from_secs(5),
+                worker: None,
+                cont: Continuation::Metrics {
+                    outstanding: vec![0, 1],
+                    snaps: Vec::new(),
+                    reply: tx,
+                },
+            },
+        );
+        // Worker 1 answers out of order: the op re-registers under the
+        // same correlation id with worker 1 (by id, not by count) gone.
+        r.on_worker_reply(WorkerReply {
+            corr: 3,
+            worker: 1,
+            body: WorkerReplyBody::Metrics(Json::obj(Vec::new())),
+        });
+        assert_eq!(r.pending.len(), 1, "fan-out still waits for worker 0");
+        assert!(rx.try_recv().is_err(), "aggregate must wait for worker 0");
+        // Worker 0 answers: the aggregate flushes and pending drains.
+        r.on_worker_reply(WorkerReply {
+            corr: 3,
+            worker: 0,
+            body: WorkerReplyBody::Metrics(Json::obj(Vec::new())),
+        });
+        assert!(r.pending.is_empty());
+        assert!(rx.recv().is_ok());
+        assert_eq!(r.reply_timeouts, 0);
+    }
+
+    #[test]
+    fn fail_worker_is_idempotent_and_bounded_by_known_workers() {
+        // With no spawned workers every id is out of range; fail_worker
+        // must be a no-op rather than a panic, and repeated calls must
+        // not double-count (the guard that keeps `worker_failures_total`
+        // == distinct dead workers).
+        let mut r = bare_router();
+        r.fail_worker(0);
+        r.fail_worker(0);
+        assert_eq!(r.worker_failures, 0);
+        assert!(r.pending.is_empty() && r.sessions.is_empty());
     }
 }

@@ -50,6 +50,23 @@ pub fn pick_worker(loads: &[WorkerLoadSnapshot]) -> usize {
         .unwrap_or(0)
 }
 
+/// [`pick_worker`] over a **filtered** snapshot slice — the death-aware
+/// variant (DESIGN.md D13). The router passes only live workers'
+/// snapshots (each still carrying its true `worker` id) and gets back
+/// the chosen worker **id**, not a slice index. `None` when every
+/// worker is dead — the caller fails the placement instead of routing
+/// a turn into a black hole. Same key as [`pick_worker`], with the
+/// worker id itself as the final tie-break so placement stays
+/// deterministic under any filtering.
+pub fn pick_worker_among(loads: &[WorkerLoadSnapshot]) -> Option<usize> {
+    loads
+        .iter()
+        .min_by_key(|l| {
+            (l.is_saturated(), l.committed_turns(), l.pinned_bytes(), l.worker)
+        })
+        .map(|l| l.worker)
+}
+
 /// Whether a **spilled** session resuming on `owner` should migrate to
 /// `candidate` instead: only when the owner is saturated (every lane
 /// spoken for) while the candidate has room. Parked-resident sessions
@@ -391,6 +408,22 @@ mod tests {
         // spill) loses to one with a free lane, even at higher commitment.
         let loads = [load(0, 0, 2, 10, 0, 0, 2), load(1, 1, 0, 999, 0, 0, 4)];
         assert_eq!(pick_worker(&loads), 1);
+    }
+
+    #[test]
+    fn pick_worker_among_returns_ids_not_indices() {
+        // A filtered slice (worker 0 dead, removed): the winner's true
+        // worker id comes back, not its position in the slice.
+        let loads = [load(2, 1, 0, 10, 0, 0, 4), load(1, 0, 0, 0, 0, 0, 4)];
+        assert_eq!(pick_worker_among(&loads), Some(1));
+        // Full tie: lowest worker id, independent of slice order.
+        let loads = [load(3, 0, 0, 0, 0, 0, 4), load(1, 0, 0, 0, 0, 0, 4)];
+        assert_eq!(pick_worker_among(&loads), Some(1));
+        // Everyone dead: no placement, caller must fail the turn.
+        assert_eq!(pick_worker_among(&[]), None);
+        // Agrees with pick_worker on the unfiltered slice.
+        let loads = [load(0, 0, 2, 10, 0, 0, 2), load(1, 1, 0, 999, 0, 0, 4)];
+        assert_eq!(pick_worker_among(&loads), Some(pick_worker(&loads)));
     }
 
     #[test]

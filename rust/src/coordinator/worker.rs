@@ -65,6 +65,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::engine::{ArenaStaging, EngineConfig};
+use super::faults::{FaultPlan, ReplyAction};
 use super::kv_manager::{KvLimits, KvManager, WorkerLoad};
 use super::metrics::EngineMetrics;
 use super::protocol::{
@@ -229,6 +230,12 @@ pub struct Worker {
     /// `None` (owned mode, or no `--store-dir`) keeps the two-tier
     /// lifecycle exactly.
     store: Option<SharedStore>,
+    /// The store directory, kept only for the corrupt-snapshot fault
+    /// hook (DESIGN.md D13); `None` without `--store-dir`.
+    store_dir: Option<String>,
+    /// Deterministic fault schedule (DESIGN.md D13) — inert by default;
+    /// every hook is a cheap check off the decode hot path.
+    faults: FaultPlan,
     /// Which shard of the two-tier engine this is (0 in owned mode).
     worker_id: usize,
     /// Shared load gauges the router reads; `None` in owned mode.
@@ -339,6 +346,8 @@ impl Worker {
             round: 0,
             session_ttl: cfg.session_ttl,
             store: None,
+            store_dir: cfg.store_dir.clone(),
+            faults: cfg.faults.clone(),
             worker_id,
             load: None,
             metrics: EngineMetrics::for_worker(worker_id),
@@ -402,6 +411,10 @@ impl Worker {
         );
         load.decode_rounds
             .store(self.metrics.decode_steps, Ordering::Relaxed);
+        // Liveness epoch (DESIGN.md D13): published before and after
+        // every round, so a worker that stops bumping it while its
+        // gauges show outstanding work is wedged or dead.
+        load.heartbeat.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One router-dispatched turn arrived: it is no longer "in flight".
@@ -663,6 +676,16 @@ impl Worker {
         sess.state = ParkedState::Disk { bytes };
         self.kv.note_disk_add(bytes);
         self.metrics.sessions_demoted_disk += 1;
+        // Fault hook (DESIGN.md D13): corrupt the snapshot we just wrote
+        // so the next promote refuses with a checksum error.
+        if self.faults.corrupts(sid) {
+            if let Some(dir) = &self.store_dir {
+                let _ = super::faults::corrupt_snapshot_file(
+                    std::path::Path::new(dir),
+                    sid,
+                );
+            }
+        }
         Ok(true)
     }
 
@@ -1960,7 +1983,21 @@ impl Drop for ThreadGuard {
 pub(crate) struct WorkerHandle {
     pub(crate) tx: mpsc::Sender<WorkerMsg>,
     pub(crate) load: Arc<WorkerLoad>,
-    _thread: Arc<ThreadGuard>,
+    thread: Arc<ThreadGuard>,
+}
+
+impl WorkerHandle {
+    /// Whether the worker's thread has exited — crash, fault-plan kill,
+    /// or shutdown. The router's fast-path death detector (DESIGN.md
+    /// D13): a finished thread can never answer again, so there is no
+    /// reason to wait out a heartbeat-stall window.
+    pub(crate) fn thread_finished(&self) -> bool {
+        self.thread
+            .0
+            .as_ref()
+            .map(|h| h.is_finished())
+            .unwrap_or(true)
+    }
 }
 
 /// How long an idle worker may sleep with no parked sessions to sweep.
@@ -1999,6 +2036,10 @@ pub(crate) fn spawn_worker(
                     return;
                 }
             };
+            let faults = cfg.faults.clone();
+            // 1-based count of enveloped replies this worker has produced
+            // — the `delay-reply`/`drop-reply` fault directives key on it.
+            let mut replies_sent: u64 = 0;
             'run: loop {
                 // Drain control messages. Idle workers **block** until a
                 // message arrives or the next session-TTL deadline — no
@@ -2057,15 +2098,41 @@ pub(crate) fn spawn_worker(
                             };
                             // Answer even past the deadline: the router
                             // re-imports a late successful export rather
-                            // than dropping the session's KV.
-                            let _ = reply.send(RouterEvent::Worker(WorkerReply {
+                            // than dropping the session's KV. The fault
+                            // plan (DESIGN.md D13) may delay or drop this
+                            // specific reply to simulate a stall/loss.
+                            replies_sent += 1;
+                            let wr = WorkerReply {
                                 corr: env.corr,
                                 worker: worker_id,
                                 body,
-                            }));
+                            };
+                            match faults.reply_action(worker_id, replies_sent) {
+                                ReplyAction::Drop => {}
+                                ReplyAction::Delay(d) => {
+                                    std::thread::sleep(d);
+                                    let _ = reply.send(RouterEvent::Worker(wr));
+                                }
+                                ReplyAction::Deliver => {
+                                    let _ = reply.send(RouterEvent::Worker(wr));
+                                }
+                            }
                         }
                         WorkerMsg::Shutdown => break 'run,
                     }
+                }
+                // Simulated crash (DESIGN.md D13): the fault plan may
+                // schedule this worker's death at a decode round. The
+                // abrupt `return` drops the control receiver and every
+                // live turn's event sender — the exact footprint of a
+                // killed/panicked thread — so the router's detection and
+                // recovery paths exercise the real thing.
+                if faults.kill_due(worker_id, worker.round) {
+                    eprintln!(
+                        "[worker {worker_id}] fault plan: killing at round {}",
+                        worker.round
+                    );
+                    return;
                 }
                 // Publish freshly-routed queue depth BEFORE the round: a
                 // long step() must not leave the router reading gauges
@@ -2099,6 +2166,6 @@ pub(crate) fn spawn_worker(
     Ok(WorkerHandle {
         tx,
         load,
-        _thread: Arc::new(ThreadGuard(Some(thread))),
+        thread: Arc::new(ThreadGuard(Some(thread))),
     })
 }

@@ -99,6 +99,10 @@ fn engine_cfg_from(args: &tconstformer::util::cli::Args) -> Result<EngineConfig>
             0 => None,
             s => Some(std::time::Duration::from_secs(s as u64)),
         },
+        faults: match args.get("fault-plan") {
+            Some(spec) => tconstformer::coordinator::FaultPlan::parse(spec)?,
+            None => Default::default(),
+        },
     })
 }
 
@@ -121,6 +125,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt("store-dir", "persistent session store directory: TTL-expired sessions demote to disk snapshots there and survive restarts (off when unset)")
         .opt_default("store-cap-bytes", "disk-tier capacity cap in bytes, LRU-evicted (0 = unlimited)", "0")
         .opt_default("store-ttl", "disk-tier snapshot TTL in seconds (0 = none)", "0")
+        .opt("fault-plan", "deterministic fault injection for chaos testing (DESIGN.md D13), e.g. 'kill=1@120;drop-reply=0@2' (inert when unset)")
         .opt_default("sync-batch", "batch a round's window-full lanes into one background fold execution (0 = one execution per lane, the D12 control arm)", "1")
         .flag("legacy-batching", "per-lane gather/scatter decode (disable the resident arena)")
         .flag("host-arena", "stage resident arena slabs on the host (disable device residency)")

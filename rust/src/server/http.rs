@@ -26,8 +26,12 @@
 //! `{"code", "message", "retryable"}` (plus `"retry_after_s"` when rate
 //! limited), with the status taken from the code's canonical mapping
 //! (`unknown_session`→404, `session_busy`→409, `rate_limited`→429,
-//! `deadline`→504, `bad_request`→400, `internal`→500). Rate-limited
-//! turns also carry a `Retry-After` header. `/generate` is the frozen
+//! `deadline`→504, `bad_request`→400, `internal`→500,
+//! `worker_lost`→503). Rate-limited turns also carry a `Retry-After`
+//! header. A worker dying mid-stream surfaces as an in-stream
+//! `worker_lost` error event (retryable — the session re-adopts on a
+//! survivor when its snapshot is in the disk tier, DESIGN.md D13),
+//! never as a silently truncated stream. `/generate` is the frozen
 //! pre-session API: it keeps its response shape verbatim and is marked
 //! `Deprecation: true` on every response — new clients should use the
 //! session endpoints.

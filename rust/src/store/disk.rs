@@ -81,6 +81,11 @@ impl DiskStore {
         let mut by_sid = HashMap::new();
         let mut total_bytes = 0u64;
         let now = Instant::now();
+        // One wall-clock sample for the whole scan: files with identical
+        // mtimes must seed identical last_touch, so eviction order after a
+        // restart is decided by the (last_touch, sid) tie-break, not by
+        // nanosecond drift across loop iterations.
+        let sys_now = SystemTime::now();
         for entry in std::fs::read_dir(dir).map_err(|e| io_err(0, e))? {
             let entry = entry.map_err(|e| io_err(0, e))?;
             let name = entry.file_name();
@@ -97,7 +102,7 @@ impl DiskStore {
             let age = meta
                 .modified()
                 .ok()
-                .and_then(|m| SystemTime::now().duration_since(m).ok())
+                .and_then(|m| sys_now.duration_since(m).ok())
                 .unwrap_or(Duration::ZERO);
             let last_touch = now.checked_sub(age).unwrap_or(now);
             total_bytes += meta.len();
@@ -151,11 +156,14 @@ impl SessionStore for DiskStore {
             // our own prior snapshot releases its bytes implicitly).
             let own = idx.by_sid.get(&sid).map(|e| e.bytes).unwrap_or(0);
             while idx.total_bytes - own + new_len > self.cap_bytes {
+                // Tie-break equal ages by sid so the victim order is
+                // deterministic even when last_touch collides (e.g. a
+                // restart scan over files sharing one mtime).
                 let victim = idx
                     .by_sid
                     .iter()
                     .filter(|(&s, _)| s != sid)
-                    .min_by_key(|(_, e)| e.last_touch)
+                    .min_by_key(|(&s, e)| (e.last_touch, s))
                     .map(|(&s, _)| s);
                 match victim {
                     Some(v) => {
@@ -366,6 +374,104 @@ mod tests {
         store.sweep();
         assert_eq!(store.sessions(), 0);
         assert_eq!(store.counters().evicted_ttl, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_byte_snapshot_is_indexed_and_refused_as_truncated() {
+        let dir = tmpdir("zero");
+        {
+            let store = DiskStore::open(&dir, "fp", 0, None).unwrap();
+            store.put(&snap(1, 1)).unwrap();
+        }
+        // A zero-byte .snap (fs truncation on power loss) must still be
+        // indexed — so cap accounting and the GC see it — and reads must
+        // refuse it with the specific Truncated class, not panic.
+        std::fs::write(dir.join(format!("sess-{:016x}.snap", 2u64)), []).unwrap();
+        let store = DiskStore::open(&dir, "fp", 0, None).unwrap();
+        assert_eq!(store.sessions(), 2);
+        assert!(store.contains(2));
+        assert!(matches!(store.get(2), Err(StoreError::Truncated { key: 2 })));
+        // The damaged entry stays removable and accounting stays sane.
+        assert_eq!(store.remove(2).unwrap(), 0);
+        assert_eq!(store.sessions(), 1);
+        assert_eq!(store.get(1).unwrap(), snap(1, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_racing_concurrent_demotes_keeps_accounting_consistent() {
+        use std::sync::Arc;
+        let dir = tmpdir("race");
+        let store = Arc::new(
+            DiskStore::open(&dir, "fp", 0, Some(Duration::from_millis(1))).unwrap(),
+        );
+        let writer = {
+            let store = Arc::clone(&store);
+            std::thread::spawn(move || {
+                for i in 0..200u64 {
+                    store.put(&snap(i % 8, i as usize)).unwrap();
+                }
+            })
+        };
+        // sweep() is rate-limited to once per SWEEP_INTERVAL; reset
+        // last_sweep between calls so the expiry scan actually races the
+        // writer instead of no-opping behind the limiter.
+        for _ in 0..200 {
+            store.index.lock().unwrap().last_sweep = None;
+            store.sweep();
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        writer.join().unwrap();
+        // Whatever survived the race: the index must agree with the files
+        // actually on disk, byte for byte and entry for entry.
+        let on_disk: u64 = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().metadata().unwrap().len())
+            .sum();
+        assert_eq!(store.bytes(), on_disk);
+        assert_eq!(store.sessions(), std::fs::read_dir(&dir).unwrap().count());
+        // And once everything is idle past the TTL, a final sweep drains
+        // the store completely.
+        std::thread::sleep(Duration::from_millis(5));
+        store.index.lock().unwrap().last_sweep = None;
+        store.sweep();
+        assert_eq!((store.bytes(), store.sessions()), (0, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cap_eviction_breaks_identical_mtime_ties_by_lowest_sid() {
+        let dir = tmpdir("tie");
+        let one = {
+            let probe = DiskStore::open(&dir, "fp", 0, None).unwrap();
+            let n = probe.put(&snap(1, 1)).unwrap();
+            probe.remove(1).unwrap();
+            n
+        };
+        {
+            let store = DiskStore::open(&dir, "fp", 0, None).unwrap();
+            store.put(&snap(5, 1)).unwrap();
+            store.put(&snap(9, 2)).unwrap();
+            store.put(&snap(2, 3)).unwrap();
+        }
+        // Stamp one mtime on all three so the restart scan seeds identical
+        // last_touch values — the eviction order must then fall back to
+        // sid, lowest first, not HashMap iteration order.
+        let stamp = SystemTime::now() - Duration::from_secs(60);
+        for sid in [5u64, 9, 2] {
+            std::fs::File::options()
+                .write(true)
+                .open(dir.join(format!("sess-{sid:016x}.snap")))
+                .unwrap()
+                .set_times(std::fs::FileTimes::new().set_modified(stamp))
+                .unwrap();
+        }
+        let store = DiskStore::open(&dir, "fp", 3 * one, None).unwrap();
+        store.put(&snap(7, 4)).unwrap(); // needs exactly one eviction
+        assert!(!store.contains(2), "lowest sid must be the tie-break victim");
+        assert!(store.contains(5) && store.contains(9) && store.contains(7));
+        assert_eq!(store.counters().evicted_cap, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

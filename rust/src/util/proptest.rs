@@ -3,6 +3,19 @@
 //!
 //! Used by `rust/tests/proptests.rs` to check coordinator invariants
 //! (routing, batching, KV accounting, sync cadence).
+//!
+//! Determinism controls (how CI pins the sweep so a tier-1 failure
+//! reproduces on a laptop, see `.github/workflows/ci.yml`):
+//!
+//! - `PROPTEST_CASES` / `PROPTEST_SEED` env vars override the per-call
+//!   `cases` / `seed` arguments (decimal, or `0x`-hex for the seed).
+//! - `proptest-regressions/<name>.seeds` (next to `Cargo.toml`; `#`
+//!   comments, one `cases seed` pair per line) is replayed *before* the
+//!   random sweep, so once a failing sweep is committed it can never
+//!   silently pass again.
+//! - Set `PROPTEST_PERSIST=1` to append the failing `cases seed` pair to
+//!   that file automatically (off by default so `should_panic` self-tests
+//!   don't litter the checkout).
 
 use super::rng::Rng;
 
@@ -12,8 +25,39 @@ pub type PropResult = Result<(), String>;
 /// Run `prop` over `cases` random inputs drawn by `gen`. On failure, try to
 /// shrink via `shrink` (which proposes smaller candidates) and panic with
 /// the smallest failing case.
+///
+/// Honors the `PROPTEST_CASES` / `PROPTEST_SEED` env overrides and replays
+/// any committed `proptest-regressions/<name>.seeds` sweeps first.
 pub fn check<T, G, S, P>(name: &str, cases: usize, seed: u64, mut gen: G, shrink: S, prop: P)
 where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> PropResult,
+{
+    let (cases, seed) = resolve(
+        cases,
+        seed,
+        std::env::var("PROPTEST_CASES").ok().as_deref(),
+        std::env::var("PROPTEST_SEED").ok().as_deref(),
+    );
+    for (rc, rs) in regression_runs(name) {
+        sweep(name, rc, rs, &mut gen, &shrink, &prop, true);
+    }
+    sweep(name, cases, seed, &mut gen, &shrink, &prop, false);
+}
+
+/// One seeded sweep of `cases` inputs. `replay` marks a committed
+/// regression re-run (labelled in the panic, never re-recorded).
+fn sweep<T, G, S, P>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    gen: &mut G,
+    shrink: &S,
+    prop: &P,
+    replay: bool,
+) where
     T: Clone + std::fmt::Debug,
     G: FnMut(&mut Rng) -> T,
     S: Fn(&T) -> Vec<T>,
@@ -23,12 +67,96 @@ where
     for case_idx in 0..cases {
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
-            let (smallest, smallest_msg) = shrink_loop(input, msg, &shrink, &prop);
+            if !replay {
+                record_regression(name, cases, seed);
+            }
+            let via = if replay { " [regression replay]" } else { "" };
+            let (smallest, smallest_msg) = shrink_loop(input, msg, shrink, prop);
             panic!(
-                "property '{name}' failed (case {case_idx}, seed {seed}):\n  \
-                 input: {smallest:?}\n  error: {smallest_msg}"
+                "property '{name}' failed{via} (case {case_idx} of {cases}, seed {seed}):\n  \
+                 input: {smallest:?}\n  error: {smallest_msg}\n  \
+                 pin it: echo '{cases} {seed}' >> rust/proptest-regressions/{name}.seeds"
             );
         }
+    }
+}
+
+/// Pure override resolution for `(cases, seed)`: env values win when they
+/// parse (seed accepts decimal or `0x`-hex), otherwise the call-site
+/// defaults stand. `PROPTEST_CASES=0` is ignored rather than disabling
+/// the sweep.
+fn resolve(
+    default_cases: usize,
+    default_seed: u64,
+    env_cases: Option<&str>,
+    env_seed: Option<&str>,
+) -> (usize, u64) {
+    let cases = env_cases
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(default_cases);
+    let seed = env_seed
+        .and_then(|s| parse_u64(s.trim()))
+        .unwrap_or(default_seed);
+    (cases, seed)
+}
+
+fn parse_u64(s: &str) -> Option<u64> {
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// `cases seed` pairs from a seeds file body; `#` comments and malformed
+/// lines are skipped (a typo must not mask the committed sweeps).
+fn parse_seed_lines(text: &str) -> Vec<(usize, u64)> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let mut it = l.split_whitespace();
+            let cases = it.next()?.parse::<usize>().ok().filter(|&c| c > 0)?;
+            let seed = parse_u64(it.next()?)?;
+            Some((cases, seed))
+        })
+        .collect()
+}
+
+fn regression_file(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("proptest-regressions")
+        .join(format!("{name}.seeds"))
+}
+
+fn regression_runs(name: &str) -> Vec<(usize, u64)> {
+    match std::fs::read_to_string(regression_file(name)) {
+        Ok(text) => parse_seed_lines(&text),
+        Err(_) => Vec::new(),
+    }
+}
+
+/// Best-effort append of a failing sweep to the regression file. Gated on
+/// `PROPTEST_PERSIST=1` and deduplicated; any I/O failure is swallowed —
+/// the property panic must surface regardless.
+fn record_regression(name: &str, cases: usize, seed: u64) {
+    if !std::env::var("PROPTEST_PERSIST").is_ok_and(|v| v == "1") {
+        return;
+    }
+    let path = regression_file(name);
+    if std::fs::read_to_string(&path)
+        .map(|t| parse_seed_lines(&t).contains(&(cases, seed)))
+        .unwrap_or(false)
+    {
+        return;
+    }
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = writeln!(f, "{cases} {seed}");
     }
 }
 
@@ -139,26 +267,42 @@ mod tests {
     #[test]
     #[should_panic(expected = "property 'always_small' failed")]
     fn failing_property_panics_with_input() {
-        check_no_shrink("always_small", 500, 2, |r| r.range(0, 1000), |&v| {
-            if v < 900 {
-                Ok(())
-            } else {
-                Err(format!("{v} too big"))
-            }
-        });
+        // Drive `sweep` directly: the failure behaviour under test must not
+        // depend on a PROPTEST_CASES/PROPTEST_SEED override in the
+        // environment.
+        let mut gen = |r: &mut Rng| r.range(0, 1000);
+        sweep(
+            "always_small",
+            500,
+            2,
+            &mut gen,
+            &|_| Vec::new(),
+            &|&v: &u64| {
+                if v < 900 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} too big"))
+                }
+            },
+            false,
+        );
     }
 
     #[test]
     fn shrinking_finds_boundary() {
         // Capture the panic message and assert the shrunk value is minimal.
+        // Uses `sweep` directly so an env seed override cannot change which
+        // case fails first (the greedy shrinker is step-bounded).
         let result = std::panic::catch_unwind(|| {
-            check(
+            let mut gen = |r: &mut Rng| r.usize(0, 1000);
+            sweep(
                 "boundary",
                 500,
                 3,
-                |r| r.usize(0, 1000),
-                shrinkers::usize_toward(0),
-                |&v| if v < 500 { Ok(()) } else { Err("big".into()) },
+                &mut gen,
+                &shrinkers::usize_toward(0),
+                &|&v: &usize| if v < 500 { Ok(()) } else { Err("big".into()) },
+                false,
             );
         });
         let msg = *result.unwrap_err().downcast::<String>().unwrap();
@@ -172,5 +316,35 @@ mod tests {
         let cands = sh(&vec![5usize, 6, 7, 8]);
         assert!(cands.iter().any(|c| c.len() == 2));
         assert!(cands.iter().any(|c| c.len() == 3));
+    }
+
+    #[test]
+    fn resolve_env_overrides_win_when_they_parse() {
+        // No env → call-site defaults stand.
+        assert_eq!(resolve(100, 7, None, None), (100, 7));
+        // CI pins both (decimal seed, as in ci.yml).
+        assert_eq!(
+            resolve(100, 7, Some("256"), Some("3405691582")),
+            (256, 3405691582)
+        );
+        // Hex seeds are accepted, whitespace tolerated.
+        assert_eq!(resolve(100, 7, None, Some(" 0xCAFEBABE ")), (100, 0xCAFEBABE));
+        // Garbage and a zero case count fall back to the defaults.
+        assert_eq!(resolve(100, 7, Some("many"), Some("")), (100, 7));
+        assert_eq!(resolve(100, 7, Some("0"), None), (100, 7));
+    }
+
+    #[test]
+    fn seed_lines_parse_pairs_and_skip_comments() {
+        let text = "# pinned by CI failure 2026-08-01\n\
+                    256 3405691582\n\
+                    \n\
+                    512 0xdeadbeef\n\
+                    not a line\n\
+                    0 99\n";
+        assert_eq!(
+            parse_seed_lines(text),
+            vec![(256, 3405691582), (512, 0xDEADBEEF)]
+        );
     }
 }

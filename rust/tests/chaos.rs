@@ -1,0 +1,416 @@
+//! Worker-failure chaos tests (DESIGN.md D13), over the tiny artifacts
+//! (self-skip when absent, like the other artifact-gated suites).
+//!
+//! The deterministic fault plan (`EngineConfig::faults`) kills workers at
+//! scripted decode rounds, drops or delays single replies, and corrupts
+//! snapshots on demand, so every recovery path runs under `cargo test`:
+//!
+//! * **fail fast** — a turn in flight on a killed worker receives a
+//!   retryable `worker_lost` error within the detection window, never a
+//!   silent hang or a truncated-but-"done" stream;
+//! * **re-adoption** — every disk-tier session owned by the dead worker
+//!   resumes on a survivor with a stream **bit-identical** to an unfailed
+//!   control arm (all three architectures), while sessions whose state
+//!   died with the thread are refused (`unknown_session`) and metered;
+//! * **accounting** — `sessions_readopted_total + sessions_lost_total`
+//!   equals the dead worker's session count, `worker_failures_total` and
+//!   the `recovery_ms` histogram move;
+//! * **mid-phase kills** — dying mid-chunked-prefill and mid-overlap-fold
+//!   fails the victim turn and nothing else; the router keeps serving on
+//!   survivors;
+//! * **double failure** — two workers dying in sequence re-adopts
+//!   through both deaths (a session can hop twice);
+//! * **reply loss** — a dropped `WorkerReply` expires its continuation
+//!   without leaking a pending-map entry (the next fan-out completes).
+
+use std::time::{Duration, Instant};
+
+use tconstformer::coordinator::scheduler::SchedConfig;
+use tconstformer::coordinator::{
+    Engine, EngineConfig, EngineHandle, FaultPlan, Response, SessionHandle,
+    StreamEvent, TurnError, TurnRequest,
+};
+use tconstformer::model::sampler::SamplingParams;
+use tconstformer::model::Arch;
+
+mod common;
+use common::{artifacts_dir, have_artifacts, prompt, wait_metric};
+
+/// Two-worker engine with a short session TTL (fast disk demotion), a
+/// fresh persistent store, and an optional fault plan.
+fn chaos_cfg(arch: Arch, workers: usize, dir: &std::path::Path, plan: Option<&str>) -> EngineConfig {
+    EngineConfig {
+        artifacts_dir: artifacts_dir(),
+        preset: "tiny".into(),
+        arch,
+        workers,
+        max_lanes: 2,
+        session_ttl: Duration::from_millis(300),
+        store_dir: Some(dir.to_string_lossy().into_owned()),
+        faults: plan.map(|p| FaultPlan::parse(p).unwrap()).unwrap_or_default(),
+        ..Default::default()
+    }
+}
+
+fn sampled_turn(id: u64, sid: u64, p: Vec<i32>, max_new: usize, c: u64) -> TurnRequest {
+    let mut req = TurnRequest::greedy_turn(id, sid, p, max_new);
+    req.sampling = SamplingParams { temperature: 0.7, top_k: 0, seed: 42 + c };
+    req
+}
+
+/// Drain a turn's stream until its terminal event and return the error —
+/// asserting the failure arrives within `deadline` (a lost worker must
+/// fail fast, never leave the client hanging) and that the turn did not
+/// quietly "complete".
+fn expect_turn_error(h: &SessionHandle, deadline: Duration) -> TurnError {
+    let t0 = Instant::now();
+    loop {
+        assert!(
+            t0.elapsed() < deadline,
+            "turn neither failed nor finished within {deadline:?}"
+        );
+        match h.recv_timeout(Duration::from_millis(200)) {
+            Some(StreamEvent::Error(e)) => return e,
+            Some(StreamEvent::TurnDone(_)) => panic!("turn completed despite worker kill"),
+            Some(_) => {}
+            None => {}
+        }
+    }
+}
+
+/// Setup shared by the control and chaos arms of the kill-mid-decode
+/// scenario: open five sessions, run turn 1 on each (the first one — the
+/// eventual long-turn victim — placed first so it cold-places on worker
+/// 0, the fault plan's target), then wait until every session has been
+/// TTL-demoted into the disk store. Returns the sids, each session's
+/// observed owner, and the turn-1 responses.
+fn seed_sessions(handle: &EngineHandle) -> (Vec<u64>, Vec<usize>, Vec<Response>) {
+    let sids: Vec<u64> = (0..5).map(|_| handle.open_session().unwrap()).collect();
+    let mut owners = Vec::new();
+    let mut turn1 = Vec::new();
+    for (i, &sid) in sids.iter().enumerate() {
+        let r = handle
+            .submit(sampled_turn(1 + i as u64, sid, prompt(24 + 3 * i, i), 5, i as u64))
+            .wait()
+            .unwrap();
+        owners.push(r.metrics.worker);
+        turn1.push(r);
+        // Let the worker publish its load so placement reads settled
+        // gauges (same settle the sharded suite uses).
+        std::thread::sleep(Duration::from_millis(150));
+    }
+    wait_metric(handle, "disk_tier_sessions", 5.0);
+    (sids, owners, turn1)
+}
+
+/// Tentpole acceptance: kill worker 0 mid-decode of a long turn. The
+/// in-flight turn fails fast with retryable `worker_lost`; every
+/// disk-tier session the dead worker owned re-adopts onto the survivor
+/// and resumes **bit-identically** to an unfailed control arm; the
+/// session whose state died in-turn is lost, refused and metered; and
+/// `sessions_readopted_total + sessions_lost_total` equals the dead
+/// worker's session count. All three architectures.
+#[test]
+fn killed_worker_fails_fast_and_disk_sessions_readopt_bit_identically() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    for arch in [Arch::TConst, Arch::TLin, Arch::Base] {
+        // Control arm: identical script, no faults, its own store.
+        let cdir = common::fresh_dir(&format!("chaos-control-{arch:?}"));
+        let control = Engine::spawn(chaos_cfg(arch, 2, &cdir, None)).unwrap();
+        let (csids, _, cturn1) = seed_sessions(&control);
+        let clong = control
+            .submit(sampled_turn(6, csids[0], prompt(9, 30), 150, 0))
+            .wait()
+            .unwrap();
+        assert_eq!(clong.tokens.len(), 150, "{arch:?}: control long turn truncated");
+        let cturn2: Vec<Response> = (1..5)
+            .map(|i| {
+                control
+                    .submit(sampled_turn(6 + i as u64, csids[i], prompt(7 + i, 40 + i), 5, i as u64))
+                    .wait()
+                    .unwrap()
+            })
+            .collect();
+        control.shutdown();
+
+        // Chaos arm: worker 0 dies once its decode round counter crosses
+        // 40 — i.e. mid-way through the long turn on session 0 (seeding
+        // costs well under 40 rounds on any worker; the long turn alone
+        // crosses the threshold with margin).
+        let dir = common::fresh_dir(&format!("chaos-kill-{arch:?}"));
+        let chaos = Engine::spawn(chaos_cfg(arch, 2, &dir, Some("kill=0@40"))).unwrap();
+        let (sids, owners, turn1) = seed_sessions(&chaos);
+        assert_eq!(sids, csids, "arms must share the sid sequence (sampling salts)");
+        assert_eq!(
+            owners[0], 0,
+            "{arch:?}: victim session cold-placed off worker 0; owners: {owners:?}"
+        );
+        for (a, b) in turn1.iter().zip(&cturn1) {
+            assert_eq!(a.tokens, b.tokens, "{arch:?}: pre-kill turn diverged");
+        }
+
+        // The long turn resumes session 0 on worker 0 (promote removes
+        // its snapshot from the store: killed in-turn ⇒ unrecoverable).
+        let victim = chaos.submit(sampled_turn(6, sids[0], prompt(9, 30), 150, 0));
+        let err = expect_turn_error(&victim, Duration::from_secs(15));
+        assert_eq!(err.code.as_str(), "worker_lost", "{arch:?}: got {err}");
+        assert!(err.retryable, "{arch:?}: worker_lost must be retryable");
+
+        // Accounting: the dead worker owned session 0 (in-turn, lost)
+        // plus every seeded session the placement gave it (on disk,
+        // re-adopted). The sum is exactly its session count.
+        let m = wait_metric(&chaos, "worker_failures_total", 1.0);
+        let dead_owned = owners.iter().filter(|&&w| w == 0).count();
+        let readopted = m.get("sessions_readopted_total").as_usize().unwrap();
+        let lost = m.get("sessions_lost_total").as_usize().unwrap();
+        assert_eq!(lost, 1, "{arch:?}: only the in-turn session is unrecoverable: {m}");
+        assert_eq!(readopted, dead_owned - 1, "{arch:?}: disk sessions re-adopt: {m}");
+        assert_eq!(readopted + lost, dead_owned, "{arch:?}: accounting drifted: {m}");
+        assert!(
+            m.get("recovery_ms_p99").as_f64().unwrap() >= 0.0,
+            "{arch:?}: recovery histogram empty: {m}"
+        );
+
+        // Re-adopted (and untouched) sessions resume on the survivor,
+        // bit-identical to the unfailed control arm.
+        for i in 1..5 {
+            let r = chaos
+                .submit(sampled_turn(6 + i as u64, sids[i], prompt(7 + i, 40 + i), 5, i as u64))
+                .wait()
+                .unwrap_or_else(|e| panic!("{arch:?}: session {i} lost its state: {e:#}"));
+            assert_eq!(
+                r.tokens, cturn2[i - 1].tokens,
+                "{arch:?}: recovered session {i} diverged from control"
+            );
+            assert!(
+                r.metrics.saved_prefill_tokens > 0,
+                "{arch:?}: session {i} re-prefilled history after recovery"
+            );
+        }
+
+        // The lost session is refused, not resurrected blank.
+        let err = chaos
+            .submit(sampled_turn(20, sids[0], prompt(5, 50), 3, 0))
+            .wait()
+            .expect_err("in-turn session died with the worker");
+        assert!(err.to_string().contains("unknown session"), "{arch:?}: got {err:#}");
+        chaos.shutdown();
+        let _ = std::fs::remove_dir_all(&cdir);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Kill mid-chunked-prefill: a cold turn whose prompt is being absorbed
+/// in chunks dies with the worker (nothing was ever on disk), the client
+/// gets `worker_lost`, and the router keeps serving on the survivor.
+#[test]
+fn kill_mid_chunked_prefill_fails_cold_turn_and_keeps_serving() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let dir = common::fresh_dir("chaos-chunked");
+    let cfg = EngineConfig {
+        sched: SchedConfig { prefill_chunk: 8, ..Default::default() },
+        ..chaos_cfg(Arch::TConst, 2, &dir, Some("kill=0@3"))
+    };
+    let handle = Engine::spawn(cfg).unwrap();
+    let sid = handle.open_session().unwrap();
+    // 64 prompt tokens / 8 per round = 8 admission rounds; worker 0 dies
+    // at round 3, mid-absorption.
+    let victim = handle.submit(TurnRequest::greedy_turn(1, sid, prompt(64, 0), 4));
+    let err = expect_turn_error(&victim, Duration::from_secs(15));
+    assert_eq!(err.code.as_str(), "worker_lost", "got {err}");
+    assert!(err.retryable);
+
+    let m = wait_metric(&handle, "worker_failures_total", 1.0);
+    assert_eq!(m.get("sessions_lost_total").as_usize(), Some(1), "{m}");
+    assert_eq!(m.get("sessions_readopted_total").as_usize(), Some(0), "{m}");
+
+    // The tier still serves: a fresh turn lands on the survivor.
+    let sid2 = handle.open_session().unwrap();
+    let r = handle
+        .submit(TurnRequest::greedy_turn(2, sid2, prompt(12, 1), 4))
+        .wait()
+        .expect("survivor must keep serving");
+    assert_eq!(r.metrics.worker, 1, "placement must skip the dead worker");
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Kill mid-overlap-fold: worker 0 dies while a long TConst generation
+/// is crossing sync windows with the background fold stream enabled. The
+/// victim turn fails fast; the engine keeps serving.
+#[test]
+fn kill_mid_overlap_fold_fails_turn_and_keeps_serving() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let dir = common::fresh_dir("chaos-overlap");
+    let cfg = EngineConfig {
+        overlap_sync: true,
+        sync_batch: true,
+        ..chaos_cfg(Arch::TConst, 2, &dir, Some("kill=0@24"))
+    };
+    let handle = Engine::spawn(cfg).unwrap();
+    let sid = handle.open_session().unwrap();
+    let r1 = handle
+        .submit(sampled_turn(1, sid, prompt(24, 0), 5, 0))
+        .wait()
+        .unwrap();
+    assert_eq!(r1.metrics.worker, 0, "first cold turn places on worker 0");
+    wait_metric(&handle, "disk_tier_sessions", 1.0);
+
+    // Resume with a generation long enough to cross several W_og windows
+    // (background folds in flight when round 24 hits). Promote pulled the
+    // snapshot out of the store, so the kill loses the session.
+    let victim = handle.submit(sampled_turn(2, sid, prompt(6, 1), 150, 0));
+    let err = expect_turn_error(&victim, Duration::from_secs(15));
+    assert_eq!(err.code.as_str(), "worker_lost", "got {err}");
+
+    let m = wait_metric(&handle, "worker_failures_total", 1.0);
+    assert_eq!(m.get("sessions_lost_total").as_usize(), Some(1), "{m}");
+
+    let sid2 = handle.open_session().unwrap();
+    let r = handle
+        .submit(TurnRequest::greedy_turn(3, sid2, prompt(10, 2), 6))
+        .wait()
+        .expect("survivor must keep serving");
+    assert_eq!(r.metrics.worker, 1);
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Double failure: workers 0 and 1 die in sequence (staggered kill
+/// rounds) while each is mid-way through a long turn. Both victim turns
+/// fail with `worker_lost`; every disk-tier session — including any that
+/// re-adopted onto worker 1 after the first death — ends up resumable on
+/// the last survivor.
+#[test]
+fn double_failure_readopts_through_both_deaths() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let dir = common::fresh_dir("chaos-double");
+    let handle =
+        Engine::spawn(chaos_cfg(Arch::TConst, 3, &dir, Some("kill=0@60;kill=1@75"))).unwrap();
+    let sids: Vec<u64> = (0..6).map(|_| handle.open_session().unwrap()).collect();
+    let mut owners = Vec::new();
+    for (i, &sid) in sids.iter().enumerate() {
+        let r = handle
+            .submit(sampled_turn(1 + i as u64, sid, prompt(20 + 2 * i, i), 5, i as u64))
+            .wait()
+            .unwrap();
+        owners.push(r.metrics.worker);
+        std::thread::sleep(Duration::from_millis(150));
+    }
+    assert_eq!(owners[0], 0, "session 0 seeds worker 0; owners: {owners:?}");
+    assert_eq!(owners[1], 1, "session 1 seeds worker 1; owners: {owners:?}");
+    wait_metric(&handle, "disk_tier_sessions", 6.0);
+
+    // Long resumes drive each doomed worker's round counter over its kill
+    // threshold concurrently.
+    let v0 = handle.submit(sampled_turn(10, sids[0], prompt(5, 30), 250, 0));
+    let v1 = handle.submit(sampled_turn(11, sids[1], prompt(5, 31), 250, 1));
+    let e0 = expect_turn_error(&v0, Duration::from_secs(30));
+    let e1 = expect_turn_error(&v1, Duration::from_secs(30));
+    assert_eq!(e0.code.as_str(), "worker_lost", "got {e0}");
+    assert_eq!(e1.code.as_str(), "worker_lost", "got {e1}");
+
+    let m = wait_metric(&handle, "worker_failures_total", 2.0);
+    // The two promoted-then-killed sessions are gone; every other session
+    // the dead workers owned was on disk and re-adopted (possibly twice:
+    // a session re-adopted onto worker 1 hops again when it dies).
+    let dead_owned_on_disk = owners[2..].iter().filter(|&&w| w < 2).count();
+    assert_eq!(m.get("sessions_lost_total").as_usize(), Some(2), "{m}");
+    let readopted = m.get("sessions_readopted_total").as_usize().unwrap();
+    assert!(
+        readopted >= dead_owned_on_disk,
+        "re-adoptions ({readopted}) below dead workers' disk sessions \
+         ({dead_owned_on_disk}): {m}"
+    );
+
+    // Everything that was recoverable resumes on the survivor.
+    for (i, &sid) in sids.iter().enumerate().skip(2) {
+        let r = handle
+            .submit(sampled_turn(20 + i as u64, sid, prompt(6 + i, 60 + i), 4, i as u64))
+            .wait()
+            .unwrap_or_else(|e| panic!("session {i} unrecoverable after double failure: {e:#}"));
+        assert_eq!(r.metrics.worker, 2, "session {i} resumed off the survivor");
+        assert!(r.metrics.saved_prefill_tokens > 0, "session {i} lost its history");
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A dropped `WorkerReply` (simulated reply-channel loss) expires its
+/// continuation at the deadline without leaking a pending-map entry: the
+/// timed-out fan-out returns partial data, is counted, and the *next*
+/// fan-out completes with every worker present.
+#[test]
+fn dropped_reply_expires_cleanly_and_next_fanout_completes() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let dir = common::fresh_dir("chaos-drop");
+    let handle =
+        Engine::spawn(chaos_cfg(Arch::TConst, 2, &dir, Some("drop-reply=0@1"))).unwrap();
+    // First metrics fan-out: worker 0's very first enveloped reply is
+    // dropped, so this call resolves only when the router expires the
+    // continuation at the reply deadline (~5s) and flushes the partial
+    // aggregate.
+    let t0 = Instant::now();
+    let partial = handle.metrics().expect("partial aggregate must still flush");
+    assert!(
+        t0.elapsed() >= Duration::from_secs(4),
+        "first fan-out should have waited out the reply deadline"
+    );
+    assert_eq!(partial.get("workers").as_usize(), Some(1), "{partial}");
+
+    // Second fan-out: both workers answer (the drop was one-shot), which
+    // is only possible if the expired continuation left no pending entry
+    // behind under its correlation id.
+    let full = handle.metrics().expect("second fan-out must complete");
+    assert_eq!(full.get("workers").as_usize(), Some(2), "{full}");
+    assert!(
+        full.get("worker_reply_timeouts_total").as_f64().unwrap() >= 1.0,
+        "dropped reply not counted: {full}"
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `corrupt-snapshot` directive damages a named session's snapshot
+/// at demote time; the resume is refused with the typed corrupt error
+/// and metered — proving the injection hook drives the same refusal path
+/// the store suite pins with hand-flipped bytes.
+#[test]
+fn corrupt_snapshot_directive_refuses_resume() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let dir = common::fresh_dir("chaos-corrupt");
+    let handle =
+        Engine::spawn(chaos_cfg(Arch::TConst, 1, &dir, Some("corrupt-snapshot=1"))).unwrap();
+    let sid = handle.open_session().unwrap();
+    assert_eq!(sid, 1, "fault plan targets the first session id");
+    handle.submit(sampled_turn(1, sid, prompt(20, 0), 5, 0)).wait().unwrap();
+    wait_metric(&handle, "disk_tier_sessions", 1.0);
+
+    let err = handle
+        .submit(sampled_turn(2, sid, prompt(6, 1), 4, 0))
+        .wait()
+        .expect_err("corrupted snapshot must refuse the resume");
+    assert!(err.to_string().contains("resume failed"), "got {err:#}");
+    let m = handle.metrics().unwrap();
+    assert_eq!(m.get("store_refused_corrupt").as_usize(), Some(1), "{m}");
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -22,13 +22,8 @@ use tconstformer::coordinator::scheduler::SchedConfig;
 use tconstformer::coordinator::{ArenaStaging, Engine, EngineConfig, TurnRequest};
 use tconstformer::model::{Arch, SyncMode};
 
-fn artifacts_dir() -> String {
-    std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
-}
-
-fn have_artifacts() -> bool {
-    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
-}
+mod common;
+use common::{artifacts_dir, have_artifacts, prompt};
 
 fn tiny_cfg(arch: Arch, prefill_chunk: usize) -> EngineConfig {
     EngineConfig {
@@ -39,12 +34,9 @@ fn tiny_cfg(arch: Arch, prefill_chunk: usize) -> EngineConfig {
         max_lanes: 4,
         sched: SchedConfig { prefill_chunk, ..Default::default() },
         session_ttl: Duration::from_secs(600),
+        faults: common::test_fault_plan(),
         ..Default::default()
     }
-}
-
-fn prompt(n: usize, seed: usize) -> Vec<i32> {
-    (0..n).map(|i| 1 + ((i * 37 + seed * 101) % 255) as i32).collect()
 }
 
 /// Run a mixed workload — two long cold prompts (chunk-eligible) and one

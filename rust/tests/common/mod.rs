@@ -1,0 +1,90 @@
+//! Helpers shared by the artifact-gated integration suites (`mod common;`
+//! in each test binary). One copy of the artifact gate, the deterministic
+//! prompt generator, and the CI soak/chaos knobs — instead of a per-suite
+//! paste that drifts.
+
+// Each suite uses a subset of these; the unused remainder is expected.
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use tconstformer::coordinator::{EngineHandle, FaultPlan};
+use tconstformer::util::json::Json;
+
+/// Root of the tiny compiled artifacts (`ARTIFACTS_DIR`, default
+/// `artifacts/`).
+pub fn artifacts_dir() -> String {
+    std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// Artifact gate: suites self-skip (pass vacuously, with a note) when the
+/// tiny artifacts have not been built.
+pub fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
+}
+
+/// Deterministic pseudo-random prompt of `n` tokens in `1..=255`. The
+/// `(i*37 + seed*101) % 255` walk is shared by every suite so control and
+/// treatment arms across binaries draw identical workloads.
+pub fn prompt(n: usize, seed: usize) -> Vec<i32> {
+    (0..n).map(|i| 1 + ((i * 37 + seed * 101) % 255) as i32).collect()
+}
+
+/// CI soak knob (DESIGN.md D11): when `TEST_STORE_DIR` is set, every
+/// *spawned* engine in a suite opens a persistent session store under a
+/// fresh subdirectory of it, so the disk tier's wiring (store open, boot
+/// recovery scan, sweep bookkeeping) rides along every scenario. Each
+/// engine gets its own subdirectory — the suites assert session-id parity
+/// across engines, which recovery of a previous engine's snapshots would
+/// shift. Owned-mode engines (`Engine::new`) never bind a store, so
+/// TTL-eviction assertions are unaffected.
+pub fn test_store_dir(prefix: &str) -> Option<String> {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let root = std::env::var("TEST_STORE_DIR").ok()?;
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    Some(format!("{root}/{prefix}-{}-{n}", std::process::id()))
+}
+
+/// Fresh per-test directory under the system tmpdir (removed first, so a
+/// rerun never inherits stale snapshots). Unconditional — for suites that
+/// *require* a store rather than riding the `TEST_STORE_DIR` soak knob.
+pub fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("tconst-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Poll `/metrics` until `key >= want` (demote/recovery paths run on
+/// worker TTL deadlines and the router's detection cadence, not on our
+/// clock). Returns the last snapshot.
+pub fn wait_metric(handle: &EngineHandle, key: &str, want: f64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let m = handle.metrics().expect("metrics");
+        if m.get(key).as_f64().unwrap_or(0.0) >= want {
+            return m;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for {key} >= {want}; last snapshot: {m}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// CI chaos knob (DESIGN.md D13): when `TEST_FAULT_PLAN` is set, every
+/// engine a suite spawns carries that fault plan, so the artifact suites
+/// can run once under a benign plan (e.g. `delay-reply=0@1:25`) proving
+/// the injection layer is inert-by-default and harmless when armed on the
+/// happy path. A malformed plan is a loud test-infra failure, not a
+/// silent no-fault run.
+pub fn test_fault_plan() -> FaultPlan {
+    match std::env::var("TEST_FAULT_PLAN") {
+        Ok(spec) if !spec.trim().is_empty() => FaultPlan::parse(&spec)
+            .unwrap_or_else(|e| panic!("bad TEST_FAULT_PLAN {spec:?}: {e}")),
+        _ => FaultPlan::default(),
+    }
+}

@@ -14,29 +14,8 @@ use tconstformer::server::http;
 use tconstformer::server::ServerConfig;
 use tconstformer::util::json::Json;
 
-fn artifacts_dir() -> String {
-    std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
-}
-
-fn have_artifacts() -> bool {
-    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
-}
-
-/// CI soak knob (DESIGN.md D11): when `TEST_STORE_DIR` is set, every
-/// *spawned* engine in this suite opens a persistent session store under
-/// a fresh subdirectory of it, so the disk tier's wiring (store open,
-/// boot recovery scan, sweep bookkeeping) rides along every e2e scenario.
-/// Each engine gets its own subdirectory — the suites assert session-id
-/// parity across engines, which recovery of a previous engine's snapshots
-/// would shift. Owned-mode engines (`Engine::new`) never bind a store,
-/// so TTL-eviction assertions are unaffected.
-fn test_store_dir() -> Option<String> {
-    use std::sync::atomic::AtomicUsize;
-    static NEXT: AtomicUsize = AtomicUsize::new(0);
-    let root = std::env::var("TEST_STORE_DIR").ok()?;
-    let n = NEXT.fetch_add(1, Ordering::Relaxed);
-    Some(format!("{root}/e2e-{}-{n}", std::process::id()))
-}
+mod common;
+use common::{artifacts_dir, have_artifacts, prompt};
 
 fn tiny_cfg(arch: Arch) -> EngineConfig {
     EngineConfig {
@@ -47,13 +26,10 @@ fn tiny_cfg(arch: Arch) -> EngineConfig {
         max_lanes: 4,
         staging: ArenaStaging::DeviceArena,
         session_ttl: Duration::from_secs(600),
-        store_dir: test_store_dir(),
+        store_dir: common::test_store_dir("e2e"),
+        faults: common::test_fault_plan(),
         ..Default::default()
     }
-}
-
-fn prompt(n: usize, seed: usize) -> Vec<i32> {
-    (0..n).map(|i| 1 + ((i * 37 + seed * 101) % 255) as i32).collect()
 }
 
 #[test]

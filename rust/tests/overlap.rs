@@ -30,13 +30,8 @@ use tconstformer::model::{Arch, ModelDriver, SyncMode};
 use tconstformer::runtime::{Runtime, SyncExecutor};
 use tconstformer::util::proptest::{check, shrinkers};
 
-fn artifacts_dir() -> String {
-    std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
-}
-
-fn have_artifacts() -> bool {
-    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
-}
+mod common;
+use common::{artifacts_dir, have_artifacts, prompt};
 
 fn tiny_cfg(arch: Arch) -> EngineConfig {
     EngineConfig {
@@ -47,12 +42,9 @@ fn tiny_cfg(arch: Arch) -> EngineConfig {
         max_lanes: 4,
         staging: ArenaStaging::DeviceArena,
         session_ttl: Duration::from_secs(600),
+        faults: common::test_fault_plan(),
         ..Default::default()
     }
-}
-
-fn prompt(n: usize, seed: usize) -> Vec<i32> {
-    (0..n).map(|i| 1 + ((i * 37 + seed * 101) % 255) as i32).collect()
 }
 
 /// Run one 4-lane workload whose generations cross several W_og windows

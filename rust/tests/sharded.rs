@@ -19,26 +19,8 @@ use tconstformer::server::http;
 use tconstformer::server::ServerConfig;
 use tconstformer::util::json::Json;
 
-fn artifacts_dir() -> String {
-    std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
-}
-
-fn have_artifacts() -> bool {
-    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
-}
-
-/// CI soak knob (DESIGN.md D11): with `TEST_STORE_DIR` set, every engine
-/// in this suite runs with a persistent session store under a fresh
-/// subdirectory, exercising the disk tier's wiring alongside the sharding
-/// scenarios. Per-engine subdirectories keep session-id parity intact
-/// (recovering another engine's snapshots would shift the id sequence).
-fn test_store_dir() -> Option<String> {
-    use std::sync::atomic::AtomicUsize;
-    static NEXT: AtomicUsize = AtomicUsize::new(0);
-    let root = std::env::var("TEST_STORE_DIR").ok()?;
-    let n = NEXT.fetch_add(1, Ordering::Relaxed);
-    Some(format!("{root}/sharded-{}-{n}", std::process::id()))
-}
+mod common;
+use common::{artifacts_dir, have_artifacts, prompt};
 
 fn tiny_cfg(arch: Arch, workers: usize) -> EngineConfig {
     EngineConfig {
@@ -47,13 +29,10 @@ fn tiny_cfg(arch: Arch, workers: usize) -> EngineConfig {
         arch,
         max_lanes: 2,
         workers,
-        store_dir: test_store_dir(),
+        store_dir: common::test_store_dir("sharded"),
+        faults: common::test_fault_plan(),
         ..Default::default()
     }
-}
-
-fn prompt(n: usize, seed: usize) -> Vec<i32> {
-    (0..n).map(|i| 1 + ((i * 37 + seed * 101) % 255) as i32).collect()
 }
 
 /// One conversation's turns: (prompt, max_new_tokens) each.

@@ -18,7 +18,7 @@
 //!   is counted in `/metrics` — never silently resumed.
 
 use std::path::PathBuf;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use tconstformer::coordinator::{
     ArenaStaging, Engine, EngineConfig, EngineHandle, Response, TurnRequest,
@@ -31,30 +31,17 @@ use tconstformer::store::{
     decode_snapshot, encode_snapshot, DiskStore, SessionSnapshot, SessionStore,
     StoreError,
 };
-use tconstformer::util::json::Json;
 
 // ---------------------------------------------------------------------------
 // Shared helpers
 // ---------------------------------------------------------------------------
 
-fn artifacts_dir() -> String {
-    std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
-}
-
-fn have_artifacts() -> bool {
-    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
-}
+mod common;
+use common::{artifacts_dir, have_artifacts, prompt};
 
 /// Fresh per-test store directory under the system tmpdir.
 fn store_dir(tag: &str) -> PathBuf {
-    let d = std::env::temp_dir()
-        .join(format!("tconst-store-it-{tag}-{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&d);
-    d
-}
-
-fn prompt(n: usize, seed: usize) -> Vec<i32> {
-    (0..n).map(|i| 1 + ((i * 37 + seed * 101) % 255) as i32).collect()
+    common::fresh_dir(&format!("store-it-{tag}"))
 }
 
 fn tiny_cfg(arch: Arch, staging: ArenaStaging) -> EngineConfig {
@@ -64,26 +51,12 @@ fn tiny_cfg(arch: Arch, staging: ArenaStaging) -> EngineConfig {
         arch,
         staging,
         max_lanes: 1,
+        faults: common::test_fault_plan(),
         ..Default::default()
     }
 }
 
-/// Poll `/metrics` until `key >= want` (the demote/recovery paths run on
-/// worker TTL deadlines, not on our clock). Returns the last snapshot.
-fn wait_metric(handle: &EngineHandle, key: &str, want: f64) -> Json {
-    let deadline = Instant::now() + Duration::from_secs(20);
-    loop {
-        let m = handle.metrics().expect("metrics");
-        if m.get(key).as_f64().unwrap_or(0.0) >= want {
-            return m;
-        }
-        assert!(
-            Instant::now() < deadline,
-            "timed out waiting for {key} >= {want}; last snapshot: {m}"
-        );
-        std::thread::sleep(Duration::from_millis(100));
-    }
-}
+use common::wait_metric;
 
 fn sampled_turn(id: u64, sid: u64, p: Vec<i32>, max_new: usize, c: u64) -> TurnRequest {
     let mut req = TurnRequest::greedy_turn(id, sid, p, max_new);

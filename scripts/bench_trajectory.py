@@ -12,9 +12,11 @@ This script maintains two committed trajectory files at the repo root —
 Both modes optionally take ``--replay replay_metrics.json`` (repeatable —
 pass it once per session-replayer artifact). The soak artifact's
 per-SLO-class TTFT p99s (``ttft_slo_p99_interactive`` / ``_standard`` /
-``_batch``) and the restart artifact's disk-resume TTFT
-(``ttft_disk_resume_p99_ms``) are merged into the BENCH_ttft.json entry
-and gated with the same timing band as the other TTFT keys. A replay file
+``_batch``), the restart artifact's disk-resume TTFT
+(``ttft_disk_resume_p99_ms``), and the chaos artifact's post-failure
+recovery latency (``recovery_ms_p99``) are merged into the
+BENCH_ttft.json entry and gated with the same timing band as the other
+TTFT keys. A replay file
 without any gated key (e.g. a plain non-soak run) is skipped with a note,
 so the flag is safe to pass unconditionally.
 
@@ -72,13 +74,15 @@ MICRO_KEYS = [
 ]
 TTFT_KEYS = [("cold_ms", "time"), ("resumed_ms", "time")]
 # Replayer-artifact keys (merged into BENCH_ttft.json when --replay is
-# given; absent keys gate-pass): the soak run's per-SLO-class TTFT p99s
-# and the restart run's resumed-from-disk TTFT p99.
+# given; absent keys gate-pass): the soak run's per-SLO-class TTFT p99s,
+# the restart run's resumed-from-disk TTFT p99, and the chaos run's
+# client-observed post-failure recovery p99 (DESIGN.md D13).
 REPLAY_SLO_KEYS = [
     ("ttft_slo_p99_interactive", "time"),
     ("ttft_slo_p99_standard", "time"),
     ("ttft_slo_p99_batch", "time"),
     ("ttft_disk_resume_p99_ms", "time"),
+    ("recovery_ms_p99", "time"),
 ]
 TIMING_BAND = 0.30
 
